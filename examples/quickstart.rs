@@ -1,0 +1,81 @@
+//! Quickstart: the three layers in one page.
+//!
+//! 1. Simulate a 512³ GEMM on the TensorPool cluster (Layer 3 owns cycles).
+//! 2. Execute the AOT-compiled Pallas GEMM artifact through PJRT (numerics).
+//! 3. Check the numbers against a plain rust reference.
+//!
+//! Run with: `cargo run --release --example quickstart`
+//! (requires `make artifacts` once).
+
+use tensorpool::runtime::{default_artifacts_dir, Runtime};
+use tensorpool::sim::{ArchConfig, L1Alloc, Sim};
+use tensorpool::workload::gemm::{map_split, GemmRegions, GemmSpec};
+
+fn main() -> anyhow::Result<()> {
+    // ---- Layer 3: cycle-level simulation --------------------------------
+    let cfg = ArchConfig::tensorpool();
+    println!(
+        "TensorPool: {} PEs + {} TEs, {} KiB L1, peak {:.1} TFLOPS@FP16",
+        cfg.num_pes(),
+        cfg.num_tes(),
+        cfg.l1_bytes() / 1024,
+        cfg.peak_tflops()
+    );
+    let spec = GemmSpec::square(512);
+    let mut alloc = L1Alloc::new(&cfg);
+    let regions = GemmRegions::alloc(&spec, &mut alloc);
+    let mut sim = Sim::new(&cfg);
+    sim.assign_gemm(map_split(&spec, &regions, cfg.num_tes(), true));
+    let r = sim.run(1_000_000_000);
+    println!(
+        "simulated 512³ GEMM on 16 TEs: {} cycles, {:.0} MACs/cycle \
+         ({:.1}% FMA util), {:.3} ms @0.9 GHz",
+        r.cycles,
+        r.macs_per_cycle(),
+        100.0 * r.fma_utilization(cfg.te.macs_per_cycle()),
+        r.runtime_ms(cfg.freq_ghz)
+    );
+
+    // ---- Layers 1+2: AOT Pallas GEMM through PJRT ------------------------
+    let mut rt = Runtime::load(default_artifacts_dir())?;
+    let n = 128usize;
+    let mut state = 1u32;
+    let mut rand = || {
+        state ^= state << 13;
+        state ^= state >> 17;
+        state ^= state << 5;
+        (state as f32 / u32::MAX as f32 - 0.5) * 0.25
+    };
+    let x: Vec<f32> = (0..n * n).map(|_| rand()).collect();
+    let w: Vec<f32> = (0..n * n).map(|_| rand()).collect();
+    let y = vec![0f32; n * n];
+    let out = rt.execute_f32("gemm_128", &[&x, &w, &y])?;
+    let z = &out[0];
+
+    // ---- cross-check against a rust fp16-contract reference -------------
+    let mut max_err = 0f32;
+    for i in 0..n {
+        for jj in 0..n {
+            let mut acc = 0f64;
+            for k in 0..n {
+                // fp16-quantized operands, fp32 accumulate (RedMulE contract)
+                let a = f16_round(x[i * n + k]);
+                let b = f16_round(w[k * n + jj]);
+                acc += (a as f64) * (b as f64);
+            }
+            max_err = max_err.max((z[i * n + jj] - acc as f32).abs());
+        }
+    }
+    println!("PJRT gemm_128 vs rust reference: max |err| = {max_err:.2e}");
+    assert!(max_err < 5e-2, "numerics mismatch");
+    println!("quickstart OK");
+    Ok(())
+}
+
+/// Round an f32 through fp16 precision (RedMulE ingests fp16 operands).
+fn f16_round(x: f32) -> f32 {
+    // decompose to fp16 via bit manipulation: clamp to fp16's 11-bit mantissa
+    let bits = x.to_bits();
+    let rounded = (bits + 0x0000_1000) & 0xFFFF_E000; // round-to-nearest 13 LSBs
+    f32::from_bits(rounded)
+}

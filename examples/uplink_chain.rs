@@ -1,0 +1,150 @@
+//! Classical uplink chain on TensorPool's PEs (paper Sec V-B, Fig 8).
+//!
+//! The base station must still run classical signal processing when the
+//! neural receiver is not engaged. This example runs the chain
+//! CFFT → LS channel estimation → MIMO-MMSE detection:
+//!
+//! * **numerics** through the AOT artifacts (PJRT) with physical checks
+//!   (Parseval for the FFT, perfect-pilot inversion for LS, symbol
+//!   recovery for MMSE), and
+//! * **timing** through the PE instruction-timing model, verifying the
+//!   paper's claim that the whole chain fits the 1 ms TTI at 1 GHz.
+//!
+//! Run with: `cargo run --release --example uplink_chain`
+
+use tensorpool::figures::pe_figs::{fig8_elems, fig8_rows, fig8_table};
+use tensorpool::runtime::{default_artifacts_dir, Runtime};
+use tensorpool::workload::phy;
+
+fn main() -> anyhow::Result<()> {
+    let mut rt = Runtime::load(default_artifacts_dir())?;
+
+    // ---- CFFT: 8 symbols × 4096 points ------------------------------------
+    let (b, n) = (8usize, 4096usize);
+    let re: Vec<f32> = (0..b * n)
+        .map(|i| ((i % 31) as f32 / 15.5 - 1.0) * 0.7)
+        .collect();
+    let im: Vec<f32> = (0..b * n)
+        .map(|i| ((i % 17) as f32 / 8.5 - 1.0) * 0.7)
+        .collect();
+    let outs = rt.execute_f32("cfft", &[&re, &im])?;
+    let (fre, fim) = (&outs[0], &outs[1]);
+    // Parseval: ||X||² = N·||x||² per symbol
+    for s in 0..b {
+        let et: f64 = (0..n)
+            .map(|i| (re[s * n + i] as f64).powi(2) + (im[s * n + i] as f64).powi(2))
+            .sum();
+        let ef: f64 = (0..n)
+            .map(|i| (fre[s * n + i] as f64).powi(2) + (fim[s * n + i] as f64).powi(2))
+            .sum::<f64>()
+            / n as f64;
+        assert!(
+            ((ef - et) / et).abs() < 1e-3,
+            "Parseval violated on symbol {s}: {ef} vs {et}"
+        );
+    }
+    println!("CFFT: {b} x {n}-pt, Parseval holds to < 0.1%");
+
+    // ---- LS channel estimation --------------------------------------------
+    let (ants, pilots) = (64usize, 128usize);
+    let mut h_true = vec![0f32; ants * pilots * 2];
+    let mut xp = vec![0f32; ants * pilots * 2];
+    let mut yp = vec![0f32; ants * pilots * 2];
+    let mut state = 7u32;
+    let mut rnd = || {
+        state ^= state << 13;
+        state ^= state >> 17;
+        state ^= state << 5;
+        state as f32 / u32::MAX as f32 - 0.5
+    };
+    for i in 0..ants * pilots {
+        let (hr, hi) = (rnd(), rnd());
+        let (xr, xi) = (rnd() + 0.6, rnd() + 0.6); // pilots away from zero
+        h_true[2 * i] = hr;
+        h_true[2 * i + 1] = hi;
+        xp[2 * i] = xr;
+        xp[2 * i + 1] = xi;
+        yp[2 * i] = hr * xr - hi * xi;
+        yp[2 * i + 1] = hr * xi + hi * xr;
+    }
+    let split = |v: &Vec<f32>, part: usize| -> Vec<f32> {
+        v.chunks(2).map(|c| c[part]).collect()
+    };
+    let (ypr, ypi) = (split(&yp, 0), split(&yp, 1));
+    let (xpr, xpi) = (split(&xp, 0), split(&xp, 1));
+    let outs = rt.execute_f32("ls_che", &[&ypr, &ypi, &xpr, &xpi])?;
+    // even positions of the interpolated estimate are the pilot estimates
+    let mut max_err = 0f32;
+    for i in 0..ants * pilots {
+        let est_re = outs[0][(i / pilots) * pilots * 2 + (i % pilots) * 2];
+        let est_im = outs[1][(i / pilots) * pilots * 2 + (i % pilots) * 2];
+        max_err = max_err
+            .max((est_re - h_true[2 * i]).abs())
+            .max((est_im - h_true[2 * i + 1]).abs());
+    }
+    println!("LS-CHE: {ants} antennas x {pilots} pilots, max |err| = {max_err:.2e}");
+    assert!(max_err < 1e-3, "LS must invert a noiseless channel");
+
+    // ---- MIMO-MMSE detection ----------------------------------------------
+    let (rx, tx, syms) = (8usize, 8usize, 32usize);
+    let mut h_re = vec![0f32; rx * tx];
+    let mut h_im = vec![0f32; rx * tx];
+    for r in 0..rx {
+        for c in 0..tx {
+            h_re[r * tx + c] = if r == c { 1.0 } else { 0.12 * rnd() };
+            h_im[r * tx + c] = 0.12 * rnd();
+        }
+    }
+    let x_sym: Vec<f32> = (0..tx * syms)
+        .map(|i| if (i * 2654435761usize) & 4 == 0 { 0.707 } else { -0.707 })
+        .collect();
+    // y = H x (real arithmetic on the complex planes)
+    let mut y_re = vec![0f32; rx * syms];
+    let mut y_im = vec![0f32; rx * syms];
+    for r in 0..rx {
+        for s in 0..syms {
+            let mut acc_r = 0f32;
+            let mut acc_i = 0f32;
+            for c in 0..tx {
+                let xs = x_sym[c * syms + s];
+                acc_r += h_re[r * tx + c] * xs;
+                acc_i += h_im[r * tx + c] * xs;
+            }
+            y_re[r * syms + s] = acc_r;
+            y_im[r * syms + s] = acc_i;
+        }
+    }
+    let outs = rt.execute_f32("mimo_mmse", &[&h_re, &h_im, &y_re, &y_im])?;
+    let mut sign_errors = 0usize;
+    for i in 0..tx * syms {
+        if (outs[0][i] > 0.0) != (x_sym[i] > 0.0) {
+            sign_errors += 1;
+        }
+    }
+    println!(
+        "MIMO-MMSE: {rx}x{tx} over {syms} symbols, {sign_errors}/{} symbol \
+         sign errors",
+        tx * syms
+    );
+    assert_eq!(sign_errors, 0, "high-SNR detection must recover symbols");
+
+    // ---- timing: the whole chain on 256 PEs -------------------------------
+    println!("\nPE timing (Fig 8 model, 8192 REs / 8x8 MIMO use-case):");
+    let rows = fig8_rows(256, 1.0);
+    println!("{}", fig8_table(&rows));
+    let chain_ms: f64 = rows
+        .iter()
+        .filter(|r| ["cfft", "ls_che", "mimo_mmse"].contains(&r.name))
+        .map(|r| r.runtime_ms)
+        .sum();
+    println!("classical chain total: {chain_ms:.3} ms (paper bound: < 0.45 ms)");
+    assert!(chain_ms < 0.45, "chain must fit the paper's per-kernel bounds");
+
+    // cross-check: kernel workload views stay consistent
+    for k in [phy::cfft(), phy::ls_che(), phy::mimo_mmse()] {
+        let elems = fig8_elems(&k);
+        assert!(elems > 0 && k.cycles(elems, 256) > 0);
+    }
+    println!("uplink_chain OK");
+    Ok(())
+}

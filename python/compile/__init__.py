@@ -1,0 +1,5 @@
+"""Build-time-only Python package: JAX/Pallas authoring + AOT lowering.
+
+Never imported at runtime — ``make artifacts`` runs ``compile.aot`` once and
+the rust binary consumes ``artifacts/*.hlo.txt`` through PJRT.
+"""

@@ -1,0 +1,157 @@
+"""AOT lowering: JAX/Pallas blocks -> artifacts/*.hlo.txt + manifest.json.
+
+This is the ONLY Python entry point in the build (`make artifacts`). Each
+model block from ``compile.model`` is jitted, lowered to StableHLO, converted
+to an XlaComputation, and dumped as **HLO text** — not ``.serialize()``:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the rust
+side's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the HLO text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+``manifest.json`` records, per artifact, the argument shapes/dtypes and
+output arity so the rust runtime (rust/src/runtime/) can validate inputs
+before dispatch.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def artifact_registry():
+    """name -> (fn, [arg specs], doc). Keep in sync with rust runtime tests."""
+    f = model
+    reg = {}
+
+    # GEMM artifacts for the Fig 5/7 numerics companion (one per size).
+    for n in (128, 256, 512):
+        reg[f"gemm_{n}"] = (
+            f.gemm_block,
+            [_spec((n, n))] * 3,
+            f"Z = Y + X @ W, square n={n}, TE-tiled Pallas kernel",
+        )
+
+    d = model.FC_DIM
+    reg["fc_softmax"] = (
+        f.fc_softmax_block,
+        [_spec((d, d)), _spec((d, d)), _spec((d, d))],
+        "FC layer + row-wise softmax (Fig 9 left, 512x512)",
+    )
+
+    h, w, c = model.CONV_H, model.CONV_W, model.CONV_C
+    reg["dwsep_conv"] = (
+        f.dwsep_block,
+        [_spec((h, w, c)), _spec((3, 3, c)), _spec((c, c)),
+         _spec((c,)), _spec((c,))],
+        "Depthwise-separable conv + LayerNorm + ReLU (Fig 9 middle)",
+    )
+
+    s, dm = model.MHA_SEQ, model.MHA_DIM
+    reg["mha"] = (
+        f.mha_block,
+        [_spec((s, dm))] + [_spec((dm, dm))] * 4,
+        "Multi-head attention, 4 heads, 128x512 (Fig 9 right)",
+    )
+
+    reg["cfft"] = (
+        f.cfft_block,
+        [_spec((8, model.CFFT_POINTS))] * 2,
+        "Batched 4096-pt complex FFT, (re, im) planes (Fig 8)",
+    )
+
+    reg["ls_che"] = (
+        f.ls_che_block,
+        [_spec((64, 128))] * 4,
+        "LS channel estimation + 2x interpolation (Fig 8)",
+    )
+
+    rx, tx, b = model.MIMO_RX, model.MIMO_TX, 32
+    reg["mimo_mmse"] = (
+        f.mimo_mmse_block,
+        [_spec((rx, tx)), _spec((rx, tx)), _spec((rx, b)), _spec((rx, b))],
+        "8x8 MIMO-MMSE detection over 32 symbols (Fig 8)",
+    )
+
+    reg["neural_receiver"] = (
+        f.neural_receiver_block,
+        f.receiver_arg_specs(),
+        "DeepRx-style tiny neural receiver (end-to-end example)",
+    )
+
+    return reg
+
+
+def lower_all(out_dir: str, only: list[str] | None = None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    reg = artifact_registry()
+    names = only or list(reg)
+    for name in names:
+        fn, specs, doc = reg[name]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        out_shapes = [
+            {"shape": list(o.shape), "dtype": str(o.dtype)}
+            for o in jax.eval_shape(fn, *specs)
+        ]
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "doc": doc,
+            "args": [{"shape": list(s.shape), "dtype": str(s.dtype)}
+                     for s in specs],
+            "outputs": out_shapes,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        print(f"  {name:20s} {len(text):>9d} chars  "
+              f"args={len(specs)} outs={len(out_shapes)}", file=sys.stderr)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset of artifact names")
+    args = ap.parse_args()
+    manifest = lower_all(args.out_dir, args.only)
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    existing = {}
+    if args.only and os.path.exists(mpath):
+        with open(mpath) as fh:
+            existing = json.load(fh)
+    existing.update(manifest)
+    with open(mpath, "w") as fh:
+        json.dump(existing, fh, indent=2, sort_keys=True)
+    print(f"wrote {len(manifest)} artifacts + manifest to {args.out_dir}",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Layer-1 Pallas kernels for TensorPool workloads.
+
+``gemm_te`` is the TE-shaped GEMM hot-spot; ``elementwise`` and ``conv``
+carry the PE-side kernels; ``ref`` holds the pure-jnp oracles every kernel
+is tested against.
+"""
+
+from compile.kernels.gemm_te import (  # noqa: F401
+    gemm_te, gemm_vmem_bytes, mxu_utilization_estimate,
+    TILE_M, TILE_N, TILE_K, R_ROWS, C_COLS, P_STAGES,
+)
+from compile.kernels.elementwise import (  # noqa: F401
+    softmax, layernorm, batchnorm, relu, ROW_BLOCK,
+)
+from compile.kernels.conv import dw_conv2d, CH_BLOCK  # noqa: F401
+from compile.kernels import ref  # noqa: F401

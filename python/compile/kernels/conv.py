@@ -1,0 +1,54 @@
+"""Pallas depthwise-convolution kernel (paper Fig 9, middle block).
+
+The paper maps the depthwise 3x3 2D-convolution to the PEs (it is not a
+GEMM) and the pointwise 1x1 convolution to the TEs (it *is* a GEMM, handled
+by ``gemm_te``). This kernel is the PE half: each grid step owns a channel
+slice — the channel-parallel split used across TensorPool's PEs — and
+computes the nine shifted multiply-accumulates of a SAME 3x3 window.
+
+Padding is applied by the caller (``dw_conv2d``) so the kernel body is pure
+shifted-MAC arithmetic, matching the PE inner loop the paper benchmarks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CH_BLOCK = 32  # channels per grid step
+
+
+def _dw_kernel(xp_ref, k_ref, o_ref, *, h: int, w: int):
+    acc = jnp.zeros((h, w, xp_ref.shape[-1]), jnp.float32)
+    for di in range(3):
+        for dj in range(3):
+            acc = acc + (xp_ref[di:di + h, dj:dj + w, :]
+                         * k_ref[di, dj, :])
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dw_conv2d(x: jax.Array, k: jax.Array, *, interpret: bool = True
+              ) -> jax.Array:
+    """Depthwise 3x3 SAME conv. x: (H, W, C) f32, k: (3, 3, C) f32.
+
+    C must tile by CH_BLOCK.
+    """
+    h, w, c = x.shape
+    assert k.shape == (3, 3, c), f"kernel shape {k.shape} != (3,3,{c})"
+    assert c % CH_BLOCK == 0, f"channels {c} must tile by {CH_BLOCK}"
+    xp = jnp.pad(x, ((1, 1), (1, 1), (0, 0)))
+    return pl.pallas_call(
+        functools.partial(_dw_kernel, h=h, w=w),
+        grid=(c // CH_BLOCK,),
+        in_specs=[
+            pl.BlockSpec((h + 2, w + 2, CH_BLOCK), lambda i: (0, 0, i)),
+            pl.BlockSpec((3, 3, CH_BLOCK), lambda i: (0, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((h, w, CH_BLOCK), lambda i: (0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((h, w, c), jnp.float32),
+        interpret=interpret,
+    )(xp, k)

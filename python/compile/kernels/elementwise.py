@@ -1,0 +1,119 @@
+"""Pallas kernels for the PE-side epilogues: softmax, layernorm, batchnorm,
+ReLU (paper Fig 8 / Fig 9 — the activations that run on PEs concurrently with
+TE GEMMs).
+
+Each kernel tiles rows across the grid — the same row-parallel split the
+paper uses to spread these kernels over TensorPool's 256 PEs — with the full
+reduction axis resident per block (rows are short in PHY workloads: one
+symbol's REs or one feature vector).
+
+All kernels are interpret=True for PJRT-CPU execution (see gemm_te.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 32  # rows per grid step == rows per PE work-chunk in the paper
+
+
+def _row_spec(n):
+    return pl.BlockSpec((ROW_BLOCK, n), lambda i: (i, 0))
+
+
+def _vec_spec(n):
+    # Broadcast parameter vectors: every grid step sees the whole vector.
+    return pl.BlockSpec((n,), lambda i: (0,))
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def softmax(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Row-wise numerically-stable softmax. x: (M, N), M % 32 == 0."""
+    m, n = x.shape
+    assert m % ROW_BLOCK == 0, f"rows {m} must tile by {ROW_BLOCK}"
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(m // ROW_BLOCK,),
+        in_specs=[_row_spec(n)],
+        out_specs=_row_spec(n),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    o_ref[...] = (x - mu) / jnp.sqrt(var + eps) * g_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+              *, eps: float = 1e-5, interpret: bool = True) -> jax.Array:
+    """LayerNorm over the last axis. x: (M, N), gamma/beta: (N,)."""
+    m, n = x.shape
+    assert m % ROW_BLOCK == 0, f"rows {m} must tile by {ROW_BLOCK}"
+    return pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=(m // ROW_BLOCK,),
+        in_specs=[_row_spec(n), _vec_spec(n), _vec_spec(n)],
+        out_specs=_row_spec(n),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x, gamma, beta)
+
+
+def _batchnorm_kernel(x_ref, g_ref, b_ref, mu_ref, var_ref, o_ref,
+                      *, eps: float):
+    x = x_ref[...]
+    inv = jax.lax.rsqrt(var_ref[...] + eps)
+    o_ref[...] = (x - mu_ref[...]) * inv * g_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def batchnorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+              mean: jax.Array, var: jax.Array,
+              *, eps: float = 1e-5, interpret: bool = True) -> jax.Array:
+    """Inference BatchNorm over channels (last axis). x: (M, C)."""
+    m, n = x.shape
+    assert m % ROW_BLOCK == 0, f"rows {m} must tile by {ROW_BLOCK}"
+    return pl.pallas_call(
+        functools.partial(_batchnorm_kernel, eps=eps),
+        grid=(m // ROW_BLOCK,),
+        in_specs=[_row_spec(n), _vec_spec(n), _vec_spec(n),
+                  _vec_spec(n), _vec_spec(n)],
+        out_specs=_row_spec(n),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x, gamma, beta, mean, var)
+
+
+def _relu_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.maximum(x_ref[...], 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def relu(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Elementwise ReLU. x: (M, N), M % 32 == 0."""
+    m, n = x.shape
+    assert m % ROW_BLOCK == 0, f"rows {m} must tile by {ROW_BLOCK}"
+    return pl.pallas_call(
+        _relu_kernel,
+        grid=(m // ROW_BLOCK,),
+        in_specs=[_row_spec(n)],
+        out_specs=_row_spec(n),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,110 @@
+"""TE-shaped Pallas GEMM kernel — the paper's compute hot-spot (Layer 1).
+
+The kernel mirrors RedMulE's microarchitecture (paper Sec III-B):
+
+* The TE computes output tiles of R x C(P+1) = 32 x 32 elements
+  (R=32 FMA rows, C=8 FMA columns, P=3 pipeline stages).
+* Each output tile accumulates a dot-product along K; the streamer refills
+  C(P+1)=32 W-elements every 4 cycles while X stays stationary per column.
+
+Mapping to Pallas/TPU concepts (DESIGN.md §Hardware-Adaptation):
+
+* The paper's L1-scratchpad <-> TE-buffer double-buffered schedule becomes the
+  BlockSpec HBM<->VMEM schedule: grid over (M/TM, N/TN) output tiles, the full
+  K-slab of X and W staged per tile.
+* The streamer's K-chunked refill cadence becomes the inner ``fori_loop`` over
+  K in steps of TK=32, accumulating in an FP32 register tile (the Y/Z buffer).
+* Operands are FP16, accumulation FP32 — RedMulE's precision contract.
+
+``interpret=True`` is mandatory here: the artifacts must run on the PJRT CPU
+client from rust; real-TPU lowering would emit a Mosaic custom-call the CPU
+plugin cannot execute. On a real TPU one would raise TM/TN to 128 to fill the
+MXU systolic array (see ``TPU_TILE`` below and DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# RedMulE geometry (paper Sec III-B).
+R_ROWS = 32          # FMA rows -> output-tile M
+C_COLS = 8           # FMA columns
+P_STAGES = 3         # FMA pipeline stages
+TILE_M = R_ROWS                     # 32
+TILE_N = C_COLS * (P_STAGES + 1)    # 32: one W-buffer refill group
+TILE_K = 32                         # streamer refill chunk along K
+
+# What the same kernel would use on a real TPU MXU (128x128 systolic array).
+TPU_TILE = 128
+
+
+def _gemm_kernel(x_ref, w_ref, y_ref, o_ref, *, k_steps: int):
+    """One (TILE_M, TILE_N) output tile; K-loop mirrors the streamer cadence."""
+    acc0 = y_ref[...].astype(jnp.float32)
+
+    def body(ki, acc):
+        xk = x_ref[:, pl.dslice(ki * TILE_K, TILE_K)].astype(jnp.float16)
+        wk = w_ref[pl.dslice(ki * TILE_K, TILE_K), :].astype(jnp.float16)
+        # FP16 multiplies, FP32 accumulate: RedMulE's FMA contract.
+        return acc + jnp.dot(xk, wk, preferred_element_type=jnp.float32)
+
+    acc = jax.lax.fori_loop(0, k_steps, body, acc0)
+    o_ref[...] = acc.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gemm_te(x: jax.Array, w: jax.Array, y: jax.Array | None = None,
+            *, interpret: bool = True) -> jax.Array:
+    """Z = Y + X @ W with the TE's tiling. Shapes must tile by 32.
+
+    x: (M, K) f32, w: (K, N) f32, y: optional (M, N) f32.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert m % TILE_M == 0 and n % TILE_N == 0 and k % TILE_K == 0, (
+        f"GEMM dims ({m},{k},{n}) must tile by "
+        f"({TILE_M},{TILE_K},{TILE_N})")
+    if y is None:
+        y = jnp.zeros((m, n), jnp.float32)
+
+    grid = (m // TILE_M, n // TILE_N)
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, k_steps=k // TILE_K),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_M, k), lambda i, j: (i, 0)),   # X row-slab
+            pl.BlockSpec((k, TILE_N), lambda i, j: (0, j)),   # W col-slab
+            pl.BlockSpec((TILE_M, TILE_N), lambda i, j: (i, j)),  # Y tile
+        ],
+        out_specs=pl.BlockSpec((TILE_M, TILE_N), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w, y)
+
+
+def gemm_vmem_bytes(k: int, dbl_buffer: bool = True) -> int:
+    """VMEM footprint of one grid step, for the §Perf roofline estimate.
+
+    X slab (TILE_M, k) + W slab (k, TILE_N) in fp16 staged operands plus the
+    fp32 accumulator tile; x2 if double-buffered (Pallas default pipelining).
+    """
+    operands = 2 * (TILE_M * k + k * TILE_N)           # fp16 bytes
+    acc = 4 * (2 * TILE_M * TILE_N)                    # y in + o out, fp32
+    per_step = operands + acc
+    return per_step * (2 if dbl_buffer else 1)
+
+
+def mxu_utilization_estimate(tile_m: int = TILE_M, tile_n: int = TILE_N,
+                             mxu: int = 128) -> float:
+    """Fraction of a TPU MXU the chosen tile would occupy (structure metric).
+
+    The 32x32 RedMulE-faithful tile fills (32/128)^2 of an MXU pass; the
+    TPU_TILE=128 variant fills it completely. Reported in DESIGN.md §Perf —
+    interpret-mode wallclock is not a TPU proxy.
+    """
+    return min(1.0, (tile_m / mxu) * (tile_n / mxu))

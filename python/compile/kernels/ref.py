@@ -1,0 +1,235 @@
+"""Pure-jnp reference oracles for every Pallas kernel and model block.
+
+These are the correctness ground truth: ``pytest python/tests`` asserts each
+Pallas kernel (interpret=True) and each composed L2 block against these
+implementations with FP16-appropriate tolerances.
+
+The arithmetic contract mirrors TensorPool's RedMulE tensor engine: FP16
+multiplies with FP32 accumulation (the TE's FMAs ingest FP16 operands; the
+pipeline keeps partial dot-products at higher precision). Interfaces are FP32
+because HLO-text interchange with the rust PJRT loader uses f32 literals.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# GEMM (the TE workload): Z = Y + X @ W, fp16 operands / fp32 accumulate
+# ---------------------------------------------------------------------------
+
+def gemm(x: jax.Array, w: jax.Array, y: jax.Array | None = None) -> jax.Array:
+    """Reference GEMM with RedMulE's precision contract.
+
+    x: (M, K) f32, w: (K, N) f32, y: optional (M, N) f32 accumulator input.
+    Returns (M, N) f32.
+    """
+    xh = x.astype(jnp.float16)
+    wh = w.astype(jnp.float16)
+    z = jnp.dot(xh, wh, preferred_element_type=jnp.float32)
+    if y is not None:
+        z = z + y
+    return z.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Activation / normalization blocks (the PE workloads)
+# ---------------------------------------------------------------------------
+
+def relu(x: jax.Array) -> jax.Array:
+    return jnp.maximum(x, 0.0)
+
+
+def softmax(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Numerically-stable row-wise softmax (the paper's FC epilogue)."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    """LayerNorm over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def batchnorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+              mean: jax.Array, var: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Inference-mode BatchNorm over the channel (last) axis."""
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + beta
+
+
+# ---------------------------------------------------------------------------
+# Convolutions (ResNet-style receiver blocks)
+# ---------------------------------------------------------------------------
+
+def depthwise_conv2d(x: jax.Array, k: jax.Array) -> jax.Array:
+    """Depthwise 3x3 'SAME' conv. x: (H, W, C), k: (3, 3, C)."""
+    h, w, c = x.shape
+    xp = jnp.pad(x, ((1, 1), (1, 1), (0, 0)))
+    out = jnp.zeros_like(x)
+    for di in range(3):
+        for dj in range(3):
+            out = out + xp[di:di + h, dj:dj + w, :] * k[di, dj, :]
+    return out
+
+
+def pointwise_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Pointwise (1x1) conv == GEMM over flattened pixels.
+
+    x: (H, W, Cin), w: (Cin, Cout) -> (H, W, Cout), RedMulE precision.
+    """
+    h, wd, cin = x.shape
+    z = gemm(x.reshape(h * wd, cin), w)
+    return z.reshape(h, wd, -1)
+
+
+def dwsep_block(x: jax.Array, kdw: jax.Array, wpw: jax.Array,
+                gamma: jax.Array, beta: jax.Array) -> jax.Array:
+    """Depthwise-separable conv + LayerNorm + ReLU (paper Fig 9, middle)."""
+    y = depthwise_conv2d(x, kdw)
+    y = pointwise_conv(y, wpw)
+    y = layernorm(y, gamma, beta)
+    return relu(y)
+
+
+# ---------------------------------------------------------------------------
+# Multi-Head Attention (CE-ViT-style block, paper Fig 9 right)
+# ---------------------------------------------------------------------------
+
+def mha(x: jax.Array, wq: jax.Array, wk: jax.Array, wv: jax.Array,
+        wo: jax.Array, heads: int) -> jax.Array:
+    """MHA with per-head scaled dot-product attention.
+
+    x: (S, D); wq/wk/wv/wo: (D, D); heads divides D.
+    Projections and attention GEMMs follow the RedMulE precision contract.
+    """
+    s, d = x.shape
+    dh = d // heads
+    q = gemm(x, wq).reshape(s, heads, dh)
+    k = gemm(x, wk).reshape(s, heads, dh)
+    v = gemm(x, wv).reshape(s, heads, dh)
+    outs = []
+    for h in range(heads):
+        scores = gemm(q[:, h, :], k[:, h, :].T) / np.sqrt(dh)
+        att = softmax(scores, axis=-1)
+        outs.append(gemm(att, v[:, h, :]))
+    o = jnp.stack(outs, axis=1).reshape(s, d)
+    return gemm(o, wo)
+
+
+# ---------------------------------------------------------------------------
+# Classical wireless signal processing (the PE-side workloads, Fig 8)
+# Complex tensors cross the HLO boundary as (re, im) f32 planes.
+# ---------------------------------------------------------------------------
+
+def cfft(re: jax.Array, im: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Complex FFT over the last axis; (re, im) f32 planes in and out."""
+    z = jnp.fft.fft(re + 1j * im)
+    return jnp.real(z).astype(jnp.float32), jnp.imag(z).astype(jnp.float32)
+
+
+def ls_che(yp_re, yp_im, xp_re, xp_im):
+    """Least-squares channel estimate at pilot positions: H = Y_p / X_p."""
+    den = xp_re * xp_re + xp_im * xp_im
+    h_re = (yp_re * xp_re + yp_im * xp_im) / den
+    h_im = (yp_im * xp_re - yp_re * xp_im) / den
+    return h_re, h_im
+
+
+def che_interp(h_re: jax.Array, h_im: jax.Array, factor: int):
+    """Linear interpolation of the LS estimate between pilots (comb pilots).
+
+    h_*: (..., P) pilot estimates -> (..., P*factor) interpolated estimates,
+    edge-extended on the right.
+    """
+    def interp(h):
+        left = h
+        right = jnp.concatenate([h[..., 1:], h[..., -1:]], axis=-1)
+        steps = jnp.arange(factor, dtype=jnp.float32) / factor
+        out = left[..., :, None] * (1.0 - steps) + right[..., :, None] * steps
+        return out.reshape(*h.shape[:-1], h.shape[-1] * factor)
+    return interp(h_re), interp(h_im)
+
+
+def _csplit(m):
+    return jnp.real(m).astype(jnp.float32), jnp.imag(m).astype(jnp.float32)
+
+
+def hpd_solve(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve A x = B for Hermitian-positive-definite A via Cholesky.
+
+    Written with explicit loops over the (static, small) dimension so it
+    lowers to plain HLO — no LAPACK custom-calls, which the PJRT CPU client
+    used by the rust runtime cannot link.
+    a: (N, N) complex, b: (N, M) complex.
+    """
+    n = a.shape[0]
+    # Cholesky: A = L L^H, unrolled (n is small and static: MIMO dims <= 16).
+    l = jnp.zeros_like(a)
+    for i in range(n):
+        s = a[i, i] - jnp.sum(l[i, :i] * jnp.conj(l[i, :i])) if i else a[i, i]
+        lii = jnp.sqrt(jnp.real(s)).astype(a.dtype)
+        l = l.at[i, i].set(lii)
+        if i + 1 < n:
+            if i:
+                ss = a[i + 1:, i] - l[i + 1:, :i] @ jnp.conj(l[i, :i])
+            else:
+                ss = a[i + 1:, i]
+            l = l.at[i + 1:, i].set(ss / lii)
+    # Forward substitution L y = b
+    y = jnp.zeros_like(b)
+    for i in range(n):
+        acc = b[i] - (l[i, :i] @ y[:i] if i else 0.0)
+        y = y.at[i].set(acc / l[i, i])
+    # Back substitution L^H x = y
+    x = jnp.zeros_like(b)
+    for i in reversed(range(n)):
+        acc = y[i] - (jnp.conj(l[i + 1:, i]) @ x[i + 1:] if i + 1 < n else 0.0)
+        x = x.at[i].set(acc / jnp.conj(l[i, i]))
+    return x
+
+
+def mimo_mmse(h_re, h_im, y_re, y_im, sigma2: float):
+    """MIMO-MMSE detection: x = (H^H H + sigma2 I)^-1 H^H y.
+
+    h_*: (RX, TX) channel planes; y_*: (RX, B) received symbols.
+    Returns (TX, B) detected-symbol planes.
+    """
+    h = h_re + 1j * h_im
+    y = y_re + 1j * y_im
+    g = jnp.conj(h.T) @ h + sigma2 * jnp.eye(h.shape[1], dtype=h.dtype)
+    rhs = jnp.conj(h.T) @ y
+    x = hpd_solve(g, rhs)
+    return _csplit(x)
+
+
+# ---------------------------------------------------------------------------
+# FC + softmax block (paper Fig 9 left) and the neural receiver
+# ---------------------------------------------------------------------------
+
+def fc_softmax(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Fully-connected layer with row-wise softmax epilogue."""
+    return softmax(gemm(x, w) + b, axis=-1)
+
+
+def neural_receiver(iq_re, iq_im, params: dict) -> jax.Array:
+    """Tiny DeepRx-style convolutional receiver (paper refs [18]-[22]).
+
+    Input: (H, W) resource grid of received IQ samples as two f32 planes.
+    Stem pointwise-conv lifts 2 channels to C; depthwise-separable residual
+    blocks; pointwise head emits per-RE LLR logits -> softmax over classes.
+    """
+    h, w = iq_re.shape
+    x = jnp.stack([iq_re, iq_im], axis=-1)           # (H, W, 2)
+    x = pointwise_conv(x, params["stem"])             # (H, W, C)
+    for blk in params["blocks"]:
+        y = dwsep_block(x, blk["kdw"], blk["wpw"], blk["gamma"], blk["beta"])
+        x = x + y                                     # residual
+    logits = pointwise_conv(x, params["head"])        # (H, W, bits)
+    return softmax(logits, axis=-1)

@@ -1,0 +1,192 @@
+"""Layer-2 JAX models: the paper's AI-Native PHY compute blocks.
+
+Each public ``*_block`` function is a pure JAX function composed from the
+Layer-1 Pallas kernels (``compile.kernels``). ``compile.aot`` lowers each one
+ONCE to HLO text in ``artifacts/``; the rust coordinator executes them via
+PJRT on its request path — Python never runs at serving time.
+
+The three headline blocks are exactly the paper's Fig 9 use-cases:
+
+* ``fc_softmax_block``      — FC layer + row-wise softmax (all surveyed models)
+* ``dwsep_block``           — depthwise-separable conv + LayerNorm + ReLU
+                              (ResNet-style receivers [18]-[24])
+* ``mha_block``             — multi-head attention (CE-ViT-style CHE [23]-[25])
+
+plus the classical signal-processing chain the PEs must still support
+(Fig 8): CFFT, LS channel estimation, MIMO-MMSE detection, and the composed
+``neural_receiver`` used by the end-to-end example.
+
+Boundary dtype is f32 (HLO-text interchange with the rust loader); GEMMs
+internally follow RedMulE's fp16-multiply / fp32-accumulate contract.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import kernels as K
+from compile.kernels import ref
+
+# ---------------------------------------------------------------------------
+# Paper Fig 9/10 workload dimensions
+# ---------------------------------------------------------------------------
+
+FC_DIM = 512                 # 512x512 input matrix (Fig 10 left)
+CONV_H, CONV_W, CONV_C = 32, 16, 512   # 3x3 filters, 32x16 frames, 512 deep
+MHA_SEQ, MHA_DIM, MHA_HEADS = 128, 512, 4   # Q,K,V 128x512, 4 heads
+MIMO_RX, MIMO_TX = 8, 8      # 8x8 MIMO (Fig 8)
+CFFT_POINTS = 4096           # OFDM symbol FFT
+RX_H, RX_W, RX_C, RX_BITS = 32, 64, 32, 4   # tiny neural receiver grid
+
+
+# ---------------------------------------------------------------------------
+# Fig 9 blocks
+# ---------------------------------------------------------------------------
+
+def fc_softmax_block(x, w, b):
+    """softmax(X @ W + b) — the FC+activation block. All (512, 512)."""
+    z = K.gemm_te(x, w)
+    return (K.softmax(z + b),)
+
+
+def dwsep_block(x, kdw, wpw, gamma, beta):
+    """Depthwise-separable conv + LayerNorm + ReLU, residual-free core.
+
+    x: (H, W, C); kdw: (3, 3, C); wpw: (C, C); gamma/beta: (C,).
+    Depthwise runs on the PE-kernel, pointwise on the TE GEMM — the same
+    split the paper schedules across PEs and TEs.
+    """
+    h, w, c = x.shape
+    y = K.dw_conv2d(x, kdw)
+    y = K.gemm_te(y.reshape(h * w, c), wpw)
+    y = K.layernorm(y, gamma, beta)
+    return (K.relu(y).reshape(h, w, c),)
+
+
+def mha_block(x, wq, wk, wv, wo):
+    """Multi-head attention, H=4 heads over (128, 512) activations.
+
+    Projections, attention matrices, and the output projection are TE GEMMs
+    (paper Sec V-C); softmax rows run on the PE kernel.
+    """
+    s, d = x.shape
+    heads = MHA_HEADS
+    dh = d // heads
+    q = K.gemm_te(x, wq).reshape(s, heads, dh)
+    k = K.gemm_te(x, wk).reshape(s, heads, dh)
+    v = K.gemm_te(x, wv).reshape(s, heads, dh)
+    scale = jnp.float32(1.0 / np.sqrt(dh))
+    outs = []
+    for h in range(heads):
+        scores = K.gemm_te(q[:, h, :], k[:, h, :].T) * scale
+        att = K.softmax(scores)
+        outs.append(K.gemm_te(att, v[:, h, :]))
+    o = jnp.stack(outs, axis=1).reshape(s, d)
+    return (K.gemm_te(o, wo),)
+
+
+# ---------------------------------------------------------------------------
+# Plain GEMM artifact (the Fig 5/7 numerics companion)
+# ---------------------------------------------------------------------------
+
+def gemm_block(x, w, y):
+    """Z = Y + X @ W via the TE kernel — one artifact per benchmarked size."""
+    return (K.gemm_te(x, w, y),)
+
+
+# ---------------------------------------------------------------------------
+# Classical signal processing (Fig 8 workloads)
+# ---------------------------------------------------------------------------
+
+def cfft_block(re, im):
+    """Batched complex FFT over the last axis ((re, im) f32 planes)."""
+    return ref.cfft(re, im)
+
+
+def ls_che_block(yp_re, yp_im, xp_re, xp_im):
+    """LS channel estimation at pilots + 2x linear interpolation."""
+    h_re, h_im = ref.ls_che(yp_re, yp_im, xp_re, xp_im)
+    return ref.che_interp(h_re, h_im, factor=2)
+
+
+def mimo_mmse_block(h_re, h_im, y_re, y_im):
+    """8x8 MIMO-MMSE detection over a batch of symbols (Cholesky, no LAPACK)."""
+    return ref.mimo_mmse(h_re, h_im, y_re, y_im, sigma2=0.1)
+
+
+# ---------------------------------------------------------------------------
+# Neural receiver (end-to-end example model)
+# ---------------------------------------------------------------------------
+
+def receiver_params(key=None, h=RX_H, w=RX_W, c=RX_C, bits=RX_BITS,
+                    nblocks=2):
+    """Deterministic small-receiver parameters (also used by pytest)."""
+    rng = np.random.default_rng(0xD5)
+
+    def randf(*shape, scale=0.1):
+        return jnp.asarray(
+            rng.standard_normal(shape, dtype=np.float32) * scale)
+
+    return {
+        "stem": randf(2, c),
+        "blocks": [
+            {"kdw": randf(3, 3, c), "wpw": randf(c, c, scale=0.05),
+             "gamma": jnp.ones((c,), jnp.float32),
+             "beta": jnp.zeros((c,), jnp.float32)}
+            for _ in range(nblocks)
+        ],
+        "head": randf(c, bits),
+    }
+
+
+def _flatten_receiver_params(params):
+    flat = [params["stem"]]
+    for blk in params["blocks"]:
+        flat += [blk["kdw"], blk["wpw"], blk["gamma"], blk["beta"]]
+    flat.append(params["head"])
+    return flat
+
+
+def receiver_arg_specs(nblocks=2):
+    """ShapeDtypeStructs for the receiver artifact's flat argument list."""
+    f32 = jnp.float32
+    specs = [jax.ShapeDtypeStruct((RX_H, RX_W), f32)] * 2   # iq re/im
+    specs.append(jax.ShapeDtypeStruct((2, RX_C), f32))       # stem
+    for _ in range(nblocks):
+        specs += [jax.ShapeDtypeStruct((3, 3, RX_C), f32),
+                  jax.ShapeDtypeStruct((RX_C, RX_C), f32),
+                  jax.ShapeDtypeStruct((RX_C,), f32),
+                  jax.ShapeDtypeStruct((RX_C,), f32)]
+    specs.append(jax.ShapeDtypeStruct((RX_C, RX_BITS), f32))  # head
+    return specs
+
+
+def neural_receiver_block(iq_re, iq_im, *flat_params):
+    """DeepRx-style receiver over a (32, 64) resource grid.
+
+    Stem/head 1x1 convs have non-tileable channel counts (2 in, 4 out) and
+    use the jnp GEMM oracle; interior blocks use the Pallas kernels. Returns
+    per-RE softmax over RX_BITS classes.
+    """
+    nblocks = (len(flat_params) - 2) // 4
+    stem = flat_params[0]
+    head = flat_params[-1]
+    h, w = iq_re.shape
+    x = jnp.stack([iq_re, iq_im], axis=-1)
+    x = ref.gemm(x.reshape(h * w, 2), stem).reshape(h, w, RX_C)
+    for i in range(nblocks):
+        kdw, wpw, gamma, beta = flat_params[1 + 4 * i: 5 + 4 * i]
+        (y,) = dwsep_block(x, kdw, wpw, gamma, beta)
+        x = x + y
+    logits = ref.gemm(x.reshape(h * w, RX_C), head)
+    return (K.softmax(logits).reshape(h, w, RX_BITS),)
+
+
+def neural_receiver_apply(iq_re, iq_im, params):
+    """Dict-parameter convenience wrapper (tests, reference runs)."""
+    return neural_receiver_block(
+        iq_re, iq_im, *_flatten_receiver_params(params))

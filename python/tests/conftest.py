@@ -1,0 +1,26 @@
+"""Shared pytest fixtures/helpers for the kernel-vs-oracle suite."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+
+# FP16-multiply / FP32-accumulate GEMMs: tolerances sized to fp16 ulp growth
+# over the longest K in the suite (K=512 -> ~sqrt(512) * 2^-11 relative).
+GEMM_RTOL = 2e-2
+GEMM_ATOL = 2e-2
+# Pure-f32 elementwise kernels: tight.
+EW_RTOL = 1e-6
+EW_ATOL = 1e-6
+
+
+def assert_close(actual, expected, rtol=EW_RTOL, atol=EW_ATOL, what=""):
+    np.testing.assert_allclose(
+        np.asarray(actual), np.asarray(expected),
+        rtol=rtol, atol=atol, err_msg=what)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0x7EA)

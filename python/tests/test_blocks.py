@@ -1,0 +1,136 @@
+"""L2 model blocks vs oracle compositions, incl. classical DSP numerics."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from tests.conftest import GEMM_ATOL, GEMM_RTOL, assert_close
+
+
+def _rand(rng, *shape, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+def test_fc_softmax_block(rng):
+    d = model.FC_DIM
+    x, w = _rand(rng, d, d, scale=0.1), _rand(rng, d, d, scale=0.1)
+    b = _rand(rng, d, d, scale=0.1)
+    (got,) = model.fc_softmax_block(x, w, b)
+    want = ref.softmax(ref.gemm(x, w) + b)
+    assert_close(got, want, 1e-2, 1e-4, "fc_softmax")
+    assert_close(np.asarray(got).sum(-1), np.ones(d), 1e-4, 1e-5)
+
+
+def test_dwsep_block(rng):
+    h, w, c = 8, 8, 64  # smaller than Fig 10 dims; same code path
+    x = _rand(rng, h, w, c, scale=0.5)
+    kdw, wpw = _rand(rng, 3, 3, c, scale=0.3), _rand(rng, c, c, scale=0.1)
+    g, b = np.ones(c, np.float32), np.zeros(c, np.float32)
+    (got,) = model.dwsep_block(x, kdw, wpw, g, b)
+    want = ref.dwsep_block(x, kdw, wpw, g, b)
+    assert_close(got, want, 5e-2, 5e-2, "dwsep")
+    assert (np.asarray(got) >= 0).all(), "ReLU output must be non-negative"
+
+
+def test_mha_block(rng):
+    s, d = model.MHA_SEQ, model.MHA_DIM
+    x = _rand(rng, s, d, scale=0.1)
+    ws = [_rand(rng, d, d, scale=0.05) for _ in range(4)]
+    (got,) = model.mha_block(x, *ws)
+    want = ref.mha(x, *ws, heads=model.MHA_HEADS)
+    assert_close(got, want, GEMM_RTOL, GEMM_ATOL, "mha")
+
+
+def test_cfft_block_vs_numpy(rng):
+    re, im = _rand(rng, 8, 256), _rand(rng, 8, 256)
+    gre, gim = model.cfft_block(re, im)
+    want = np.fft.fft(re + 1j * im)
+    assert_close(gre, want.real, 1e-4, 1e-3, "cfft re")
+    assert_close(gim, want.imag, 1e-4, 1e-3, "cfft im")
+
+
+def test_cfft_parseval(rng):
+    """Parseval: energy preserved up to 1/N — catches scaling bugs."""
+    re, im = _rand(rng, 4, 128), _rand(rng, 4, 128)
+    gre, gim = (np.asarray(a) for a in model.cfft_block(re, im))
+    e_time = (re**2 + im**2).sum(-1)
+    e_freq = (gre**2 + gim**2).sum(-1) / 128
+    assert_close(e_freq, e_time, 1e-4, 1e-3, "parseval")
+
+
+def test_ls_che_block(rng):
+    """LS estimate at pilots must invert a known channel exactly."""
+    p = 128
+    h_true = _rand(rng, 64, p) + 1j * _rand(rng, 64, p)
+    xp = _rand(rng, 64, p) + 1j * _rand(rng, 64, p)
+    yp = h_true * xp
+    hre, him = model.ls_che_block(
+        yp.real.astype(np.float32), yp.imag.astype(np.float32),
+        xp.real.astype(np.float32), xp.imag.astype(np.float32))
+    # factor-2 interpolation: even positions are the pilot estimates
+    assert_close(np.asarray(hre)[:, ::2], h_true.real, 1e-4, 1e-4, "LS re")
+    assert_close(np.asarray(him)[:, ::2], h_true.imag, 1e-4, 1e-4, "LS im")
+
+
+def test_mimo_mmse_block_recovers_symbols(rng):
+    """At high SNR, MMSE detection must recover the transmitted symbols."""
+    rx, tx, b = model.MIMO_RX, model.MIMO_TX, 32
+    # Well-conditioned channel (strong diagonal): sigma2=0.1 shrinkage must
+    # not flip symbol signs. Ill-conditioned channels are covered by the
+    # solve-accuracy test below instead.
+    h = (np.eye(rx, tx)
+         + 0.15 * (_rand(rng, rx, tx) + 1j * _rand(rng, rx, tx))
+         ).astype(np.complex64)
+    x = (rng.choice([-1.0, 1.0], (tx, b))
+         + 1j * rng.choice([-1.0, 1.0], (tx, b))) / np.sqrt(2)
+    y = h @ x
+    xr, xi = model.mimo_mmse_block(
+        h.real.astype(np.float32), h.imag.astype(np.float32),
+        y.real.astype(np.float32), y.imag.astype(np.float32))
+    got = np.asarray(xr) + 1j * np.asarray(xi)
+    # sigma2=0.1 regularization biases the estimate toward zero; sign must
+    # survive (symbol decisions correct).
+    assert np.sign(got.real).astype(int).tolist() == \
+        np.sign(x.real).astype(int).tolist()
+    assert np.sign(got.imag).astype(int).tolist() == \
+        np.sign(x.imag).astype(int).tolist()
+
+
+def test_mimo_mmse_matches_numpy_solve(rng):
+    """Our loop-unrolled Cholesky vs np.linalg.solve on the normal eqs."""
+    rx, tx, b = 8, 8, 16
+    h = (_rand(rng, rx, tx) + 1j * _rand(rng, rx, tx)) / 4
+    y = _rand(rng, rx, b) + 1j * _rand(rng, rx, b)
+    sigma2 = 0.1
+    g = h.conj().T @ h + sigma2 * np.eye(tx)
+    want = np.linalg.solve(g, h.conj().T @ y)
+    xr, xi = model.mimo_mmse_block(
+        h.real.astype(np.float32), h.imag.astype(np.float32),
+        y.real.astype(np.float32), y.imag.astype(np.float32))
+    got = np.asarray(xr) + 1j * np.asarray(xi)
+    assert_close(got.real, want.real, 1e-3, 1e-3, "mmse re")
+    assert_close(got.imag, want.imag, 1e-3, 1e-3, "mmse im")
+
+
+def test_hpd_solve_residual(rng):
+    """Direct residual check on the custom Cholesky solver."""
+    n, m = 8, 4
+    a0 = _rand(rng, n, n) + 1j * _rand(rng, n, n)
+    a = (a0.conj().T @ a0 + n * np.eye(n)).astype(np.complex64)
+    b = (_rand(rng, n, m) + 1j * _rand(rng, n, m)).astype(np.complex64)
+    x = np.asarray(ref.hpd_solve(a, b))
+    assert_close(a @ x, b, 1e-3, 1e-3, "hpd residual")
+
+
+def test_neural_receiver(rng):
+    params = model.receiver_params()
+    iq_re = _rand(rng, model.RX_H, model.RX_W, scale=0.5)
+    iq_im = _rand(rng, model.RX_H, model.RX_W, scale=0.5)
+    (got,) = model.neural_receiver_apply(iq_re, iq_im, params)
+    want = ref.neural_receiver(iq_re, iq_im, params)
+    assert_close(got, want, 5e-2, 5e-2, "neural receiver")
+    s = np.asarray(got).sum(-1)
+    assert_close(s, np.ones_like(s), 1e-4, 1e-5, "LLR softmax rows")

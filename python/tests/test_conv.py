@@ -1,0 +1,67 @@
+"""Depthwise-conv Pallas kernel vs oracle, plus conv identities."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+from tests.conftest import assert_close
+
+
+def _rand(rng, *shape, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+@pytest.mark.parametrize("h,w,c", [(8, 8, 32), (32, 16, 64), (16, 4, 128)])
+def test_dw_conv_matches_ref(rng, h, w, c):
+    x, k = _rand(rng, h, w, c), _rand(rng, 3, 3, c)
+    assert_close(K.dw_conv2d(x, k), ref.depthwise_conv2d(x, k),
+                 1e-4, 1e-4, f"dwconv {h}x{w}x{c}")
+
+
+def test_dw_conv_delta_kernel_is_identity(rng):
+    """A centre-tap delta kernel must pass the input through unchanged."""
+    x = _rand(rng, 8, 8, 32)
+    k = np.zeros((3, 3, 32), np.float32)
+    k[1, 1, :] = 1.0
+    assert_close(K.dw_conv2d(x, k), x, 0, 0, "delta kernel")
+
+
+def test_dw_conv_shift_kernel(rng):
+    """An off-centre tap shifts the image (with zero-padding at the edge)."""
+    x = _rand(rng, 8, 8, 32)
+    k = np.zeros((3, 3, 32), np.float32)
+    k[0, 1, :] = 1.0  # tap above centre: output row i = input row i-1
+    out = np.asarray(K.dw_conv2d(x, k))
+    assert_close(out[1:], x[:-1], 0, 0, "shifted rows")
+    assert_close(out[0], np.zeros_like(x[0]), 0, 0, "zero-padded edge")
+
+
+def test_dw_conv_channels_independent(rng):
+    """Depthwise: zeroing one channel's taps zeroes only that channel."""
+    x, k = _rand(rng, 8, 8, 32), _rand(rng, 3, 3, 32)
+    k[:, :, 7] = 0.0
+    out = np.asarray(K.dw_conv2d(x, k))
+    assert_close(out[:, :, 7], np.zeros((8, 8)), 0, 0, "zeroed channel")
+    ref_out = np.asarray(ref.depthwise_conv2d(x, k))
+    assert_close(out, ref_out, 1e-4, 1e-4)
+
+
+def test_dw_conv_rejects_unaligned_channels(rng):
+    with pytest.raises(AssertionError):
+        K.dw_conv2d(np.zeros((8, 8, 31), np.float32),
+                    np.zeros((3, 3, 31), np.float32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(h=st.integers(3, 16), w=st.integers(3, 16),
+       c=st.integers(1, 3).map(lambda t: t * 32),
+       seed=st.integers(0, 2**31 - 1))
+def test_dw_conv_shape_sweep(h, w, c, seed):
+    rng = np.random.default_rng(seed)
+    x, k = _rand(rng, h, w, c), _rand(rng, 3, 3, c)
+    assert_close(K.dw_conv2d(x, k), ref.depthwise_conv2d(x, k),
+                 1e-4, 1e-4, f"dwconv sweep {h}x{w}x{c}")

@@ -1,0 +1,95 @@
+"""PE-side Pallas kernels (softmax/layernorm/batchnorm/relu) vs oracles."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+from tests.conftest import assert_close
+
+ROWS = st.integers(1, 8).map(lambda t: t * 32)
+COLS = st.integers(1, 300)
+
+
+def _rand(rng, *shape, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+@pytest.mark.parametrize("m,n", [(32, 32), (64, 512), (512, 512), (32, 7)])
+def test_softmax(rng, m, n):
+    x = _rand(rng, m, n, scale=3.0)
+    assert_close(K.softmax(x), ref.softmax(x), 1e-6, 1e-7, f"softmax {m}x{n}")
+
+
+def test_softmax_rows_sum_to_one(rng):
+    out = np.asarray(K.softmax(_rand(rng, 64, 128)))
+    assert_close(out.sum(axis=-1), np.ones(64), 1e-5, 1e-6, "softmax rows")
+    assert (out >= 0).all()
+
+
+def test_softmax_shift_invariance(rng):
+    """softmax(x + c) == softmax(x): the stable-max subtraction at work."""
+    x = _rand(rng, 32, 64)
+    assert_close(K.softmax(x + 100.0), K.softmax(x), 1e-5, 1e-6)
+
+
+def test_softmax_large_magnitude_no_nan(rng):
+    x = _rand(rng, 32, 64, scale=1e4)
+    out = np.asarray(K.softmax(x))
+    assert np.isfinite(out).all(), "softmax must survive large logits"
+
+
+@pytest.mark.parametrize("m,n", [(32, 64), (128, 512)])
+def test_layernorm(rng, m, n):
+    x = _rand(rng, m, n, scale=2.0)
+    g, b = _rand(rng, n), _rand(rng, n)
+    assert_close(K.layernorm(x, g, b), ref.layernorm(x, g, b),
+                 1e-5, 1e-6, f"layernorm {m}x{n}")
+
+
+def test_layernorm_output_is_normalized(rng):
+    x = _rand(rng, 32, 512, scale=5.0)
+    ones, zeros = np.ones(512, np.float32), np.zeros(512, np.float32)
+    out = np.asarray(K.layernorm(x, ones, zeros))
+    assert_close(out.mean(axis=-1), zeros[:32], 0, 1e-5, "LN mean")
+    assert_close(out.std(axis=-1), ones[:32], 1e-2, 1e-2, "LN std")
+
+
+@pytest.mark.parametrize("m,n", [(32, 64), (96, 256)])
+def test_batchnorm(rng, m, n):
+    x = _rand(rng, m, n, scale=2.0)
+    g, b = _rand(rng, n), _rand(rng, n)
+    mu = _rand(rng, n, scale=0.5)
+    var = np.abs(_rand(rng, n)) + 0.1
+    assert_close(K.batchnorm(x, g, b, mu, var),
+                 ref.batchnorm(x, g, b, mu, var),
+                 1e-5, 1e-6, f"batchnorm {m}x{n}")
+
+
+def test_relu(rng):
+    x = _rand(rng, 64, 128)
+    out = np.asarray(K.relu(x))
+    assert_close(out, np.maximum(x, 0), 0, 0, "relu is exact")
+    assert (out >= 0).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=ROWS, n=COLS, seed=st.integers(0, 2**31 - 1))
+def test_softmax_shape_sweep(m, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, m, n, scale=2.0)
+    assert_close(K.softmax(x), ref.softmax(x), 1e-5, 1e-6,
+                 f"softmax sweep {m}x{n}")
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=ROWS, n=COLS, seed=st.integers(0, 2**31 - 1))
+def test_layernorm_shape_sweep(m, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, m, n, scale=2.0)
+    g, b = _rand(rng, n), _rand(rng, n)
+    assert_close(K.layernorm(x, g, b), ref.layernorm(x, g, b), 1e-4, 1e-5,
+                 f"layernorm sweep {m}x{n}")

@@ -1,0 +1,95 @@
+"""Pallas TE-GEMM kernel vs the pure-jnp oracle — the core L1 signal."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+from tests.conftest import GEMM_ATOL, GEMM_RTOL, assert_close
+
+
+def _rand(rng, *shape, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (32, 32, 32),      # single TE output tile
+        (32, 64, 32),      # two streamer K-chunks
+        (64, 32, 96),      # rectangular grid
+        (128, 128, 128),   # Fig 5 small point
+        (96, 512, 64),     # long-K accumulation
+        (256, 256, 256),   # Fig 5 mid point
+    ],
+)
+def test_gemm_matches_ref(rng, m, k, n):
+    x, w = _rand(rng, m, k), _rand(rng, k, n)
+    got = K.gemm_te(x, w)
+    want = ref.gemm(x, w)
+    assert_close(got, want, GEMM_RTOL, GEMM_ATOL, f"gemm {m}x{k}x{n}")
+
+
+def test_gemm_accumulates_y(rng):
+    m = k = n = 64
+    x, w, y = _rand(rng, m, k), _rand(rng, k, n), _rand(rng, m, n)
+    got = K.gemm_te(x, w, y)
+    want = ref.gemm(x, w, y)
+    assert_close(got, want, GEMM_RTOL, GEMM_ATOL, "gemm+Y")
+
+
+def test_gemm_zero_x_gives_y(rng):
+    m = k = n = 32
+    y = _rand(rng, m, n)
+    got = K.gemm_te(np.zeros((m, k), np.float32),
+                    _rand(rng, k, n), y)
+    assert_close(got, y, 0, 1e-7, "Z must equal Y when X == 0")
+
+
+def test_gemm_identity_w(rng):
+    """X @ I == fp16-rounded X: isolates the precision contract."""
+    m = k = 64
+    x = _rand(rng, m, k)
+    got = K.gemm_te(x, np.eye(k, dtype=np.float32))
+    want = x.astype(np.float16).astype(np.float32)
+    assert_close(got, want, 0, 0, "identity GEMM must be exact fp16 round")
+
+
+def test_gemm_rejects_unaligned(rng):
+    with pytest.raises(AssertionError):
+        K.gemm_te(np.zeros((33, 32), np.float32),
+                  np.zeros((32, 32), np.float32))
+    with pytest.raises(AssertionError):
+        K.gemm_te(np.zeros((32, 48), np.float32),
+                  np.zeros((48, 32), np.float32))
+
+
+def test_gemm_rejects_mismatched_inner(rng):
+    with pytest.raises(AssertionError):
+        K.gemm_te(np.zeros((32, 64), np.float32),
+                  np.zeros((32, 32), np.float32))
+
+
+# Hypothesis sweep: any tile-aligned shape must match the oracle.
+dims = st.integers(1, 4).map(lambda t: t * 32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_gemm_shape_sweep(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, m, k, scale=0.5)
+    w = _rand(rng, k, n, scale=0.5)
+    assert_close(K.gemm_te(x, w), ref.gemm(x, w), GEMM_RTOL, GEMM_ATOL,
+                 f"sweep {m}x{k}x{n} seed={seed}")
+
+
+def test_vmem_footprint_fits_tpu():
+    """§Perf invariant: the K=512 slab double-buffered fits VMEM (16 MiB)."""
+    assert K.gemm_vmem_bytes(512) < 16 * 2**20
+    # and the RedMulE-faithful tile occupies the documented MXU fraction
+    assert K.mxu_utilization_estimate() == pytest.approx((32 / 128) ** 2)
+    assert K.mxu_utilization_estimate(128, 128) == 1.0

@@ -1,0 +1,47 @@
+//! Bench: design-choice ablations DESIGN.md §7 calls out — ROB depth,
+//! Z-FIFO depth, and arbiter port counts — on a single-TE 256³ GEMM.
+//!
+//! The paper fixes ROB=16 / Z-FIFO=32 / 4+3 ports; these sweeps show each
+//! choice sits at the knee of its curve.
+
+use std::time::Instant;
+use tensorpool::sim::{ArchConfig, L1Alloc, Sim};
+use tensorpool::workload::gemm::{map_single, GemmRegions, GemmSpec};
+
+fn run(cfg: &ArchConfig) -> (u64, f64) {
+    let spec = GemmSpec::square(256);
+    let mut alloc = L1Alloc::new(cfg);
+    let regions = GemmRegions::alloc(&spec, &mut alloc);
+    let mut sim = Sim::new(cfg);
+    let mut jobs: Vec<_> = (0..cfg.num_tes()).map(|_| None).collect();
+    jobs[0] = Some(map_single(&spec, &regions));
+    sim.assign_gemm(jobs);
+    let r = sim.run(1_000_000_000);
+    (r.cycles, r.fma_utilization(cfg.te.macs_per_cycle()))
+}
+
+fn main() {
+    let t0 = Instant::now();
+    println!("ROB-depth sweep (paper: 16 entries/stream):");
+    for rob in [1usize, 2, 4, 8, 16, 32] {
+        let mut cfg = ArchConfig::tensorpool();
+        cfg.rob_depth = rob;
+        let (c, u) = run(&cfg);
+        println!("  ROB={rob:>2}: {c:>8} cycles, {:>5.1}% util", 100.0 * u);
+    }
+    println!("Z-FIFO-depth sweep (paper: 32 entries):");
+    for z in [2usize, 4, 8, 16, 32, 64] {
+        let mut cfg = ArchConfig::tensorpool();
+        cfg.z_fifo_depth = z;
+        let (c, u) = run(&cfg);
+        println!("  ZFIFO={z:>2}: {c:>8} cycles, {:>5.1}% util", 100.0 * u);
+    }
+    println!("remote-Group port sweep (paper: 3):");
+    for gp in [1usize, 2, 3] {
+        let mut cfg = ArchConfig::tensorpool();
+        cfg.group_ports = gp;
+        let (c, u) = run(&cfg);
+        println!("  Gports={gp}: {c:>8} cycles, {:>5.1}% util", 100.0 * u);
+    }
+    println!("[bench] ablation sweeps in {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate the analytical artifacts — Fig 1 (model survey),
+//! Fig 12 (area breakdown), Fig 13 (power breakdown), Fig 15 (2D vs 3D
+//! routing channels), Table I, Table III, and the Sec IV memory balances.
+
+use std::time::Instant;
+use tensorpool::figures::{ppa_figs, tables};
+
+fn main() {
+    let t0 = Instant::now();
+    println!("{}", tables::fig1_report());
+    println!("{}", tables::table1_report());
+    println!("{}", ppa_figs::fig12_report());
+    println!("{}", ppa_figs::fig13_report());
+    println!("{}", ppa_figs::fig15_report());
+    println!("{}", ppa_figs::balance_report());
+    println!("{}", tables::table3_report());
+    println!("[bench] analytical suite in {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,42 @@
+//! Bench: simulator hot-path throughput (§Perf deliverable, DESIGN.md §8).
+//!
+//! Measures simulated-cycles-per-second for the three traffic shapes that
+//! dominate the figure harnesses. Target: >= 1M simulated TE-cycles/s so
+//! the full Fig 7 sweep runs in seconds.
+
+use std::time::Instant;
+use tensorpool::sim::{ArchConfig, L1Alloc, Sim};
+use tensorpool::workload::gemm::{map_single, map_split, GemmRegions, GemmSpec};
+
+fn run(label: &str, tes: usize, n: usize) {
+    let cfg = ArchConfig::tensorpool();
+    let spec = GemmSpec::square(n);
+    let mut alloc = L1Alloc::new(&cfg);
+    let regions = GemmRegions::alloc(&spec, &mut alloc);
+    let mut sim = Sim::new(&cfg);
+    if tes == 1 {
+        let mut jobs: Vec<_> = (0..cfg.num_tes()).map(|_| None).collect();
+        jobs[0] = Some(map_single(&spec, &regions));
+        sim.assign_gemm(jobs);
+    } else {
+        sim.assign_gemm(map_split(&spec, &regions, cfg.num_tes(), true));
+    }
+    let t0 = Instant::now();
+    let r = sim.run(10_000_000_000);
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{label:28} {:>9} sim-cycles in {:>8.3}s = {:>10.0} cyc/s  \
+         ({:>6.1} Msim-MACs/s)",
+        r.cycles,
+        dt,
+        r.cycles as f64 / dt,
+        r.total_macs as f64 / dt / 1e6,
+    );
+}
+
+fn main() {
+    println!("simulator hot-path throughput (release):");
+    run("single TE, 256^3", 1, 256);
+    run("single TE, 512^3", 1, 512);
+    run("16 TEs, 512^3 interleaved", 16, 512);
+}

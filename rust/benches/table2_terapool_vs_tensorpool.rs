@@ -1,0 +1,16 @@
+//! Bench: regenerate paper Table II — TensorPool vs the TeraPool baseline
+//! on a large GEMM: throughput, power, energy & area efficiency.
+//!
+//! Paper anchors: 3643 vs 609 MACs/cycle (6x), 1.53 TFLOPS/W (8.8x),
+//! 57.53 GFLOPS/W/mm^2 (9.1x).
+
+use std::time::Instant;
+use tensorpool::figures::tables::{table2_measure, table2_report};
+
+fn main() {
+    let t0 = Instant::now();
+    let d = table2_measure();
+    let dt = t0.elapsed();
+    println!("{}", table2_report(&d));
+    println!("[bench] measured both machines in {dt:.2?}");
+}

@@ -1,0 +1,6 @@
+//! The coordinator: maps compute blocks onto TEs/PEs/DMA and executes
+//! sequential or concurrent (double-buffered) schedules (paper Sec V-C).
+pub mod schedule;
+pub mod server;
+pub use schedule::{compare, run_concurrent, run_sequential, ScheduleResult};
+pub use server::{Pipeline, Server, TtiReport, TtiRequest};

@@ -1,0 +1,150 @@
+//! Fig 10 harness: sequential vs concurrent execution of the Fig 9
+//! AI-Native PHY compute blocks (TEs ∥ PEs ∥ DMA).
+
+use crate::coordinator::schedule::{run_concurrent, run_sequential, ScheduleResult};
+use crate::report::{int, pct, Table};
+use crate::sim::{ArchConfig, L1Alloc};
+use crate::workload::blocks::{dwsep_conv_block, fc_softmax_block, mha_block, CompBlock};
+
+/// Results for one block, both schedules.
+#[derive(Clone, Debug)]
+pub struct Fig10Row {
+    pub block: &'static str,
+    pub seq: ScheduleResult,
+    pub conc: ScheduleResult,
+}
+
+impl Fig10Row {
+    pub fn runtime_reduction(&self) -> f64 {
+        self.conc.runtime_reduction_vs(&self.seq)
+    }
+}
+
+fn mk_block(name: &str, cfg: &ArchConfig, iters: usize) -> CompBlock {
+    let mut alloc = L1Alloc::new(cfg);
+    match name {
+        "fc_softmax" => fc_softmax_block(cfg.num_tes(), &mut alloc, iters),
+        "dwsep_conv" => dwsep_conv_block(cfg.num_tes(), &mut alloc, iters),
+        "mha" => mha_block(cfg.num_tes(), &mut alloc),
+        other => panic!("unknown block {other}"),
+    }
+}
+
+/// Run the full Fig 10 suite.
+pub fn fig10_rows(cfg: &ArchConfig, iters: usize) -> Vec<Fig10Row> {
+    ["fc_softmax", "dwsep_conv", "mha"]
+        .into_iter()
+        .map(|name| {
+            let seq = run_sequential(cfg, &mk_block(name, cfg, iters));
+            let conc = run_concurrent(cfg, &mk_block(name, cfg, iters));
+            assert_eq!(seq.te_macs, conc.te_macs, "{name}: same TE work");
+            Fig10Row {
+                block: match name {
+                    "fc_softmax" => "FC + softmax",
+                    "dwsep_conv" => "dw-sep conv + LN + ReLU",
+                    _ => "multi-head attention",
+                },
+                seq,
+                conc,
+            }
+        })
+        .collect()
+}
+
+pub fn fig10_table(rows: &[Fig10Row]) -> String {
+    let mut t = Table::new(&[
+        "block", "schedule", "cycles", "TE util", "PE util", "DMA util",
+        "runtime vs seq",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.block.into(),
+            "sequential".into(),
+            int(r.seq.cycles),
+            pct(r.seq.te_utilization),
+            pct(r.seq.pe_utilization),
+            pct(r.seq.dma_utilization),
+            "-".into(),
+        ]);
+        t.row(&[
+            r.block.into(),
+            "concurrent".into(),
+            int(r.conc.cycles),
+            pct(r.conc.te_utilization),
+            pct(r.conc.pe_utilization),
+            pct(r.conc.dma_utilization),
+            format!("-{}", pct(r.runtime_reduction())),
+        ]);
+    }
+    t.to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn concurrent_never_slower() {
+        let cfg = ArchConfig::tensorpool();
+        for r in fig10_rows(&cfg, 2) {
+            assert!(
+                r.conc.cycles <= r.seq.cycles,
+                "{}: concurrent {} vs sequential {}",
+                r.block,
+                r.conc.cycles,
+                r.seq.cycles
+            );
+        }
+    }
+
+    #[test]
+    fn fc_reduction_in_paper_ballpark() {
+        // Paper: FC runtime −16%; we accept a generous band (5–35%) since
+        // the softmax/DMA balance depends on PE-kernel calibration.
+        let cfg = ArchConfig::tensorpool();
+        let rows = fig10_rows(&cfg, 2);
+        let fc = rows.iter().find(|r| r.block.starts_with("FC")).unwrap();
+        let red = fc.runtime_reduction();
+        assert!(
+            (0.05..=0.40).contains(&red),
+            "FC runtime reduction {red:.3} outside plausible band"
+        );
+    }
+
+    #[test]
+    fn contention_lowers_concurrent_te_utilization() {
+        // Paper: TE FMA utilization drops to 67%/37%/64% when engines
+        // overlap. Our PE kernels are leaner than the paper's (see
+        // EXPERIMENTS.md §Fig10), so we require the direction, not the
+        // magnitude: concurrent TE utilization must sit below the 99%
+        // TE-only level for the FC and conv blocks, i.e. PE/DMA overlap
+        // and contention must cost the TEs something.
+        let cfg = ArchConfig::tensorpool();
+        let rows = fig10_rows(&cfg, 2);
+        for r in rows.iter().filter(|r| !r.block.contains("attention")) {
+            assert!(
+                r.conc.te_utilization < 0.93,
+                "{}: concurrent TE util {:.2} suspiciously ideal",
+                r.block,
+                r.conc.te_utilization
+            );
+        }
+    }
+
+    #[test]
+    fn mha_benefits_least_from_overlap() {
+        // Paper: −16%/−25% for FC/conv but only −1.3% for MHA (its PE work
+        // is small and serialized by stage dependencies).
+        let cfg = ArchConfig::tensorpool();
+        let rows = fig10_rows(&cfg, 2);
+        let red = |name: &str| {
+            rows.iter()
+                .find(|r| r.block.contains(name))
+                .unwrap()
+                .runtime_reduction()
+        };
+        assert!(red("attention") < red("FC"));
+        assert!(red("attention") < red("conv"));
+        assert!(red("attention") < 0.10, "MHA gains must be small");
+    }
+}

@@ -1,0 +1,233 @@
+//! Fig 5 (single-TE GEMM vs problem size and interconnect bandwidth) and
+//! Fig 7 (parallel GEMM on 16 TEs) harnesses.
+
+use crate::report::{f2, int, pct, Table};
+use crate::sim::{ArchConfig, L1Alloc, Sim};
+use crate::workload::gemm::{map_independent, map_single, map_split, GemmRegions, GemmSpec};
+
+/// One Fig 5 sweep point.
+#[derive(Clone, Copy, Debug)]
+pub struct Fig5Point {
+    pub n: usize,
+    pub k: usize,
+    pub j: usize,
+    pub cycles: u64,
+    pub utilization: f64,
+}
+
+/// Run the single-TE sweep (paper Fig 5): problem sizes × (K, J) configs.
+pub fn fig5_sweep(sizes: &[usize], kjs: &[(usize, usize)]) -> Vec<Fig5Point> {
+    let mut out = Vec::new();
+    for &n in sizes {
+        for &(k, j) in kjs {
+            let cfg = ArchConfig::tensorpool().with_kj(k, j);
+            let spec = GemmSpec::square(n);
+            let mut alloc = L1Alloc::new(&cfg);
+            let regions = GemmRegions::alloc(&spec, &mut alloc);
+            let mut sim = Sim::new(&cfg);
+            let mut jobs: Vec<_> = (0..cfg.num_tes()).map(|_| None).collect();
+            jobs[0] = Some(map_single(&spec, &regions));
+            sim.assign_gemm(jobs);
+            let r = sim.run(1_000_000_000);
+            out.push(Fig5Point {
+                n,
+                k,
+                j,
+                cycles: r.cycles,
+                utilization: r.fma_utilization(cfg.te.macs_per_cycle()),
+            });
+        }
+    }
+    out
+}
+
+pub fn fig5_table(points: &[Fig5Point]) -> String {
+    let mut t = Table::new(&["GEMM n", "K", "J", "cycles", "FMA util"]);
+    for p in points {
+        t.row(&[
+            int(p.n as u64),
+            int(p.k as u64),
+            int(p.j as u64),
+            int(p.cycles),
+            pct(p.utilization),
+        ]);
+    }
+    t.to_string()
+}
+
+/// One Fig 7 row: a parallel-TE configuration.
+#[derive(Clone, Debug)]
+pub struct Fig7Point {
+    pub label: String,
+    pub n: usize,
+    pub cycles: u64,
+    pub utilization: f64,
+    pub macs_per_cycle: f64,
+    pub speedup_vs_single: f64,
+}
+
+/// Run the Fig 7 suite for one problem size: single TE (reference),
+/// 16 independent GEMMs, split ± interleaved-W.
+pub fn fig7_suite(n: usize) -> Vec<Fig7Point> {
+    let cfg = ArchConfig::tensorpool();
+    let mut out = Vec::new();
+
+    // Reference: one TE computing the whole n×n×n GEMM.
+    let single_cycles = {
+        let spec = GemmSpec::square(n);
+        let mut alloc = L1Alloc::new(&cfg);
+        let regions = GemmRegions::alloc(&spec, &mut alloc);
+        let mut sim = Sim::new(&cfg);
+        let mut jobs: Vec<_> = (0..cfg.num_tes()).map(|_| None).collect();
+        jobs[0] = Some(map_single(&spec, &regions));
+        sim.assign_gemm(jobs);
+        let r = sim.run(1_000_000_000);
+        out.push(Fig7Point {
+            label: "single TE".into(),
+            n,
+            cycles: r.cycles,
+            utilization: r.fma_utilization(cfg.te.macs_per_cycle()),
+            macs_per_cycle: r.macs_per_cycle(),
+            speedup_vs_single: 1.0,
+        });
+        r.cycles
+    };
+
+    // 16 independent smaller GEMMs (n/16 of the work each → n × n/16 × n
+    // slices would change utilization; the paper runs 16 private GEMMs of
+    // the same size class). We give each TE an (n/4)³ private GEMM.
+    {
+        let small = (n / 4).max(64);
+        let spec = GemmSpec::square(small);
+        let mut alloc = L1Alloc::new(&cfg);
+        let mut sim = Sim::new(&cfg);
+        let jobs = map_independent(&spec, cfg.num_tes(), &mut alloc);
+        sim.assign_gemm(jobs);
+        let r = sim.run(1_000_000_000);
+        out.push(Fig7Point {
+            label: format!("16 independent {small}³"),
+            n: small,
+            cycles: r.cycles,
+            utilization: r.fma_utilization(cfg.te.macs_per_cycle()),
+            macs_per_cycle: r.macs_per_cycle(),
+            speedup_vs_single: 0.0, // not comparable
+        });
+    }
+
+    // Large GEMM split across 16 TEs, without and with interleaved W.
+    for (label, interleave) in
+        [("split, lock-step W", false), ("split, interleaved W", true)]
+    {
+        let spec = GemmSpec::square(n);
+        let mut alloc = L1Alloc::new(&cfg);
+        let regions = GemmRegions::alloc(&spec, &mut alloc);
+        let mut sim = Sim::new(&cfg);
+        sim.assign_gemm(map_split(&spec, &regions, cfg.num_tes(), interleave));
+        let r = sim.run(1_000_000_000);
+        out.push(Fig7Point {
+            label: label.into(),
+            n,
+            cycles: r.cycles,
+            utilization: r.fma_utilization(cfg.te.macs_per_cycle()),
+            macs_per_cycle: r.macs_per_cycle(),
+            speedup_vs_single: single_cycles as f64 / r.cycles as f64,
+        });
+    }
+    out
+}
+
+pub fn fig7_table(points: &[Fig7Point]) -> String {
+    let mut t = Table::new(&[
+        "configuration",
+        "n",
+        "cycles",
+        "FMA util",
+        "MACs/cycle",
+        "speedup",
+    ]);
+    for p in points {
+        t.row(&[
+            p.label.clone(),
+            int(p.n as u64),
+            int(p.cycles),
+            pct(p.utilization),
+            f2(p.macs_per_cycle),
+            if p.speedup_vs_single > 0.0 {
+                format!("{:.1}x", p.speedup_vs_single)
+            } else {
+                "-".into()
+            },
+        ]);
+    }
+    t.to_string()
+}
+
+/// Ablation for DESIGN.md §7: burst support and the latency-tolerant
+/// streamer, on a single-TE GEMM.
+pub fn ablation_suite(n: usize) -> Vec<(String, u64, f64)> {
+    let mut out = Vec::new();
+    for (label, cfg) in [
+        ("full (burst + ROB)", ArchConfig::tensorpool()),
+        ("no burst grouping", ArchConfig::tensorpool().without_burst()),
+        ("in-order streamer", ArchConfig::tensorpool().without_rob()),
+        ("neither", ArchConfig::tensorpool().without_burst().without_rob()),
+    ] {
+        let spec = GemmSpec::square(n);
+        let mut alloc = L1Alloc::new(&cfg);
+        let regions = GemmRegions::alloc(&spec, &mut alloc);
+        let mut sim = Sim::new(&cfg);
+        let mut jobs: Vec<_> = (0..cfg.num_tes()).map(|_| None).collect();
+        jobs[0] = Some(map_single(&spec, &regions));
+        sim.assign_gemm(jobs);
+        let r = sim.run(1_000_000_000);
+        out.push((
+            label.to_string(),
+            r.cycles,
+            r.fma_utilization(cfg.te.macs_per_cycle()),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_shape_utilization_grows_with_size_and_k() {
+        let pts = fig5_sweep(&[64, 128], &[(1, 1), (4, 2)]);
+        let get = |n, k| {
+            pts.iter().find(|p| p.n == n && p.k == k).unwrap().utilization
+        };
+        assert!(get(128, 4) > get(64, 4), "bigger problems utilize better");
+        assert!(get(128, 4) > get(128, 1), "K widening helps");
+        assert!(get(64, 1) < 0.6, "K=1 must be response-bound");
+    }
+
+    #[test]
+    fn fig7_interleaving_helps() {
+        // n=512 gives all 16 TEs a stripe and 16 distinct W start columns;
+        // at 256 only 8 TEs have work and the effect shrinks.
+        let pts = fig7_suite(512);
+        let lock = pts.iter().find(|p| p.label.contains("lock-step")).unwrap();
+        let il = pts.iter().find(|p| p.label.contains("interleaved")).unwrap();
+        assert!(
+            il.utilization > lock.utilization,
+            "interleaved W must beat lock-step: {} vs {}",
+            il.utilization,
+            lock.utilization
+        );
+        assert!(il.speedup_vs_single > 10.0, "16 TEs must speed up >10x");
+    }
+
+    #[test]
+    fn ablations_rank_correctly() {
+        let abl = ablation_suite(128);
+        let util = |label: &str| {
+            abl.iter().find(|(l, _, _)| l.contains(label)).unwrap().2
+        };
+        assert!(util("full") > util("no burst"), "burst must help");
+        assert!(util("full") > util("in-order"), "ROB must help");
+        assert!(util("in-order") > util("neither") * 0.99, "combined worst");
+    }
+}

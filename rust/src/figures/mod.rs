@@ -1,0 +1,8 @@
+//! Experiment harnesses: one generator per paper table and figure
+//! (see DESIGN.md §4 for the experiment index).
+
+pub mod block_figs;
+pub mod gemm_figs;
+pub mod pe_figs;
+pub mod ppa_figs;
+pub mod tables;

@@ -1,0 +1,123 @@
+//! Fig 8 harness: runtime and instruction/stall breakdown of the PE-side
+//! AI-Native PHY and classical signal-processing kernels.
+
+use crate::report::{f3, int, pct, Table};
+use crate::workload::phy::{fig8_kernels, PeKernel};
+
+/// Workload sizing for Fig 8's demanding use-case: 8192 REs, 8×8 MIMO,
+/// FP16 activations (paper Sec V-B).
+pub const FIG8_RES: usize = 8192;
+pub const FIG8_MIMO: usize = 8;
+
+/// Elements each kernel processes in the Fig 8 configuration.
+pub fn fig8_elems(kernel: &PeKernel) -> usize {
+    match kernel.name {
+        // activations over a 512×512 feature map
+        "batchnorm" | "layernorm" | "softmax" | "relu" => 512 * 512,
+        // 12 OFDM symbols of FFT butterfly work: N/4·log4(N) butterflies,
+        // 4 outputs each
+        "cfft" => 12 * (FIG8_RES / 4) * 6 * 4 / 4,
+        // one estimate per RE per antenna (comb pilots, interpolated)
+        "ls_che" => FIG8_RES * FIG8_MIMO / 4,
+        // per-RE 8×8 Cholesky column steps: 8 columns × 8 steps
+        "mimo_mmse" => FIG8_RES / 4 * FIG8_MIMO * FIG8_MIMO / 2,
+        _ => 512 * 512,
+    }
+}
+
+/// One Fig 8 bar.
+#[derive(Clone, Debug)]
+pub struct Fig8Row {
+    pub name: &'static str,
+    pub cycles: u64,
+    pub runtime_ms: f64,
+    pub ipc: f64,
+    pub frac_load_stall: f64,
+    pub frac_fpu_stall: f64,
+    pub frac_div_stall: f64,
+    pub frac_branch: f64,
+}
+
+pub fn fig8_rows(pes: usize, freq_ghz: f64) -> Vec<Fig8Row> {
+    fig8_kernels()
+        .into_iter()
+        .map(|k| {
+            let t = k.timing();
+            let cycles = k.cycles(fig8_elems(&k), pes);
+            let total = t.cycles as f64;
+            Fig8Row {
+                name: k.name,
+                cycles,
+                runtime_ms: cycles as f64 / (freq_ghz * 1e9) * 1e3,
+                ipc: t.ipc,
+                frac_load_stall: t.stalls.load_wait as f64 / total,
+                frac_fpu_stall: t.stalls.fpu_raw as f64 / total,
+                frac_div_stall: t.stalls.div_wait as f64 / total,
+                frac_branch: t.stalls.branch_penalty as f64 / total,
+            }
+        })
+        .collect()
+}
+
+pub fn fig8_table(rows: &[Fig8Row]) -> String {
+    let mut t = Table::new(&[
+        "kernel", "cycles", "ms@1GHz", "IPC", "load-stall", "RAW-stall",
+        "div-stall", "branch",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.name.into(),
+            int(r.cycles),
+            f3(r.runtime_ms),
+            f3(r.ipc),
+            pct(r.frac_load_stall),
+            pct(r.frac_fpu_stall),
+            pct(r.frac_div_stall),
+            pct(r.frac_branch),
+        ]);
+    }
+    t.to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_kernels_meet_the_realtime_bound() {
+        // Paper: all within 0.15 ms at 1 GHz.
+        for r in fig8_rows(256, 1.0) {
+            assert!(
+                r.runtime_ms < 0.15,
+                "{} takes {:.3} ms > 0.15 ms",
+                r.name,
+                r.runtime_ms
+            );
+        }
+    }
+
+    #[test]
+    fn ipc_matches_paper_anchors() {
+        // Paper: CHE 0.77, MMSE 0.59, CFFT 0.66 — we require ±0.1.
+        let rows = fig8_rows(256, 1.0);
+        let ipc = |n: &str| rows.iter().find(|r| r.name == n).unwrap().ipc;
+        assert!((ipc("ls_che") - 0.77).abs() < 0.1, "che {}", ipc("ls_che"));
+        assert!((ipc("mimo_mmse") - 0.59).abs() < 0.1, "mmse {}", ipc("mimo_mmse"));
+        assert!((ipc("cfft") - 0.66).abs() < 0.1, "cfft {}", ipc("cfft"));
+    }
+
+    #[test]
+    fn stall_fractions_bounded() {
+        for r in fig8_rows(256, 1.0) {
+            let s = r.frac_load_stall + r.frac_fpu_stall + r.frac_div_stall
+                + r.frac_branch;
+            assert!(
+                (r.ipc + s - 1.0).abs() < 0.35,
+                "{}: IPC {} + stalls {} should roughly partition the cycle",
+                r.name,
+                r.ipc,
+                s
+            );
+        }
+    }
+}

@@ -1,0 +1,282 @@
+//! Fig 1 + Tables I/II/III harnesses.
+
+use crate::models::zoo;
+use crate::ppa::area::{POOL_MM2, TERAPOOL_POOL_MM2};
+use crate::ppa::normalize::{area_node, gops_frequency};
+use crate::ppa::power::EnergyModel;
+use crate::ppa::routing3d::{footprint, RoutingTech};
+use crate::report::{f2, pct, Table};
+use crate::sim::{ArchConfig, L1Alloc, RunResult, Sim};
+use crate::workload::gemm::{map_split, GemmRegions, GemmSpec};
+use crate::workload::phy::gemm_pe;
+
+/// Fig 1: the AI-Native PHY model survey.
+pub fn fig1_report() -> String {
+    let mut t = Table::new(&[
+        "model", "ref", "arch", "task", "deploy", "params[M]", "GFLOP/TTI",
+        "GFLOP/PRB",
+    ]);
+    for m in zoo::survey() {
+        t.row(&[
+            m.name.into(),
+            m.reference.into(),
+            format!("{:?}", m.arch),
+            format!("{:?}", m.task),
+            format!("{:?}", m.deploy),
+            f2(m.params_m),
+            f2(m.gflops_per_tti),
+            format!("{:.3}", m.gflops_per_tti / m.prbs as f64),
+        ]);
+    }
+    let mut s = String::from("Fig 1 — models for AI-Native PHY\n");
+    s.push_str(&t.to_string());
+    s.push_str(&format!(
+        "→ edge real-time requirement: {:.1} TFLOPS ({}x TeraPool's 3.6)\n",
+        zoo::required_tflops(1.0),
+        f2(zoo::required_tflops(1.0) / 3.6)
+    ));
+    s.push_str(&format!(
+        "→ all edge models fit 4 MiB L1: {}\n",
+        zoo::all_edge_models_fit(4 << 20)
+    ));
+    s.push_str(&format!(
+        "→ minimum GEMM fraction across the survey: {}\n",
+        pct(zoo::min_gemm_fraction())
+    ));
+    s
+}
+
+/// Table I: many-core processors for software-defined RAN (static survey).
+pub fn table1_report() -> String {
+    let mut t = Table::new(&[
+        "", "TeraPool [9]", "X100 [10]", "Octeon10 [11]", "NVIDIA-A100 [12]",
+    ]);
+    t.row(&["L1-size".into(), "4MiB/1024PEs".into(), "-".into(),
+            "64KiB/PE".into(), "128KiB/128PE".into()]);
+    t.row(&["Node".into(), "12nm".into(), "-".into(), "5nm".into(), "7nm".into()]);
+    t.row(&["Frequency [GHz]".into(), "0.88".into(), "-".into(), "2.5".into(),
+            "1.41".into()]);
+    t.row(&["Perf [TFLOPS@FP16]".into(), "3.6".into(), "-".into(), "-".into(),
+            "78".into()]);
+    t.row(&["Power [W]".into(), "5.5".into(), "35".into(), "50".into(),
+            "400".into()]);
+    format!("Table I — many-core processors for software-defined RAN\n{}",
+            Table::to_string(&t))
+}
+
+/// Measured inputs for Table II.
+pub struct Table2Data {
+    pub tensorpool_run: RunResult,
+    pub tensorpool_power_w: f64,
+    pub terapool_macs_per_cycle: f64,
+    pub terapool_power_w: f64,
+}
+
+/// Run the Table II experiment: a large GEMM on TensorPool (simulated) and
+/// on the TeraPool PE-only baseline (instruction-timing model).
+pub fn table2_measure() -> Table2Data {
+    let cfg = ArchConfig::tensorpool();
+    let spec = GemmSpec::square(512);
+    let mut alloc = L1Alloc::new(&cfg);
+    let regions = GemmRegions::alloc(&spec, &mut alloc);
+    let mut sim = Sim::new(&cfg);
+    sim.assign_gemm(map_split(&spec, &regions, cfg.num_tes(), true));
+    let run = sim.run(1_000_000_000);
+    let em = EnergyModel::calibrate(&cfg);
+    let power = em.pool_power(&cfg, &run);
+
+    // TeraPool: 1024 PEs on the SIMD GEMM microkernel.
+    let tera = ArchConfig::terapool();
+    let k = gemm_pe();
+    let t = k.timing();
+    let macs_per_pe_cycle = 16.0 * t.ipc / k.body.len() as f64 * 2000.0
+        / (t.instrs as f64 / t.cycles as f64) // = 16 / cycles_per_iter
+        / 2000.0;
+    // simpler: 16 MACs per iteration / cycles per iteration
+    let cycles_per_iter = t.cycles as f64 / 2000.0;
+    let macs_per_pe = 16.0 / cycles_per_iter;
+    let _ = macs_per_pe_cycle;
+    Table2Data {
+        tensorpool_run: run,
+        tensorpool_power_w: power,
+        terapool_macs_per_cycle: macs_per_pe * tera.num_pes() as f64,
+        terapool_power_w: EnergyModel::calibrate(&cfg).pe_pool_power(tera.num_pes(), 0.6),
+    }
+}
+
+pub fn table2_report(d: &Table2Data) -> String {
+    let cfg = ArchConfig::tensorpool();
+    let tp_macs = d.tensorpool_run.macs_per_cycle();
+    let tp_tflops = d.tensorpool_run.tflops(cfg.freq_ghz);
+    let tera_tflops = 2.0 * d.terapool_macs_per_cycle * cfg.freq_ghz / 1000.0;
+    let tp_area = POOL_MM2;
+    let tera_area = area_node(TERAPOOL_POOL_MM2, 12.0, 7.0);
+    let tp_eff_w = tp_tflops / d.tensorpool_power_w;
+    let tera_eff_w = tera_tflops / d.terapool_power_w;
+    let tp_eff_area = tp_tflops / tp_area;
+    let tera_eff_area = tera_tflops / tera_area;
+    let tp_both = 1000.0 * tp_eff_w / tp_area;
+    let tera_both = 1000.0 * tera_eff_w / tera_area;
+
+    let mut t = Table::new(&["metric", "TeraPool", "TensorPool", "ratio"]);
+    for (m, a, b) in [
+        ("GEMM throughput [MACs/cycle]", d.terapool_macs_per_cycle, tp_macs),
+        ("GEMM perf [TFLOPS@FP16]", tera_tflops, tp_tflops),
+        ("energy eff [TFLOPS/W]", tera_eff_w, tp_eff_w),
+        ("area eff [TFLOPS/mm2] (norm.)", tera_eff_area, tp_eff_area),
+        ("E&A eff [GFLOPS/W/mm2]", tera_both, tp_both),
+    ] {
+        t.row(&[m.into(), f2(a), f2(b), format!("{:.1}x", b / a)]);
+    }
+    t.row(&["GEMM power [W]".into(), f2(d.terapool_power_w),
+            f2(d.tensorpool_power_w),
+            format!("{:.1}x", d.terapool_power_w / d.tensorpool_power_w)]);
+    format!(
+        "Table II — TensorPool improvement over TeraPool (GEMM 512³)\n\
+         paper anchors: 609 vs 3643 MACs/cycle (6x), 8.8x TFLOPS/W, \
+         9.1x GFLOPS/W/mm²\n{}",
+        t.to_string()
+    )
+}
+
+/// Table III: tensor-accelerated platforms for AI-native RAN.
+pub fn table3_report() -> String {
+    // Published platform data (paper Table III).
+    #[allow(dead_code)] // power kept for completeness of the published row
+    struct P {
+        name: &'static str,
+        l1_clusters: f64,
+        tes: f64,
+        freq_mhz: f64,
+        area_cluster_mm2: f64,
+        power_w: f64,
+        gops: f64,
+        node_nm: f64,
+    }
+    let platforms = [
+        P { name: "Aerial RAN Computer-1 (GB RTX PRO 6000)", l1_clusters: 188.0,
+            tes: 752.0, freq_mhz: 2617.0, area_cluster_mm2: 1.7,
+            power_w: 600.0, gops: 503_800.0, node_nm: 4.0 },
+        P { name: "Aerial RAN Computer Pro (RTX 5090)", l1_clusters: 170.0,
+            tes: 680.0, freq_mhz: 2407.0, area_cluster_mm2: 1.7,
+            power_w: 575.0, gops: 419_000.0, node_nm: 4.0 },
+        P { name: "Aerial RAN Compact (L4)", l1_clusters: 60.0, tes: 240.0,
+            freq_mhz: 2040.0, area_cluster_mm2: 1.7, power_w: 72.0,
+            gops: 121_000.0, node_nm: 4.0 },
+        P { name: "Qualcomm HTA230", l1_clusters: 1.0, tes: 2.0,
+            freq_mhz: 1000.0, area_cluster_mm2: f64::NAN, power_w: f64::NAN,
+            gops: 2000.0, node_nm: 4.0 },
+    ];
+
+    // TensorPool measured entry.
+    let cfg = ArchConfig::tensorpool();
+    let d = table2_measure();
+    // GOPS = 2 FLOPs/MAC × MACs/cycle × GHz (already in 1e9 ops/s)
+    let tp_gops = 2.0 * d.tensorpool_run.macs_per_cycle() * cfg.freq_ghz;
+    let f3d = footprint(&cfg, &RoutingTech::paper());
+
+    let mut t = Table::new(&[
+        "platform", "clusters", "TEs", "GOPS(TEs)", "GOPS/cluster",
+        "GOPS/cluster @1.41GHz", "GOPS/mm2 (node-norm)",
+    ]);
+    for p in &platforms {
+        let per_cluster = p.gops / p.l1_clusters;
+        let fnorm = gops_frequency(per_cluster, p.freq_mhz, 1410.0);
+        let area_norm = if p.area_cluster_mm2.is_nan() {
+            "-".to_string()
+        } else {
+            f2(per_cluster / (p.area_cluster_mm2 * (7.0f64 / p.node_nm).powi(2)))
+        };
+        t.row(&[
+            p.name.into(),
+            f2(p.l1_clusters),
+            f2(p.tes),
+            f2(p.gops),
+            f2(per_cluster),
+            f2(fnorm),
+            area_norm,
+        ]);
+    }
+    t.row(&[
+        "TensorPool (this repro, measured)".into(),
+        "1".into(),
+        "16".into(),
+        f2(tp_gops),
+        f2(tp_gops),
+        f2(gops_frequency(tp_gops, 900.0, 1410.0)),
+        f2(tp_gops / POOL_MM2),
+    ]);
+    t.row(&[
+        "TensorPool-3D (this repro)".into(),
+        "1".into(),
+        "16".into(),
+        f2(tp_gops),
+        f2(tp_gops),
+        f2(gops_frequency(tp_gops, 900.0, 1410.0)),
+        // paper normalizes by total stacked silicon (2 dies), giving its
+        // 288 GOPS/mm² figure
+        f2(tp_gops / (2.0 * f3d.die_mm2)),
+    ]);
+    format!(
+        "Table III — tensor-accelerated platforms for AI-native RAN\n\
+         paper anchors: TensorPool 6623 GOPS (4.76x a 4-TE SM), \
+         3D 288 GOPS/mm²\n{}",
+        t.to_string()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_ratios_match_paper_shape() {
+        let d = table2_measure();
+        let tp = d.tensorpool_run.macs_per_cycle();
+        let ratio = tp / d.terapool_macs_per_cycle;
+        // paper: 3643/609 = 6.0x — accept 4.5–8x
+        assert!(
+            (4.5..=8.0).contains(&ratio),
+            "GEMM throughput ratio {ratio:.1} vs paper 6x \
+             (tp {tp:.0}, tera {:.0})",
+            d.terapool_macs_per_cycle
+        );
+        // energy efficiency ratio ~8.8x
+        let cfg = ArchConfig::tensorpool();
+        let tp_eff = d.tensorpool_run.tflops(cfg.freq_ghz) / d.tensorpool_power_w;
+        let tera_tflops = 2.0 * d.terapool_macs_per_cycle * cfg.freq_ghz / 1000.0;
+        let tera_eff = tera_tflops / d.terapool_power_w;
+        let eratio = tp_eff / tera_eff;
+        assert!(
+            (6.0..=12.0).contains(&eratio),
+            "energy-efficiency ratio {eratio:.1} vs paper 8.8x"
+        );
+    }
+
+    #[test]
+    fn tensorpool_macs_close_to_paper() {
+        let d = table2_measure();
+        let tp = d.tensorpool_run.macs_per_cycle();
+        assert!(
+            (3400.0..=4200.0).contains(&tp),
+            "TensorPool GEMM {tp:.0} MACs/cycle vs paper 3643"
+        );
+    }
+
+    #[test]
+    fn terapool_baseline_close_to_paper() {
+        let d = table2_measure();
+        assert!(
+            (450.0..=800.0).contains(&d.terapool_macs_per_cycle),
+            "TeraPool {:.0} MACs/cycle vs paper 609",
+            d.terapool_macs_per_cycle
+        );
+    }
+
+    #[test]
+    fn reports_render() {
+        assert!(fig1_report().contains("DeepRx"));
+        assert!(table1_report().contains("TeraPool"));
+        assert!(table3_report().contains("Aerial"));
+    }
+}

@@ -1,0 +1,33 @@
+//! # tensorpool
+//!
+//! Reproduction of *TensorPool: A 3D-Stacked 8.4TFLOPS/4.3W Many-Core
+//! Domain-Specific Processor for AI-Native Radio Access Networks*
+//! (Bertuletti et al., CS.AR 2026).
+//!
+//! The crate provides:
+//! * [`sim`] — a cycle-level simulator of the TensorPool cluster (the
+//!   substitute for the paper's RTL/QuestaSim testbed): banked L1,
+//!   hierarchical interconnect with burst support and K/J widening, RedMulE
+//!   tensor engines with latency-tolerant streamers, PE timing, DMA.
+//! * [`workload`] — GEMM mapping across 16 TEs (incl. the interleaved-W
+//!   scheme of Fig 6), PHY kernel instruction streams, and the Fig 9
+//!   compute blocks.
+//! * [`coordinator`] — sequential vs concurrent (double-buffered) TE/PE/DMA
+//!   schedules and the model-graph mapper.
+//! * [`ppa`] — analytical power/performance/area models: Kung memory
+//!   balances (Eqs 1–6), area/power breakdowns (Figs 12/13), and the 2D vs
+//!   3D routing-channel model (Eqs 7–8, Fig 15).
+//! * [`models`] — the AI-Native PHY model survey (Fig 1) and derived
+//!   platform requirements.
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`); Python never runs on this path.
+//! * [`report`] — table/series printers matching the paper's figures.
+
+pub mod coordinator;
+pub mod figures;
+pub mod models;
+pub mod ppa;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod workload;

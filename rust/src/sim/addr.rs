@@ -1,0 +1,235 @@
+//! L1 address mapping: word addresses → (tile, bank), matrix regions, and
+//! wide-access ("line") decomposition.
+//!
+//! TensorPool inherits the MemPool/TeraPool interleaved scratchpad layout:
+//! consecutive 64 B *lines* (16 × 32-bit words — exactly one TE wide access)
+//! rotate across Tiles, and consecutive words within a line occupy
+//! consecutive banks of one Tile. This keeps every 512-bit TE access inside
+//! a single Tile (so the Burst-Distributor can fan it out to that Tile's
+//! banks, paper Fig 4) while spreading a matrix uniformly over all 2048
+//! banks (the uniform-random assumption of the paper's Eq 4–5).
+
+use super::config::ArchConfig;
+
+/// Words per wide access: 512 bit / 32 bit.
+pub const LINE_WORDS: usize = 16;
+/// Bytes per wide access.
+pub const LINE_BYTES: usize = LINE_WORDS * 4;
+/// FP16 elements per wide access.
+pub const LINE_ELEMS: usize = LINE_WORDS * 2;
+
+/// A word address in L1 (unit: 32-bit words).
+pub type WordAddr = u64;
+
+/// Physical location of one word.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BankLoc {
+    pub tile: usize,
+    pub bank: usize,
+}
+
+/// Address decoder for a given topology.
+#[derive(Clone, Debug)]
+pub struct AddrMap {
+    num_tiles: usize,
+    lines_per_bank_pass: usize,
+}
+
+impl AddrMap {
+    pub fn new(cfg: &ArchConfig) -> Self {
+        AddrMap {
+            num_tiles: cfg.num_tiles(),
+            lines_per_bank_pass: cfg.banks_per_tile / LINE_WORDS,
+        }
+    }
+
+    /// Line index of a word address.
+    pub fn line_of(&self, addr: WordAddr) -> u64 {
+        addr / LINE_WORDS as u64
+    }
+
+    /// Tile that owns a line: lines rotate across tiles.
+    pub fn tile_of_line(&self, line: u64) -> usize {
+        (line % self.num_tiles as u64) as usize
+    }
+
+    /// First bank (within the owning tile) of a line. With 32 banks/tile and
+    /// 16-word lines, successive passes over the tiles alternate the two
+    /// bank halves, so dense streams exercise every bank.
+    pub fn bank_start_of_line(&self, line: u64) -> usize {
+        let pass = line / self.num_tiles as u64;
+        ((pass % self.lines_per_bank_pass as u64) as usize) * LINE_WORDS
+    }
+
+    /// Full decode of one word.
+    pub fn locate(&self, addr: WordAddr) -> BankLoc {
+        let line = self.line_of(addr);
+        let off = (addr % LINE_WORDS as u64) as usize;
+        BankLoc {
+            tile: self.tile_of_line(line),
+            bank: self.bank_start_of_line(line) + off,
+        }
+    }
+}
+
+/// A contiguous FP16 matrix allocated in interleaved L1.
+#[derive(Clone, Copy, Debug)]
+pub struct MatRegion {
+    /// Base word address (line-aligned).
+    pub base: WordAddr,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl MatRegion {
+    /// Word address of element (r, c); two FP16 elements per word.
+    pub fn elem_word(&self, r: usize, c: usize) -> WordAddr {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.base + ((r * self.cols + c) / 2) as u64
+    }
+
+    /// Line index sequence covering elements (r, c..c+n) row-major.
+    pub fn line_of_elem(&self, r: usize, c: usize) -> u64 {
+        self.elem_word(r, c) / LINE_WORDS as u64
+    }
+
+    /// Size in words (2 fp16/word), rounded up to whole lines.
+    pub fn words(&self) -> u64 {
+        let w = (self.rows * self.cols).div_ceil(2) as u64;
+        w.div_ceil(LINE_WORDS as u64) * LINE_WORDS as u64
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.rows * self.cols * 2) as u64
+    }
+}
+
+/// Bump allocator for L1 matrix regions (line-aligned).
+#[derive(Clone, Debug, Default)]
+pub struct L1Alloc {
+    next: WordAddr,
+    capacity_words: u64,
+}
+
+impl L1Alloc {
+    pub fn new(cfg: &ArchConfig) -> Self {
+        L1Alloc { next: 0, capacity_words: (cfg.l1_bytes() / 4) as u64 }
+    }
+
+    /// Allocate a rows×cols FP16 matrix; panics if L1 is exhausted — the
+    /// workload mapper must ensure the working set fits 4 MiB (paper Sec II).
+    pub fn alloc(&mut self, rows: usize, cols: usize) -> MatRegion {
+        let m = MatRegion { base: self.next, rows, cols };
+        self.next += m.words();
+        assert!(
+            self.next <= self.capacity_words,
+            "L1 overflow: {} words > {} (working set must fit 4 MiB)",
+            self.next,
+            self.capacity_words
+        );
+        m
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.next * 4
+    }
+
+    pub fn reset(&mut self) {
+        self.next = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map() -> AddrMap {
+        AddrMap::new(&ArchConfig::tensorpool())
+    }
+
+    #[test]
+    fn line_stays_within_one_tile() {
+        let m = map();
+        for line in 0..4096u64 {
+            let base = line * LINE_WORDS as u64;
+            let t0 = m.locate(base).tile;
+            for off in 1..LINE_WORDS as u64 {
+                assert_eq!(m.locate(base + off).tile, t0, "line {line}");
+            }
+        }
+    }
+
+    #[test]
+    fn line_words_occupy_consecutive_banks() {
+        let m = map();
+        for line in 0..1024u64 {
+            let base = line * LINE_WORDS as u64;
+            let b0 = m.locate(base).bank;
+            for off in 0..LINE_WORDS as u64 {
+                assert_eq!(m.locate(base + off).bank, b0 + off as usize);
+            }
+        }
+    }
+
+    #[test]
+    fn consecutive_lines_rotate_tiles() {
+        let m = map();
+        assert_eq!(m.tile_of_line(0), 0);
+        assert_eq!(m.tile_of_line(1), 1);
+        assert_eq!(m.tile_of_line(63), 63);
+        assert_eq!(m.tile_of_line(64), 0);
+    }
+
+    #[test]
+    fn both_bank_halves_are_used() {
+        let m = map();
+        assert_eq!(m.bank_start_of_line(0), 0);
+        assert_eq!(m.bank_start_of_line(64), 16); // second pass, upper half
+        assert_eq!(m.bank_start_of_line(128), 0);
+    }
+
+    #[test]
+    fn dense_region_covers_all_banks_uniformly() {
+        let cfg = ArchConfig::tensorpool();
+        let m = AddrMap::new(&cfg);
+        let mut counts = vec![0u64; cfg.num_banks()];
+        // 512x512 fp16 matrix = 128K words = 8192 lines = 2 full passes
+        for addr in 0..(512 * 512 / 2) as u64 {
+            let loc = m.locate(addr);
+            counts[loc.tile * cfg.banks_per_tile + loc.bank] += 1;
+        }
+        let (mn, mx) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+        assert_eq!(mn, mx, "perfectly uniform across 2048 banks");
+    }
+
+    #[test]
+    fn matrix_addressing_is_row_major_packed() {
+        let r = MatRegion { base: 100, rows: 4, cols: 8 };
+        assert_eq!(r.elem_word(0, 0), 100);
+        assert_eq!(r.elem_word(0, 1), 100); // fp16 pair shares a word
+        assert_eq!(r.elem_word(0, 2), 101);
+        assert_eq!(r.elem_word(1, 0), 104);
+        assert_eq!(r.words(), 16); // 16 words, line-aligned
+    }
+
+    #[test]
+    fn alloc_respects_capacity() {
+        let cfg = ArchConfig::tensorpool();
+        let mut a = L1Alloc::new(&cfg);
+        // Fig 10 FC working set: three 512×512 fp16 matrices = 1.5 MiB
+        for _ in 0..3 {
+            a.alloc(512, 512);
+        }
+        assert_eq!(a.used_bytes(), 3 * 512 * 512 * 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "L1 overflow")]
+    fn alloc_panics_on_overflow() {
+        let cfg = ArchConfig::tensorpool();
+        let mut a = L1Alloc::new(&cfg);
+        for _ in 0..9 {
+            a.alloc(512, 512); // 9 × 0.5 MiB > 4 MiB
+        }
+    }
+}

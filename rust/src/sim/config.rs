@@ -1,0 +1,348 @@
+//! Architecture configuration for the TensorPool cycle-level simulator.
+//!
+//! All parameters come from the paper (Sections III–IV): 64 Tiles of 4 PEs +
+//! 32×2 KiB banks, grouped 4 Tiles → SubGroup, 4 SubGroups → Group, 4 Groups
+//! → Pool; one RedMulE tensor engine per SubGroup; hierarchical crossbars
+//! with spill-register latencies; a 7-transaction/cycle remote arbiter per
+//! Tile; burst support and K/J response/request widening.
+
+/// RedMulE tensor-engine geometry (paper Sec III-B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TeGeometry {
+    /// FMA rows (R). Each row computes one dot-product lane.
+    pub rows: usize,
+    /// FMA columns (C). X stays stationary per column.
+    pub cols: usize,
+    /// FMA pipeline stages (P).
+    pub stages: usize,
+}
+
+impl TeGeometry {
+    pub const REDMULE: TeGeometry = TeGeometry { rows: 32, cols: 8, stages: 3 };
+
+    /// MACs retired per cycle at full utilization: R × C.
+    pub fn macs_per_cycle(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Output-tile width: C×(P+1) accumulators per row (paper Sec III-B).
+    pub fn tile_n(&self) -> usize {
+        self.cols * (self.stages + 1)
+    }
+
+    /// Output-tile height: R.
+    pub fn tile_m(&self) -> usize {
+        self.rows
+    }
+}
+
+/// Full cluster configuration.
+#[derive(Clone, Debug)]
+pub struct ArchConfig {
+    // ---- topology -------------------------------------------------------
+    /// Tiles per SubGroup (paper: 4).
+    pub tiles_per_subgroup: usize,
+    /// SubGroups per Group (paper: 4).
+    pub subgroups_per_group: usize,
+    /// Groups per Pool (paper: 4).
+    pub groups: usize,
+    /// PEs per Tile (paper: 4).
+    pub pes_per_tile: usize,
+    /// Memory banks per Tile (paper: 32).
+    pub banks_per_tile: usize,
+    /// Bank capacity in 32-bit words (paper: 2 KiB = 512 words).
+    pub bank_words: usize,
+    /// Tensor engines per SubGroup (paper: 1; 0 for the TeraPool baseline).
+    pub tes_per_subgroup: usize,
+    /// TE geometry.
+    pub te: TeGeometry,
+
+    // ---- interconnect ---------------------------------------------------
+    /// One-way wire latency (cycles) initiator-Tile → target-Tile, by scope.
+    /// Calibrated so PE round-trip access = 1 / 3 / 5 / 9 cycles
+    /// (local / SubGroup / Group / remote-Group, paper Sec III-A).
+    pub lat_local: u64,
+    pub lat_subgroup: u64,
+    pub lat_group: u64,
+    pub lat_remote: u64,
+    /// Remote-arbiter retire slots per cycle toward SubGroups of the own
+    /// Group (paper: 4) and toward remote Groups (paper: 3). Total 7.
+    pub subgroup_ports: usize,
+    pub group_ports: usize,
+    /// Response-grouping factor K: 32-bit words per response handshake on
+    /// the hierarchical interconnect (paper Sec III-B; K=4 nominal).
+    pub resp_k: usize,
+    /// Request-widening factor J for write data (paper: J=2 nominal).
+    pub req_j: usize,
+    /// Burst support: a 512-bit request consumes ONE arbiter slot. Disable
+    /// for the no-burst ablation (request serializes into 16 slots).
+    pub burst: bool,
+
+    // ---- streamer -------------------------------------------------------
+    /// Reorder-buffer entries per stream (X, W, Y): outstanding wide reads.
+    pub rob_depth: usize,
+    /// Z-FIFO entries (outstanding wide writes).
+    pub z_fifo_depth: usize,
+
+    // ---- DMA / L2 -------------------------------------------------------
+    /// L2 read+write bandwidth in bytes/cycle (paper: 1024).
+    pub l2_bytes_per_cycle: usize,
+    /// Per-SubGroup AXI bandwidth in bytes/cycle (paper: 512-bit = 64 B).
+    pub axi_bytes_per_cycle_per_subgroup: usize,
+
+    // ---- physical -------------------------------------------------------
+    /// Clock frequency (GHz), TT corner (paper: 0.9).
+    pub freq_ghz: f64,
+}
+
+impl ArchConfig {
+    /// The paper's TensorPool instance.
+    pub fn tensorpool() -> Self {
+        ArchConfig {
+            tiles_per_subgroup: 4,
+            subgroups_per_group: 4,
+            groups: 4,
+            pes_per_tile: 4,
+            banks_per_tile: 32,
+            bank_words: 512,
+            tes_per_subgroup: 1,
+            te: TeGeometry::REDMULE,
+            lat_local: 1,
+            lat_subgroup: 1,
+            lat_group: 2,
+            lat_remote: 4,
+            subgroup_ports: 4,
+            group_ports: 3,
+            resp_k: 4,
+            req_j: 2,
+            burst: true,
+            rob_depth: 16,
+            z_fifo_depth: 32,
+            l2_bytes_per_cycle: 1024,
+            axi_bytes_per_cycle_per_subgroup: 64,
+            freq_ghz: 0.9,
+        }
+    }
+
+    /// The TeraPool baseline: same Pool, no tensor engines, 1024 PEs
+    /// (paper Table II comparator; 16 PEs/Tile to reach 1024).
+    pub fn terapool() -> Self {
+        ArchConfig {
+            tes_per_subgroup: 0,
+            pes_per_tile: 16,
+            burst: false,
+            resp_k: 1,
+            req_j: 1,
+            ..Self::tensorpool()
+        }
+    }
+
+    /// Fig 5 sweep helper: vary the K / J interconnect widening.
+    pub fn with_kj(mut self, k: usize, j: usize) -> Self {
+        self.resp_k = k;
+        self.req_j = j;
+        self
+    }
+
+    /// Ablation: disable burst support at the Tile arbiter.
+    pub fn without_burst(mut self) -> Self {
+        self.burst = false;
+        self
+    }
+
+    /// Ablation: in-order streamer — a single outstanding read per stream.
+    pub fn without_rob(mut self) -> Self {
+        self.rob_depth = 1;
+        self
+    }
+
+    // ---- derived topology helpers ---------------------------------------
+
+    pub fn tiles_per_group(&self) -> usize {
+        self.tiles_per_subgroup * self.subgroups_per_group
+    }
+
+    pub fn num_tiles(&self) -> usize {
+        self.tiles_per_group() * self.groups
+    }
+
+    pub fn num_subgroups(&self) -> usize {
+        self.subgroups_per_group * self.groups
+    }
+
+    pub fn num_tes(&self) -> usize {
+        self.num_subgroups() * self.tes_per_subgroup
+    }
+
+    pub fn num_pes(&self) -> usize {
+        self.num_tiles() * self.pes_per_tile
+    }
+
+    pub fn num_banks(&self) -> usize {
+        self.num_tiles() * self.banks_per_tile
+    }
+
+    /// Total L1 capacity in bytes (paper: 4 MiB).
+    pub fn l1_bytes(&self) -> usize {
+        self.num_banks() * self.bank_words * 4
+    }
+
+    /// Pool peak MACs/cycle from TEs alone (paper: 4096 @ 16 TEs).
+    pub fn peak_te_macs(&self) -> usize {
+        self.num_tes() * self.te.macs_per_cycle()
+    }
+
+    /// Pool peak MACs/cycle including PEs (2 FP16 MACs/cycle each).
+    pub fn peak_macs(&self) -> usize {
+        self.peak_te_macs() + 2 * self.num_pes()
+    }
+
+    /// Peak FP16 TFLOPS (2 FLOPs per MAC) at `freq_ghz`.
+    pub fn peak_tflops(&self) -> f64 {
+        2.0 * self.peak_macs() as f64 * self.freq_ghz / 1000.0
+    }
+
+    pub fn subgroup_of_tile(&self, tile: usize) -> usize {
+        tile / self.tiles_per_subgroup
+    }
+
+    pub fn group_of_tile(&self, tile: usize) -> usize {
+        tile / self.tiles_per_group()
+    }
+
+    /// Tile that hosts the TE of SubGroup `sg` (paper: one Tile per
+    /// SubGroup contains a TE; we pick the first).
+    pub fn te_home_tile(&self, sg: usize) -> usize {
+        sg * self.tiles_per_subgroup
+    }
+
+    /// One-way wire latency between two tiles (cycles).
+    pub fn wire_latency(&self, from: usize, to: usize) -> u64 {
+        if from == to {
+            self.lat_local
+        } else if self.subgroup_of_tile(from) == self.subgroup_of_tile(to) {
+            self.lat_subgroup
+        } else if self.group_of_tile(from) == self.group_of_tile(to) {
+            self.lat_group
+        } else {
+            self.lat_remote
+        }
+    }
+
+    /// Arbiter port index used by a request from `from` to `to`, or `None`
+    /// for Tile-local accesses that bypass the arbiter.
+    ///
+    /// Ports 0..subgroup_ports address the SubGroups of the own Group
+    /// (paper: 4, the own SubGroup's port reaches its other Tiles); ports
+    /// subgroup_ports..subgroup_ports+group_ports address remote Groups.
+    pub fn port_of(&self, from: usize, to: usize) -> Option<usize> {
+        if from == to {
+            return None;
+        }
+        let (gf, gt) = (self.group_of_tile(from), self.group_of_tile(to));
+        if gf == gt {
+            let sg_in_group =
+                self.subgroup_of_tile(to) % self.subgroups_per_group;
+            Some(sg_in_group % self.subgroup_ports)
+        } else {
+            // Remote-group ports indexed by the target group, skipping
+            // ours; fewer physical ports than remote groups share (the
+            // port-count ablation exercises this).
+            let idx = if gt < gf { gt } else { gt - 1 };
+            Some(self.subgroup_ports + idx % self.group_ports)
+        }
+    }
+
+    pub fn num_ports(&self) -> usize {
+        self.subgroup_ports + self.group_ports
+    }
+
+    /// Cycles a wide (16-word) READ RESPONSE occupies a hierarchical port:
+    /// K words per handshake (paper Sec III-B).
+    pub fn resp_beats(&self) -> u64 {
+        (16 + self.resp_k - 1) as u64 / self.resp_k as u64
+    }
+
+    /// Cycles a wide (16-word) WRITE REQUEST occupies a hierarchical port:
+    /// J words of data per cycle.
+    pub fn write_beats(&self) -> u64 {
+        (16 + self.req_j - 1) as u64 / self.req_j as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensorpool_matches_paper_topology() {
+        let c = ArchConfig::tensorpool();
+        assert_eq!(c.num_tiles(), 64);
+        assert_eq!(c.num_subgroups(), 16);
+        assert_eq!(c.num_tes(), 16);
+        assert_eq!(c.num_pes(), 256);
+        assert_eq!(c.num_banks(), 2048);
+        assert_eq!(c.l1_bytes(), 4 * 1024 * 1024); // 4 MiB
+        assert_eq!(c.peak_te_macs(), 4096);
+        // 4096 TE + 512 PE MACs/cycle = 4608; ×2 FLOPs ×0.9 GHz ≈ 8.3 TFLOPS
+        assert_eq!(c.peak_macs(), 4608);
+        assert!((c.peak_tflops() - 8.29).abs() < 0.01);
+    }
+
+    #[test]
+    fn terapool_matches_paper_topology() {
+        let c = ArchConfig::terapool();
+        assert_eq!(c.num_pes(), 1024);
+        assert_eq!(c.num_tes(), 0);
+        // 1024 PEs × 2 MACs × 2 FLOPs × 0.9 GHz ≈ 3.7 TFLOPS (paper Table II)
+        assert!((c.peak_tflops() - 3.69).abs() < 0.01);
+    }
+
+    #[test]
+    fn redmule_geometry() {
+        let te = TeGeometry::REDMULE;
+        assert_eq!(te.macs_per_cycle(), 256);
+        assert_eq!(te.tile_m(), 32);
+        assert_eq!(te.tile_n(), 32); // C×(P+1) = 8×4
+    }
+
+    #[test]
+    fn wire_latencies_are_hierarchical() {
+        let c = ArchConfig::tensorpool();
+        assert_eq!(c.wire_latency(0, 0), 1);
+        assert_eq!(c.wire_latency(0, 1), 1); // same SubGroup
+        assert_eq!(c.wire_latency(0, 4), 2); // same Group
+        assert_eq!(c.wire_latency(0, 16), 4); // remote Group
+    }
+
+    #[test]
+    fn ports_cover_all_destinations() {
+        let c = ArchConfig::tensorpool();
+        assert_eq!(c.num_ports(), 7); // paper: 7 retire slots
+        for from in 0..c.num_tiles() {
+            for to in 0..c.num_tiles() {
+                match c.port_of(from, to) {
+                    None => assert_eq!(from, to),
+                    Some(p) => {
+                        assert!(p < c.num_ports());
+                        if c.group_of_tile(from) == c.group_of_tile(to) {
+                            assert!(p < c.subgroup_ports);
+                        } else {
+                            assert!(p >= c.subgroup_ports);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn beats_match_kj() {
+        let c = ArchConfig::tensorpool(); // K=4, J=2
+        assert_eq!(c.resp_beats(), 4);
+        assert_eq!(c.write_beats(), 8);
+        let c1 = ArchConfig::tensorpool().with_kj(1, 1);
+        assert_eq!(c1.resp_beats(), 16);
+        assert_eq!(c1.write_beats(), 16);
+    }
+}

@@ -1,0 +1,241 @@
+//! Centralized DMA engine: L2 ↔ L1 transfers over the hierarchical AXI
+//! plane (paper Sec III-C).
+//!
+//! Any PE can program the DMA through a register frontend; here the
+//! coordinator issues `DmaXfer` descriptors. Bandwidth limits:
+//! * 1024 B/cycle total L2 read+write bandwidth (β_L2, paper Eq 1),
+//! * 512 bit/cycle = 64 B/cycle = one line/cycle per SubGroup.
+//!
+//! Each 64 B beat lands on a Tile's banks through `Noc::dma_line`, where it
+//! contends with TE/PE traffic — that is how DMA activity degrades TE
+//! utilization in the concurrent schedules of Fig 10.
+
+use super::addr::{MatRegion, LINE_BYTES};
+use super::config::ArchConfig;
+use super::noc::Noc;
+
+/// Direction of a transfer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DmaDir {
+    /// L2 → L1: beats are bank *writes*.
+    In,
+    /// L1 → L2: beats are bank *reads*.
+    Out,
+}
+
+/// One programmed transfer covering a whole L1 region.
+#[derive(Clone, Debug)]
+pub struct DmaXfer {
+    pub region: MatRegion,
+    pub dir: DmaDir,
+}
+
+struct Active {
+    lines: Vec<u64>,
+    next: usize,
+    write: bool,
+    outstanding: usize,
+}
+
+/// The DMA engine state.
+pub struct Dma {
+    pub token: u16,
+    per_cycle_lines: usize,
+    subgroup_lines: Vec<u64>, // per-subgroup beats issued (for stats)
+    tiles_per_subgroup: usize,
+    num_tiles: usize,
+    active: Option<Active>,
+    queue: Vec<DmaXfer>,
+    pub lines_moved: u64,
+    pub finish_cycle: Option<u64>,
+    started_at: u64,
+}
+
+impl Dma {
+    pub fn new(token: u16, cfg: &ArchConfig) -> Self {
+        Dma {
+            token,
+            // L2 bandwidth in 64 B lines/cycle (paper: 1024 B -> 16 lines).
+            per_cycle_lines: cfg.l2_bytes_per_cycle / LINE_BYTES,
+            subgroup_lines: vec![0; cfg.num_subgroups()],
+            tiles_per_subgroup: cfg.tiles_per_subgroup,
+            num_tiles: cfg.num_tiles(),
+            active: None,
+            queue: Vec::new(),
+            lines_moved: 0,
+            finish_cycle: None,
+            started_at: 0,
+        }
+    }
+
+    /// Enqueue transfers; the engine streams them back-to-back.
+    pub fn program(&mut self, xfers: Vec<DmaXfer>, now: u64) {
+        assert!(self.is_done() || self.queue.is_empty() && self.active.is_none(),
+                "DMA reprogrammed while busy");
+        self.queue = xfers;
+        self.queue.reverse(); // pop from the back in program order
+        self.active = None;
+        self.finish_cycle = None;
+        self.started_at = now;
+        self.next_xfer();
+    }
+
+    fn next_xfer(&mut self) {
+        if let Some(x) = self.queue.pop() {
+            let first = x.region.base / 16;
+            let nlines = x.region.words().div_ceil(16);
+            // Interleave the line order across SubGroups so the per-SubGroup
+            // 512-bit AXI ports run in parallel (the real DMA redistributes
+            // responses concurrently through the hierarchical AXI, paper
+            // Sec III-C; a naive sequential walk would serialize on one
+            // SubGroup's port for 4 consecutive lines).
+            let nsg = self.subgroup_lines.len();
+            let mut buckets: Vec<Vec<u64>> = vec![Vec::new(); nsg];
+            for line in first..first + nlines {
+                let tile = (line % self.num_tiles as u64) as usize;
+                buckets[tile / self.tiles_per_subgroup].push(line);
+            }
+            let mut lines = Vec::with_capacity(nlines as usize);
+            let mut i = 0;
+            loop {
+                let mut any = false;
+                for b in buckets.iter() {
+                    if i < b.len() {
+                        lines.push(b[i]);
+                        any = true;
+                    }
+                }
+                if !any {
+                    break;
+                }
+                i += 1;
+            }
+            self.active = Some(Active {
+                lines,
+                next: 0,
+                write: x.dir == DmaDir::In,
+                outstanding: 0,
+            });
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.finish_cycle.is_some()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.active.is_none() && self.queue.is_empty()
+    }
+
+    pub fn on_delivery(&mut self) {
+        if let Some(a) = &mut self.active {
+            a.outstanding -= 1;
+        }
+    }
+
+    /// Issue up to the L2 bandwidth in line beats, one per SubGroup max.
+    pub fn step(&mut self, noc: &mut Noc) {
+        if self.finish_cycle.is_some() {
+            return;
+        }
+        let Some(a) = &mut self.active else {
+            self.finish_cycle = Some(noc.now().max(self.started_at));
+            return;
+        };
+        if a.next >= a.lines.len() && a.outstanding == 0 {
+            self.active = None;
+            self.next_xfer();
+            if self.active.is_none() {
+                self.finish_cycle = Some(noc.now());
+            }
+            return;
+        }
+        // One line per SubGroup per cycle, up to the global L2 budget.
+        let mut budget = self.per_cycle_lines;
+        let mut sg_used = vec![false; self.subgroup_lines.len()];
+        while budget > 0 && a.next < a.lines.len() {
+            let line = a.lines[a.next];
+            let tile = (line % self.num_tiles as u64) as usize;
+            let sg = tile / self.tiles_per_subgroup;
+            if sg_used[sg] {
+                break; // AXI port of this SubGroup already used this cycle
+            }
+            sg_used[sg] = true;
+            a.next += 1;
+            a.outstanding += 1;
+            budget -= 1;
+            self.lines_moved += 1;
+            self.subgroup_lines[sg] += 1;
+            noc.dma_line(self.token, 0, 0, line, a.write);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::addr::L1Alloc;
+
+    fn run(dma: &mut Dma, noc: &mut Noc, max: u64) -> u64 {
+        for _ in 0..max {
+            let n = noc.step().len();
+            for _ in 0..n {
+                dma.on_delivery();
+            }
+            dma.step(noc);
+            if dma.is_done() && noc.quiescent() {
+                return dma.finish_cycle.unwrap();
+            }
+        }
+        panic!("DMA did not finish in {max} cycles");
+    }
+
+    #[test]
+    fn transfer_moves_every_line_once() {
+        let cfg = ArchConfig::tensorpool();
+        let mut alloc = L1Alloc::new(&cfg);
+        let region = alloc.alloc(512, 512); // 0.5 MiB = 8192 lines
+        let mut noc = Noc::new(&cfg);
+        let mut dma = Dma::new(50, &cfg);
+        dma.program(vec![DmaXfer { region, dir: DmaDir::In }], 0);
+        run(&mut dma, &mut noc, 100_000);
+        assert_eq!(dma.lines_moved, 8192);
+        assert_eq!(noc.stats.writes_issued, 8192);
+    }
+
+    #[test]
+    fn bandwidth_is_close_to_l2_limit() {
+        // 8192 lines at 16 lines/cycle => >= 512 cycles; sequential lines
+        // rotate SubGroups so the per-SubGroup limit is not binding.
+        let cfg = ArchConfig::tensorpool();
+        let mut alloc = L1Alloc::new(&cfg);
+        let region = alloc.alloc(512, 512);
+        let mut noc = Noc::new(&cfg);
+        let mut dma = Dma::new(50, &cfg);
+        dma.program(vec![DmaXfer { region, dir: DmaDir::In }], 0);
+        let cycles = run(&mut dma, &mut noc, 100_000);
+        assert!(cycles >= 512, "violates the 1024 B/cycle L2 bound: {cycles}");
+        assert!(cycles < 700, "far from the L2 roofline: {cycles}");
+    }
+
+    #[test]
+    fn back_to_back_transfers() {
+        let cfg = ArchConfig::tensorpool();
+        let mut alloc = L1Alloc::new(&cfg);
+        let a = alloc.alloc(128, 128);
+        let b = alloc.alloc(128, 128);
+        let mut noc = Noc::new(&cfg);
+        let mut dma = Dma::new(50, &cfg);
+        dma.program(
+            vec![
+                DmaXfer { region: a, dir: DmaDir::In },
+                DmaXfer { region: b, dir: DmaDir::Out },
+            ],
+            0,
+        );
+        run(&mut dma, &mut noc, 100_000);
+        assert_eq!(dma.lines_moved, 2 * 512);
+        assert_eq!(noc.stats.writes_issued, 512);
+        assert_eq!(noc.stats.reads_issued, 512);
+    }
+}

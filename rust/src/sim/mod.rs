@@ -1,0 +1,25 @@
+//! Cycle-level microarchitectural simulator of the TensorPool cluster.
+//!
+//! This is the substrate substituting for the paper's RTL + QuestaSim
+//! environment (see DESIGN.md §1): banks, hierarchical interconnect with
+//! burst support and K/J channel widening, RedMulE tensor engines with the
+//! latency-tolerant streamer, PE timing, and the L2 DMA.
+
+pub mod addr;
+pub mod config;
+pub mod dma;
+pub mod noc;
+pub mod pe;
+pub mod pe_traffic;
+pub mod pool;
+pub mod stats;
+pub mod te;
+
+pub use addr::{AddrMap, L1Alloc, MatRegion, LINE_BYTES, LINE_ELEMS, LINE_WORDS};
+pub use config::{ArchConfig, TeGeometry};
+pub use dma::{Dma, DmaDir, DmaXfer};
+pub use noc::{Delivery, Noc};
+pub use pe_traffic::{PeTraffic, PeWorkload};
+pub use pool::Sim;
+pub use stats::{NocStats, RunResult, TeRunStats};
+pub use te::{TeEngine, TeJob};

@@ -1,0 +1,594 @@
+//! The shared-L1 memory system: banks, hierarchical request ports with burst
+//! support, and K/J-widened response/write channels (paper Sec III-A/B).
+//!
+//! Requests are modelled at *line* granularity (one 512-bit TE wide access =
+//! 16 words) or *word* granularity (PE/DMA narrow accesses). The lifecycle of
+//! a remote wide read:
+//!
+//! ```text
+//! streamer issue ──► initiator-Tile arbiter port (1 slot/cycle w/ burst,
+//!                    16 slots without — paper Fig 4)
+//!                ──► wire latency (SubGroup/Group/remote spill registers)
+//!                ──► Burst-Distributor: 16 word-services on the target
+//!                    Tile's banks (1 word/bank/cycle, conflict queues)
+//!                ──► response: occupies the destination egress channel and
+//!                    the initiator ingress channel for ceil(16/K) beats
+//!                ──► ROB delivery to the engine
+//! ```
+//!
+//! Writes occupy their request port for ceil(16/J) beats (J-widened data)
+//! and complete with an ack after the banks commit.
+
+use std::collections::VecDeque;
+
+use super::addr::{AddrMap, LINE_WORDS};
+use super::config::ArchConfig;
+use super::stats::NocStats;
+
+/// Opaque engine handle: (engine index, stream id, tag) identify a delivery.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Delivery {
+    pub engine: u16,
+    pub stream: u8,
+    pub tag: u32,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Req {
+    engine: u16,
+    stream: u8,
+    tag: u32,
+    init_tile: u16,
+    dest_tile: u16,
+    bank_start: u16,
+    words: u8,
+    words_left: u8,
+    write: bool,
+    /// DMA beats ride the dedicated AXI plane (paper Sec III-C): they skip
+    /// the Tile arbiters and the K-widened response channels, but still
+    /// contend for banks.
+    dma: bool,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Event {
+    /// Request reached the destination Tile: fan words out to banks.
+    Arrive(u32),
+    /// Response (or write-ack) reaches the initiating engine.
+    Deliver(u32),
+}
+
+const WHEEL: usize = 8192;
+
+/// The memory system shared by all engines.
+pub struct Noc {
+    cfg: ArchConfig,
+    map: AddrMap,
+    now: u64,
+
+    reqs: Vec<Req>,
+    free: Vec<u32>,
+
+    /// Per-bank FIFO of pending word services (req ids, one entry per word).
+    bank_q: Vec<VecDeque<u32>>,
+    /// Banks with non-empty queues (dense iteration set).
+    active_banks: Vec<u32>,
+    bank_active: Vec<bool>,
+
+    /// Per (tile, port) request queues + wide-occupancy tracking.
+    port_q: Vec<VecDeque<u32>>,
+    port_busy_until: Vec<u64>,
+    /// Ports with non-empty queues (dense iteration set — §Perf: scanning
+    /// all 448 ports every cycle dominated the single-TE profile).
+    active_ports: Vec<u32>,
+    port_active: Vec<bool>,
+
+    /// Narrow-link occupancy for responses: ingress (initiator side) and
+    /// egress (destination side), per (tile, port).
+    resp_ingress_busy: Vec<u64>,
+    resp_egress_busy: Vec<u64>,
+
+    wheel: Vec<Vec<Event>>,
+    /// Reusable event buffer (§Perf: `mem::take` of wheel slots allocated
+    /// a fresh Vec per non-empty cycle; swapping a scratch buffer keeps
+    /// both capacities alive).
+    events_scratch: Vec<Event>,
+    pending_events: u64,
+
+    pub stats: NocStats,
+    delivered: Vec<Delivery>,
+}
+
+impl Noc {
+    pub fn new(cfg: &ArchConfig) -> Self {
+        let tiles = cfg.num_tiles();
+        let ports = cfg.num_ports();
+        Noc {
+            map: AddrMap::new(cfg),
+            cfg: cfg.clone(),
+            now: 0,
+            reqs: Vec::with_capacity(4096),
+            free: Vec::new(),
+            bank_q: vec![VecDeque::new(); cfg.num_banks()],
+            active_banks: Vec::with_capacity(256),
+            bank_active: vec![false; cfg.num_banks()],
+            port_q: vec![VecDeque::new(); tiles * ports],
+            port_busy_until: vec![0; tiles * ports],
+            active_ports: Vec::with_capacity(64),
+            port_active: vec![false; tiles * ports],
+            resp_ingress_busy: vec![0; tiles * ports],
+            resp_egress_busy: vec![0; tiles * ports],
+            wheel: (0..WHEEL).map(|_| Vec::new()).collect(),
+            events_scratch: Vec::with_capacity(64),
+            pending_events: 0,
+            stats: NocStats::default(),
+            delivered: Vec::with_capacity(64),
+        }
+    }
+
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    pub fn addr_map(&self) -> &AddrMap {
+        &self.map
+    }
+
+    /// True when no requests are in flight anywhere.
+    pub fn quiescent(&self) -> bool {
+        self.pending_events == 0
+            && self.active_banks.is_empty()
+            && self.active_ports.is_empty()
+    }
+
+    fn alloc_req(&mut self, r: Req) -> u32 {
+        if let Some(id) = self.free.pop() {
+            self.reqs[id as usize] = r;
+            id
+        } else {
+            self.reqs.push(r);
+            (self.reqs.len() - 1) as u32
+        }
+    }
+
+    fn schedule(&mut self, at: u64, ev: Event) {
+        debug_assert!(at > self.now, "event must be in the future");
+        let dt = at - self.now;
+        assert!(
+            (dt as usize) < WHEEL,
+            "event horizon exceeded: dt={dt} (congestion beyond wheel size)"
+        );
+        self.wheel[(at % WHEEL as u64) as usize].push(ev);
+        self.pending_events += 1;
+    }
+
+    /// Submit a 512-bit wide READ of `line` (paper: TE streamer load).
+    /// Delivery surfaces as (engine, stream, tag) once all 16 words are read
+    /// and the response has crossed the K-widened channels.
+    pub fn read_line(&mut self, engine: u16, stream: u8, tag: u32,
+                     init_tile: usize, line: u64) {
+        self.stats.reads_issued += 1;
+        let dest = self.map.tile_of_line(line);
+        let bank_start = self.map.bank_start_of_line(line);
+        let id = self.alloc_req(Req {
+            engine,
+            stream,
+            tag,
+            init_tile: init_tile as u16,
+            dest_tile: dest as u16,
+            bank_start: bank_start as u16,
+            words: LINE_WORDS as u8,
+            words_left: LINE_WORDS as u8,
+            write: false,
+            dma: false,
+        });
+        self.route(id);
+    }
+
+    /// Submit a 512-bit wide WRITE (paper: TE Z-stream store). Delivery is
+    /// the write ack (frees the Z-FIFO slot).
+    pub fn write_line(&mut self, engine: u16, stream: u8, tag: u32,
+                      init_tile: usize, line: u64) {
+        self.stats.writes_issued += 1;
+        let dest = self.map.tile_of_line(line);
+        let bank_start = self.map.bank_start_of_line(line);
+        let id = self.alloc_req(Req {
+            engine,
+            stream,
+            tag,
+            init_tile: init_tile as u16,
+            dest_tile: dest as u16,
+            bank_start: bank_start as u16,
+            words: LINE_WORDS as u8,
+            words_left: LINE_WORDS as u8,
+            write: true,
+            dma: false,
+        });
+        self.route(id);
+    }
+
+    /// Submit a narrow (single-word) access — PE loads/stores and DMA beats.
+    pub fn access_word(&mut self, engine: u16, stream: u8, tag: u32,
+                       init_tile: usize, addr: u64, write: bool) {
+        if write {
+            self.stats.writes_issued += 1;
+        } else {
+            self.stats.reads_issued += 1;
+        }
+        let loc = self.map.locate(addr);
+        let id = self.alloc_req(Req {
+            engine,
+            stream,
+            tag,
+            init_tile: init_tile as u16,
+            dest_tile: loc.tile as u16,
+            bank_start: loc.bank as u16,
+            words: 1,
+            words_left: 1,
+            write,
+            dma: false,
+        });
+        self.route(id);
+    }
+
+    /// Submit a DMA line beat (L2 ↔ L1 redistribution, paper Sec III-C).
+    /// DMA rides the hierarchical AXI plane: it bypasses Tile arbiters and
+    /// the K-widened L1 response channels, but its word-writes/reads contend
+    /// for banks like everyone else. Rate limiting (512 bit/cycle/SubGroup,
+    /// 1024 B/cycle at L2) is enforced by the `Dma` engine.
+    pub fn dma_line(&mut self, engine: u16, stream: u8, tag: u32, line: u64,
+                    write: bool) {
+        if write {
+            self.stats.writes_issued += 1;
+        } else {
+            self.stats.reads_issued += 1;
+        }
+        let dest = self.map.tile_of_line(line);
+        let bank_start = self.map.bank_start_of_line(line);
+        let id = self.alloc_req(Req {
+            engine,
+            stream,
+            tag,
+            init_tile: dest as u16,
+            dest_tile: dest as u16,
+            bank_start: bank_start as u16,
+            words: LINE_WORDS as u8,
+            words_left: LINE_WORDS as u8,
+            write,
+            dma: true,
+        });
+        // AXI injection latency: top-level XBAR + hierarchical AXI = 2.
+        self.schedule(self.now + 2, Event::Arrive(id));
+    }
+
+    fn route(&mut self, id: u32) {
+        let r = self.reqs[id as usize];
+        match self.cfg.port_of(r.init_tile as usize, r.dest_tile as usize) {
+            None => {
+                // Tile-local: one-cycle crossbar, no arbiter (paper Fig 2a).
+                self.stats.local_hits += 1;
+                let at = self.now + self.cfg.lat_local;
+                self.schedule(at, Event::Arrive(id));
+            }
+            Some(p) => {
+                let qi = r.init_tile as usize * self.cfg.num_ports() + p;
+                self.port_q[qi].push_back(id);
+                if !self.port_active[qi] {
+                    self.port_active[qi] = true;
+                    self.active_ports.push(qi as u32);
+                }
+            }
+        }
+    }
+
+    /// Cycles a request occupies its arbiter port when granted.
+    fn grant_occupancy(&self, r: &Req) -> u64 {
+        if r.write {
+            // J-widened write data beats (wide writes only).
+            if r.words as usize == LINE_WORDS {
+                self.cfg.write_beats()
+            } else {
+                1
+            }
+        } else if self.cfg.burst || r.words == 1 {
+            1 // Burst-Grouper: one slot for the whole wide request.
+        } else {
+            LINE_WORDS as u64 // no-burst ablation: serialized narrow requests
+        }
+    }
+
+    /// Advance one cycle. Returns deliveries completed this cycle.
+    pub fn step(&mut self) -> &[Delivery] {
+        self.now += 1;
+        self.delivered.clear();
+
+        // 1. Arbiter ports: grant at most one request per port per cycle,
+        //    honoring wide-write/no-burst multi-cycle occupancy. Only ports
+        //    with queued requests are visited (active list).
+        let mut i = 0;
+        while i < self.active_ports.len() {
+            let qi = self.active_ports[i] as usize;
+            if self.port_busy_until[qi] > self.now {
+                self.stats.port_wait_cycles += 1;
+                i += 1;
+                continue;
+            }
+            let id = self.port_q[qi].pop_front().expect("active port empty");
+            let r = self.reqs[id as usize];
+            let occ = self.grant_occupancy(&r);
+            self.port_busy_until[qi] = self.now + occ;
+            self.stats.port_grants += 1;
+            let lat = self
+                .cfg
+                .wire_latency(r.init_tile as usize, r.dest_tile as usize);
+            // Write data trails the header by its beats.
+            let extra = if r.write { occ - 1 } else { 0 };
+            self.schedule(self.now + lat + extra, Event::Arrive(id));
+            if self.port_q[qi].is_empty() {
+                self.port_active[qi] = false;
+                self.active_ports.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
+
+        // 2. Event wheel: arrivals fan out to banks; deliveries surface.
+        let slot = (self.now % WHEEL as u64) as usize;
+        debug_assert!(self.events_scratch.is_empty());
+        std::mem::swap(&mut self.wheel[slot], &mut self.events_scratch);
+        self.pending_events -= self.events_scratch.len() as u64;
+        for i in 0..self.events_scratch.len() {
+            let ev = self.events_scratch[i];
+            match ev {
+                Event::Arrive(id) => {
+                    let r = self.reqs[id as usize];
+                    let base =
+                        r.dest_tile as usize * self.cfg.banks_per_tile;
+                    for w in 0..r.words as usize {
+                        let b = base + r.bank_start as usize + w;
+                        if !self.bank_q[b].is_empty() {
+                            self.stats.bank_conflict_waits += 1;
+                        }
+                        self.bank_q[b].push_back(id);
+                        if !self.bank_active[b] {
+                            self.bank_active[b] = true;
+                            self.active_banks.push(b as u32);
+                        }
+                    }
+                }
+                Event::Deliver(id) => {
+                    let r = self.reqs[id as usize];
+                    self.delivered.push(Delivery {
+                        engine: r.engine,
+                        stream: r.stream,
+                        tag: r.tag,
+                    });
+                    self.free.push(id);
+                }
+            }
+        }
+
+        self.events_scratch.clear();
+
+        // 3. Banks: serve one word per active bank per cycle.
+        let mut i = 0;
+        while i < self.active_banks.len() {
+            let b = self.active_banks[i] as usize;
+            let id = self.bank_q[b].pop_front().expect("active bank empty");
+            self.stats.bank_word_services += 1;
+            if self.bank_q[b].is_empty() {
+                self.bank_active[b] = false;
+                self.active_banks.swap_remove(i);
+            } else {
+                i += 1;
+            }
+            let r = &mut self.reqs[id as usize];
+            r.words_left -= 1;
+            if r.words_left == 0 {
+                let r = *r;
+                self.complete(id, r);
+            }
+        }
+
+        &self.delivered
+    }
+
+    /// All words of `id` have been served: launch the response (reads) or
+    /// the ack (writes) back to the initiator.
+    fn complete(&mut self, id: u32, r: Req) {
+        let (it, dt) = (r.init_tile as usize, r.dest_tile as usize);
+        if r.dma {
+            // AXI return path, no K-channel booking.
+            self.schedule(self.now + 2, Event::Deliver(id));
+            return;
+        }
+        match self.cfg.port_of(dt, it) {
+            None => {
+                // Local response: full-width crossbar return path.
+                self.schedule(self.now + self.cfg.lat_local, Event::Deliver(id));
+            }
+            Some(_) if r.write => {
+                // Write ack: a single narrow beat, no K-channel booking.
+                let lat = self.cfg.wire_latency(dt, it);
+                self.schedule(self.now + lat, Event::Deliver(id));
+            }
+            Some(p_egress) => {
+                // Read response: occupies the destination egress channel and
+                // the initiator ingress channel for ceil(words/K) beats.
+                let beats = (r.words as u64)
+                    .div_ceil(self.cfg.resp_k as u64)
+                    .max(1);
+                let p_ingress = self
+                    .cfg
+                    .port_of(it, dt)
+                    .expect("remote must have ingress port");
+                let nports = self.cfg.num_ports();
+                let eg = dt * nports + p_egress;
+                let ing = it * nports + p_ingress;
+                let lat = self.cfg.wire_latency(dt, it);
+                let earliest = self.now + 1;
+                let start = earliest
+                    .max(self.resp_egress_busy[eg])
+                    .max(self.resp_ingress_busy[ing]);
+                self.stats.resp_wait_cycles += start - earliest;
+                self.resp_egress_busy[eg] = start + beats;
+                self.resp_ingress_busy[ing] = start + beats;
+                self.stats.resp_beats += beats;
+                self.schedule(start + beats + lat - 1, Event::Deliver(id));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn noc() -> Noc {
+        Noc::new(&ArchConfig::tensorpool())
+    }
+
+    fn run_until_delivered(n: &mut Noc, want: usize, max: u64) -> Vec<(u64, Delivery)> {
+        let mut got = Vec::new();
+        for _ in 0..max {
+            let now = n.now() + 1;
+            let deliveries = n.step().to_vec();
+            for d in deliveries {
+                got.push((now, d));
+            }
+            if got.len() >= want {
+                break;
+            }
+        }
+        assert_eq!(got.len(), want, "deliveries missing after {max} cycles");
+        got
+    }
+
+    #[test]
+    fn local_read_is_fast() {
+        let mut n = noc();
+        // line 5 lives in tile 5; issue from tile 5 -> local path
+        n.read_line(0, 0, 42, 5, 5);
+        let got = run_until_delivered(&mut n, 1, 20);
+        assert_eq!(got[0].1.tag, 42);
+        // local: 1 (xbar) + 1 (bank) + 1 (resp) = small single-digit latency
+        assert!(got[0].0 <= 4, "local latency {} too high", got[0].0);
+        assert_eq!(n.stats.local_hits, 1);
+    }
+
+    #[test]
+    fn remote_read_pays_hierarchy_latency() {
+        let mut n = noc();
+        // initiator tile 0, line 16 lives in tile 16 (remote group)
+        n.read_line(0, 0, 7, 0, 16);
+        let got = run_until_delivered(&mut n, 1, 64);
+        // 4 (wire) + 1 (bank) + 4 beats (K=4) + 4 (wire) plus queueing
+        assert!(got[0].0 >= 9, "remote latency {} too low", got[0].0);
+        assert_eq!(n.stats.local_hits, 0);
+        assert_eq!(n.stats.port_grants, 1);
+    }
+
+    #[test]
+    fn k_widening_shortens_response_occupancy() {
+        let cycles = |k: usize| {
+            let mut n = Noc::new(&ArchConfig::tensorpool().with_kj(k, 2));
+            // Two reads from tile 0 to the same remote tile: the second
+            // response waits for the first's channel beats.
+            n.read_line(0, 0, 0, 0, 16);
+            n.read_line(0, 0, 1, 0, 16);
+            run_until_delivered(&mut n, 2, 256).last().unwrap().0
+        };
+        let k1 = cycles(1);
+        let k4 = cycles(4);
+        assert!(
+            k1 > k4 + 8,
+            "K=1 ({k1}) must serialize responses vs K=4 ({k4})"
+        );
+    }
+
+    #[test]
+    fn burst_vs_no_burst_arbiter_occupancy() {
+        let grants_time = |burst: bool| {
+            let cfg = if burst {
+                ArchConfig::tensorpool()
+            } else {
+                ArchConfig::tensorpool().without_burst()
+            };
+            let mut n = Noc::new(&cfg);
+            // Two wide reads through the SAME port (same dest tile).
+            n.read_line(0, 0, 0, 0, 16);
+            n.read_line(0, 0, 1, 0, 16);
+            run_until_delivered(&mut n, 2, 256).last().unwrap().0
+        };
+        let with_burst = grants_time(true);
+        let without = grants_time(false);
+        assert!(
+            without >= with_burst + 10,
+            "no-burst ({without}) must serialize 16 slots vs burst ({with_burst})"
+        );
+    }
+
+    #[test]
+    fn bank_conflicts_serialize() {
+        let mut n = noc();
+        // Four wide reads of the SAME line from four different remote tiles:
+        // same 16 banks -> 4-deep bank queues. Use distinct ingress tiles so
+        // response channels don't mask the bank effect.
+        for (i, t) in [1usize, 2, 3, 5].iter().enumerate() {
+            n.read_line(0, 0, i as u32, *t, 16);
+        }
+        run_until_delivered(&mut n, 4, 256);
+        assert!(n.stats.bank_conflict_waits > 0, "expected bank conflicts");
+    }
+
+    #[test]
+    fn wide_write_acks_and_occupies_port_longer() {
+        let mut n = noc();
+        n.write_line(0, 3, 9, 0, 16);
+        n.read_line(0, 0, 1, 0, 16); // same port, queued behind write beats
+        let got = run_until_delivered(&mut n, 2, 256);
+        assert!(got.iter().any(|(_, d)| d.tag == 9 && d.stream == 3));
+        // the read should be delayed by the write's J=2 beats (8 cycles)
+        let read_t = got.iter().find(|(_, d)| d.tag == 1).unwrap().0;
+        assert!(read_t > 14, "read at {read_t} not delayed by write beats");
+    }
+
+    #[test]
+    fn word_access_single_bank() {
+        let mut n = noc();
+        n.access_word(0, 0, 3, 0, 16 * 16, false); // line 16, word 0
+        run_until_delivered(&mut n, 1, 64);
+        assert_eq!(n.stats.bank_word_services, 1);
+    }
+
+    #[test]
+    fn quiescent_after_drain() {
+        let mut n = noc();
+        n.read_line(0, 0, 0, 0, 7);
+        n.write_line(0, 1, 1, 3, 900);
+        run_until_delivered(&mut n, 2, 256);
+        assert!(n.quiescent());
+    }
+
+    #[test]
+    fn many_random_requests_all_delivered() {
+        // No lost or duplicated transactions under random traffic.
+        let mut n = noc();
+        let total = 500u32;
+        for i in 0..total {
+            let tile = (i as usize * 7) % 64;
+            let line = (i as u64 * 37) % 4096;
+            if i % 5 == 0 {
+                n.write_line(1, 3, i, tile, line);
+            } else {
+                n.read_line(1, (i % 3) as u8, i, tile, line);
+            }
+        }
+        let got = run_until_delivered(&mut n, total as usize, 100_000);
+        let mut tags: Vec<u32> = got.iter().map(|(_, d)| d.tag).collect();
+        tags.sort_unstable();
+        tags.dedup();
+        assert_eq!(tags.len(), total as usize, "every tag exactly once");
+        assert!(n.quiescent());
+    }
+}

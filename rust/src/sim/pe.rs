@@ -1,0 +1,288 @@
+//! PE instruction-timing model: an in-order, single-issue RV32IMAF core with
+//! a scoreboard (stall-on-use), used for the paper's Fig 8 PE-kernel runtime
+//! and IPC/stall breakdowns, and for the TeraPool PE-only GEMM baseline of
+//! Table II.
+//!
+//! Kernels are expressed as a steady-state loop *body* of instruction
+//! templates with explicit producer→consumer distances (in instructions).
+//! The model replays the body for a calibration window and reports
+//! cycles/iteration, IPC, and a stall taxonomy. Load latency is drawn from
+//! the Tile-distance distribution of the interleaved L1 (1/3/5/9-cycle
+//! round trips, paper Sec III-A) in a deterministic rotation, so results are
+//! reproducible.
+
+/// Instruction classes with their result latencies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// Integer ALU / address generation: 1 cycle.
+    Alu,
+    /// FP add/mul/compare (pipelined): result after 3 cycles.
+    Fpu,
+    /// Fused multiply-add, SIMD over 2×FP16: result after 4 cycles.
+    Mac,
+    /// Load word: latency = interconnect distance (sampled) + 1.
+    Load,
+    /// Store word: fire-and-forget (1 cycle issue).
+    Store,
+    /// Divide / square-root on the Tile-shared Div-Sqrt unit: 12 cycles,
+    /// unpipelined (shared by 4 PEs — modelled as long latency).
+    Div,
+    /// Loop branch: 1 cycle + 2-cycle taken-penalty on the next fetch.
+    Branch,
+}
+
+/// One instruction template: op + producer distances (how many instructions
+/// *back* each source operand was produced; 0 = no dependency).
+#[derive(Clone, Copy, Debug)]
+pub struct Instr {
+    pub op: Op,
+    pub dep1: u16,
+    pub dep2: u16,
+}
+
+impl Instr {
+    pub const fn new(op: Op, dep1: u16, dep2: u16) -> Self {
+        Instr { op, dep1, dep2 }
+    }
+}
+
+/// Convenience constructors for kernel bodies.
+pub fn alu() -> Instr { Instr::new(Op::Alu, 0, 0) }
+pub fn fpu(d1: u16, d2: u16) -> Instr { Instr::new(Op::Fpu, d1, d2) }
+pub fn mac(d1: u16, d2: u16) -> Instr { Instr::new(Op::Mac, d1, d2) }
+pub fn load() -> Instr { Instr::new(Op::Load, 0, 0) }
+pub fn store(d1: u16) -> Instr { Instr::new(Op::Store, d1, 0) }
+pub fn div(d1: u16) -> Instr { Instr::new(Op::Div, d1, 0) }
+pub fn branch() -> Instr { Instr::new(Op::Branch, 0, 0) }
+
+/// Where PE load-stall cycles went (Fig 8 bar segments).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StallBreakdown {
+    pub load_wait: u64,
+    pub fpu_raw: u64,
+    pub div_wait: u64,
+    pub branch_penalty: u64,
+}
+
+/// Result of timing one kernel body.
+#[derive(Clone, Debug)]
+pub struct PeTiming {
+    pub instrs: u64,
+    pub cycles: u64,
+    pub ipc: f64,
+    pub stalls: StallBreakdown,
+    /// Fraction of instructions that touch memory (drives `PeWorkload`).
+    pub mem_fraction: f64,
+}
+
+impl PeTiming {
+    /// Scale to a full kernel: `total_instrs` dynamic instructions per PE.
+    pub fn cycles_for(&self, total_instrs: u64) -> u64 {
+        (total_instrs as f64 / self.ipc).ceil() as u64
+    }
+}
+
+/// Round-trip load latencies with their Tile-distance weights for the
+/// interleaved L1: local(1/64), SubGroup(3/64), Group(12/64), remote(48/64)
+/// — paper Sec III-A: 1/3/5/9 cycles.
+const LOAD_LAT: [(u64, u32); 4] = [(1, 1), (3, 3), (5, 12), (9, 48)];
+
+/// Deterministic latency rotation matching the distance distribution.
+struct LoadLatSampler {
+    seq: Vec<u64>,
+    i: usize,
+}
+
+impl LoadLatSampler {
+    fn new() -> Self {
+        // Spread the distances so neighbouring loads see varied latency.
+        let mut seq = Vec::with_capacity(64);
+        let mut pools: Vec<(u64, u32)> = LOAD_LAT.to_vec();
+        // round-robin drain proportional to weights
+        while pools.iter().any(|(_, w)| *w > 0) {
+            for p in pools.iter_mut() {
+                if p.1 > 0 {
+                    seq.push(p.0);
+                    p.1 -= 1;
+                }
+            }
+        }
+        LoadLatSampler { seq, i: 0 }
+    }
+
+    fn next(&mut self) -> u64 {
+        let v = self.seq[self.i];
+        self.i = (self.i + 1) % self.seq.len();
+        v
+    }
+}
+
+fn result_latency(op: Op, load_lat: u64) -> u64 {
+    match op {
+        Op::Alu => 1,
+        Op::Fpu => 3,
+        Op::Mac => 4,
+        Op::Load => load_lat + 1,
+        Op::Store => 1,
+        Op::Div => 12,
+        Op::Branch => 1,
+    }
+}
+
+/// Time `iters` repetitions of `body` on one PE.
+///
+/// The model is in-order single-issue: instruction i issues at
+/// `max(prev_issue + 1, ready(deps))`; the gap is attributed to the stall
+/// class of the dependency that pushed furthest.
+pub fn time_body(body: &[Instr], iters: u64) -> PeTiming {
+    assert!(!body.is_empty());
+    let n = body.len();
+    let total = n as u64 * iters;
+    // ready times of the last `window` instructions (ring)
+    let window = 64usize;
+    assert!(
+        body.iter().all(|i| (i.dep1 as usize) < window && (i.dep2 as usize) < window),
+        "dependency distance exceeds window"
+    );
+    let mut ready = vec![0u64; window];
+    let mut ops = vec![Op::Alu; window];
+    let mut lat_sampler = LoadLatSampler::new();
+    let mut stalls = StallBreakdown::default();
+    let mut t: u64 = 0; // issue cycle of the previous instruction
+    let mut mem_ops: u64 = 0;
+    let mut idx: u64 = 0;
+
+    for _ in 0..iters {
+        for ins in body {
+            let mut earliest = t + 1;
+            let mut blame: Option<Op> = None;
+            for d in [ins.dep1, ins.dep2] {
+                if d == 0 || idx < d as u64 {
+                    continue;
+                }
+                let src = ((idx - d as u64) % window as u64) as usize;
+                if ready[src] > earliest {
+                    earliest = ready[src];
+                    blame = Some(ops[src]);
+                }
+            }
+            let stall = earliest - (t + 1);
+            if stall > 0 {
+                match blame {
+                    Some(Op::Load) => stalls.load_wait += stall,
+                    Some(Op::Div) => stalls.div_wait += stall,
+                    Some(Op::Fpu) | Some(Op::Mac) => stalls.fpu_raw += stall,
+                    _ => stalls.fpu_raw += stall,
+                }
+            }
+            let mut issue = earliest;
+            if matches!(ins.op, Op::Branch) {
+                // taken-branch penalty charged after the branch issues
+                issue += 0;
+            }
+            let lat = match ins.op {
+                Op::Load => {
+                    mem_ops += 1;
+                    result_latency(Op::Load, lat_sampler.next())
+                }
+                Op::Store => {
+                    mem_ops += 1;
+                    1
+                }
+                op => result_latency(op, 0),
+            };
+            let slot = (idx % window as u64) as usize;
+            ready[slot] = issue + lat;
+            ops[slot] = ins.op;
+            t = issue;
+            if matches!(ins.op, Op::Branch) {
+                stalls.branch_penalty += 2;
+                t += 2; // flush bubble
+            }
+            idx += 1;
+        }
+    }
+    let cycles = t + 1;
+    PeTiming {
+        instrs: total,
+        cycles,
+        ipc: total as f64 / cycles as f64,
+        stalls,
+        mem_fraction: mem_ops as f64 / total as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pure_alu_hits_ipc_one() {
+        let body = vec![alu(), alu(), alu(), alu()];
+        let t = time_body(&body, 1000);
+        assert!(t.ipc > 0.99, "independent ALU stream must pipeline: {}", t.ipc);
+    }
+
+    #[test]
+    fn dependent_fpu_chain_stalls() {
+        // Every FPU op depends on the previous one: IPC -> 1/3.
+        let body = vec![fpu(1, 0)];
+        let t = time_body(&body, 1000);
+        assert!((t.ipc - 1.0 / 3.0).abs() < 0.01, "got {}", t.ipc);
+        assert!(t.stalls.fpu_raw > 0);
+    }
+
+    #[test]
+    fn load_use_distance_hides_latency() {
+        // Load consumed immediately: heavy stalls.
+        let tight = vec![load(), fpu(1, 0)];
+        // Loads software-pipelined 8 instructions ahead of use.
+        let spread: Vec<Instr> = vec![
+            load(), load(), load(), load(),
+            load(), load(), load(), load(),
+            fpu(8, 0), fpu(8, 0), fpu(8, 0), fpu(8, 0),
+            fpu(8, 0), fpu(8, 0), fpu(8, 0), fpu(8, 0),
+        ];
+        let t_tight = time_body(&tight, 1000);
+        let t_spread = time_body(&spread, 1000);
+        assert!(
+            t_spread.ipc > t_tight.ipc * 1.5,
+            "software pipelining must help: {} vs {}",
+            t_spread.ipc,
+            t_tight.ipc
+        );
+    }
+
+    #[test]
+    fn div_is_expensive() {
+        let body = vec![div(1)];
+        let t = time_body(&body, 100);
+        assert!(t.ipc < 0.1, "chained div must crawl: {}", t.ipc);
+        assert!(t.stalls.div_wait > 0);
+    }
+
+    #[test]
+    fn branch_penalty_counted() {
+        let body = vec![alu(), alu(), branch()];
+        let t = time_body(&body, 100);
+        assert!(t.stalls.branch_penalty >= 200);
+        assert!(t.ipc < 0.7);
+    }
+
+    #[test]
+    fn mem_fraction_reported() {
+        let body = vec![load(), fpu(1, 0), store(1), alu()];
+        let t = time_body(&body, 10);
+        assert!((t.mem_fraction - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn load_latency_distribution_mean() {
+        let mut s = LoadLatSampler::new();
+        let n = 64 * 10;
+        let sum: u64 = (0..n).map(|_| s.next()).sum();
+        let mean = sum as f64 / n as f64;
+        // E[lat] = (1·1 + 3·3 + 12·5 + 48·9)/64 = 7.84
+        assert!((mean - 7.84).abs() < 0.05, "mean {mean}");
+    }
+}

@@ -1,0 +1,217 @@
+//! PE cluster traffic model for concurrent TE+PE+DMA execution (paper
+//! Sec V-C, Figs 9/10).
+//!
+//! When a PE-kernel (softmax, layernorm, depthwise conv, ...) runs alongside
+//! the TEs, what matters to the *TEs* is the L1 traffic the 256 PEs inject —
+//! bank conflicts and port pressure. Each `PeTraffic` instance aggregates
+//! the narrow word accesses of one Tile's PEs walking the kernel's operand
+//! regions, at a rate derived from the kernel's instruction mix and IPC
+//! (see `sim::pe` for the instruction-timing model that produces those).
+//!
+//! The injector finishes when its word budget is served; its finish time is
+//! the PE-kernel's runtime *under contention*.
+
+use super::addr::MatRegion;
+use super::noc::Noc;
+
+/// Word-access pattern of a PE kernel over its operand regions.
+#[derive(Clone, Debug)]
+pub struct PeWorkload {
+    /// Regions read (e.g. the previous GEMM's Z for softmax).
+    pub reads: Vec<MatRegion>,
+    /// Regions written.
+    pub writes: Vec<MatRegion>,
+    /// Total dynamic instructions per PE (sets the runtime floor together
+    /// with `ipc`).
+    pub instrs_per_pe: u64,
+    /// Instructions per cycle the kernel sustains on a PE in isolation
+    /// (from `sim::pe::IpcModel` or the paper's Fig 8).
+    pub ipc: f64,
+    /// Fraction of instructions that are loads/stores → word requests.
+    pub mem_fraction: f64,
+}
+
+impl PeWorkload {
+    /// Aggregate words accessed per cycle per PE at the isolated IPC.
+    pub fn words_per_cycle_per_pe(&self) -> f64 {
+        self.ipc * self.mem_fraction
+    }
+
+    /// Isolated runtime (no contention), cycles.
+    pub fn isolated_cycles(&self) -> u64 {
+        (self.instrs_per_pe as f64 / self.ipc).ceil() as u64
+    }
+}
+
+/// One Tile's worth of PEs executing a slice of a PE kernel.
+pub struct PeTraffic {
+    pub token: u16,
+    pub tile: usize,
+    pes: usize,
+    /// Fixed-point accumulator for fractional issue rates.
+    rate: f64,
+    credit: f64,
+    /// Word addresses this tile's PEs will touch, in program order.
+    /// (region walk is strided across tiles: PE t of T handles rows t, t+T…)
+    seq: Vec<(u64, bool)>,
+    next: usize,
+    outstanding: usize,
+    max_outstanding: usize,
+    /// Instruction budget: even with zero memory traffic the kernel cannot
+    /// finish faster than instrs/ipc.
+    min_cycles: u64,
+    started_at: u64,
+    pub finish_cycle: Option<u64>,
+}
+
+impl PeTraffic {
+    /// Build the injector for tile `tile` of `num_tiles`, handling a
+    /// 1/num_tiles row-slice of the workload's regions.
+    pub fn new(token: u16, tile: usize, num_tiles: usize, pes_per_tile: usize,
+               wl: &PeWorkload) -> Self {
+        let mut seq = Vec::new();
+        for (region, write) in wl
+            .reads
+            .iter()
+            .map(|r| (r, false))
+            .chain(wl.writes.iter().map(|r| (r, true)))
+        {
+            // Row-parallel split: this tile's PEs own rows ≡ tile (mod T).
+            let mut row = tile;
+            while row < region.rows {
+                // Two fp16 elements per word.
+                let words = region.cols.div_ceil(2) as u64;
+                let base = region.elem_word(row, 0);
+                for w in 0..words {
+                    seq.push((base + w, write));
+                }
+                row += num_tiles;
+            }
+        }
+        PeTraffic {
+            token,
+            tile,
+            pes: pes_per_tile,
+            rate: wl.words_per_cycle_per_pe() * pes_per_tile as f64,
+            credit: 0.0,
+            seq,
+            next: 0,
+            outstanding: 0,
+            // PEs have a scoreboard with a handful of outstanding loads each.
+            max_outstanding: pes_per_tile * 2,
+            min_cycles: wl.isolated_cycles(),
+            started_at: 0,
+            finish_cycle: None,
+        }
+    }
+
+    pub fn start(&mut self, now: u64) {
+        self.started_at = now;
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.finish_cycle.is_some()
+    }
+
+    pub fn on_delivery(&mut self) {
+        self.outstanding -= 1;
+    }
+
+    /// Issue up to the rate-budgeted number of word requests this cycle.
+    pub fn step(&mut self, noc: &mut Noc) {
+        if self.finish_cycle.is_some() {
+            return;
+        }
+        if self.next >= self.seq.len() && self.outstanding == 0 {
+            // Memory done; runtime is bounded below by the instruction
+            // budget (compute-only tail).
+            let now = noc.now();
+            let earliest = self.started_at + self.min_cycles;
+            self.finish_cycle = Some(now.max(earliest));
+            return;
+        }
+        self.credit += self.rate;
+        while self.credit >= 1.0
+            && self.next < self.seq.len()
+            && self.outstanding < self.max_outstanding
+        {
+            let (addr, write) = self.seq[self.next];
+            self.next += 1;
+            self.outstanding += 1;
+            self.credit -= 1.0;
+            noc.access_word(self.token, 0, 0, self.tile, addr, write);
+        }
+        // Cap unused credit: PEs cannot bank up issue slots indefinitely.
+        self.credit = self.credit.min(self.pes as f64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::addr::L1Alloc;
+    use crate::sim::config::ArchConfig;
+
+    fn workload(cfg: &ArchConfig) -> PeWorkload {
+        let mut alloc = L1Alloc::new(cfg);
+        let z = alloc.alloc(128, 128);
+        let o = alloc.alloc(128, 128);
+        PeWorkload {
+            reads: vec![z],
+            writes: vec![o],
+            instrs_per_pe: 1000,
+            ipc: 0.8,
+            mem_fraction: 0.3,
+        }
+    }
+
+    #[test]
+    fn injector_completes_and_respects_instruction_floor() {
+        let cfg = ArchConfig::tensorpool();
+        let wl = workload(&cfg);
+        let mut noc = Noc::new(&cfg);
+        let mut inj = PeTraffic::new(100, 0, cfg.num_tiles(), cfg.pes_per_tile, &wl);
+        inj.start(0);
+        for _ in 0..100_000 {
+            let n = noc.step().len();
+            for _ in 0..n {
+                inj.on_delivery();
+            }
+            inj.step(&mut noc);
+            if inj.is_done() {
+                break;
+            }
+        }
+        let finish = inj.finish_cycle.expect("injector must finish");
+        assert!(finish >= wl.isolated_cycles(),
+                "cannot beat the instruction budget: {finish}");
+    }
+
+    #[test]
+    fn tiles_partition_rows_disjointly() {
+        let cfg = ArchConfig::tensorpool();
+        let wl = workload(&cfg);
+        let t0 = PeTraffic::new(0, 0, 64, 4, &wl);
+        let t1 = PeTraffic::new(1, 1, 64, 4, &wl);
+        let a0: std::collections::HashSet<u64> =
+            t0.seq.iter().map(|(a, _)| *a).collect();
+        let a1: std::collections::HashSet<u64> =
+            t1.seq.iter().map(|(a, _)| *a).collect();
+        assert!(a0.is_disjoint(&a1), "tile slices must not overlap");
+        // 128 rows over 64 tiles -> 2 rows x (64+64) words per region pair
+        assert_eq!(t0.seq.len(), 2 * 64 * 2);
+    }
+
+    #[test]
+    fn workload_rates() {
+        let wl = PeWorkload {
+            reads: vec![],
+            writes: vec![],
+            instrs_per_pe: 800,
+            ipc: 0.8,
+            mem_fraction: 0.25,
+        };
+        assert!((wl.words_per_cycle_per_pe() - 0.2).abs() < 1e-12);
+        assert_eq!(wl.isolated_cycles(), 1000);
+    }
+}

@@ -1,0 +1,196 @@
+//! Top-level Pool simulation: TEs + PE-traffic injectors + DMA sharing the
+//! NoC, stepped cycle by cycle until every engine drains.
+
+use super::config::ArchConfig;
+use super::dma::Dma;
+use super::noc::Noc;
+use super::pe_traffic::{PeTraffic, PeWorkload};
+use super::stats::RunResult;
+use super::te::{TeEngine, TeJob};
+
+/// Engine-token layout: TEs first, then PE injectors, then the DMA.
+pub struct Sim {
+    pub cfg: ArchConfig,
+    pub noc: Noc,
+    pub tes: Vec<TeEngine>,
+    pub pe_traffic: Vec<PeTraffic>,
+    pub dma: Option<Dma>,
+    te_finish: Vec<u64>,
+    /// Reusable delivery buffer (§Perf: a per-cycle `to_vec()` allocation
+    /// showed up second in the hot-path profile).
+    scratch: Vec<super::noc::Delivery>,
+}
+
+impl Sim {
+    pub fn new(cfg: &ArchConfig) -> Self {
+        let tes = (0..cfg.num_tes())
+            .map(|i| TeEngine::new(i as u16, cfg.te_home_tile(i), cfg))
+            .collect::<Vec<_>>();
+        let nt = tes.len();
+        Sim {
+            cfg: cfg.clone(),
+            noc: Noc::new(cfg),
+            tes,
+            pe_traffic: Vec::new(),
+            dma: None,
+            te_finish: vec![0; nt],
+            scratch: Vec::with_capacity(64),
+        }
+    }
+
+    /// Assign one GEMM slice per TE. `jobs[i]` goes to TE i; `None` leaves
+    /// that TE idle.
+    pub fn assign_gemm(&mut self, jobs: Vec<Option<TeJob>>) {
+        assert_eq!(jobs.len(), self.tes.len(), "one job slot per TE");
+        for (te, job) in self.tes.iter_mut().zip(jobs) {
+            if let Some(j) = job {
+                te.assign(j);
+            }
+        }
+    }
+
+    /// Attach PE background traffic (one injector per Tile slice).
+    pub fn add_pe_workload(&mut self, wl: &PeWorkload) {
+        let base = (self.tes.len() + self.pe_traffic.len()) as u16;
+        let now = self.noc.now();
+        for t in 0..self.cfg.num_tiles() {
+            let mut inj = PeTraffic::new(
+                base + t as u16,
+                t,
+                self.cfg.num_tiles(),
+                self.cfg.pes_per_tile,
+                wl,
+            );
+            inj.start(now);
+            self.pe_traffic.push(inj);
+        }
+    }
+
+    /// Attach (or get) the DMA engine. The DMA owns the reserved token
+    /// `u16::MAX` so PE injectors can keep being appended across schedule
+    /// phases without token collisions.
+    pub fn dma_mut(&mut self) -> &mut Dma {
+        if self.dma.is_none() {
+            self.dma = Some(Dma::new(u16::MAX, &self.cfg));
+        }
+        self.dma.as_mut().unwrap()
+    }
+
+    fn all_done(&self) -> bool {
+        self.tes.iter().all(|t| t.is_done())
+            && self.pe_traffic.iter().all(|p| p.is_done())
+            && self.dma.as_ref().map(|d| d.is_done() || d.is_idle()).unwrap_or(true)
+            && self.noc.quiescent()
+    }
+
+    /// Step one cycle; returns true while work remains.
+    pub fn step(&mut self) -> bool {
+        let nte = self.tes.len() as u16;
+        let ninj = self.pe_traffic.len() as u16;
+        self.scratch.clear();
+        self.scratch.extend_from_slice(self.noc.step());
+        for i in 0..self.scratch.len() {
+            let d = self.scratch[i];
+            if d.engine < nte {
+                self.tes[d.engine as usize].on_delivery(d.stream, d.tag);
+            } else if d.engine != u16::MAX && d.engine < nte + ninj {
+                self.pe_traffic[(d.engine - nte) as usize].on_delivery();
+            } else if let Some(dma) = &mut self.dma {
+                dma.on_delivery();
+            }
+        }
+        for (i, te) in self.tes.iter_mut().enumerate() {
+            let was_done = te.is_done();
+            te.step(&mut self.noc);
+            if !was_done && te.is_done() {
+                self.te_finish[i] = self.noc.now();
+            }
+        }
+        for p in self.pe_traffic.iter_mut() {
+            p.step(&mut self.noc);
+        }
+        if let Some(dma) = &mut self.dma {
+            dma.step(&mut self.noc);
+        }
+        !self.all_done()
+    }
+
+    /// Run to completion (or panic past `max_cycles` — deadlock guard).
+    pub fn run(&mut self, max_cycles: u64) -> RunResult {
+        while self.step() {
+            if self.noc.now() > max_cycles {
+                panic!(
+                    "simulation exceeded {max_cycles} cycles — \
+                     engine deadlock or undersized budget"
+                );
+            }
+        }
+        self.result()
+    }
+
+    /// Collect the run result (cycles count from 0 to last drain).
+    pub fn result(&self) -> RunResult {
+        let mut tes = Vec::with_capacity(self.tes.len());
+        let mut total_macs = 0;
+        for (i, te) in self.tes.iter().enumerate() {
+            let mut s = te.stats.clone();
+            s.finish_cycle = self.te_finish[i];
+            total_macs += s.macs;
+            tes.push(s);
+        }
+        RunResult {
+            cycles: self.noc.now(),
+            tes,
+            noc: self.noc.stats.clone(),
+            total_macs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::addr::L1Alloc;
+
+    #[test]
+    fn pool_has_sixteen_tes() {
+        let sim = Sim::new(&ArchConfig::tensorpool());
+        assert_eq!(sim.tes.len(), 16);
+        // TE home tiles: first tile of each SubGroup
+        assert_eq!(sim.tes[0].home_tile, 0);
+        assert_eq!(sim.tes[1].home_tile, 4);
+        assert_eq!(sim.tes[15].home_tile, 60);
+    }
+
+    #[test]
+    fn empty_pool_terminates_immediately() {
+        let mut sim = Sim::new(&ArchConfig::tensorpool());
+        let r = sim.run(10);
+        assert_eq!(r.total_macs, 0);
+    }
+
+    #[test]
+    fn single_te_job_through_pool() {
+        let cfg = ArchConfig::tensorpool();
+        let mut sim = Sim::new(&cfg);
+        let mut alloc = L1Alloc::new(&cfg);
+        let x = alloc.alloc(64, 64);
+        let w = alloc.alloc(64, 64);
+        let z = alloc.alloc(64, 64);
+        let mut jobs: Vec<Option<TeJob>> = (0..16).map(|_| None).collect();
+        jobs[0] = Some(TeJob {
+            x,
+            w,
+            y: None,
+            z,
+            row_tiles: vec![0, 1],
+            col_order: vec![0, 1],
+            k: 64,
+        });
+        sim.assign_gemm(jobs);
+        let r = sim.run(1_000_000);
+        assert_eq!(r.total_macs, 64 * 64 * 64);
+        assert!(r.tes[0].busy_cycles > 0);
+        assert!(r.tes[1].busy_cycles == 0);
+    }
+}

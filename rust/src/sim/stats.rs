@@ -1,0 +1,142 @@
+//! Counters collected during simulation, used by every figure harness.
+
+/// Reasons a tensor engine spends a non-compute cycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TeStall {
+    /// Waiting for W-stream data (bank conflicts / port serialization).
+    WaitW,
+    /// Waiting for X-stream data.
+    WaitX,
+    /// Waiting for the Y preload of the current output tile.
+    WaitY,
+    /// Z FIFO full — writeback backpressure.
+    ZFull,
+    /// No work assigned (job finished, others still running).
+    Drained,
+}
+
+/// Aggregate NoC statistics.
+#[derive(Clone, Debug, Default)]
+pub struct NocStats {
+    /// Wide/narrow requests injected.
+    pub reads_issued: u64,
+    pub writes_issued: u64,
+    /// Word-level bank services performed.
+    pub bank_word_services: u64,
+    /// Cycles in which a word waited behind another in a bank queue.
+    pub bank_conflict_waits: u64,
+    /// Request-port grants (arbiter retires).
+    pub port_grants: u64,
+    /// Cycles a request sat at a busy request port.
+    pub port_wait_cycles: u64,
+    /// Response-channel beats transferred (ingress side).
+    pub resp_beats: u64,
+    /// Cycles responses waited for a busy response channel.
+    pub resp_wait_cycles: u64,
+    /// Requests served Tile-locally (no arbiter).
+    pub local_hits: u64,
+}
+
+/// Per-engine result of a simulation run.
+#[derive(Clone, Debug, Default)]
+pub struct TeRunStats {
+    pub busy_cycles: u64,
+    pub finish_cycle: u64,
+    pub macs: u64,
+    pub stall_wait_x: u64,
+    pub stall_wait_w: u64,
+    pub stall_wait_y: u64,
+    pub stall_z_full: u64,
+}
+
+impl TeRunStats {
+    pub fn utilization(&self, elapsed: u64) -> f64 {
+        if elapsed == 0 {
+            0.0
+        } else {
+            self.busy_cycles as f64 / elapsed as f64
+        }
+    }
+}
+
+/// Result of a full GEMM (or block) run on the simulated Pool.
+#[derive(Clone, Debug, Default)]
+pub struct RunResult {
+    /// Total cycles from t=0 to the last engine retiring.
+    pub cycles: u64,
+    /// Per-TE stats.
+    pub tes: Vec<TeRunStats>,
+    /// NoC counters.
+    pub noc: NocStats,
+    /// Total MACs retired by TEs.
+    pub total_macs: u64,
+}
+
+impl RunResult {
+    /// Parallel FMA utilization over the engines that had work
+    /// (paper Figs 5/7/10 metric): ΣMACs / (cycles × ΣMACs-capacity).
+    pub fn fma_utilization(&self, macs_per_cycle_per_te: usize) -> f64 {
+        let active = self.tes.iter().filter(|t| t.macs > 0).count();
+        if self.cycles == 0 || active == 0 {
+            return 0.0;
+        }
+        self.total_macs as f64
+            / (self.cycles as f64 * (active * macs_per_cycle_per_te) as f64)
+    }
+
+    /// Achieved MACs/cycle across the whole Pool.
+    pub fn macs_per_cycle(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.total_macs as f64 / self.cycles as f64
+        }
+    }
+
+    /// Runtime in milliseconds at `freq_ghz`.
+    pub fn runtime_ms(&self, freq_ghz: f64) -> f64 {
+        self.cycles as f64 / (freq_ghz * 1e9) * 1e3
+    }
+
+    /// Achieved TFLOPS (2 FLOPs/MAC) at `freq_ghz`.
+    pub fn tflops(&self, freq_ghz: f64) -> f64 {
+        2.0 * self.macs_per_cycle() * freq_ghz / 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_math() {
+        let r = RunResult {
+            cycles: 1000,
+            total_macs: 256 * 890,
+            tes: vec![TeRunStats { busy_cycles: 890, macs: 256 * 890, ..Default::default() }],
+            ..Default::default()
+        };
+        assert!((r.fma_utilization(256) - 0.89).abs() < 1e-9);
+        assert!((r.macs_per_cycle() - 227.84).abs() < 1e-9);
+    }
+
+    #[test]
+    fn idle_tes_do_not_dilute_utilization() {
+        let r = RunResult {
+            cycles: 100,
+            total_macs: 256 * 100,
+            tes: vec![
+                TeRunStats { busy_cycles: 100, macs: 256 * 100, ..Default::default() },
+                TeRunStats::default(), // never assigned work
+            ],
+            ..Default::default()
+        };
+        assert!((r.fma_utilization(256) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn runtime_at_900mhz() {
+        let r = RunResult { cycles: 900_000, ..Default::default() };
+        assert!((r.runtime_ms(0.9) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,523 @@
+//! RedMulE tensor-engine model with the paper's latency-tolerant streamer
+//! (Sec III-B, Fig 3).
+//!
+//! Compute is modelled at *k-block* granularity: one output tile is
+//! R × C(P+1) = 32×32 accumulators; a k-block advances every row's
+//! dot-product by 32 elements and takes 32 quanta × 4 cycles = 128 cycles at
+//! full FMA utilization. Per k-block the streamer must deliver 32 X lines
+//! (one 64 B line per row) and 32 W lines (one per dot index) — exactly the
+//! paper's "C×(P+1) W-elements every four cycles" cadence aggregated over
+//! the block.
+//!
+//! The streamer issues at most ONE 512-bit request per cycle (the TE's
+//! memory port), round-robin across the X/W/Y/Z streams, bounded by:
+//! * per-stream Reorder-Buffer depth (16 outstanding reads — the paper's
+//!   multiple-outstanding-transaction support; depth 1 = in-order ablation),
+//! * the Z FIFO (32 outstanding writes, shared Y/Z buffer: Y preloads for
+//!   the next tile compete with Z drains, paper Fig 3),
+//! * a double-buffered prefetch window of one k-block ahead and one output
+//!   tile ahead for Y.
+
+use super::addr::MatRegion;
+use super::config::{ArchConfig, TeGeometry};
+use super::noc::Noc;
+use super::stats::{TeRunStats, TeStall};
+
+pub const STREAM_X: u8 = 0;
+pub const STREAM_W: u8 = 1;
+pub const STREAM_Y: u8 = 2;
+pub const STREAM_Z: u8 = 3;
+
+/// Cycles per k-block: 32 quanta × 4 cycles (paper Sec III-B).
+pub const KBLOCK_CYCLES: u64 = 128;
+/// Dot-product elements consumed per k-block.
+pub const KBLOCK_ELEMS: usize = 32;
+
+/// A GEMM slice assigned to one TE: a set of 32-row output stripes times an
+/// ordered list of 32-column tiles (the order encodes the paper's
+/// interleaved-W scheme: each TE starts from a different column and loops
+/// back — Fig 6 right).
+#[derive(Clone, Debug)]
+pub struct TeJob {
+    pub x: MatRegion,
+    pub w: MatRegion,
+    /// Accumulator input; `None` skips the Y preload (Z = X·W).
+    pub y: Option<MatRegion>,
+    pub z: MatRegion,
+    /// Output row stripes owned by this TE (stripe s covers rows 32s..32s+32).
+    pub row_tiles: Vec<usize>,
+    /// Column-tile visit order (column tile c covers cols 32c..32c+32).
+    pub col_order: Vec<usize>,
+    /// Dot length (K); must be a multiple of 32.
+    pub k: usize,
+}
+
+impl TeJob {
+    pub fn num_out_tiles(&self) -> usize {
+        self.row_tiles.len() * self.col_order.len()
+    }
+
+    pub fn kblocks(&self) -> usize {
+        self.k / KBLOCK_ELEMS
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        (self.num_out_tiles() * self.kblocks()) as u64 * 32 * 32 * 32
+    }
+
+    fn out_tile(&self, idx: usize) -> (usize, usize) {
+        let rt = self.row_tiles[idx / self.col_order.len()];
+        let ct = self.col_order[idx % self.col_order.len()];
+        (rt, ct)
+    }
+}
+
+/// Per-k-block arrival bookkeeping within the prefetch window.
+#[derive(Clone, Copy, Default)]
+struct KbArrivals {
+    x: u16,
+    w: u16,
+}
+
+/// The engine + streamer state machine.
+pub struct TeEngine {
+    pub token: u16,
+    pub home_tile: usize,
+    geom: TeGeometry,
+    rob_depth: usize,
+    z_fifo_depth: usize,
+
+    job: Option<TeJob>,
+
+    // compute state
+    tile_idx: usize,     // output tile being computed
+    kb: usize,           // k-block within the tile
+    compute_left: u64,   // cycles left in the current k-block
+    // issue state
+    x_issue: (usize, usize), // (global kblock index, line-within-kblock 0..32)
+    w_issue: (usize, usize),
+    y_issue: (usize, usize), // (tile index, line 0..32)
+    z_pending: Vec<u64>,     // line addresses awaiting issue (LIFO ok)
+    rr: u8,                  // round-robin pointer over streams
+    // arrivals
+    arr: Vec<KbArrivals>, // ring over global kblocks, window
+    arr_base: usize,      // first global kblock tracked
+    y_got: [u16; 2],      // current tile, next tile
+    y_base: usize,
+    // credit
+    x_out: usize,
+    w_out: usize,
+    y_out: usize,
+    z_out: usize,
+
+    pub stats: TeRunStats,
+    done: bool,
+}
+
+const ARR_WINDOW: usize = 4;
+
+impl TeEngine {
+    pub fn new(token: u16, home_tile: usize, cfg: &ArchConfig) -> Self {
+        TeEngine {
+            token,
+            home_tile,
+            geom: cfg.te,
+            rob_depth: cfg.rob_depth,
+            z_fifo_depth: cfg.z_fifo_depth,
+            job: None,
+            tile_idx: 0,
+            kb: 0,
+            compute_left: 0,
+            x_issue: (0, 0),
+            w_issue: (0, 0),
+            y_issue: (0, 0),
+            z_pending: Vec::new(),
+            rr: 0,
+            arr: vec![KbArrivals::default(); ARR_WINDOW],
+            arr_base: 0,
+            y_got: [0, 0],
+            y_base: 0,
+            x_out: 0,
+            w_out: 0,
+            y_out: 0,
+            z_out: 0,
+            stats: TeRunStats::default(),
+            done: true,
+        }
+    }
+
+    pub fn assign(&mut self, job: TeJob) {
+        assert!(job.k % KBLOCK_ELEMS == 0, "K must be a multiple of 32");
+        assert!(!job.row_tiles.is_empty() && !job.col_order.is_empty());
+        let no_y = job.y.is_none();
+        self.tile_idx = 0;
+        self.kb = 0;
+        self.compute_left = 0;
+        self.x_issue = (0, 0);
+        self.w_issue = (0, 0);
+        self.y_issue = (0, 0);
+        self.z_pending.clear();
+        self.arr.iter_mut().for_each(|a| *a = KbArrivals::default());
+        self.arr_base = 0;
+        self.y_got = if no_y { [32, 32] } else { [0, 0] };
+        self.y_base = 0;
+        self.x_out = 0;
+        self.w_out = 0;
+        self.y_out = 0;
+        self.z_out = 0;
+        self.done = false;
+        self.job = Some(job);
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done && self.z_out == 0 && self.z_pending.is_empty()
+    }
+
+    /// Handle a delivery from the NoC (ROB retire / write ack).
+    pub fn on_delivery(&mut self, stream: u8, tag: u32) {
+        match stream {
+            STREAM_X => {
+                self.x_out -= 1;
+                let gkb = tag as usize;
+                if gkb >= self.arr_base && gkb < self.arr_base + ARR_WINDOW {
+                    self.arr[gkb % ARR_WINDOW].x += 1;
+                }
+            }
+            STREAM_W => {
+                self.w_out -= 1;
+                let gkb = tag as usize;
+                if gkb >= self.arr_base && gkb < self.arr_base + ARR_WINDOW {
+                    self.arr[gkb % ARR_WINDOW].w += 1;
+                }
+            }
+            STREAM_Y => {
+                self.y_out -= 1;
+                let tile = tag as usize;
+                if tile >= self.y_base && tile < self.y_base + 2 {
+                    self.y_got[tile % 2] += 1;
+                }
+            }
+            STREAM_Z => {
+                self.z_out -= 1;
+            }
+            _ => unreachable!("unknown stream"),
+        }
+    }
+
+    /// Line address for X line `l` (row within stripe) of k-block `kb` of
+    /// output tile `t`.
+    fn x_line(geom: &TeGeometry, job: &TeJob, t: usize, kb: usize, l: usize) -> u64 {
+        let (rt, _) = job.out_tile(t);
+        let row = rt * geom.tile_m() + l;
+        job.x.line_of_elem(row, kb * KBLOCK_ELEMS)
+    }
+
+    /// Line address for W line `l` (dot index within block) of k-block `kb`.
+    fn w_line(geom: &TeGeometry, job: &TeJob, t: usize, kb: usize, l: usize) -> u64 {
+        let (_, ct) = job.out_tile(t);
+        let wrow = kb * KBLOCK_ELEMS + l;
+        job.w.line_of_elem(wrow, ct * geom.tile_n())
+    }
+
+    /// Line address for Y/Z line `l` (row within stripe) of output tile `t`.
+    fn yz_line(geom: &TeGeometry, job: &TeJob, region: &MatRegion, t: usize, l: usize) -> u64 {
+        let (rt, ct) = job.out_tile(t);
+        let row = rt * geom.tile_m() + l;
+        region.line_of_elem(row, ct * geom.tile_n())
+    }
+
+    /// Advance the arrival window when compute moves past a global k-block.
+    fn retire_gkb(&mut self, gkb: usize) {
+        debug_assert_eq!(gkb, self.arr_base);
+        self.arr[gkb % ARR_WINDOW] = KbArrivals::default();
+        self.arr_base += 1;
+    }
+
+    /// One simulation cycle: try to issue a request, then advance compute.
+    pub fn step(&mut self, noc: &mut Noc) {
+        if self.job.is_none() {
+            return;
+        }
+        self.try_issue(noc);
+        self.advance_compute();
+    }
+
+    fn try_issue(&mut self, noc: &mut Noc) {
+        if self.done {
+            // Drain remaining Z lines even after compute finished.
+            if !self.z_pending.is_empty() && self.z_out < self.z_fifo_depth {
+                let line = self.z_pending.pop().unwrap();
+                self.z_out += 1;
+                noc.write_line(self.token, STREAM_Z, 0, self.home_tile, line);
+            }
+            return;
+        }
+        let job = self.job.take().expect("job present while not done");
+        let ntiles = job.num_out_tiles();
+        let kbl = job.kblocks();
+        let total_gkb = ntiles * kbl;
+
+        // One request per cycle max; rotate across streams for fairness.
+        for attempt in 0..4 {
+            let s = (self.rr + attempt) % 4;
+            match s {
+                0 => {
+                    // W stream: prefetch window = current..current+ARR_WINDOW
+                    let (gkb, l) = self.w_issue;
+                    if gkb < total_gkb
+                        && gkb < self.arr_base + ARR_WINDOW
+                        && self.w_out < self.rob_depth
+                    {
+                        let (t, kb) = (gkb / kbl, gkb % kbl);
+                        let line = Self::w_line(&self.geom, &job, t, kb, l);
+                        self.w_out += 1;
+                        noc.read_line(self.token, STREAM_W, gkb as u32, self.home_tile, line);
+                        self.w_issue = if l + 1 == KBLOCK_ELEMS { (gkb + 1, 0) } else { (gkb, l + 1) };
+                        self.rr = (s + 1) % 4;
+                        break;
+                    }
+                }
+                1 => {
+                    let (gkb, l) = self.x_issue;
+                    if gkb < total_gkb
+                        && gkb < self.arr_base + ARR_WINDOW
+                        && self.x_out < self.rob_depth
+                    {
+                        let (t, kb) = (gkb / kbl, gkb % kbl);
+                        let line = Self::x_line(&self.geom, &job, t, kb, l);
+                        self.x_out += 1;
+                        noc.read_line(self.token, STREAM_X, gkb as u32, self.home_tile, line);
+                        self.x_issue = if l + 1 == 32 { (gkb + 1, 0) } else { (gkb, l + 1) };
+                        self.rr = (s + 1) % 4;
+                        break;
+                    }
+                }
+                2 => {
+                    // Y preload: current tile + one ahead, sharing FIFO
+                    // credit with Z (paper: Y/Z share the same buffer).
+                    if let Some(y) = job.y {
+                        let (t, l) = self.y_issue;
+                        if t < ntiles
+                            && t < self.y_base + 2
+                            && self.y_out < self.rob_depth
+                            && self.y_out + self.z_out < self.z_fifo_depth
+                        {
+                            let line = Self::yz_line(&self.geom, &job, &y, t, l);
+                            self.y_out += 1;
+                            noc.read_line(self.token, STREAM_Y, t as u32, self.home_tile, line);
+                            self.y_issue = if l + 1 == 32 { (t + 1, 0) } else { (t, l + 1) };
+                            self.rr = (s + 1) % 4;
+                            break;
+                        }
+                    }
+                }
+                3 => {
+                    if !self.z_pending.is_empty() && self.z_out < self.z_fifo_depth {
+                        let line = self.z_pending.pop().unwrap();
+                        self.z_out += 1;
+                        noc.write_line(self.token, STREAM_Z, 0, self.home_tile, line);
+                        self.rr = (s + 1) % 4;
+                        break;
+                    }
+                }
+                _ => unreachable!(),
+            }
+        }
+        self.job = Some(job);
+    }
+
+    fn advance_compute(&mut self) {
+        if self.done {
+            return;
+        }
+        let job = self.job.take().expect("job present while not done");
+        let ntiles = job.num_out_tiles();
+        let kbl = job.kblocks();
+
+        // Idle: can the next k-block start this cycle?
+        if self.compute_left == 0 {
+            let gkb = self.tile_idx * kbl + self.kb;
+            let a = self.arr[gkb % ARR_WINDOW];
+            let y_ready =
+                job.y.is_none() || self.y_got[self.tile_idx % 2] >= 32;
+            if a.x as usize >= 32 && a.w as usize >= KBLOCK_ELEMS && y_ready {
+                self.compute_left = KBLOCK_CYCLES;
+            } else {
+                // stall accounting (priority: Y, then X, then W)
+                let cause = if !y_ready {
+                    TeStall::WaitY
+                } else if (a.x as usize) < 32 {
+                    TeStall::WaitX
+                } else {
+                    TeStall::WaitW
+                };
+                match cause {
+                    TeStall::WaitY => self.stats.stall_wait_y += 1,
+                    TeStall::WaitX => self.stats.stall_wait_x += 1,
+                    TeStall::WaitW => self.stats.stall_wait_w += 1,
+                    _ => {}
+                }
+                self.job = Some(job);
+                return;
+            }
+        }
+
+        // Burn one compute cycle.
+        self.compute_left -= 1;
+        self.stats.busy_cycles += 1;
+        self.stats.macs += self.geom.macs_per_cycle() as u64;
+        if self.compute_left == 0 {
+            // k-block complete
+            let gkb = self.tile_idx * kbl + self.kb;
+            self.retire_gkb(gkb);
+            self.kb += 1;
+            if self.kb == kbl {
+                // output tile complete: queue Z writeback, advance tile
+                for l in 0..32 {
+                    let line =
+                        Self::yz_line(&self.geom, &job, &job.z, self.tile_idx, l);
+                    self.z_pending.push(line);
+                }
+                self.kb = 0;
+                // free the Y double-buffer slot for this tile
+                self.y_got[self.tile_idx % 2] = if job.y.is_none() { 32 } else { 0 };
+                self.y_base = self.tile_idx + 1;
+                self.tile_idx += 1;
+                if self.tile_idx == ntiles {
+                    self.done = true;
+                    self.stats.finish_cycle = 0; // set by the pool on drain
+                }
+            }
+        }
+        self.job = Some(job);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::addr::L1Alloc;
+
+    fn single_te_gemm(n: usize, cfg: &ArchConfig) -> (TeEngine, TeJob) {
+        let mut alloc = L1Alloc::new(cfg);
+        let x = alloc.alloc(n, n);
+        let w = alloc.alloc(n, n);
+        let z = alloc.alloc(n, n);
+        let job = TeJob {
+            x,
+            w,
+            y: None,
+            z,
+            row_tiles: (0..n / 32).collect(),
+            col_order: (0..n / 32).collect(),
+            k: n,
+        };
+        let te = TeEngine::new(0, 0, cfg);
+        (te, job)
+    }
+
+    fn run(te: &mut TeEngine, noc: &mut Noc, max: u64) -> u64 {
+        for _ in 0..max {
+            let deliveries: Vec<_> = noc.step().to_vec();
+            for d in deliveries {
+                assert_eq!(d.engine, 0);
+                te.on_delivery(d.stream, d.tag);
+            }
+            te.step(noc);
+            if te.is_done() && noc.quiescent() {
+                return noc.now();
+            }
+        }
+        panic!("TE did not finish in {max} cycles");
+    }
+
+    #[test]
+    fn small_gemm_completes_with_exact_macs() {
+        let cfg = ArchConfig::tensorpool();
+        let (mut te, job) = single_te_gemm(64, &cfg);
+        let expect_macs = job.total_macs();
+        assert_eq!(expect_macs, 64 * 64 * 64);
+        let mut noc = Noc::new(&cfg);
+        te.assign(job);
+        run(&mut te, &mut noc, 100_000);
+        assert_eq!(te.stats.macs, expect_macs);
+        // ideal cycles = macs / 256
+        assert_eq!(te.stats.busy_cycles, expect_macs / 256);
+    }
+
+    #[test]
+    fn utilization_grows_with_problem_size() {
+        let cfg = ArchConfig::tensorpool();
+        let mut utils = Vec::new();
+        for n in [64usize, 128, 256] {
+            let (mut te, job) = single_te_gemm(n, &cfg);
+            let mut noc = Noc::new(&cfg);
+            te.assign(job);
+            let cycles = run(&mut te, &mut noc, 10_000_000);
+            utils.push(te.stats.busy_cycles as f64 / cycles as f64);
+        }
+        assert!(utils[0] < utils[1] && utils[1] < utils[2],
+                "utilization must grow with size: {utils:?}");
+        assert!(utils[2] > 0.9, "n=256 single-TE should exceed 90%: {utils:?}");
+    }
+
+    #[test]
+    fn in_order_streamer_ablation_is_much_slower() {
+        let fast_cfg = ArchConfig::tensorpool();
+        let slow_cfg = ArchConfig::tensorpool().without_rob();
+        let (mut te_f, job_f) = single_te_gemm(128, &fast_cfg);
+        let (mut te_s, job_s) = single_te_gemm(128, &slow_cfg);
+        let mut noc_f = Noc::new(&fast_cfg);
+        let mut noc_s = Noc::new(&slow_cfg);
+        te_f.assign(job_f);
+        te_s.assign(job_s);
+        let cf = run(&mut te_f, &mut noc_f, 10_000_000);
+        let cs = run(&mut te_s, &mut noc_s, 10_000_000);
+        assert!(
+            cs as f64 > cf as f64 * 2.0,
+            "ROB removal must cost >2x: {cs} vs {cf}"
+        );
+    }
+
+    #[test]
+    fn y_accumulate_adds_preload_traffic() {
+        let cfg = ArchConfig::tensorpool();
+        let mut alloc = L1Alloc::new(&cfg);
+        let x = alloc.alloc(64, 64);
+        let w = alloc.alloc(64, 64);
+        let y = alloc.alloc(64, 64);
+        let z = alloc.alloc(64, 64);
+        let mk = |with_y: bool| TeJob {
+            x,
+            w,
+            y: with_y.then_some(y),
+            z,
+            row_tiles: vec![0, 1],
+            col_order: vec![0, 1],
+            k: 64,
+        };
+        let mut noc1 = Noc::new(&cfg);
+        let mut te1 = TeEngine::new(0, 0, &cfg);
+        te1.assign(mk(false));
+        run(&mut te1, &mut noc1, 1_000_000);
+        let reads_no_y = noc1.stats.reads_issued;
+
+        let mut noc2 = Noc::new(&cfg);
+        let mut te2 = TeEngine::new(0, 0, &cfg);
+        te2.assign(mk(true));
+        run(&mut te2, &mut noc2, 1_000_000);
+        // 4 output tiles × 32 Y lines extra
+        assert_eq!(noc2.stats.reads_issued, reads_no_y + 4 * 32);
+    }
+
+    #[test]
+    fn z_writeback_is_complete() {
+        let cfg = ArchConfig::tensorpool();
+        let (mut te, job) = single_te_gemm(64, &cfg);
+        let out_tiles = job.num_out_tiles();
+        let mut noc = Noc::new(&cfg);
+        te.assign(job);
+        run(&mut te, &mut noc, 1_000_000);
+        assert_eq!(noc.stats.writes_issued, (out_tiles * 32) as u64);
+    }
+}

@@ -1,0 +1,295 @@
+//! The paper's Fig 9 AI-Native PHY compute blocks, as engine-level work
+//! descriptors consumed by the coordinator (Sec V-C).
+//!
+//! Each block describes one *iteration* of a double-bufferable pipeline:
+//! what the TEs compute (GEMM slices), what the PEs compute (an epilogue or
+//! side kernel with its operand regions), and what the DMA moves. The
+//! coordinator turns iterations into either a sequential schedule (engines
+//! one at a time — the paper's baseline) or a concurrent schedule
+//! (TE ∥ PE ∥ DMA with double buffering — the paper's contribution).
+
+use crate::sim::te::TeJob;
+use crate::sim::{DmaDir, DmaXfer, L1Alloc, MatRegion};
+use crate::workload::gemm::{map_split, GemmRegions, GemmSpec};
+use crate::workload::phy::{depthwise, softmax, transpose, PeKernel};
+
+/// PE-side work of one block iteration.
+#[derive(Clone)]
+pub struct PeWork {
+    pub kernel: PeKernel,
+    /// Total elements the kernel processes this iteration.
+    pub elems: usize,
+    pub reads: Vec<MatRegion>,
+    pub writes: Vec<MatRegion>,
+}
+
+/// One compute-block iteration.
+#[derive(Clone)]
+pub struct BlockIter {
+    /// TE jobs (one slot per TE; produced by `map_split`).
+    pub te_jobs: Vec<Option<TeJob>>,
+    /// PE kernel work (operates on the *previous* iteration's TE output in
+    /// the concurrent schedule).
+    pub pe: Option<PeWork>,
+    /// DMA transfers (next iteration's inputs in, previous results out).
+    pub dma: Vec<DmaXfer>,
+}
+
+/// A named compute block: iterations + bookkeeping for reports.
+pub struct CompBlock {
+    pub name: &'static str,
+    pub iters: Vec<BlockIter>,
+    /// MACs a full iteration retires on the TEs (for utilization math).
+    pub te_macs_per_iter: u64,
+}
+
+/// FC layer + row-wise softmax on a 512×512 input (paper Fig 9 left,
+/// Fig 10 runtime point). Double buffer: GEMM(i) ∥ softmax(i-1) ∥ DMA.
+pub fn fc_softmax_block(num_tes: usize, alloc: &mut L1Alloc, iters: usize)
+                        -> CompBlock {
+    let d = 512;
+    let spec = GemmSpec::square(d);
+    // Two buffer sets (double buffering): A computes while B drains/fills.
+    let regions_a = GemmRegions::alloc(&spec, alloc);
+    let regions_b = GemmRegions::alloc(&spec, alloc);
+    let soft_out = alloc.alloc(d, d); // softmax output (DMA'd out)
+    let kernel = softmax();
+
+    let mk_iter = |cur: &GemmRegions, prev: &GemmRegions| BlockIter {
+        te_jobs: map_split(&spec, cur, num_tes, true),
+        pe: Some(PeWork {
+            kernel: kernel.clone(),
+            elems: d * d,
+            reads: vec![prev.z],
+            writes: vec![soft_out],
+        }),
+        dma: vec![
+            DmaXfer { region: prev.x, dir: DmaDir::In },   // next input
+            DmaXfer { region: soft_out, dir: DmaDir::Out }, // prev result
+        ],
+    };
+    let iters = (0..iters)
+        .map(|i| {
+            if i % 2 == 0 {
+                mk_iter(&regions_a, &regions_b)
+            } else {
+                mk_iter(&regions_b, &regions_a)
+            }
+        })
+        .collect();
+    CompBlock { name: "fc_softmax", iters, te_macs_per_iter: spec.macs() }
+}
+
+/// Depthwise-separable conv + LayerNorm + ReLU (paper Fig 9 middle):
+/// 3×3 depthwise over 32×16 frames with 512 channels on the PEs, pointwise
+/// 1×1 (= GEMM (32·16)×512×512 with accumulation along depth) on the TEs.
+pub fn dwsep_conv_block(num_tes: usize, alloc: &mut L1Alloc, iters: usize)
+                        -> CompBlock {
+    let (h, w, c) = (32usize, 16usize, 512usize);
+    let pixels = h * w; // 512 rows for the pointwise GEMM
+    let spec = GemmSpec { m: pixels, k: c, n: c, accumulate: true };
+    let regions_a = GemmRegions::alloc(&spec, alloc);
+    // Double-buffer activations only: the pointwise weights and the
+    // residual accumulator are shared between the two buffer sets
+    // (they are the same tensors), keeping the block inside 4 MiB.
+    let regions_b = GemmRegions {
+        x: alloc.alloc(spec.m, spec.k),
+        w: regions_a.w,
+        y: regions_a.y,
+        z: alloc.alloc(spec.m, spec.n),
+    };
+    // depthwise input frames (the DMA'd-in activations), with halo rows
+    let frames = alloc.alloc(pixels + 2 * w, c);
+    let kernel = depthwise();
+
+    let mk_iter = |cur: &GemmRegions, prev: &GemmRegions| BlockIter {
+        te_jobs: map_split(&spec, cur, num_tes, true),
+        pe: Some(PeWork {
+            kernel: kernel.clone(),
+            elems: pixels * c, // one output per pixel-channel
+            reads: vec![frames],
+            writes: vec![prev.x], // depthwise output feeds next pointwise X
+        }),
+        dma: vec![DmaXfer { region: frames, dir: DmaDir::In }],
+    };
+    let iters = (0..iters)
+        .map(|i| {
+            if i % 2 == 0 {
+                mk_iter(&regions_a, &regions_b)
+            } else {
+                mk_iter(&regions_b, &regions_a)
+            }
+        })
+        .collect();
+    CompBlock { name: "dwsep_conv", iters, te_macs_per_iter: spec.macs() }
+}
+
+/// Multi-head attention (paper Fig 9 right): H=4 heads over 128×512
+/// Q, K, V. TE GEMMs: projections (3×), per-head attention (QKᵀ, AV), and
+/// the output projection; PEs run the row softmax and the K-transposition,
+/// overlapped with the Q/V projections in the concurrent schedule.
+pub fn mha_block(num_tes: usize, alloc: &mut L1Alloc) -> CompBlock {
+    let (s, d, heads) = (128usize, 512usize, 4usize);
+    let dh = d / heads; // 128
+    let proj_spec = GemmSpec { m: s, k: d, n: d, accumulate: false };
+    let x = alloc.alloc(s, d);
+    let wq = alloc.alloc(d, d);
+    let wk = alloc.alloc(d, d);
+    let wv = alloc.alloc(d, d);
+    let wo = alloc.alloc(d, d);
+    let q = alloc.alloc(s, d);
+    let k = alloc.alloc(s, d);
+    // Kᵀ stored per-head side by side as (dh, s·heads): the flattened
+    // attention-score GEMM (m=s, k=dh, n=s·heads) then reads W rows 0..dh.
+    // This is a traffic-level flattening of the 4 per-head GEMMs — the
+    // simulator models addresses/contention; numerics run in PJRT.
+    let kt = alloc.alloc(dh, s * heads);
+    let v = alloc.alloc(s, d);
+    let att = alloc.alloc(s, s * heads); // per-head attention matrices
+    let ctx = alloc.alloc(s, d);
+    let out = alloc.alloc(s, d);
+
+    let proj = |w: MatRegion, z: MatRegion| GemmRegions { x, w, y: None, z };
+    let mut iters = Vec::new();
+
+    // Stage 0: K projection alone (its transpose gates the rest).
+    iters.push(BlockIter {
+        te_jobs: map_split(&proj_spec, &proj(wk, k), num_tes, true),
+        pe: None,
+        dma: vec![DmaXfer { region: x, dir: DmaDir::In }],
+    });
+    // Stage 1: Q and V projections on TEs ∥ K-transpose on PEs.
+    // Half the TEs compute Q stripes, half compute V stripes.
+    iters.push(BlockIter {
+        te_jobs: map_split(&proj_spec, &proj(wq, q), num_tes, true)
+            .into_iter()
+            .zip(map_split(&proj_spec, &proj(wv, v), num_tes, true))
+            .enumerate()
+            .map(|(i, (a, b))| if i % 2 == 0 { a } else { b })
+            .collect(),
+        pe: Some(PeWork {
+            kernel: transpose(),
+            elems: s * d,
+            reads: vec![k],
+            writes: vec![kt],
+        }),
+        dma: vec![],
+    });
+    // Stage 2: attention scores QKᵀ per head on TEs.
+    let score_spec = GemmSpec { m: s, k: dh, n: s * heads, accumulate: false };
+    iters.push(BlockIter {
+        te_jobs: map_split(
+            &score_spec,
+            &GemmRegions { x: q, w: kt, y: None, z: att },
+            num_tes,
+            true,
+        ),
+        pe: None,
+        dma: vec![],
+    });
+    // Stage 3: AV GEMM on TEs ∥ softmax rows on PEs (prev scores).
+    let av_spec = GemmSpec { m: s, k: s, n: d, accumulate: false };
+    iters.push(BlockIter {
+        te_jobs: map_split(
+            &av_spec,
+            &GemmRegions { x: att, w: v, y: None, z: ctx },
+            num_tes,
+            true,
+        ),
+        pe: Some(PeWork {
+            kernel: softmax(),
+            elems: s * s * heads,
+            reads: vec![att],
+            writes: vec![att],
+        }),
+        dma: vec![],
+    });
+    // Stage 4: output projection ∥ DMA out.
+    iters.push(BlockIter {
+        te_jobs: map_split(
+            &proj_spec,
+            &GemmRegions { x: ctx, w: wo, y: None, z: out },
+            num_tes,
+            true,
+        ),
+        pe: None,
+        dma: vec![DmaXfer { region: out, dir: DmaDir::Out }],
+    });
+
+    let total_macs: u64 =
+        proj_spec.macs() * 4 + score_spec.macs() + av_spec.macs();
+    CompBlock {
+        name: "mha",
+        te_macs_per_iter: total_macs / iters.len() as u64,
+        iters,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::ArchConfig;
+
+    #[test]
+    fn fc_block_fits_l1() {
+        let cfg = ArchConfig::tensorpool();
+        let mut alloc = L1Alloc::new(&cfg);
+        let b = fc_softmax_block(16, &mut alloc, 4);
+        assert_eq!(b.iters.len(), 4);
+        assert!(alloc.used_bytes() <= cfg.l1_bytes() as u64);
+        assert_eq!(b.te_macs_per_iter, 512 * 512 * 512);
+    }
+
+    #[test]
+    fn fc_block_alternates_buffers() {
+        let cfg = ArchConfig::tensorpool();
+        let mut alloc = L1Alloc::new(&cfg);
+        let b = fc_softmax_block(16, &mut alloc, 2);
+        let z0 = b.iters[0].te_jobs.iter().flatten().next().unwrap().z.base;
+        let z1 = b.iters[1].te_jobs.iter().flatten().next().unwrap().z.base;
+        assert_ne!(z0, z1, "double buffering must alternate regions");
+    }
+
+    #[test]
+    fn dwsep_block_te_and_pe_work() {
+        let cfg = ArchConfig::tensorpool();
+        let mut alloc = L1Alloc::new(&cfg);
+        let b = dwsep_conv_block(16, &mut alloc, 2);
+        for it in &b.iters {
+            assert!(it.te_jobs.iter().any(|j| j.is_some()));
+            let pe = it.pe.as_ref().unwrap();
+            assert_eq!(pe.kernel.name, "depthwise");
+            assert_eq!(pe.elems, 32 * 16 * 512);
+        }
+    }
+
+    #[test]
+    fn mha_block_has_five_stages() {
+        let cfg = ArchConfig::tensorpool();
+        let mut alloc = L1Alloc::new(&cfg);
+        let b = mha_block(16, &mut alloc);
+        assert_eq!(b.iters.len(), 5);
+        assert!(
+            alloc.used_bytes() <= cfg.l1_bytes() as u64,
+            "MHA fits in 4 MiB without L2 spills (paper Sec V-C)"
+        );
+        // stage 1 has PE transpose, stage 3 has PE softmax
+        assert_eq!(b.iters[1].pe.as_ref().unwrap().kernel.name, "transpose");
+        assert_eq!(b.iters[3].pe.as_ref().unwrap().kernel.name, "softmax");
+    }
+
+    #[test]
+    fn gemm_work_is_balanced_across_tes() {
+        let cfg = ArchConfig::tensorpool();
+        let mut alloc = L1Alloc::new(&cfg);
+        let b = fc_softmax_block(16, &mut alloc, 1);
+        let macs: Vec<u64> = b.iters[0]
+            .te_jobs
+            .iter()
+            .flatten()
+            .map(|j| j.total_macs())
+            .collect();
+        assert_eq!(macs.len(), 16);
+        assert!(macs.windows(2).all(|w| w[0] == w[1]), "balanced: {macs:?}");
+    }
+}

@@ -1,0 +1,221 @@
+//! GEMM workload descriptors and their mapping onto TensorPool's TEs
+//! (paper Sec V-A, Fig 6).
+//!
+//! Two parallelization modes:
+//! * **Split**: one large GEMM divided across the 16 TEs by output row
+//!   stripes — each TE computes Z rows for its stripes, reading its X rows
+//!   and the *entire* W (Fig 6 left).
+//! * **Independent**: each TE runs its own private GEMM (the multi-user
+//!   small-model case of Fig 7).
+//!
+//! The **interleaved-W access scheme** (Fig 6 right) rotates each TE's
+//! starting W column tile so that, at any instant, the 16 TEs stream
+//! *different* W columns — removing the bank and response-port hot-spots a
+//! lock-step schedule creates. The rotation offset is the value the PE
+//! writes into the TE's configuration registers in the real system.
+
+use crate::sim::{L1Alloc, MatRegion, TeJob};
+
+/// Shape of a GEMM: Z(M×N) = Y(M×N) + X(M×K) · W(K×N).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmSpec {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Whether Z accumulates an existing Y (adds the Y preload stream).
+    pub accumulate: bool,
+}
+
+impl GemmSpec {
+    pub fn square(n: usize) -> Self {
+        GemmSpec { m: n, k: n, n, accumulate: false }
+    }
+
+    pub fn macs(&self) -> u64 {
+        (self.m as u64) * (self.k as u64) * (self.n as u64)
+    }
+
+    /// FP16 working-set bytes (X + W + Z [+ Y]).
+    pub fn bytes(&self) -> u64 {
+        let base = 2 * (self.m * self.k + self.k * self.n + self.m * self.n);
+        let y = if self.accumulate { 2 * self.m * self.n } else { 0 };
+        (base + y) as u64
+    }
+
+    pub fn assert_tileable(&self) {
+        assert!(
+            self.m % 32 == 0 && self.k % 32 == 0 && self.n % 32 == 0,
+            "GEMM {}x{}x{} must tile by 32",
+            self.m,
+            self.k,
+            self.n
+        );
+    }
+}
+
+/// L1-resident operands of one GEMM.
+#[derive(Clone, Copy, Debug)]
+pub struct GemmRegions {
+    pub x: MatRegion,
+    pub w: MatRegion,
+    pub y: Option<MatRegion>,
+    pub z: MatRegion,
+}
+
+impl GemmRegions {
+    pub fn alloc(spec: &GemmSpec, alloc: &mut L1Alloc) -> Self {
+        spec.assert_tileable();
+        GemmRegions {
+            x: alloc.alloc(spec.m, spec.k),
+            w: alloc.alloc(spec.k, spec.n),
+            y: spec.accumulate.then(|| alloc.alloc(spec.m, spec.n)),
+            z: alloc.alloc(spec.m, spec.n),
+        }
+    }
+}
+
+/// Map a GEMM onto a single TE (Fig 5): all row stripes, natural col order.
+pub fn map_single(spec: &GemmSpec, regions: &GemmRegions) -> TeJob {
+    spec.assert_tileable();
+    TeJob {
+        x: regions.x,
+        w: regions.w,
+        y: regions.y,
+        z: regions.z,
+        row_tiles: (0..spec.m / 32).collect(),
+        col_order: (0..spec.n / 32).collect(),
+        k: spec.k,
+    }
+}
+
+/// Split one large GEMM across `num_tes` TEs by row stripes (Fig 6).
+///
+/// With `interleave`, TE i starts at column tile `i × ncols/num_tes` and
+/// wraps — the paper's contention-avoiding access scheme. Returns one job
+/// slot per TE (`None` if M has fewer stripes than TEs and TE i got none).
+pub fn map_split(spec: &GemmSpec, regions: &GemmRegions, num_tes: usize,
+                 interleave: bool) -> Vec<Option<TeJob>> {
+    spec.assert_tileable();
+    let stripes = spec.m / 32;
+    let ncols = spec.n / 32;
+    (0..num_tes)
+        .map(|i| {
+            let row_tiles: Vec<usize> =
+                (i..stripes).step_by(num_tes).collect();
+            if row_tiles.is_empty() {
+                return None;
+            }
+            let start = if interleave { i * ncols / num_tes } else { 0 };
+            let col_order: Vec<usize> =
+                (0..ncols).map(|c| (c + start) % ncols).collect();
+            Some(TeJob {
+                x: regions.x,
+                w: regions.w,
+                y: regions.y,
+                z: regions.z,
+                row_tiles,
+                col_order,
+                k: spec.k,
+            })
+        })
+        .collect()
+}
+
+/// One private GEMM per TE (the "multiple independent GEMMs" rows of
+/// Fig 7). Allocates disjoint regions per TE.
+pub fn map_independent(spec: &GemmSpec, num_tes: usize,
+                       alloc: &mut L1Alloc) -> Vec<Option<TeJob>> {
+    (0..num_tes)
+        .map(|_| {
+            let regions = GemmRegions::alloc(spec, alloc);
+            Some(map_single(spec, &regions))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::ArchConfig;
+
+    #[test]
+    fn split_covers_all_stripes_exactly_once() {
+        let spec = GemmSpec::square(512);
+        let cfg = ArchConfig::tensorpool();
+        let mut alloc = L1Alloc::new(&cfg);
+        let regions = GemmRegions::alloc(&spec, &mut alloc);
+        let jobs = map_split(&spec, &regions, 16, true);
+        let mut seen = vec![0u32; 16];
+        for j in jobs.iter().flatten() {
+            for &rt in &j.row_tiles {
+                seen[rt] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "each stripe exactly once");
+    }
+
+    #[test]
+    fn interleave_rotates_col_start() {
+        let spec = GemmSpec::square(512);
+        let cfg = ArchConfig::tensorpool();
+        let mut alloc = L1Alloc::new(&cfg);
+        let regions = GemmRegions::alloc(&spec, &mut alloc);
+        let jobs = map_split(&spec, &regions, 16, true);
+        let starts: Vec<usize> = jobs
+            .iter()
+            .flatten()
+            .map(|j| j.col_order[0])
+            .collect();
+        // 16 col tiles, 16 TEs -> all starts distinct
+        let mut s = starts.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 16, "distinct W start columns: {starts:?}");
+        // non-interleaved: everyone starts at 0
+        let jobs0 = map_split(&spec, &regions, 16, false);
+        assert!(jobs0.iter().flatten().all(|j| j.col_order[0] == 0));
+    }
+
+    #[test]
+    fn col_order_is_a_rotation_not_a_subset() {
+        let spec = GemmSpec::square(256);
+        let cfg = ArchConfig::tensorpool();
+        let mut alloc = L1Alloc::new(&cfg);
+        let regions = GemmRegions::alloc(&spec, &mut alloc);
+        for j in map_split(&spec, &regions, 16, true).iter().flatten() {
+            let mut cols = j.col_order.clone();
+            cols.sort_unstable();
+            assert_eq!(cols, (0..8).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn small_m_leaves_tes_idle() {
+        let spec = GemmSpec { m: 128, k: 512, n: 512, accumulate: false };
+        let cfg = ArchConfig::tensorpool();
+        let mut alloc = L1Alloc::new(&cfg);
+        let regions = GemmRegions::alloc(&spec, &mut alloc);
+        let jobs = map_split(&spec, &regions, 16, true);
+        assert_eq!(jobs.iter().filter(|j| j.is_some()).count(), 4);
+    }
+
+    #[test]
+    fn macs_preserved_by_split() {
+        let spec = GemmSpec::square(512);
+        let cfg = ArchConfig::tensorpool();
+        let mut alloc = L1Alloc::new(&cfg);
+        let regions = GemmRegions::alloc(&spec, &mut alloc);
+        let jobs = map_split(&spec, &regions, 16, true);
+        let total: u64 = jobs.iter().flatten().map(|j| j.total_macs()).sum();
+        assert_eq!(total, spec.macs());
+    }
+
+    #[test]
+    fn working_set_fits_l1_for_paper_sizes() {
+        // Sec II: TTI inputs + model parameters fit 4 MiB.
+        assert!(GemmSpec::square(512).bytes() <= 4 * 1024 * 1024);
+        let mut s = GemmSpec::square(512);
+        s.accumulate = true;
+        assert!(s.bytes() <= 4 * 1024 * 1024);
+    }
+}

@@ -1,0 +1,6 @@
+//! Workload descriptors and their mapping onto TensorPool engines.
+pub mod blocks;
+pub mod gemm;
+pub mod phy;
+pub mod streamed;
+pub use gemm::{GemmRegions, GemmSpec};

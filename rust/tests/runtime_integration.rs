@@ -1,0 +1,240 @@
+//! Integration tests over the PJRT runtime + real AOT artifacts.
+//!
+//! Requires `make artifacts` (the `make test` target guarantees it).
+//! These tests validate the full Layer-1/2/3 composition: Pallas kernels
+//! lowered by JAX, parsed and compiled by the rust PJRT client, executed
+//! with rust-generated inputs, checked against rust-side references.
+
+use tensorpool::runtime::{default_artifacts_dir, Runtime};
+
+fn runtime() -> Runtime {
+    Runtime::load(default_artifacts_dir()).expect("run `make artifacts` first")
+}
+
+struct Rng(u64);
+
+impl Rng {
+    fn f(&mut self) -> f32 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        (self.0 >> 40) as f32 / (1u64 << 24) as f32 - 0.5
+    }
+
+    fn vec(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f() * scale).collect()
+    }
+}
+
+/// fp16 rounding helper (RedMulE ingests fp16 operands).
+fn f16_round(x: f32) -> f32 {
+    let bits = x.to_bits();
+    f32::from_bits((bits + 0x0000_1000) & 0xFFFF_E000)
+}
+
+#[test]
+fn manifest_covers_all_expected_artifacts() {
+    let rt = runtime();
+    for name in [
+        "gemm_128", "gemm_256", "gemm_512", "fc_softmax", "dwsep_conv",
+        "mha", "cfft", "ls_che", "mimo_mmse", "neural_receiver",
+    ] {
+        let spec = rt.spec(name).unwrap_or_else(|_| panic!("missing {name}"));
+        assert!(!spec.args.is_empty());
+        assert!(!spec.outputs.is_empty());
+    }
+}
+
+#[test]
+fn gemm_matches_rust_reference() {
+    let mut rt = runtime();
+    let n = 128usize;
+    let mut rng = Rng(42);
+    let x = rng.vec(n * n, 0.5);
+    let w = rng.vec(n * n, 0.5);
+    let y = rng.vec(n * n, 0.5);
+    let out = rt.execute_f32("gemm_128", &[&x, &w, &y]).unwrap();
+    let z = &out[0];
+    let mut max_err = 0f32;
+    for i in (0..n).step_by(7) {
+        for j in (0..n).step_by(11) {
+            let mut acc = y[i * n + j] as f64;
+            for k in 0..n {
+                acc += (f16_round(x[i * n + k]) as f64)
+                    * (f16_round(w[k * n + j]) as f64);
+            }
+            max_err = max_err.max((z[i * n + j] - acc as f32).abs());
+        }
+    }
+    assert!(max_err < 5e-2, "gemm error {max_err}");
+}
+
+#[test]
+fn fc_softmax_rows_are_distributions() {
+    let mut rt = runtime();
+    let d = 512usize;
+    let mut rng = Rng(7);
+    let x = rng.vec(d * d, 0.1);
+    let w = rng.vec(d * d, 0.1);
+    let b = rng.vec(d * d, 0.1);
+    let out = rt.execute_f32("fc_softmax", &[&x, &w, &b]).unwrap();
+    for row in out[0].chunks(d) {
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-3, "row sum {s}");
+        assert!(row.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+}
+
+#[test]
+fn dwsep_conv_output_nonnegative_and_finite() {
+    let mut rt = runtime();
+    let spec = rt.spec("dwsep_conv").unwrap().clone();
+    let mut rng = Rng(11);
+    let ins: Vec<Vec<f32>> = spec
+        .args
+        .iter()
+        .enumerate()
+        .map(|(i, a)| {
+            if i == 3 {
+                vec![1.0; a.elements()] // gamma
+            } else if i == 4 {
+                vec![0.0; a.elements()] // beta
+            } else {
+                rng.vec(a.elements(), 0.2)
+            }
+        })
+        .collect();
+    let refs: Vec<&[f32]> = ins.iter().map(|v| v.as_slice()).collect();
+    let out = rt.execute_f32("dwsep_conv", &refs).unwrap();
+    assert!(out[0].iter().all(|&v| v.is_finite() && v >= 0.0),
+            "ReLU output must be finite and non-negative");
+    // a ReLU'd layernorm output must not be all-zero
+    assert!(out[0].iter().any(|&v| v > 0.0));
+}
+
+#[test]
+fn mha_is_permutation_sensitive_but_finite() {
+    let mut rt = runtime();
+    let spec = rt.spec("mha").unwrap().clone();
+    let mut rng = Rng(13);
+    let ins: Vec<Vec<f32>> = spec
+        .args
+        .iter()
+        .map(|a| rng.vec(a.elements(), 0.05))
+        .collect();
+    let refs: Vec<&[f32]> = ins.iter().map(|v| v.as_slice()).collect();
+    let out = rt.execute_f32("mha", &refs).unwrap();
+    assert!(out[0].iter().all(|v| v.is_finite()));
+    let l2: f64 = out[0].iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
+    assert!(l2 > 1e-3, "attention output must be non-trivial");
+}
+
+#[test]
+fn cfft_linearity_and_impulse() {
+    let mut rt = runtime();
+    let (b, n) = (8usize, 4096usize);
+    // impulse at position 0 → flat spectrum of ones
+    let mut re = vec![0f32; b * n];
+    let im = vec![0f32; b * n];
+    for s in 0..b {
+        re[s * n] = 1.0;
+    }
+    let out = rt.execute_f32("cfft", &[&re, &im]).unwrap();
+    assert!(out[0].iter().all(|&v| (v - 1.0).abs() < 1e-4),
+            "impulse FFT must be all-ones (re)");
+    assert!(out[1].iter().all(|&v| v.abs() < 1e-4),
+            "impulse FFT must be zero (im)");
+}
+
+#[test]
+fn mimo_mmse_solves_the_normal_equations() {
+    let mut rt = runtime();
+    let (rx, tx, bsz) = (8usize, 8usize, 32usize);
+    let mut rng = Rng(17);
+    // well-conditioned H = I + small noise
+    let mut h_re = vec![0f32; rx * tx];
+    let mut h_im = vec![0f32; rx * tx];
+    for r in 0..rx {
+        for c in 0..tx {
+            h_re[r * tx + c] = if r == c { 1.0 } else { 0.1 * rng.f() };
+            h_im[r * tx + c] = 0.1 * rng.f();
+        }
+    }
+    let y_re = rng.vec(rx * bsz, 1.0);
+    let y_im = rng.vec(rx * bsz, 1.0);
+    let out = rt
+        .execute_f32("mimo_mmse", &[&h_re, &h_im, &y_re, &y_im])
+        .unwrap();
+    // residual check: (H^H H + s I) x ≈ H^H y  (complex, done in f64)
+    let sigma2 = 0.1f64;
+    let c = |re: &Vec<f32>, im: &Vec<f32>, i: usize| {
+        (re[i] as f64, im[i] as f64)
+    };
+    let xo_re: Vec<f32> = out[0].clone();
+    let xo_im: Vec<f32> = out[1].clone();
+    let mut max_res = 0f64;
+    for s in 0..bsz {
+        for i in 0..tx {
+            // lhs = sum_j G[i][j] x[j][s],  G = H^H H + sigma2 I
+            let (mut lr, mut li) = (0f64, 0f64);
+            for j in 0..tx {
+                let (mut gr, mut gi) = (0f64, 0f64);
+                for r in 0..rx {
+                    let (ar, ai) = c(&h_re, &h_im, r * tx + i); // H[r][i]
+                    let (br, bi) = c(&h_re, &h_im, r * tx + j); // H[r][j]
+                    // conj(a) * b
+                    gr += ar * br + ai * bi;
+                    gi += ar * bi - ai * br;
+                }
+                if i == j {
+                    gr += sigma2;
+                }
+                let xr = xo_re[j * bsz + s] as f64;
+                let xi = xo_im[j * bsz + s] as f64;
+                lr += gr * xr - gi * xi;
+                li += gr * xi + gi * xr;
+            }
+            // rhs = sum_r conj(H[r][i]) y[r][s]
+            let (mut rr, mut ri) = (0f64, 0f64);
+            for r in 0..rx {
+                let (ar, ai) = c(&h_re, &h_im, r * tx + i);
+                let yr = y_re[r * bsz + s] as f64;
+                let yi = y_im[r * bsz + s] as f64;
+                rr += ar * yr + ai * yi;
+                ri += ar * yi - ai * yr;
+            }
+            max_res = max_res.max((lr - rr).abs()).max((li - ri).abs());
+        }
+    }
+    assert!(max_res < 1e-2, "normal-equation residual {max_res}");
+}
+
+#[test]
+fn input_validation_rejects_bad_shapes() {
+    let mut rt = runtime();
+    let short = vec![0f32; 10];
+    let err = rt.execute_f32("gemm_128", &[&short, &short, &short]);
+    assert!(err.is_err(), "wrong-sized inputs must be rejected");
+    let err2 = rt.execute_f32("gemm_128", &[&short]);
+    assert!(err2.is_err(), "wrong arity must be rejected");
+    assert!(rt.execute_f32("no_such_artifact", &[]).is_err());
+}
+
+#[test]
+fn neural_receiver_end_to_end_shape() {
+    let mut rt = runtime();
+    let spec = rt.spec("neural_receiver").unwrap().clone();
+    let mut rng = Rng(23);
+    let ins: Vec<Vec<f32>> = spec
+        .args
+        .iter()
+        .map(|a| rng.vec(a.elements(), 0.1))
+        .collect();
+    let refs: Vec<&[f32]> = ins.iter().map(|v| v.as_slice()).collect();
+    let out = rt.execute_f32("neural_receiver", &refs).unwrap();
+    assert_eq!(out[0].len(), 32 * 64 * 4);
+    for re in out[0].chunks(4) {
+        let s: f32 = re.iter().sum();
+        assert!((s - 1.0).abs() < 1e-3, "per-RE softmax sum {s}");
+    }
+}
