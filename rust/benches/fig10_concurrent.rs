@@ -3,6 +3,9 @@
 //!
 //! Paper anchors: concurrent runtime -16% / -25% / -1.3%; TE utilization
 //! under contention 67% / 37% / 64%.
+//!
+//! `fig10_rows` runs its six (block × schedule) points concurrently on the
+//! sweep engine (`tensorpool::sweep`).
 
 use std::time::Instant;
 use tensorpool::figures::block_figs::{fig10_rows, fig10_table};

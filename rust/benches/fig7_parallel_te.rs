@@ -4,6 +4,10 @@
 //! Paper anchors: up to 14.5x speedup vs a single RedMulE; up to 89%
 //! parallel FMA utilization; interleaving boosts utilization on large
 //! matrices.
+//!
+//! `fig7_suite` runs its four configurations concurrently on the sweep
+//! engine (`tensorpool::sweep`), so the suite wall-clock is the slowest
+//! single point.
 
 use std::time::Instant;
 use tensorpool::figures::gemm_figs::{fig7_suite, fig7_table};

@@ -1,42 +1,142 @@
-//! Bench: simulator hot-path throughput (§Perf deliverable, DESIGN.md §8).
+//! Bench: simulator hot-path throughput (§Perf deliverable, DESIGN.md §8),
+//! run through the sweep engine.
 //!
 //! Measures simulated-cycles-per-second for the three traffic shapes that
-//! dominate the figure harnesses. Target: >= 1M simulated TE-cycles/s so
-//! the full Fig 7 sweep runs in seconds.
+//! dominate the figure harnesses (target: >= 1M simulated TE-cycles/s so
+//! the full Fig 7 sweep runs in seconds), then fans the same shapes out on
+//! the parallel sweep runner to report the sweep-engine speedup.
+//!
+//! Emits the repo's perf-trajectory JSON (`BENCH_sim_hotpath.json` schema)
+//! on stdout; set `TENSORPOOL_BENCH_OUT=<path>` to also write the file.
+//! The bench process runs with cwd = the package root (`rust/`), so the
+//! checked-in workspace-root baseline is refreshed with:
+//! `TENSORPOOL_BENCH_OUT=../BENCH_sim_hotpath.json cargo bench --bench sim_hotpath`
 
 use std::time::Instant;
-use tensorpool::sim::{ArchConfig, L1Alloc, Sim};
-use tensorpool::workload::gemm::{map_single, map_split, GemmRegions, GemmSpec};
 
-fn run(label: &str, tes: usize, n: usize) {
-    let cfg = ArchConfig::tensorpool();
-    let spec = GemmSpec::square(n);
-    let mut alloc = L1Alloc::new(&cfg);
-    let regions = GemmRegions::alloc(&spec, &mut alloc);
-    let mut sim = Sim::new(&cfg);
-    if tes == 1 {
-        let mut jobs: Vec<_> = (0..cfg.num_tes()).map(|_| None).collect();
-        jobs[0] = Some(map_single(&spec, &regions));
-        sim.assign_gemm(jobs);
-    } else {
-        sim.assign_gemm(map_split(&spec, &regions, cfg.num_tes(), true));
-    }
-    let t0 = Instant::now();
-    let r = sim.run(10_000_000_000);
-    let dt = t0.elapsed().as_secs_f64();
-    println!(
-        "{label:28} {:>9} sim-cycles in {:>8.3}s = {:>10.0} cyc/s  \
-         ({:>6.1} Msim-MACs/s)",
-        r.cycles,
-        dt,
-        r.cycles as f64 / dt,
-        r.total_macs as f64 / dt / 1e6,
-    );
+use serde::Serialize;
+use tensorpool::sweep::{
+    run_scenario, ArchKnobs, Scenario, ScheduleMode, SweepRunner,
+};
+use tensorpool::workload::gemm::GemmSpec;
+
+/// The `BENCH_sim_hotpath.json` schema (see the checked-in baseline at the
+/// workspace root).
+#[derive(Serialize)]
+struct BenchReport {
+    bench: &'static str,
+    unit: &'static str,
+    status: &'static str,
+    shapes: Vec<ShapeRow>,
+    sweep: SweepTiming,
+}
+
+#[derive(Serialize)]
+struct ShapeRow {
+    shape: String,
+    sim_cycles: u64,
+    sim_macs: u64,
+    wall_s: f64,
+    cycles_per_s: f64,
+    msim_macs_per_s: f64,
+}
+
+#[derive(Serialize)]
+struct SweepTiming {
+    serial_wall_s: f64,
+    parallel_wall_s: f64,
+    threads: usize,
+    speedup: f64,
+}
+
+fn shapes() -> Vec<Scenario> {
+    let knobs = ArchKnobs::default();
+    vec![
+        Scenario::gemm(
+            "single_te_256",
+            GemmSpec::square(256),
+            ScheduleMode::SingleTe,
+            knobs.clone(),
+        ),
+        Scenario::gemm(
+            "single_te_512",
+            GemmSpec::square(512),
+            ScheduleMode::SingleTe,
+            knobs.clone(),
+        ),
+        Scenario::gemm(
+            "split_interleaved_512",
+            GemmSpec::square(512),
+            ScheduleMode::SplitInterleaved,
+            knobs,
+        ),
+    ]
 }
 
 fn main() {
-    println!("simulator hot-path throughput (release):");
-    run("single TE, 256^3", 1, 256);
-    run("single TE, 512^3", 1, 512);
-    run("16 TEs, 512^3 interleaved", 16, 512);
+    println!("simulator hot-path throughput (release), per traffic shape:");
+    let scenarios = shapes();
+
+    // Per-shape serial timing: cycles/s is a single-thread hot-path metric.
+    let mut rows = Vec::new();
+    let serial_t0 = Instant::now();
+    for s in &scenarios {
+        let t0 = Instant::now();
+        let r = run_scenario(s);
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{:28} {:>9} sim-cycles in {:>8.3}s = {:>10.0} cyc/s  \
+             ({:>6.1} Msim-MACs/s)",
+            s.name,
+            r.cycles,
+            dt,
+            r.cycles as f64 / dt,
+            r.total_macs as f64 / dt / 1e6,
+        );
+        rows.push((s.name.clone(), r, dt));
+    }
+    let serial_wall = serial_t0.elapsed().as_secs_f64();
+
+    // Same shapes through the parallel runner: the sweep-engine view.
+    let runner = SweepRunner::new();
+    let t0 = Instant::now();
+    let _ = runner.run_parallel(&scenarios);
+    let parallel_wall = t0.elapsed().as_secs_f64();
+    println!(
+        "sweep engine: serial {serial_wall:.3}s vs parallel \
+         {parallel_wall:.3}s on {} threads = {:.2}x",
+        rayon::current_num_threads(),
+        serial_wall / parallel_wall.max(1e-12),
+    );
+
+    // ---- perf-trajectory JSON (BENCH_sim_hotpath.json schema) ------------
+    let report = BenchReport {
+        bench: "sim_hotpath",
+        unit: "simulated cycles per wall-clock second, per traffic shape",
+        status: "measured",
+        shapes: rows
+            .iter()
+            .map(|(name, r, dt)| ShapeRow {
+                shape: name.clone(),
+                sim_cycles: r.cycles,
+                sim_macs: r.total_macs,
+                wall_s: *dt,
+                cycles_per_s: r.cycles as f64 / dt,
+                msim_macs_per_s: r.total_macs as f64 / dt / 1e6,
+            })
+            .collect(),
+        sweep: SweepTiming {
+            serial_wall_s: serial_wall,
+            parallel_wall_s: parallel_wall,
+            threads: rayon::current_num_threads(),
+            speedup: serial_wall / parallel_wall.max(1e-12),
+        },
+    };
+    let json =
+        serde_json::to_string_pretty(&report).expect("report serializes");
+    println!("{json}");
+    if let Some(path) = std::env::var_os("TENSORPOOL_BENCH_OUT") {
+        std::fs::write(&path, &json).expect("write bench JSON");
+        eprintln!("[bench] wrote {}", path.to_string_lossy());
+    }
 }

@@ -28,13 +28,6 @@ pub struct ScheduleResult {
     pub raw: RunResult,
 }
 
-impl ScheduleResult {
-    /// Runtime reduction of `self` (concurrent) vs a sequential baseline.
-    pub fn runtime_reduction_vs(&self, seq: &ScheduleResult) -> f64 {
-        1.0 - self.cycles as f64 / seq.cycles as f64
-    }
-}
-
 fn finalize(name: &str, sim: &Sim, te_active_engines: usize,
             pe_busy: u64, dma_busy: u64) -> ScheduleResult {
     let raw = sim.result();

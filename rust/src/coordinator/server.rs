@@ -131,12 +131,18 @@ impl Server {
         let mut cycles = 0u64;
         let mut te_util_acc = 0.0;
         let mut te_runs = 0usize;
-        let mut ai_kinds: Vec<Pipeline> = admitted
-            .iter()
-            .map(|r| r.pipeline)
-            .filter(|p| *p != Pipeline::Classical)
-            .collect();
-        ai_kinds.dedup();
+        // Batch each AI pipeline kind into ONE pass over the engines, in
+        // first-seen order. (`Vec::dedup` only removes *consecutive*
+        // duplicates, so an interleaved queue like [NR, CHE, NR] used to
+        // run the NeuralReceiver blocks twice and blow the TTI budget.)
+        let mut ai_kinds: Vec<Pipeline> = Vec::new();
+        for r in &admitted {
+            if r.pipeline != Pipeline::Classical
+                && !ai_kinds.contains(&r.pipeline)
+            {
+                ai_kinds.push(r.pipeline);
+            }
+        }
         for kind in ai_kinds {
             let mut alloc = L1Alloc::new(&self.cfg);
             let n = self.cfg.num_tes();
@@ -249,6 +255,33 @@ mod tests {
         });
         let rep = s.schedule_tti();
         assert_eq!(rep.served, vec![9]);
+    }
+
+    // (the empty-queue regression lives in tests/edge_cases.rs)
+
+    #[test]
+    fn interleaved_ai_kinds_batch_once() {
+        // Regression for the consecutive-only dedup: [NR, CHE, NR] must
+        // charge the NeuralReceiver block schedule once, i.e. cost the same
+        // as [NR, NR, CHE].
+        let mk = |pipelines: &[Pipeline]| {
+            let mut s = server();
+            for (u, p) in pipelines.iter().enumerate() {
+                s.submit(TtiRequest {
+                    user_id: u as u32,
+                    pipeline: *p,
+                    res: 1024,
+                });
+            }
+            s.schedule_tti().cycles
+        };
+        use Pipeline::*;
+        let interleaved = mk(&[NeuralReceiver, NeuralChe, NeuralReceiver]);
+        let grouped = mk(&[NeuralReceiver, NeuralReceiver, NeuralChe]);
+        assert_eq!(
+            interleaved, grouped,
+            "same admitted set must cost the same regardless of order"
+        );
     }
 
     #[test]

@@ -1,52 +1,74 @@
 //! Fig 10 harness: sequential vs concurrent execution of the Fig 9
 //! AI-Native PHY compute blocks (TEs ∥ PEs ∥ DMA).
+//!
+//! Runs on the [`crate::sweep`] engine: the six (block × schedule) points
+//! are independent scenarios fanned out across the rayon pool; each pair is
+//! then folded into a [`Fig10Row`]. Per-point numbers are byte-identical to
+//! the old serial loop.
 
-use crate::coordinator::schedule::{run_concurrent, run_sequential, ScheduleResult};
 use crate::report::{int, pct, Table};
-use crate::sim::{ArchConfig, L1Alloc};
-use crate::workload::blocks::{dwsep_conv_block, fc_softmax_block, mha_block, CompBlock};
+use crate::sim::ArchConfig;
+use crate::sweep::{
+    ArchKnobs, BlockKind, Scenario, ScenarioResult, ScheduleMode, SweepRunner,
+};
 
 /// Results for one block, both schedules.
 #[derive(Clone, Debug)]
 pub struct Fig10Row {
     pub block: &'static str,
-    pub seq: ScheduleResult,
-    pub conc: ScheduleResult,
+    pub seq: ScenarioResult,
+    pub conc: ScenarioResult,
 }
 
 impl Fig10Row {
     pub fn runtime_reduction(&self) -> f64 {
-        self.conc.runtime_reduction_vs(&self.seq)
+        1.0 - self.conc.cycles as f64 / self.seq.cycles as f64
     }
 }
 
-fn mk_block(name: &str, cfg: &ArchConfig, iters: usize) -> CompBlock {
-    let mut alloc = L1Alloc::new(cfg);
-    match name {
-        "fc_softmax" => fc_softmax_block(cfg.num_tes(), &mut alloc, iters),
-        "dwsep_conv" => dwsep_conv_block(cfg.num_tes(), &mut alloc, iters),
-        "mha" => mha_block(cfg.num_tes(), &mut alloc),
-        other => panic!("unknown block {other}"),
-    }
-}
+const BLOCKS: [(BlockKind, &str); 3] = [
+    (BlockKind::FcSoftmax, "FC + softmax"),
+    (BlockKind::DwsepConv, "dw-sep conv + LN + ReLU"),
+    (BlockKind::Mha, "multi-head attention"),
+];
 
-/// Run the full Fig 10 suite.
+/// Run the full Fig 10 suite: three blocks × two schedules, in parallel.
+///
+/// `cfg` must be expressible as sweep knobs over the paper's TensorPool
+/// base (scenarios carry [`ArchKnobs`], not a full config); a config with
+/// a modified topology/frequency/bandwidth would otherwise be silently
+/// replaced by the base, so it is rejected loudly instead.
 pub fn fig10_rows(cfg: &ArchConfig, iters: usize) -> Vec<Fig10Row> {
-    ["fc_softmax", "dwsep_conv", "mha"]
+    let knobs = ArchKnobs::from_config(cfg);
+    assert_eq!(
+        &knobs.apply(),
+        cfg,
+        "fig10_rows sweeps only the K/J/burst/ROB/Z-FIFO knobs over the \
+         TensorPool base config"
+    );
+    let mut scenarios = Vec::with_capacity(BLOCKS.len() * 2);
+    for (kind, label) in BLOCKS {
+        for mode in [ScheduleMode::Sequential, ScheduleMode::Concurrent] {
+            scenarios.push(Scenario::block(
+                format!("{label} / {mode:?}"),
+                kind,
+                iters,
+                mode,
+                knobs.clone(),
+            ));
+        }
+    }
+    let mut results = SweepRunner::new().run_parallel(&scenarios).into_iter();
+    BLOCKS
         .into_iter()
-        .map(|name| {
-            let seq = run_sequential(cfg, &mk_block(name, cfg, iters));
-            let conc = run_concurrent(cfg, &mk_block(name, cfg, iters));
-            assert_eq!(seq.te_macs, conc.te_macs, "{name}: same TE work");
-            Fig10Row {
-                block: match name {
-                    "fc_softmax" => "FC + softmax",
-                    "dwsep_conv" => "dw-sep conv + LN + ReLU",
-                    _ => "multi-head attention",
-                },
-                seq,
-                conc,
-            }
+        .map(|(_, label)| {
+            let seq = results.next().expect("sequential result");
+            let conc = results.next().expect("concurrent result");
+            assert_eq!(
+                seq.total_macs, conc.total_macs,
+                "{label}: same TE work"
+            );
+            Fig10Row { block: label, seq, conc }
         })
         .collect()
 }

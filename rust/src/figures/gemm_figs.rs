@@ -1,9 +1,17 @@
 //! Fig 5 (single-TE GEMM vs problem size and interconnect bandwidth) and
 //! Fig 7 (parallel GEMM on 16 TEs) harnesses.
+//!
+//! Both run on the [`crate::sweep`] engine: the sweep points are built as
+//! [`Scenario`]s and fanned out across the rayon pool, so regenerating a
+//! figure costs one wall-clock slowest-point instead of the sum — with
+//! per-point numbers byte-identical to the old serial loops (each point is
+//! an independent, deterministic `Sim` run).
 
 use crate::report::{f2, int, pct, Table};
-use crate::sim::{ArchConfig, L1Alloc, Sim};
-use crate::workload::gemm::{map_independent, map_single, map_split, GemmRegions, GemmSpec};
+use crate::sweep::{
+    independent_gemm_side, ArchKnobs, Scenario, ScheduleMode, SweepRunner,
+};
+use crate::workload::gemm::GemmSpec;
 
 /// One Fig 5 sweep point.
 #[derive(Clone, Copy, Debug)]
@@ -15,30 +23,38 @@ pub struct Fig5Point {
     pub utilization: f64,
 }
 
-/// Run the single-TE sweep (paper Fig 5): problem sizes × (K, J) configs.
+/// Run the single-TE sweep (paper Fig 5): problem sizes × (K, J) configs,
+/// in parallel on the sweep runner.
 pub fn fig5_sweep(sizes: &[usize], kjs: &[(usize, usize)]) -> Vec<Fig5Point> {
-    let mut out = Vec::new();
-    for &n in sizes {
-        for &(k, j) in kjs {
-            let cfg = ArchConfig::tensorpool().with_kj(k, j);
-            let spec = GemmSpec::square(n);
-            let mut alloc = L1Alloc::new(&cfg);
-            let regions = GemmRegions::alloc(&spec, &mut alloc);
-            let mut sim = Sim::new(&cfg);
-            let mut jobs: Vec<_> = (0..cfg.num_tes()).map(|_| None).collect();
-            jobs[0] = Some(map_single(&spec, &regions));
-            sim.assign_gemm(jobs);
-            let r = sim.run(1_000_000_000);
-            out.push(Fig5Point {
-                n,
-                k,
-                j,
-                cycles: r.cycles,
-                utilization: r.fma_utilization(cfg.te.macs_per_cycle()),
-            });
-        }
-    }
-    out
+    // One point list drives both scenario construction and result
+    // labelling, so they cannot drift out of lockstep.
+    let points: Vec<(usize, usize, usize)> = sizes
+        .iter()
+        .flat_map(|&n| kjs.iter().map(move |&(k, j)| (n, k, j)))
+        .collect();
+    let scenarios: Vec<Scenario> = points
+        .iter()
+        .map(|&(n, k, j)| {
+            Scenario::gemm(
+                format!("fig5_n{n}_k{k}_j{j}"),
+                GemmSpec::square(n),
+                ScheduleMode::SingleTe,
+                ArchKnobs::default().with_kj(k, j),
+            )
+        })
+        .collect();
+    let results = SweepRunner::new().run_parallel(&scenarios);
+    points
+        .into_iter()
+        .zip(results)
+        .map(|((n, k, j), r)| Fig5Point {
+            n,
+            k,
+            j,
+            cycles: r.cycles,
+            utilization: r.fma_utilization,
+        })
+        .collect()
 }
 
 pub fn fig5_table(points: &[Fig5Point]) -> String {
@@ -67,73 +83,57 @@ pub struct Fig7Point {
 }
 
 /// Run the Fig 7 suite for one problem size: single TE (reference),
-/// 16 independent GEMMs, split ± interleaved-W.
+/// 16 independent GEMMs, split ± interleaved-W — four scenarios executed
+/// concurrently on the sweep runner.
 pub fn fig7_suite(n: usize) -> Vec<Fig7Point> {
-    let cfg = ArchConfig::tensorpool();
-    let mut out = Vec::new();
-
-    // Reference: one TE computing the whole n×n×n GEMM.
-    let single_cycles = {
-        let spec = GemmSpec::square(n);
-        let mut alloc = L1Alloc::new(&cfg);
-        let regions = GemmRegions::alloc(&spec, &mut alloc);
-        let mut sim = Sim::new(&cfg);
-        let mut jobs: Vec<_> = (0..cfg.num_tes()).map(|_| None).collect();
-        jobs[0] = Some(map_single(&spec, &regions));
-        sim.assign_gemm(jobs);
-        let r = sim.run(1_000_000_000);
-        out.push(Fig7Point {
-            label: "single TE".into(),
-            n,
+    let knobs = ArchKnobs::default();
+    // 16 independent smaller GEMMs (the paper runs 16 private GEMMs of the
+    // same size class; we give each TE a tile-rounded (n/4)³ private GEMM).
+    let small = independent_gemm_side(n);
+    let scenarios = vec![
+        Scenario::gemm(
+            "single TE",
+            GemmSpec::square(n),
+            ScheduleMode::SingleTe,
+            knobs.clone(),
+        ),
+        Scenario::gemm(
+            format!("16 independent {small}³"),
+            GemmSpec::square(small),
+            ScheduleMode::Independent,
+            knobs.clone(),
+        ),
+        Scenario::gemm(
+            "split, lock-step W",
+            GemmSpec::square(n),
+            ScheduleMode::SplitLockstep,
+            knobs.clone(),
+        ),
+        Scenario::gemm(
+            "split, interleaved W",
+            GemmSpec::square(n),
+            ScheduleMode::SplitInterleaved,
+            knobs,
+        ),
+    ];
+    let results = SweepRunner::new().run_parallel(&scenarios);
+    let single_cycles = results[0].cycles;
+    results
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| Fig7Point {
+            label: r.name.clone(),
+            n: if i == 1 { small } else { n },
             cycles: r.cycles,
-            utilization: r.fma_utilization(cfg.te.macs_per_cycle()),
-            macs_per_cycle: r.macs_per_cycle(),
-            speedup_vs_single: 1.0,
-        });
-        r.cycles
-    };
-
-    // 16 independent smaller GEMMs (n/16 of the work each → n × n/16 × n
-    // slices would change utilization; the paper runs 16 private GEMMs of
-    // the same size class). We give each TE an (n/4)³ private GEMM.
-    {
-        let small = (n / 4).max(64);
-        let spec = GemmSpec::square(small);
-        let mut alloc = L1Alloc::new(&cfg);
-        let mut sim = Sim::new(&cfg);
-        let jobs = map_independent(&spec, cfg.num_tes(), &mut alloc);
-        sim.assign_gemm(jobs);
-        let r = sim.run(1_000_000_000);
-        out.push(Fig7Point {
-            label: format!("16 independent {small}³"),
-            n: small,
-            cycles: r.cycles,
-            utilization: r.fma_utilization(cfg.te.macs_per_cycle()),
-            macs_per_cycle: r.macs_per_cycle(),
-            speedup_vs_single: 0.0, // not comparable
-        });
-    }
-
-    // Large GEMM split across 16 TEs, without and with interleaved W.
-    for (label, interleave) in
-        [("split, lock-step W", false), ("split, interleaved W", true)]
-    {
-        let spec = GemmSpec::square(n);
-        let mut alloc = L1Alloc::new(&cfg);
-        let regions = GemmRegions::alloc(&spec, &mut alloc);
-        let mut sim = Sim::new(&cfg);
-        sim.assign_gemm(map_split(&spec, &regions, cfg.num_tes(), interleave));
-        let r = sim.run(1_000_000_000);
-        out.push(Fig7Point {
-            label: label.into(),
-            n,
-            cycles: r.cycles,
-            utilization: r.fma_utilization(cfg.te.macs_per_cycle()),
-            macs_per_cycle: r.macs_per_cycle(),
-            speedup_vs_single: single_cycles as f64 / r.cycles as f64,
-        });
-    }
-    out
+            utilization: r.fma_utilization,
+            macs_per_cycle: r.macs_per_cycle,
+            speedup_vs_single: match i {
+                0 => 1.0,
+                1 => 0.0, // private GEMMs: not comparable to the reference
+                _ => single_cycles as f64 / r.cycles as f64,
+            },
+        })
+        .collect()
 }
 
 pub fn fig7_table(points: &[Fig7Point]) -> String {
@@ -163,30 +163,30 @@ pub fn fig7_table(points: &[Fig7Point]) -> String {
 }
 
 /// Ablation for DESIGN.md §7: burst support and the latency-tolerant
-/// streamer, on a single-TE GEMM.
+/// streamer, on a single-TE GEMM (four knob configs, swept in parallel).
 pub fn ablation_suite(n: usize) -> Vec<(String, u64, f64)> {
-    let mut out = Vec::new();
-    for (label, cfg) in [
-        ("full (burst + ROB)", ArchConfig::tensorpool()),
-        ("no burst grouping", ArchConfig::tensorpool().without_burst()),
-        ("in-order streamer", ArchConfig::tensorpool().without_rob()),
-        ("neither", ArchConfig::tensorpool().without_burst().without_rob()),
-    ] {
-        let spec = GemmSpec::square(n);
-        let mut alloc = L1Alloc::new(&cfg);
-        let regions = GemmRegions::alloc(&spec, &mut alloc);
-        let mut sim = Sim::new(&cfg);
-        let mut jobs: Vec<_> = (0..cfg.num_tes()).map(|_| None).collect();
-        jobs[0] = Some(map_single(&spec, &regions));
-        sim.assign_gemm(jobs);
-        let r = sim.run(1_000_000_000);
-        out.push((
-            label.to_string(),
-            r.cycles,
-            r.fma_utilization(cfg.te.macs_per_cycle()),
-        ));
-    }
-    out
+    let base = ArchKnobs::default();
+    let scenarios: Vec<Scenario> = [
+        ("full (burst + ROB)", base.clone()),
+        ("no burst grouping", base.clone().without_burst()),
+        ("in-order streamer", base.clone().without_rob()),
+        ("neither", base.without_burst().without_rob()),
+    ]
+    .into_iter()
+    .map(|(label, knobs)| {
+        Scenario::gemm(
+            label,
+            GemmSpec::square(n),
+            ScheduleMode::SingleTe,
+            knobs,
+        )
+    })
+    .collect();
+    SweepRunner::new()
+        .run_parallel(&scenarios)
+        .into_iter()
+        .map(|r| (r.name.clone(), r.cycles, r.fma_utilization))
+        .collect()
 }
 
 #[cfg(test)]
@@ -229,5 +229,18 @@ mod tests {
         assert!(util("full") > util("no burst"), "burst must help");
         assert!(util("full") > util("in-order"), "ROB must help");
         assert!(util("in-order") > util("neither") * 0.99, "combined worst");
+    }
+
+    #[test]
+    fn fig5_points_come_back_in_sweep_order() {
+        let sizes = [64usize, 128];
+        let kjs = [(1usize, 1usize), (4, 2)];
+        let pts = fig5_sweep(&sizes, &kjs);
+        let order: Vec<(usize, usize, usize)> =
+            pts.iter().map(|p| (p.n, p.k, p.j)).collect();
+        assert_eq!(
+            order,
+            vec![(64, 1, 1), (64, 4, 2), (128, 1, 1), (128, 4, 2)]
+        );
     }
 }

@@ -21,6 +21,8 @@
 //!   platform requirements.
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`); Python never runs on this path.
+//! * [`sweep`] — the parallel, cacheable scenario-sweep engine every figure
+//!   harness and bench runs on (`tensorpool sweep` on the CLI).
 //! * [`report`] — table/series printers matching the paper's figures.
 
 pub mod coordinator;
@@ -30,4 +32,5 @@ pub mod ppa;
 pub mod report;
 pub mod runtime;
 pub mod sim;
+pub mod sweep;
 pub mod workload;

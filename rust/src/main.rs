@@ -1,9 +1,9 @@
 //! `tensorpool` CLI — the Layer-3 coordinator entry point.
 //!
 //! Subcommands regenerate every table and figure of the paper, run the
-//! memory-balance analysis, execute AOT artifacts through PJRT, and drive
-//! ad-hoc simulations. Dependency-free argument parsing (the build is
-//! fully offline; see .cargo/config.toml).
+//! memory-balance analysis, execute AOT artifacts through PJRT, drive
+//! ad-hoc simulations, and run parallel scenario sweeps (`sweep`).
+//! Argument parsing is hand-rolled (no clap in the dependency set).
 
 use tensorpool::figures::{block_figs, gemm_figs, pe_figs, ppa_figs, tables};
 use tensorpool::report::Table;
@@ -26,6 +26,11 @@ COMMANDS:
   ablations burst / ROB / interleaving ablation study
   simulate --n <size> [--tes <1|16>] [--k <K>] [--j <J>] [--no-interleave]
             run one GEMM on the simulated Pool and report cycles/utilization
+  sweep   [--sizes N1,N2,..] [--out <path>] [--no-verify]
+            run a Fig 7-style scenario sweep in parallel on the sweep
+            engine and emit machine-readable JSON. By default also runs
+            the serial reference, verifies byte-identical per-scenario
+            results, and reports the wall-clock speedup.
   artifacts [--dir <path>]
             list the AOT artifacts and validate the manifest
   run --name <artifact> [--dir <path>]
@@ -48,6 +53,7 @@ fn main() {
         "stream" => stream(rest),
         "ablations" => ablations(),
         "simulate" => simulate(rest),
+        "sweep" => sweep(rest),
         "artifacts" => artifacts(rest),
         "run" => run_artifact(rest),
         "help" | "--help" | "-h" => {
@@ -175,6 +181,91 @@ fn simulate(rest: &[String]) -> i32 {
         r.runtime_ms(cfg.freq_ghz),
     );
     0
+}
+
+/// Run the default Fig 7-style scenario sweep on the parallel sweep engine
+/// and emit a machine-readable JSON report (the repo's perf-trajectory
+/// format — see BENCH_*.json).
+fn sweep(rest: &[String]) -> i32 {
+    use tensorpool::sweep::{fig7_style_scenarios, sweep_with_report};
+    let sizes: Vec<usize> = match flag(rest, "--sizes") {
+        None => vec![128, 256, 384, 512],
+        Some(s) => {
+            let mut sizes = Vec::new();
+            let l1 = tensorpool::sim::ArchConfig::tensorpool().l1_bytes() as u64;
+            for t in s.split(',') {
+                match t.trim().parse::<usize>() {
+                    Ok(n) if n % 32 != 0 => {
+                        eprintln!(
+                            "error: --sizes values must be multiples of 32 \
+                             (GEMMs tile by 32), got {n}"
+                        );
+                        return 2;
+                    }
+                    // The split scenarios keep X+W+Z resident in L1; reject
+                    // sizes whose working set cannot fit instead of
+                    // panicking with "L1 overflow" inside a rayon worker.
+                    Ok(n) if tensorpool::workload::gemm::GemmSpec::square(n)
+                        .bytes() > l1 =>
+                    {
+                        eprintln!(
+                            "error: --sizes {n} needs {} B of L1 (X+W+Z) but \
+                             the Pool has {l1} B; largest sweepable size is \
+                             832",
+                            tensorpool::workload::gemm::GemmSpec::square(n)
+                                .bytes(),
+                        );
+                        return 2;
+                    }
+                    Ok(n) => sizes.push(n),
+                    Err(_) => {
+                        eprintln!("error: bad --sizes value '{}'", t.trim());
+                        return 2;
+                    }
+                }
+            }
+            if sizes.is_empty() {
+                eprintln!("error: --sizes requires a comma-separated list");
+                return 2;
+            }
+            sizes
+        }
+    };
+    let verify = !has(rest, "--no-verify");
+    let scenarios = fig7_style_scenarios(&sizes);
+    eprintln!(
+        "sweep: {} scenarios ({} sizes x 4 modes), {} threads, verify={}",
+        scenarios.len(),
+        sizes.len(),
+        rayon::current_num_threads(),
+        verify,
+    );
+    let report = sweep_with_report(&scenarios, verify);
+    let json = serde_json::to_string_pretty(&report)
+        .expect("sweep report serializes");
+    println!("{json}");
+    if let Some(path) = flag(rest, "--out") {
+        if let Err(e) = std::fs::write(&path, &json) {
+            eprintln!("error writing {path}: {e}");
+            return 1;
+        }
+        eprintln!("sweep: report written to {path}");
+    }
+    if let (Some(s), Some(sp)) = (report.serial_wall_s, report.speedup) {
+        eprintln!(
+            "sweep: serial {s:.2}s, parallel {:.2}s -> {sp:.2}x speedup; \
+             per-scenario results byte-identical: {}",
+            report.parallel_wall_s,
+            report.verified_identical == Some(true),
+        );
+    }
+    match report.verified_identical {
+        Some(false) => {
+            eprintln!("sweep: FAIL — parallel results diverge from serial");
+            1
+        }
+        _ => 0,
+    }
 }
 
 fn stream(rest: &[String]) -> i32 {

@@ -9,11 +9,21 @@
 //! parser reassigns ids (see /opt/xla-example/README.md).
 
 pub mod json;
+mod xla;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
+
+/// True when a real PJRT backend is linked into this build. The offline
+/// stub (`runtime::xla`) supports manifest loading and artifact listing
+/// only; `execute_f32` fails with a descriptive error. Integration tests
+/// gate on this plus the on-disk artifacts (see
+/// `tests/runtime_integration.rs`).
+pub fn pjrt_available() -> bool {
+    xla::BACKEND_AVAILABLE
+}
 
 /// Shape+dtype of one artifact argument or output.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -150,7 +160,8 @@ impl Runtime {
     /// Input lengths are validated against the manifest before dispatch.
     pub fn execute_f32(&mut self, name: &str, inputs: &[&[f32]])
                        -> Result<Vec<Vec<f32>>> {
-        self.compile(name)?;
+        // Validate against the manifest BEFORE compiling so shape/arity
+        // errors surface even when no PJRT backend is linked.
         let spec = self.spec(name)?.clone();
         if inputs.len() != spec.args.len() {
             bail!(
@@ -176,6 +187,7 @@ impl Runtime {
                 .map_err(|e| anyhow!("reshape input {i}: {e:?}"))?;
             literals.push(lit);
         }
+        self.compile(name)?;
         let exe = self.execs.get(name).expect("compiled above");
         let result = exe
             .execute::<xla::Literal>(&literals)

@@ -37,7 +37,7 @@ impl TeGeometry {
 }
 
 /// Full cluster configuration.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ArchConfig {
     // ---- topology -------------------------------------------------------
     /// Tiles per SubGroup (paper: 4).

@@ -15,7 +15,10 @@ pub mod pool;
 pub mod stats;
 pub mod te;
 
-pub use addr::{AddrMap, L1Alloc, MatRegion, LINE_BYTES, LINE_ELEMS, LINE_WORDS};
+pub use addr::{
+    AddrMap, L1Alloc, L1AllocError, MatRegion, LINE_BYTES, LINE_ELEMS,
+    LINE_WORDS,
+};
 pub use config::{ArchConfig, TeGeometry};
 pub use dma::{Dma, DmaDir, DmaXfer};
 pub use noc::{Delivery, Noc};

@@ -39,9 +39,19 @@ impl Sim {
     }
 
     /// Assign one GEMM slice per TE. `jobs[i]` goes to TE i; `None` leaves
-    /// that TE idle.
-    pub fn assign_gemm(&mut self, jobs: Vec<Option<TeJob>>) {
-        assert_eq!(jobs.len(), self.tes.len(), "one job slot per TE");
+    /// that TE idle. An EMPTY vector (the zero-TE assignment
+    /// `map_split(.., 0, ..)` produces) is accepted and leaves every TE
+    /// idle, so a degenerate assignment yields an immediately-terminating
+    /// run; any other length mismatch is still a caller bug and panics
+    /// rather than silently idling TEs.
+    pub fn assign_gemm(&mut self, mut jobs: Vec<Option<TeJob>>) {
+        assert!(
+            jobs.is_empty() || jobs.len() == self.tes.len(),
+            "job slots ({}) must match TEs ({}) or be empty",
+            jobs.len(),
+            self.tes.len()
+        );
+        jobs.resize_with(self.tes.len(), || None);
         for (te, job) in self.tes.iter_mut().zip(jobs) {
             if let Some(j) = job {
                 te.assign(j);

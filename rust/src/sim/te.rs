@@ -148,7 +148,16 @@ impl TeEngine {
 
     pub fn assign(&mut self, job: TeJob) {
         assert!(job.k % KBLOCK_ELEMS == 0, "K must be a multiple of 32");
-        assert!(!job.row_tiles.is_empty() && !job.col_order.is_empty());
+        if job.num_out_tiles() == 0 || job.kblocks() == 0 {
+            // Degenerate job (zero-sized GEMM, e.g. `GemmSpec::square(0)`):
+            // nothing to stream or compute — complete immediately instead
+            // of panicking or spinning to `max_cycles`.
+            self.job = None;
+            self.z_pending.clear();
+            self.z_out = 0;
+            self.done = true;
+            return;
+        }
         let no_y = job.y.is_none();
         self.tile_idx = 0;
         self.kb = 0;

@@ -1,0 +1,51 @@
+//! Parallel, cacheable scenario-sweep engine.
+//!
+//! Every figure harness in this repo boils down to the same shape of work:
+//! build N independent `Sim` configurations, run each to completion, report
+//! a table. The seed ran them strictly serially; this module turns that
+//! into data (a [`Scenario`] = architecture knobs × workload × schedule
+//! mode) plus an executor ([`SweepRunner`]) that fans scenarios out across
+//! a rayon thread pool — the same many-scenario pressure TensorPool's 16
+//! TEs answer in silicon, applied to our own evaluation loop.
+//!
+//! Correctness contract: a scenario run is a *pure function* of the
+//! scenario's content. That gives us
+//! * parallel results byte-identical to serial execution (verified by the
+//!   `tensorpool sweep` CLI on every default run),
+//! * a sound content-keyed result cache (repeat configurations are
+//!   simulated once), and
+//! * freedom to re-order/re-balance work without changing any number.
+//!
+//! The figure harnesses (`figures::gemm_figs`, `figures::block_figs`) and
+//! the Fig 7/Fig 10 benches run on this engine.
+
+pub mod runner;
+pub mod scenario;
+
+pub use runner::{sweep_with_report, SweepReport, SweepRunner};
+pub use scenario::{
+    fig7_style_scenarios, independent_gemm_side, run_scenario, ArchKnobs,
+    BlockKind, Scenario, ScenarioResult, ScheduleMode, Workload,
+};
+
+// ---- Send/Sync audit -------------------------------------------------------
+// The sweep engine moves whole simulations across threads. Everything the
+// engines own is plain values (Vecs, VecDeques, POD structs — no Rc,
+// RefCell, raw pointers, or thread-local state), so `Send` must hold by
+// construction; these compile-time assertions pin that property so a future
+// refactor that sneaks shared-mutable state into an engine fails here, not
+// in a rayon bound error five layers up.
+const fn assert_send<T: Send>() {}
+
+const _: () = {
+    assert_send::<crate::sim::Sim>();
+    assert_send::<crate::sim::Noc>();
+    assert_send::<crate::sim::TeEngine>();
+    assert_send::<crate::sim::PeTraffic>();
+    assert_send::<crate::sim::Dma>();
+    assert_send::<crate::sim::L1Alloc>();
+    assert_send::<crate::sim::ArchConfig>();
+    assert_send::<Scenario>();
+    assert_send::<ScenarioResult>();
+    assert_send::<SweepRunner>();
+};

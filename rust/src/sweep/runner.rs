@@ -1,0 +1,227 @@
+//! The sweep engine: fan a scenario list out across a rayon thread pool,
+//! with a content-keyed result cache so repeated configurations are
+//! simulated once.
+//!
+//! Guarantees:
+//! * **Order-preserving** — results come back in input order regardless of
+//!   which thread finished first.
+//! * **Byte-identical to serial** — `run_parallel` and `run_serial` return
+//!   equal `Vec<ScenarioResult>` for the same input, because each scenario
+//!   run is a pure function of its content (asserted by tests and by the
+//!   CLI's `sweep` verification mode).
+//! * **Cached** — two scenarios with equal [`Scenario::cache_key`]s are
+//!   simulated once per runner; the second is served from the cache (with
+//!   its own display name re-applied).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use rayon::prelude::*;
+use serde::{Deserialize, Serialize};
+
+use super::scenario::{run_scenario, Scenario, ScenarioResult};
+
+/// A reusable sweep executor holding the result cache.
+#[derive(Default)]
+pub struct SweepRunner {
+    cache: Mutex<HashMap<String, ScenarioResult>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl SweepRunner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cache hits / misses since construction.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Number of distinct configurations currently cached.
+    pub fn cache_len(&self) -> usize {
+        self.cache.lock().expect("cache poisoned").len()
+    }
+
+    fn run_one(&self, s: &Scenario) -> ScenarioResult {
+        let key = s.cache_key();
+        if let Some(hit) = self.cache.lock().expect("cache poisoned").get(&key)
+        {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            let mut r = hit.clone();
+            r.name = s.name.clone();
+            return r;
+        }
+        // Simulate OUTSIDE the lock: concurrent misses on the same key race
+        // benignly (both compute the identical pure result; last insert
+        // wins) and long runs never serialize the other workers.
+        let r = run_scenario(s);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.cache
+            .lock()
+            .expect("cache poisoned")
+            .insert(key, r.clone());
+        r
+    }
+
+    /// Run every scenario on the calling thread, in order.
+    pub fn run_serial(&self, scenarios: &[Scenario]) -> Vec<ScenarioResult> {
+        scenarios.iter().map(|s| self.run_one(s)).collect()
+    }
+
+    /// Fan the scenarios out across the rayon thread pool. Results are
+    /// returned in input order.
+    pub fn run_parallel(&self, scenarios: &[Scenario]) -> Vec<ScenarioResult> {
+        scenarios.par_iter().map(|s| self.run_one(s)).collect()
+    }
+}
+
+/// Wall-clock comparison of serial vs parallel execution of one sweep,
+/// plus the per-scenario results — the payload `tensorpool sweep` emits.
+#[derive(Clone, Debug, Serialize, Deserialize)]
+pub struct SweepReport {
+    /// Per-scenario results (parallel run; verified equal to serial when
+    /// `verified` is true).
+    pub results: Vec<ScenarioResult>,
+    pub num_scenarios: usize,
+    /// rayon worker threads used by the parallel run.
+    pub threads: usize,
+    pub serial_wall_s: Option<f64>,
+    pub parallel_wall_s: f64,
+    /// serial / parallel wall-clock ratio (None without a serial run).
+    pub speedup: Option<f64>,
+    /// True when a serial reference run was performed AND produced
+    /// byte-identical per-scenario results.
+    pub verified_identical: Option<bool>,
+    /// Distinct configurations simulated / cache hits in the PARALLEL run
+    /// (the serial reference uses its own fresh runner, whose identical
+    /// stats are not double-counted here).
+    pub distinct_configs: usize,
+    pub cache_hits: u64,
+}
+
+/// Execute `scenarios` in parallel and, when `verify` is set, also serially
+/// (each with a fresh cache, so the comparison times real simulation work)
+/// — returning the combined report.
+pub fn sweep_with_report(scenarios: &[Scenario], verify: bool) -> SweepReport {
+    let (serial_wall_s, serial_results) = if verify {
+        let runner = SweepRunner::new();
+        let t0 = Instant::now();
+        let r = runner.run_serial(scenarios);
+        (Some(t0.elapsed().as_secs_f64()), Some(r))
+    } else {
+        (None, None)
+    };
+
+    let runner = SweepRunner::new();
+    let t0 = Instant::now();
+    let results = runner.run_parallel(scenarios);
+    let parallel_wall_s = t0.elapsed().as_secs_f64();
+    let (hits, _) = runner.cache_stats();
+
+    let verified_identical =
+        serial_results.as_ref().map(|s| s == &results);
+    SweepReport {
+        num_scenarios: scenarios.len(),
+        threads: rayon::current_num_threads(),
+        serial_wall_s,
+        parallel_wall_s,
+        speedup: serial_wall_s.map(|s| s / parallel_wall_s.max(1e-12)),
+        verified_identical,
+        distinct_configs: runner.cache_len(),
+        cache_hits: hits,
+        results,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::scenario::{ArchKnobs, ScheduleMode};
+    use crate::workload::gemm::GemmSpec;
+
+    fn small_suite() -> Vec<Scenario> {
+        let knobs = ArchKnobs::default();
+        vec![
+            Scenario::gemm(
+                "single_64",
+                GemmSpec::square(64),
+                ScheduleMode::SingleTe,
+                knobs.clone(),
+            ),
+            Scenario::gemm(
+                "split_128",
+                GemmSpec::square(128),
+                ScheduleMode::SplitInterleaved,
+                knobs.clone(),
+            ),
+            Scenario::gemm(
+                "independent_64",
+                GemmSpec::square(64),
+                ScheduleMode::Independent,
+                knobs.clone(),
+            ),
+            Scenario::gemm(
+                "lockstep_128",
+                GemmSpec::square(128),
+                ScheduleMode::SplitLockstep,
+                knobs,
+            ),
+        ]
+    }
+
+    #[test]
+    fn parallel_results_are_byte_identical_to_serial() {
+        let scenarios = small_suite();
+        let serial = SweepRunner::new().run_serial(&scenarios);
+        let parallel = SweepRunner::new().run_parallel(&scenarios);
+        assert_eq!(serial, parallel);
+        // and in input order
+        let names: Vec<&str> =
+            parallel.iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["single_64", "split_128", "independent_64", "lockstep_128"]
+        );
+    }
+
+    #[test]
+    fn repeated_configs_hit_the_cache() {
+        let mut scenarios = small_suite();
+        // same config as "single_64", different display name
+        scenarios.push(Scenario::gemm(
+            "single_64_again",
+            GemmSpec::square(64),
+            ScheduleMode::SingleTe,
+            ArchKnobs::default(),
+        ));
+        let runner = SweepRunner::new();
+        let results = runner.run_serial(&scenarios);
+        let (hits, misses) = runner.cache_stats();
+        assert_eq!(hits, 1, "the renamed duplicate must be served cached");
+        assert_eq!(misses, 4);
+        assert_eq!(runner.cache_len(), 4);
+        // cached result carries the caller's name but identical numbers
+        assert_eq!(results[4].name, "single_64_again");
+        assert_eq!(results[4].cycles, results[0].cycles);
+        assert_eq!(results[4].total_macs, results[0].total_macs);
+    }
+
+    #[test]
+    fn report_verifies_and_counts() {
+        let scenarios = small_suite();
+        let rep = sweep_with_report(&scenarios, true);
+        assert_eq!(rep.num_scenarios, 4);
+        assert_eq!(rep.results.len(), 4);
+        assert_eq!(rep.verified_identical, Some(true));
+        assert!(rep.speedup.is_some());
+        assert_eq!(rep.distinct_configs, 4);
+        assert!(rep.threads >= 1);
+        // report serializes to JSON
+        let js = serde_json::to_string(&rep).expect("report must serialize");
+        assert!(js.contains("\"verified_identical\":true"));
+    }
+}

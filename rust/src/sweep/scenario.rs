@@ -1,0 +1,448 @@
+//! Scenario model: one self-contained simulation configuration — an
+//! architecture variant × a workload × a schedule mode — plus the
+//! machine-readable result it produces.
+//!
+//! A `Scenario` is pure data (integers, bools, names): building it performs
+//! no allocation inside the simulated L1 and no simulation. Running it is a
+//! deterministic pure function (`run_scenario`), which is what makes the
+//! sweep engine's parallel execution byte-identical to serial execution and
+//! its result cache sound.
+
+use serde::{Deserialize, Serialize};
+
+use crate::coordinator::schedule::{run_concurrent, run_sequential};
+use crate::sim::{ArchConfig, L1Alloc, Sim};
+use crate::workload::blocks::{dwsep_conv_block, fc_softmax_block, mha_block};
+use crate::workload::gemm::{
+    map_independent, map_single, map_split, GemmRegions, GemmSpec,
+};
+
+/// Deadlock guard for scenario runs (same budget the CLI `simulate` uses).
+const MAX_CYCLES: u64 = 10_000_000_000;
+
+/// The architecture knobs a sweep may vary, as plain hashable data.
+/// `apply()` expands them over the paper's TensorPool instance; everything
+/// not listed here (topology, frequency, bandwidths) stays at the paper's
+/// values so scenario keys remain small and exactly comparable.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
+pub struct ArchKnobs {
+    /// Response-grouping factor K (paper nominal: 4).
+    pub resp_k: usize,
+    /// Request-widening factor J (paper nominal: 2).
+    pub req_j: usize,
+    /// Burst support at the Tile arbiters.
+    pub burst: bool,
+    /// Streamer reorder-buffer depth (1 = in-order ablation).
+    pub rob_depth: usize,
+    /// Z-FIFO depth (outstanding wide writes).
+    pub z_fifo_depth: usize,
+}
+
+impl Default for ArchKnobs {
+    fn default() -> Self {
+        ArchKnobs::from_config(&ArchConfig::tensorpool())
+    }
+}
+
+impl ArchKnobs {
+    /// Capture the sweepable knobs of an existing configuration.
+    pub fn from_config(cfg: &ArchConfig) -> Self {
+        ArchKnobs {
+            resp_k: cfg.resp_k,
+            req_j: cfg.req_j,
+            burst: cfg.burst,
+            rob_depth: cfg.rob_depth,
+            z_fifo_depth: cfg.z_fifo_depth,
+        }
+    }
+
+    /// Expand into a full configuration (TensorPool base + these knobs).
+    pub fn apply(&self) -> ArchConfig {
+        let mut cfg = ArchConfig::tensorpool();
+        cfg.resp_k = self.resp_k;
+        cfg.req_j = self.req_j;
+        cfg.burst = self.burst;
+        cfg.rob_depth = self.rob_depth;
+        cfg.z_fifo_depth = self.z_fifo_depth;
+        cfg
+    }
+
+    pub fn with_kj(mut self, k: usize, j: usize) -> Self {
+        self.resp_k = k;
+        self.req_j = j;
+        self
+    }
+
+    pub fn without_burst(mut self) -> Self {
+        self.burst = false;
+        self
+    }
+
+    pub fn without_rob(mut self) -> Self {
+        self.rob_depth = 1;
+        self
+    }
+}
+
+/// The Fig 9 compute blocks as sweepable workloads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
+pub enum BlockKind {
+    FcSoftmax,
+    DwsepConv,
+    Mha,
+}
+
+/// What a scenario simulates.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
+pub enum Workload {
+    /// One GEMM (paper Figs 5–7): Z(M×N) = X(M×K)·W(K×N) [+ Y].
+    Gemm { m: usize, k: usize, n: usize, accumulate: bool },
+    /// A Fig 9 compute block of `iters` double-bufferable iterations
+    /// (`iters` is ignored by `Mha`, which has a fixed 5-stage pipeline).
+    Block { kind: BlockKind, iters: usize },
+}
+
+/// How the workload is mapped onto the engines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
+pub enum ScheduleMode {
+    /// GEMM on one TE (Fig 5 reference point).
+    SingleTe,
+    /// GEMM split by row stripes over all 16 TEs, lock-step W walk.
+    SplitLockstep,
+    /// GEMM split with the paper's interleaved-W access scheme (Fig 6).
+    SplitInterleaved,
+    /// One private GEMM of this size per TE (Fig 7 multi-user rows).
+    Independent,
+    /// Block: engines one class at a time (Fig 10 baseline).
+    Sequential,
+    /// Block: TE ∥ PE ∥ DMA with double buffering (Fig 10 contribution).
+    Concurrent,
+}
+
+impl ScheduleMode {
+    pub fn is_gemm_mode(self) -> bool {
+        matches!(
+            self,
+            ScheduleMode::SingleTe
+                | ScheduleMode::SplitLockstep
+                | ScheduleMode::SplitInterleaved
+                | ScheduleMode::Independent
+        )
+    }
+}
+
+/// One point of a sweep. The `name` is a display label only — the result
+/// cache keys on (arch, workload, mode), so renamed duplicates still hit.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
+pub struct Scenario {
+    pub name: String,
+    pub arch: ArchKnobs,
+    pub workload: Workload,
+    pub mode: ScheduleMode,
+}
+
+impl Scenario {
+    /// A GEMM scenario; `mode` must be one of the four GEMM modes.
+    pub fn gemm(
+        name: impl Into<String>,
+        spec: GemmSpec,
+        mode: ScheduleMode,
+        arch: ArchKnobs,
+    ) -> Self {
+        assert!(mode.is_gemm_mode(), "{mode:?} is not a GEMM schedule mode");
+        Scenario {
+            name: name.into(),
+            arch,
+            workload: Workload::Gemm {
+                m: spec.m,
+                k: spec.k,
+                n: spec.n,
+                accumulate: spec.accumulate,
+            },
+            mode,
+        }
+    }
+
+    /// A compute-block scenario; `mode` must be Sequential or Concurrent.
+    pub fn block(
+        name: impl Into<String>,
+        kind: BlockKind,
+        iters: usize,
+        mode: ScheduleMode,
+        arch: ArchKnobs,
+    ) -> Self {
+        assert!(!mode.is_gemm_mode(), "{mode:?} is not a block schedule mode");
+        Scenario {
+            name: name.into(),
+            arch,
+            workload: Workload::Block { kind, iters },
+            mode,
+        }
+    }
+
+    /// Content key for the result cache: the configuration without the
+    /// display name. Two scenarios with equal keys produce byte-identical
+    /// results (running one is a pure function of this key).
+    pub fn cache_key(&self) -> String {
+        format!("{:?}|{:?}|{:?}", self.arch, self.workload, self.mode)
+    }
+}
+
+/// Machine-readable result of one scenario run. Field set covers what the
+/// figure harnesses (Figs 5/7/10) and the perf-trajectory JSON need.
+#[derive(Clone, Debug, PartialEq, Serialize, Deserialize)]
+pub struct ScenarioResult {
+    pub name: String,
+    /// Total simulated cycles to drain.
+    pub cycles: u64,
+    /// TE MACs retired.
+    pub total_macs: u64,
+    /// Parallel FMA utilization over engines that had work.
+    pub fma_utilization: f64,
+    pub macs_per_cycle: f64,
+    /// Achieved TFLOPS at the configured clock.
+    pub tflops: f64,
+    /// Runtime in ms at the configured clock.
+    pub runtime_ms: f64,
+    /// Whole-run TE utilization (equals `fma_utilization` for GEMM runs;
+    /// the Fig 10 lower-panel metric for block runs).
+    pub te_utilization: f64,
+    /// Fraction of cycles the PE injectors were active (blocks only).
+    pub pe_utilization: f64,
+    /// Fraction of cycles the DMA was streaming (blocks only).
+    pub dma_utilization: f64,
+    /// NoC traffic counters (reads/writes injected).
+    pub reads_issued: u64,
+    pub writes_issued: u64,
+}
+
+/// Run one scenario to completion. Pure and deterministic: equal scenarios
+/// (up to `name`) produce equal results on any thread, in any order.
+pub fn run_scenario(s: &Scenario) -> ScenarioResult {
+    let cfg = s.arch.apply();
+    match &s.workload {
+        Workload::Gemm { m, k, n, accumulate } => {
+            let spec = GemmSpec { m: *m, k: *k, n: *n, accumulate: *accumulate };
+            let mut alloc = L1Alloc::new(&cfg);
+            let mut sim = Sim::new(&cfg);
+            let jobs = match s.mode {
+                ScheduleMode::SingleTe => {
+                    let regions = GemmRegions::alloc(&spec, &mut alloc);
+                    let mut jobs: Vec<_> =
+                        (0..cfg.num_tes()).map(|_| None).collect();
+                    if !jobs.is_empty() {
+                        jobs[0] = Some(map_single(&spec, &regions));
+                    }
+                    jobs
+                }
+                ScheduleMode::SplitLockstep | ScheduleMode::SplitInterleaved => {
+                    let regions = GemmRegions::alloc(&spec, &mut alloc);
+                    let interleave = s.mode == ScheduleMode::SplitInterleaved;
+                    map_split(&spec, &regions, cfg.num_tes(), interleave)
+                }
+                ScheduleMode::Independent => {
+                    map_independent(&spec, cfg.num_tes(), &mut alloc)
+                }
+                other => unreachable!("constructor rejects {other:?} for GEMM"),
+            };
+            sim.assign_gemm(jobs);
+            let r = sim.run(MAX_CYCLES);
+            let util = r.fma_utilization(cfg.te.macs_per_cycle());
+            ScenarioResult {
+                name: s.name.clone(),
+                cycles: r.cycles,
+                total_macs: r.total_macs,
+                fma_utilization: util,
+                macs_per_cycle: r.macs_per_cycle(),
+                tflops: r.tflops(cfg.freq_ghz),
+                runtime_ms: r.runtime_ms(cfg.freq_ghz),
+                te_utilization: util,
+                pe_utilization: 0.0,
+                dma_utilization: 0.0,
+                reads_issued: r.noc.reads_issued,
+                writes_issued: r.noc.writes_issued,
+            }
+        }
+        Workload::Block { kind, iters } => {
+            let mut alloc = L1Alloc::new(&cfg);
+            let block = match kind {
+                BlockKind::FcSoftmax => {
+                    fc_softmax_block(cfg.num_tes(), &mut alloc, *iters)
+                }
+                BlockKind::DwsepConv => {
+                    dwsep_conv_block(cfg.num_tes(), &mut alloc, *iters)
+                }
+                BlockKind::Mha => mha_block(cfg.num_tes(), &mut alloc),
+            };
+            let res = match s.mode {
+                ScheduleMode::Sequential => run_sequential(&cfg, &block),
+                ScheduleMode::Concurrent => run_concurrent(&cfg, &block),
+                other => {
+                    unreachable!("constructor rejects {other:?} for blocks")
+                }
+            };
+            ScenarioResult {
+                name: s.name.clone(),
+                cycles: res.cycles,
+                total_macs: res.te_macs,
+                fma_utilization: res.raw.fma_utilization(cfg.te.macs_per_cycle()),
+                macs_per_cycle: res.raw.macs_per_cycle(),
+                tflops: res.raw.tflops(cfg.freq_ghz),
+                runtime_ms: res.raw.runtime_ms(cfg.freq_ghz),
+                te_utilization: res.te_utilization,
+                pe_utilization: res.pe_utilization,
+                dma_utilization: res.dma_utilization,
+                reads_issued: res.raw.noc.reads_issued,
+                writes_issued: res.raw.noc.writes_issued,
+            }
+        }
+    }
+}
+
+/// Side of the private per-TE GEMM used by the "16 independent" rows of a
+/// Fig 7-style sweep: a quarter of the size class, rounded DOWN to the
+/// 32-tile grid (n=320 would otherwise yield an un-tileable 80³), floored
+/// at the smallest tileable-utilization point 64³.
+pub fn independent_gemm_side(n: usize) -> usize {
+    (n / 4 / 32 * 32).max(64)
+}
+
+/// The default Fig 7-style sweep the CLI runs: for each problem size, the
+/// four parallelization modes of the paper's parallel-GEMM study.
+pub fn fig7_style_scenarios(sizes: &[usize]) -> Vec<Scenario> {
+    let knobs = ArchKnobs::default();
+    let mut out = Vec::with_capacity(sizes.len() * 4);
+    for &n in sizes {
+        let spec = GemmSpec::square(n);
+        let small = GemmSpec::square(independent_gemm_side(n));
+        out.push(Scenario::gemm(
+            format!("single_te_{n}"),
+            spec,
+            ScheduleMode::SingleTe,
+            knobs.clone(),
+        ));
+        out.push(Scenario::gemm(
+            format!("independent_{}", small.n),
+            small,
+            ScheduleMode::Independent,
+            knobs.clone(),
+        ));
+        out.push(Scenario::gemm(
+            format!("split_lockstep_{n}"),
+            spec,
+            ScheduleMode::SplitLockstep,
+            knobs.clone(),
+        ));
+        out.push(Scenario::gemm(
+            format!("split_interleaved_{n}"),
+            spec,
+            ScheduleMode::SplitInterleaved,
+            knobs.clone(),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knobs_round_trip_through_config() {
+        let knobs = ArchKnobs::default().with_kj(2, 1).without_burst();
+        let cfg = knobs.apply();
+        assert_eq!(cfg.resp_k, 2);
+        assert_eq!(cfg.req_j, 1);
+        assert!(!cfg.burst);
+        assert_eq!(ArchKnobs::from_config(&cfg), knobs);
+    }
+
+    #[test]
+    fn cache_key_ignores_name_but_not_config() {
+        let a = Scenario::gemm(
+            "a",
+            GemmSpec::square(128),
+            ScheduleMode::SingleTe,
+            ArchKnobs::default(),
+        );
+        let b = Scenario::gemm(
+            "b",
+            GemmSpec::square(128),
+            ScheduleMode::SingleTe,
+            ArchKnobs::default(),
+        );
+        let c = Scenario::gemm(
+            "a",
+            GemmSpec::square(128),
+            ScheduleMode::SplitInterleaved,
+            ArchKnobs::default(),
+        );
+        assert_eq!(a.cache_key(), b.cache_key());
+        assert_ne!(a.cache_key(), c.cache_key());
+    }
+
+    #[test]
+    fn gemm_scenario_runs_and_reports() {
+        let s = Scenario::gemm(
+            "smoke",
+            GemmSpec::square(64),
+            ScheduleMode::SingleTe,
+            ArchKnobs::default(),
+        );
+        let r = run_scenario(&s);
+        assert_eq!(r.total_macs, 64 * 64 * 64);
+        assert!(r.cycles > 0);
+        assert!(r.fma_utilization > 0.0 && r.fma_utilization <= 1.0);
+        assert_eq!(r.te_utilization, r.fma_utilization);
+    }
+
+    #[test]
+    fn degenerate_gemm_scenario_is_zero_not_panic() {
+        // Regression: GemmSpec::square(0) maps to an empty TE job; the run
+        // must return zeros immediately rather than panic or spin.
+        let s = Scenario::gemm(
+            "empty",
+            GemmSpec::square(0),
+            ScheduleMode::SingleTe,
+            ArchKnobs::default(),
+        );
+        let r = run_scenario(&s);
+        assert_eq!(r.total_macs, 0);
+        assert_eq!(r.macs_per_cycle, 0.0);
+        assert!(r.cycles <= 2, "must terminate immediately: {}", r.cycles);
+    }
+
+    #[test]
+    fn identical_scenarios_produce_identical_results() {
+        let s = Scenario::gemm(
+            "det",
+            GemmSpec::square(64),
+            ScheduleMode::SplitInterleaved,
+            ArchKnobs::default(),
+        );
+        assert_eq!(run_scenario(&s), run_scenario(&s), "must be pure");
+    }
+
+    #[test]
+    fn fig7_style_list_has_four_modes_per_size() {
+        let list = fig7_style_scenarios(&[128, 256, 384, 512]);
+        assert_eq!(list.len(), 16);
+        let keys: std::collections::HashSet<String> =
+            list.iter().map(|s| s.cache_key()).collect();
+        // 15 distinct configs: n=128 and n=256 share the 64³ independent
+        // scenario — the default sweep deliberately exercises the result
+        // cache (one of the 16 runs is a cache hit).
+        assert_eq!(keys.len(), 15);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a GEMM schedule mode")]
+    fn gemm_constructor_rejects_block_modes() {
+        let _ = Scenario::gemm(
+            "bad",
+            GemmSpec::square(64),
+            ScheduleMode::Concurrent,
+            ArchKnobs::default(),
+        );
+    }
+}

