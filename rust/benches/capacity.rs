@@ -1,0 +1,154 @@
+//! Bench: TTI serving-loop capacity study on the sweep engine, and the
+//! cross-run block-schedule cache's effect on `schedule_tti`.
+//!
+//! Two measurements feed the perf trajectory:
+//! * **grid**: wall-clock of the users-per-TTI × pipeline-mix grid, serial
+//!   vs parallel (fresh runners), plus a warm re-run on the same runner
+//!   (scenario cache) — the sweep-engine view.
+//! * **serving loop**: per-TTI latency of `Server::schedule_tti` with a
+//!   cold vs warm block cache — the cache is why repeated AI TTIs are
+//!   cheap.
+//!
+//! Emits the repo's perf-trajectory JSON (`BENCH_capacity.json` schema) on
+//! stdout; set `TENSORPOOL_BENCH_OUT=<path>` to also write the file. The
+//! bench process runs with cwd = the package root (`rust/`), so the
+//! checked-in workspace-root baseline is refreshed with:
+//! `TENSORPOOL_BENCH_OUT=../BENCH_capacity.json cargo bench --bench capacity`
+
+use std::time::Instant;
+
+use serde::Serialize;
+use tensorpool::coordinator::{Pipeline, Server, TtiRequest};
+use tensorpool::figures::capacity_figs::capacity_grid;
+use tensorpool::sim::ArchConfig;
+use tensorpool::sweep::SweepRunner;
+
+#[derive(Serialize)]
+struct BenchReport {
+    bench: &'static str,
+    unit: &'static str,
+    status: &'static str,
+    grid: GridTiming,
+    serving_loop: ServingLoopTiming,
+}
+
+#[derive(Serialize)]
+struct GridTiming {
+    scenarios: usize,
+    ttis_per_scenario: usize,
+    serial_wall_s: f64,
+    parallel_wall_s: f64,
+    warm_rerun_wall_s: f64,
+    threads: usize,
+    parallel_speedup: f64,
+    distinct_block_sims: usize,
+    block_cache_hits: u64,
+}
+
+#[derive(Serialize)]
+struct ServingLoopTiming {
+    /// First AI TTI: pays the block simulations.
+    cold_tti_wall_s: f64,
+    /// Steady-state AI TTI: all block schedules recalled.
+    warm_tti_wall_s: f64,
+    cache_speedup: f64,
+}
+
+fn submit_ai_tti(server: &mut Server, base: u32) {
+    for (i, p) in [Pipeline::NeuralReceiver, Pipeline::NeuralChe]
+        .into_iter()
+        .enumerate()
+    {
+        server.submit(TtiRequest {
+            user_id: base + i as u32,
+            pipeline: p,
+            res: 8192,
+        });
+    }
+}
+
+fn main() {
+    // ---- grid: serial vs parallel vs warm ---------------------------------
+    let ttis = 4;
+    let grid = capacity_grid(&[1, 2, 4, 8], ttis, None, true);
+    println!("capacity grid: {} scenarios x {} TTIs", grid.len(), ttis);
+
+    let serial_runner = SweepRunner::new();
+    let t0 = Instant::now();
+    let serial = serial_runner.run_capacity_serial(&grid);
+    let serial_wall = t0.elapsed().as_secs_f64();
+
+    let runner = SweepRunner::new();
+    let t0 = Instant::now();
+    let parallel = runner.run_capacity_parallel(&grid);
+    let parallel_wall = t0.elapsed().as_secs_f64();
+    assert_eq!(serial, parallel, "parallel must be byte-identical to serial");
+
+    let t0 = Instant::now();
+    let warm = runner.run_capacity_parallel(&grid);
+    let warm_wall = t0.elapsed().as_secs_f64();
+    assert_eq!(warm, parallel, "warm re-run must not change a number");
+
+    let (block_hits, _) = runner.block_cache().stats();
+    println!(
+        "grid: serial {serial_wall:.3}s, parallel {parallel_wall:.3}s \
+         ({:.2}x on {} threads), warm re-run {warm_wall:.4}s; {} distinct \
+         block sims served {block_hits} recalls",
+        serial_wall / parallel_wall.max(1e-12),
+        rayon::current_num_threads(),
+        runner.block_cache().len(),
+    );
+
+    // ---- serving loop: cold vs warm schedule_tti --------------------------
+    let cfg = ArchConfig::tensorpool();
+    let mut server = Server::new(&cfg);
+    submit_ai_tti(&mut server, 0);
+    let t0 = Instant::now();
+    let cold_rep = server.schedule_tti();
+    let cold = t0.elapsed().as_secs_f64();
+
+    // steady state: average a few warm TTIs
+    let warm_ttis = 10u32;
+    let t0 = Instant::now();
+    for i in 0..warm_ttis {
+        submit_ai_tti(&mut server, 2 + 2 * i);
+        let rep = server.schedule_tti();
+        assert_eq!(rep.cycles, cold_rep.cycles, "cache must not change cycles");
+    }
+    let warm_tti = t0.elapsed().as_secs_f64() / warm_ttis as f64;
+    println!(
+        "schedule_tti: cold {cold:.4}s, warm {warm_tti:.6}s -> {:.0}x from \
+         the block cache",
+        cold / warm_tti.max(1e-12),
+    );
+
+    // ---- perf-trajectory JSON (BENCH_capacity.json schema) ----------------
+    let report = BenchReport {
+        bench: "capacity",
+        unit: "wall-clock seconds (grid + per-TTI serving-loop latency)",
+        status: "measured",
+        grid: GridTiming {
+            scenarios: grid.len(),
+            ttis_per_scenario: ttis,
+            serial_wall_s: serial_wall,
+            parallel_wall_s: parallel_wall,
+            warm_rerun_wall_s: warm_wall,
+            threads: rayon::current_num_threads(),
+            parallel_speedup: serial_wall / parallel_wall.max(1e-12),
+            distinct_block_sims: runner.block_cache().len(),
+            block_cache_hits: block_hits,
+        },
+        serving_loop: ServingLoopTiming {
+            cold_tti_wall_s: cold,
+            warm_tti_wall_s: warm_tti,
+            cache_speedup: cold / warm_tti.max(1e-12),
+        },
+    };
+    let json =
+        serde_json::to_string_pretty(&report).expect("report serializes");
+    println!("{json}");
+    if let Some(path) = std::env::var_os("TENSORPOOL_BENCH_OUT") {
+        std::fs::write(&path, &json).expect("write bench JSON");
+        eprintln!("[bench] wrote {}", path.to_string_lossy());
+    }
+}

@@ -10,15 +10,20 @@
 //! timing through the cycle-level simulator.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
-use crate::coordinator::schedule::run_concurrent;
-use crate::sim::{ArchConfig, L1Alloc};
-use crate::workload::blocks::{dwsep_conv_block, fc_softmax_block, mha_block};
+use serde::{Deserialize, Serialize};
+
+use crate::sim::ArchConfig;
+use crate::sweep::block_cache::BlockScheduleCache;
+use crate::sweep::scenario::{BlockKind, ScheduleMode};
 use crate::workload::phy::{cfft, ls_che, mimo_mmse};
 
 /// What a user's TTI asks for (paper Sec II: CHE-only models vs full
 /// receivers vs classical processing).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(
+    Clone, Copy, Debug, PartialEq, Eq, Hash, Serialize, Deserialize,
+)]
 pub enum Pipeline {
     /// Full neural receiver (ResNet-style blocks on TEs+PEs).
     NeuralReceiver,
@@ -29,7 +34,9 @@ pub enum Pipeline {
 }
 
 /// One uplink processing request.
-#[derive(Clone, Copy, Debug)]
+#[derive(
+    Clone, Copy, Debug, PartialEq, Eq, Hash, Serialize, Deserialize,
+)]
 pub struct TtiRequest {
     pub user_id: u32,
     pub pipeline: Pipeline,
@@ -38,7 +45,7 @@ pub struct TtiRequest {
 }
 
 /// Outcome of one scheduled TTI.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Serialize, Deserialize)]
 pub struct TtiReport {
     pub served: Vec<u32>,
     pub deferred: Vec<u32>,
@@ -55,17 +62,47 @@ pub struct TtiReport {
 pub struct Server {
     cfg: ArchConfig,
     queue: VecDeque<TtiRequest>,
-    /// Cycle budget per TTI (1 ms at the configured clock).
+    /// Cycle budget per TTI (default: 1 ms at the configured clock).
     budget_cycles: u64,
+    /// Cross-run block-schedule cache: the AI block simulations of a TTI
+    /// are pure functions of (config × block × schedule), so repeated
+    /// TTIs — and any sweeps sharing this cache via `Arc` — recall them
+    /// instead of re-simulating. Results are identical either way.
+    blocks: Arc<BlockScheduleCache>,
 }
 
 impl Server {
     pub fn new(cfg: &ArchConfig) -> Self {
+        Self::with_cache(cfg, Arc::new(BlockScheduleCache::new()))
+    }
+
+    /// A server sharing a cross-run block-schedule cache (typically the
+    /// sweep runner's, `SweepRunner::block_cache`).
+    pub fn with_cache(
+        cfg: &ArchConfig,
+        blocks: Arc<BlockScheduleCache>,
+    ) -> Self {
         Server {
             cfg: cfg.clone(),
             queue: VecDeque::new(),
             budget_cycles: (1e-3 * cfg.freq_ghz * 1e9) as u64,
+            blocks,
         }
+    }
+
+    /// Override the per-TTI cycle budget (default 1 ms at the configured
+    /// clock — numerology-0; tighter budgets model 5G numerologies 1/2).
+    pub fn set_budget_cycles(&mut self, budget: u64) {
+        self.budget_cycles = budget;
+    }
+
+    pub fn budget_cycles(&self) -> u64 {
+        self.budget_cycles
+    }
+
+    /// The block-schedule cache this server draws from.
+    pub fn block_cache(&self) -> &Arc<BlockScheduleCache> {
+        &self.blocks
     }
 
     pub fn submit(&mut self, req: TtiRequest) {
@@ -144,23 +181,30 @@ impl Server {
             }
         }
         for kind in ai_kinds {
-            let mut alloc = L1Alloc::new(&self.cfg);
-            let n = self.cfg.num_tes();
-            let block = match kind {
-                Pipeline::NeuralReceiver => {
-                    dwsep_conv_block(n, &mut alloc, 2)
-                }
-                Pipeline::NeuralChe => mha_block(n, &mut alloc),
+            // Block simulations go through the cross-run cache: a repeated
+            // (config × block × schedule) is recalled, not re-simulated —
+            // the result is byte-identical either way (pure runs).
+            let (block_kind, iters) = match kind {
+                Pipeline::NeuralReceiver => (BlockKind::DwsepConv, 2),
+                Pipeline::NeuralChe => (BlockKind::Mha, 1),
                 Pipeline::Classical => unreachable!(),
             };
-            let res = run_concurrent(&self.cfg, &block);
+            let res = self.blocks.run(
+                &self.cfg,
+                block_kind,
+                iters,
+                ScheduleMode::Concurrent,
+            );
             cycles += res.cycles;
             te_util_acc += res.te_utilization;
             te_runs += 1;
             // FC head shared by both AI pipelines
-            let mut alloc2 = L1Alloc::new(&self.cfg);
-            let fc = fc_softmax_block(n, &mut alloc2, 1);
-            let res2 = run_concurrent(&self.cfg, &fc);
+            let res2 = self.blocks.run(
+                &self.cfg,
+                BlockKind::FcSoftmax,
+                1,
+                ScheduleMode::Concurrent,
+            );
             cycles += res2.cycles;
             te_util_acc += res2.te_utilization;
             te_runs += 1;
@@ -282,6 +326,48 @@ mod tests {
             interleaved, grouped,
             "same admitted set must cost the same regardless of order"
         );
+    }
+
+    #[test]
+    fn repeated_ttis_reuse_block_schedules() {
+        // The second identical TTI must perform ZERO new block simulations
+        // and still report the same numbers (the cache is semantically
+        // invisible). The full cross-server version lives in
+        // tests/serving_loop.rs.
+        let mut s = server();
+        let mut reports = Vec::new();
+        for round in 0..2 {
+            s.submit(TtiRequest {
+                user_id: round,
+                pipeline: Pipeline::NeuralReceiver,
+                res: 1024,
+            });
+            reports.push(s.schedule_tti());
+        }
+        let cache = s.block_cache();
+        assert_eq!(cache.sims_run(), 2, "dwsep + fc, simulated once each");
+        let (hits, _) = cache.stats();
+        assert_eq!(hits, 2, "second TTI recalls both schedules");
+        assert_eq!(reports[0].cycles, reports[1].cycles);
+        assert_eq!(reports[0].te_utilization, reports[1].te_utilization);
+    }
+
+    #[test]
+    fn budget_override_tightens_admission() {
+        let mut s = server();
+        s.set_budget_cycles(1); // absurdly tight: head-of-line only
+        assert_eq!(s.budget_cycles(), 1);
+        for u in 0..4 {
+            s.submit(TtiRequest {
+                user_id: u,
+                pipeline: Pipeline::Classical,
+                res: 1024,
+            });
+        }
+        let rep = s.schedule_tti();
+        assert_eq!(rep.served, vec![0], "only the head fits a 1-cycle TTI");
+        assert_eq!(rep.deferred, vec![1, 2, 3]);
+        assert!(!rep.deadline_met);
     }
 
     #[test]

@@ -1,0 +1,168 @@
+//! Capacity-study harness: users-per-TTI vs deadline behavior for the
+//! three serving pipelines (paper Sec II / V-B — one flexible cluster
+//! serving AI-PHY *and* the classical chain per user under the 1 ms TTI).
+//!
+//! A grid point is a [`TtiScenario`]: a pipeline mix × an offered load
+//! (users per TTI) over a multi-TTI serving run. The grid fans out on the
+//! sweep runner, every AI TTI drawing its block schedules from the shared
+//! cross-run cache, and folds into one row per point: deadline-miss rate,
+//! served throughput, backlog (the saturation indicator — admission is
+//! estimate-bounded, so past the capacity knee the backlog grows while
+//! served users plateau), and mean TE utilization.
+
+use crate::report::{f2, int, pct, Table};
+use crate::sweep::{
+    ArchKnobs, ArrivalPattern, CapacityReport, SweepRunner, TtiScenario,
+    UserMix,
+};
+
+/// The three serving pipelines as pure user mixes, in display order.
+pub const PIPELINE_MIXES: [(&str, UserMix); 3] = [
+    (
+        "neural_receiver",
+        UserMix { neural_receiver: 1, neural_che: 0, classical: 0 },
+    ),
+    (
+        "neural_che",
+        UserMix { neural_receiver: 0, neural_che: 1, classical: 0 },
+    ),
+    (
+        "classical",
+        UserMix { neural_receiver: 0, neural_che: 0, classical: 1 },
+    ),
+];
+
+/// A mixed-traffic workload (half AI, half classical) for the combined
+/// serving point the paper's Sec II argues for.
+pub const MIXED_MIX: (&str, UserMix) = (
+    "mixed_ai_classical",
+    UserMix { neural_receiver: 1, neural_che: 1, classical: 2 },
+);
+
+/// Build the users-per-TTI × pipeline-mix grid. Every user occupies the
+/// paper's full 8192-RE reference TTI (the demanding Sec V-B use case).
+/// `budget_cycles`: per-TTI budget override (`None` = 1 ms at the clock).
+pub fn capacity_grid(
+    users: &[usize],
+    num_ttis: usize,
+    budget_cycles: Option<u64>,
+    include_mixed: bool,
+) -> Vec<TtiScenario> {
+    let knobs = ArchKnobs::default();
+    let mut mixes: Vec<(&str, UserMix)> = PIPELINE_MIXES.to_vec();
+    if include_mixed {
+        mixes.push(MIXED_MIX);
+    }
+    let mut out = Vec::with_capacity(mixes.len() * users.len());
+    for (label, mix) in mixes {
+        for &u in users {
+            out.push(TtiScenario {
+                name: format!("{label}_u{u}"),
+                arch: knobs.clone(),
+                mix,
+                arrival: ArrivalPattern::Uniform,
+                users_per_tti: u,
+                num_ttis,
+                res_per_user: 8192,
+                budget_cycles,
+                seed: 0xC0FFEE,
+            });
+        }
+    }
+    out
+}
+
+/// Run a capacity grid on a (shared) sweep runner, in parallel.
+pub fn capacity_rows(
+    users: &[usize],
+    num_ttis: usize,
+    runner: &SweepRunner,
+) -> Vec<CapacityReport> {
+    runner.run_capacity_parallel(&capacity_grid(users, num_ttis, None, true))
+}
+
+/// The users-per-TTI vs deadline table (one row per grid point).
+pub fn capacity_table(reports: &[CapacityReport]) -> String {
+    let mut t = Table::new(&[
+        "scenario",
+        "users/TTI",
+        "TTIs",
+        "served",
+        "miss rate",
+        "mean TE util",
+        "kcycles/TTI",
+        "backlog",
+    ]);
+    for r in reports {
+        t.row(&[
+            r.name.clone(),
+            int(r.users_per_tti as u64),
+            int(r.num_ttis as u64),
+            format!("{}/{}", r.served_total, r.submitted_total),
+            pct(r.deadline_miss_rate),
+            pct(r.mean_te_utilization),
+            f2(r.mean_cycles_per_tti / 1e3),
+            int(r.final_backlog as u64),
+        ]);
+    }
+    t.to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_mixes_by_users() {
+        let g = capacity_grid(&[1, 4, 16], 4, None, true);
+        assert_eq!(g.len(), 12); // (3 pipelines + mixed) x 3 loads
+        let keys: std::collections::HashSet<String> =
+            g.iter().map(|s| s.cache_key()).collect();
+        assert_eq!(keys.len(), 12, "every grid point is distinct");
+        let g2 = capacity_grid(&[1, 4], 4, Some(225_000), false);
+        assert_eq!(g2.len(), 6);
+        assert!(g2.iter().all(|s| s.budget_cycles == Some(225_000)));
+    }
+
+    #[test]
+    fn capacity_rows_saturate_with_load() {
+        // Small but meaningful: at 1 user/TTI every pipeline keeps up
+        // (zero backlog); at 24 NR users x full-TTI REs the
+        // estimate-bounded admission must saturate and grow a backlog.
+        let runner = SweepRunner::new();
+        let rows = capacity_rows(&[1, 24], 2, &runner);
+        assert_eq!(rows.len(), 8);
+        let find = |name: &str| {
+            rows.iter().find(|r| r.name == name).expect(name)
+        };
+        for p in ["neural_receiver", "neural_che", "classical"] {
+            let light = find(&format!("{p}_u1"));
+            assert_eq!(light.final_backlog, 0, "{p} keeps up at 1 user/TTI");
+            assert_eq!(light.served_total, light.submitted_total);
+            assert_eq!(light.deadline_miss_rate, 0.0);
+        }
+        let heavy = find("neural_receiver_u24");
+        assert!(heavy.final_backlog > 0, "24 full-TTI NR users saturate");
+        assert!(heavy.served_total < heavy.submitted_total);
+        // the table renders one line per row plus header + rule
+        let table = capacity_table(&rows);
+        assert_eq!(table.lines().count(), rows.len() + 2);
+        assert!(table.contains("neural_receiver_u24"));
+    }
+
+    #[test]
+    fn grid_reuses_block_schedules_across_points() {
+        // The whole grid needs at most 3 distinct block simulations
+        // (dwsep, mha, fc — all Concurrent); everything else must be
+        // cache recall.
+        let runner = SweepRunner::new();
+        let _ = capacity_rows(&[1, 2], 2, &runner);
+        assert!(
+            runner.block_cache().len() <= 3,
+            "distinct block sims: {}",
+            runner.block_cache().len()
+        );
+        let (hits, _) = runner.block_cache().stats();
+        assert!(hits > 0, "grid points must share block schedules");
+    }
+}

@@ -2,6 +2,7 @@
 //! (see DESIGN.md §4 for the experiment index).
 
 pub mod block_figs;
+pub mod capacity_figs;
 pub mod gemm_figs;
 pub mod pe_figs;
 pub mod ppa_figs;

@@ -31,6 +31,14 @@ COMMANDS:
             engine and emit machine-readable JSON. By default also runs
             the serial reference, verifies byte-identical per-scenario
             results, and reports the wall-clock speedup.
+  capacity [--users U1,U2,..] [--ttis N] [--budget-us B] [--no-mixed]
+           [--out <path>] [--no-verify] [--smoke]
+            run the TTI serving loop over a users-per-TTI x pipeline-mix
+            grid on the sweep engine (shared cross-run block-schedule
+            cache) and emit a machine-readable capacity report: deadline
+            miss rate, served throughput, backlog, TE utilization per
+            point. Verifies parallel == serial byte-identity by default.
+            --smoke runs a 2-point grid for CI.
   artifacts [--dir <path>]
             list the AOT artifacts and validate the manifest
   run --name <artifact> [--dir <path>]
@@ -54,6 +62,7 @@ fn main() {
         "ablations" => ablations(),
         "simulate" => simulate(rest),
         "sweep" => sweep(rest),
+        "capacity" => capacity(rest),
         "artifacts" => artifacts(rest),
         "run" => run_artifact(rest),
         "help" | "--help" | "-h" => {
@@ -262,6 +271,110 @@ fn sweep(rest: &[String]) -> i32 {
     match report.verified_identical {
         Some(false) => {
             eprintln!("sweep: FAIL — parallel results diverge from serial");
+            1
+        }
+        _ => 0,
+    }
+}
+
+/// Run the TTI serving loop over a users-per-TTI × pipeline-mix grid on
+/// the sweep engine and emit a machine-readable capacity report.
+fn capacity(rest: &[String]) -> i32 {
+    use tensorpool::figures::capacity_figs::{capacity_grid, capacity_table};
+    use tensorpool::sweep::capacity_sweep_with_report;
+    let smoke = has(rest, "--smoke");
+    let users: Vec<usize> = match flag(rest, "--users") {
+        None if smoke => vec![1, 4],
+        None => vec![1, 2, 4, 8, 16, 32],
+        Some(s) => {
+            let mut users = Vec::new();
+            for t in s.split(',') {
+                match t.trim().parse::<usize>() {
+                    Ok(u) if u > 0 => users.push(u),
+                    _ => {
+                        eprintln!(
+                            "error: bad --users value '{}' (positive \
+                             integers required)",
+                            t.trim()
+                        );
+                        return 2;
+                    }
+                }
+            }
+            if users.is_empty() {
+                eprintln!("error: --users requires a comma-separated list");
+                return 2;
+            }
+            users
+        }
+    };
+    let num_ttis: usize = match flag(rest, "--ttis") {
+        None if smoke => 2,
+        None => 8,
+        Some(v) => match v.parse() {
+            Ok(n) if n > 0 => n,
+            _ => {
+                eprintln!("error: bad --ttis value '{v}'");
+                return 2;
+            }
+        },
+    };
+    // Per-TTI budget in microseconds (default 1000 = the 1 ms numerology-0
+    // slot); tighter budgets model 5G numerologies 1/2.
+    let budget_cycles: Option<u64> = match flag(rest, "--budget-us") {
+        None => None,
+        Some(v) => match v.parse::<u64>() {
+            Ok(us) if us > 0 => {
+                let freq_ghz = ArchConfig::tensorpool().freq_ghz;
+                Some((us as f64 * 1e-6 * freq_ghz * 1e9) as u64)
+            }
+            _ => {
+                eprintln!("error: bad --budget-us value '{v}'");
+                return 2;
+            }
+        },
+    };
+    let verify = !has(rest, "--no-verify");
+    let grid =
+        capacity_grid(&users, num_ttis, budget_cycles, !has(rest, "--no-mixed"));
+    eprintln!(
+        "capacity: {} scenarios ({} loads x {} mixes), {} TTIs each, {} \
+         threads, verify={}",
+        grid.len(),
+        users.len(),
+        grid.len() / users.len(),
+        num_ttis,
+        rayon::current_num_threads(),
+        verify,
+    );
+    let report = capacity_sweep_with_report(&grid, verify);
+    eprintln!("{}", capacity_table(&report.reports));
+    let json = serde_json::to_string_pretty(&report)
+        .expect("capacity report serializes");
+    println!("{json}");
+    if let Some(path) = flag(rest, "--out") {
+        if let Err(e) = std::fs::write(&path, &json) {
+            eprintln!("error writing {path}: {e}");
+            return 1;
+        }
+        eprintln!("capacity: report written to {path}");
+    }
+    eprintln!(
+        "capacity: {} distinct block simulations served {} cached recalls \
+         across the grid",
+        report.distinct_block_sims, report.block_cache_hits,
+    );
+    if let (Some(s), Some(sp)) = (report.serial_wall_s, report.speedup) {
+        eprintln!(
+            "capacity: serial {s:.2}s, parallel {:.2}s -> {sp:.2}x speedup; \
+             per-scenario reports byte-identical: {}",
+            report.parallel_wall_s,
+            report.verified_identical == Some(true),
+        );
+    }
+    match report.verified_identical {
+        Some(false) => {
+            eprintln!("capacity: FAIL — parallel reports diverge from serial");
             1
         }
         _ => 0,

@@ -90,6 +90,17 @@ pub struct ArchConfig {
     /// Per-SubGroup AXI bandwidth in bytes/cycle (paper: 512-bit = 64 B).
     pub axi_bytes_per_cycle_per_subgroup: usize,
 
+    // ---- simulator ------------------------------------------------------
+    /// Initial capacity (slots) of the NoC's event wheel. This is a
+    /// *simulator* knob, not a hardware parameter: the wheel holds every
+    /// in-flight timing event, and under extreme congestion (thousands of
+    /// responses serialized on one channel) an event can be scheduled
+    /// further than this many cycles ahead. The wheel then GROWS by
+    /// doubling — the knob sets the starting footprint, it never bounds
+    /// behavior. (Formerly a hard `WHEEL = 8192` assert; see ROADMAP
+    /// "NoC event-wheel sizing".) Values < 2 are clamped to 2.
+    pub event_wheel_slots: usize,
+
     // ---- physical -------------------------------------------------------
     /// Clock frequency (GHz), TT corner (paper: 0.9).
     pub freq_ghz: f64,
@@ -120,6 +131,7 @@ impl ArchConfig {
             z_fifo_depth: 32,
             l2_bytes_per_cycle: 1024,
             axi_bytes_per_cycle_per_subgroup: 64,
+            event_wheel_slots: 8192,
             freq_ghz: 0.9,
         }
     }

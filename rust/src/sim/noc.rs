@@ -58,8 +58,6 @@ enum Event {
     Deliver(u32),
 }
 
-const WHEEL: usize = 8192;
-
 /// The memory system shared by all engines.
 pub struct Noc {
     cfg: ArchConfig,
@@ -118,7 +116,9 @@ impl Noc {
             port_active: vec![false; tiles * ports],
             resp_ingress_busy: vec![0; tiles * ports],
             resp_egress_busy: vec![0; tiles * ports],
-            wheel: (0..WHEEL).map(|_| Vec::new()).collect(),
+            wheel: (0..cfg.event_wheel_slots.max(2))
+                .map(|_| Vec::new())
+                .collect(),
             events_scratch: Vec::with_capacity(64),
             pending_events: 0,
             stats: NocStats::default(),
@@ -154,12 +154,43 @@ impl Noc {
     fn schedule(&mut self, at: u64, ev: Event) {
         debug_assert!(at > self.now, "event must be in the future");
         let dt = at - self.now;
-        assert!(
-            (dt as usize) < WHEEL,
-            "event horizon exceeded: dt={dt} (congestion beyond wheel size)"
-        );
-        self.wheel[(at % WHEEL as u64) as usize].push(ev);
+        if dt as usize >= self.wheel.len() {
+            // Extreme congestion pushed this event past the horizon
+            // (formerly a hard assert): grow the wheel instead. See
+            // `ArchConfig::event_wheel_slots`.
+            self.grow_wheel(dt as usize + 1);
+        }
+        let slots = self.wheel.len() as u64;
+        self.wheel[(at % slots) as usize].push(ev);
         self.pending_events += 1;
+    }
+
+    /// Double the event wheel until it can hold `min_slots` cycles of
+    /// lookahead, re-placing every pending event.
+    ///
+    /// Safe at any point of `step()`: every pending event's absolute time
+    /// lies in `[now, now + old_len - 1]` (events are scheduled with
+    /// `0 < dt < len`, and the current cycle's slot is drained before new
+    /// events can land on it), so each old slot maps to exactly one
+    /// absolute time and collisions cannot occur.
+    fn grow_wheel(&mut self, min_slots: usize) {
+        let old = self.wheel.len();
+        let new_len = min_slots.next_power_of_two().max(old * 2);
+        let now = self.now;
+        let mut grown: Vec<Vec<Event>> =
+            (0..new_len).map(|_| Vec::new()).collect();
+        for (s, evs) in self.wheel.iter_mut().enumerate() {
+            if evs.is_empty() {
+                continue;
+            }
+            // The unique t in [now, now + old - 1] with t % old == s.
+            let off =
+                (s as u64 + old as u64 - now % old as u64) % old as u64;
+            let t = now + off;
+            grown[(t % new_len as u64) as usize].append(evs);
+        }
+        self.wheel = grown;
+        self.stats.wheel_growths += 1;
     }
 
     /// Submit a 512-bit wide READ of `line` (paper: TE streamer load).
@@ -333,7 +364,9 @@ impl Noc {
         }
 
         // 2. Event wheel: arrivals fan out to banks; deliveries surface.
-        let slot = (self.now % WHEEL as u64) as usize;
+        // (Slot index computed against the CURRENT length: stage 1 above
+        // may have grown the wheel, re-placing this cycle's events.)
+        let slot = (self.now % self.wheel.len() as u64) as usize;
         debug_assert!(self.events_scratch.is_empty());
         std::mem::swap(&mut self.wheel[slot], &mut self.events_scratch);
         self.pending_events -= self.events_scratch.len() as u64;
@@ -590,5 +623,55 @@ mod tests {
         tags.dedup();
         assert_eq!(tags.len(), total as usize, "every tag exactly once");
         assert!(n.quiescent());
+    }
+
+    #[test]
+    fn wheel_grows_under_extreme_congestion() {
+        // Regression for the old hard `WHEEL = 8192` assert: thousands of
+        // wide reads from one tile to one remote tile serialize on the
+        // K-widened ingress channel, booking each response ~3 cycles
+        // further into the future than the last — past the 8192-cycle
+        // horizon. The wheel must grow, and every request must still be
+        // delivered exactly once.
+        let mut n = noc();
+        let total = 4000u32;
+        for i in 0..total {
+            n.read_line(0, 0, i, 0, 16);
+        }
+        let got = run_until_delivered(&mut n, total as usize, 2_000_000);
+        assert!(
+            n.stats.wheel_growths > 0,
+            "4000 serialized responses must exceed the 8192-slot horizon"
+        );
+        let mut tags: Vec<u32> = got.iter().map(|(_, d)| d.tag).collect();
+        tags.sort_unstable();
+        tags.dedup();
+        assert_eq!(tags.len(), total as usize, "every tag exactly once");
+        assert!(n.quiescent());
+    }
+
+    #[test]
+    fn tiny_initial_wheel_grows_transparently() {
+        // `event_wheel_slots` is a footprint knob, not a behavior bound: a
+        // 4-slot wheel must produce the same deliveries as the default.
+        let mut small_cfg = ArchConfig::tensorpool();
+        small_cfg.event_wheel_slots = 4;
+        let run = |cfg: &ArchConfig| {
+            let mut n = Noc::new(cfg);
+            for i in 0..32u32 {
+                n.read_line(0, 0, i, 0, 16);
+            }
+            run_until_delivered(&mut n, 32, 10_000)
+                .into_iter()
+                .map(|(t, d)| (t, d.tag))
+                .collect::<Vec<_>>()
+        };
+        let small = run(&small_cfg);
+        let big = run(&ArchConfig::tensorpool());
+        assert_eq!(small, big, "wheel size must not change timing");
+        let mut n = Noc::new(&small_cfg);
+        n.read_line(0, 0, 0, 0, 16); // remote: wire latency 4 >= 4 slots
+        run_until_delivered(&mut n, 1, 100);
+        assert!(n.stats.wheel_growths > 0, "4-slot wheel must have grown");
     }
 }

@@ -32,6 +32,30 @@ pub struct PeWorkload {
 }
 
 impl PeWorkload {
+    /// Validated constructor — mirrors the degenerate-GEMM guards on the
+    /// TE path (PR 1): an `ipc` of 0 (or NaN/∞) would give the injector a
+    /// zero issue rate and an unbounded instruction floor
+    /// (`instrs_per_pe / ipc`), spinning `Sim::run` to `max_cycles`
+    /// instead of failing fast at the call site that built the bad
+    /// workload.
+    pub fn new(
+        reads: Vec<MatRegion>,
+        writes: Vec<MatRegion>,
+        instrs_per_pe: u64,
+        ipc: f64,
+        mem_fraction: f64,
+    ) -> Self {
+        assert!(
+            ipc.is_finite() && ipc > 0.0,
+            "PeWorkload ipc must be positive and finite, got {ipc}"
+        );
+        assert!(
+            (0.0..=1.0).contains(&mem_fraction),
+            "PeWorkload mem_fraction must be in [0, 1], got {mem_fraction}"
+        );
+        PeWorkload { reads, writes, instrs_per_pe, ipc, mem_fraction }
+    }
+
     /// Aggregate words accessed per cycle per PE at the isolated IPC.
     pub fn words_per_cycle_per_pe(&self) -> f64 {
         self.ipc * self.mem_fraction
@@ -69,6 +93,15 @@ impl PeTraffic {
     /// 1/num_tiles row-slice of the workload's regions.
     pub fn new(token: u16, tile: usize, num_tiles: usize, pes_per_tile: usize,
                wl: &PeWorkload) -> Self {
+        // Last line of defense for workloads built as struct literals
+        // (bypassing `PeWorkload::new`): a degenerate IPC must fail here,
+        // not spin the simulation to `max_cycles`.
+        assert!(
+            wl.ipc.is_finite() && wl.ipc > 0.0,
+            "degenerate PeWorkload (ipc={}) would never finish: the \
+             injector's runtime floor is instrs_per_pe / ipc",
+            wl.ipc
+        );
         let mut seq = Vec::new();
         for (region, write) in wl
             .reads
@@ -156,13 +189,7 @@ mod tests {
         let mut alloc = L1Alloc::new(cfg);
         let z = alloc.alloc(128, 128);
         let o = alloc.alloc(128, 128);
-        PeWorkload {
-            reads: vec![z],
-            writes: vec![o],
-            instrs_per_pe: 1000,
-            ipc: 0.8,
-            mem_fraction: 0.3,
-        }
+        PeWorkload::new(vec![z], vec![o], 1000, 0.8, 0.3)
     }
 
     #[test]
@@ -204,14 +231,39 @@ mod tests {
 
     #[test]
     fn workload_rates() {
+        let wl = PeWorkload::new(vec![], vec![], 800, 0.8, 0.25);
+        assert!((wl.words_per_cycle_per_pe() - 0.2).abs() < 1e-12);
+        assert_eq!(wl.isolated_cycles(), 1000);
+    }
+
+    #[test]
+    #[should_panic(expected = "ipc must be positive")]
+    fn zero_ipc_workload_rejected_at_construction() {
+        // Regression (ROADMAP "PeWorkload guard"): an ipc of 0 used to
+        // produce a zero-rate injector that spun `Sim::run` to
+        // `max_cycles`; it must now fail at construction.
+        let _ = PeWorkload::new(vec![], vec![], 1000, 0.0, 0.3);
+    }
+
+    #[test]
+    #[should_panic(expected = "would never finish")]
+    fn injector_rejects_hand_built_zero_ipc_workload() {
+        // A struct literal bypasses `PeWorkload::new`; the injector itself
+        // is the last line of defense before the old spin-to-max_cycles
+        // behavior.
         let wl = PeWorkload {
             reads: vec![],
             writes: vec![],
-            instrs_per_pe: 800,
-            ipc: 0.8,
-            mem_fraction: 0.25,
+            instrs_per_pe: 1000,
+            ipc: 0.0,
+            mem_fraction: 0.3,
         };
-        assert!((wl.words_per_cycle_per_pe() - 0.2).abs() < 1e-12);
-        assert_eq!(wl.isolated_cycles(), 1000);
+        let _ = PeTraffic::new(0, 0, 64, 4, &wl);
+    }
+
+    #[test]
+    #[should_panic(expected = "mem_fraction must be in")]
+    fn out_of_range_mem_fraction_rejected() {
+        let _ = PeWorkload::new(vec![], vec![], 1000, 0.8, 1.5);
     }
 }

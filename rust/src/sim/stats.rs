@@ -35,6 +35,9 @@ pub struct NocStats {
     pub resp_wait_cycles: u64,
     /// Requests served Tile-locally (no arbiter).
     pub local_hits: u64,
+    /// Times the event wheel doubled because congestion pushed an event
+    /// past the current horizon (see `ArchConfig::event_wheel_slots`).
+    pub wheel_growths: u64,
 }
 
 /// Per-engine result of a simulation run.

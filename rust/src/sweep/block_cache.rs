@@ -1,0 +1,247 @@
+//! Cross-run block-schedule cache (ROADMAP: "Cross-run block cache").
+//!
+//! Every AI TTI the serving loop schedules — and every Fig 10 point — runs
+//! the same handful of compute-block schedules: `dwsep_conv_block`,
+//! `mha_block`, `fc_softmax_block` under a Sequential or Concurrent
+//! schedule. Those runs are *pure functions* of (architecture knobs ×
+//! block identity × iteration count × schedule mode): same key, same
+//! `ScheduleResult`, byte for byte. This module memoizes them so the
+//! simulation happens once per distinct key and is reused
+//!
+//! * across the TTIs of one serving run (`Server::schedule_tti`),
+//! * across the scenarios of one sweep (`SweepRunner` holds one shared
+//!   cache), and
+//! * across harnesses sharing a runner (capacity study + Fig 10).
+//!
+//! Determinism contract: a cache hit returns exactly the result a fresh
+//! simulation would produce, so cached and uncached paths are
+//! interchangeable — `tests/serving_loop.rs` pins this. Configurations
+//! that are NOT expressible as [`ArchKnobs`] over the TensorPool base
+//! (modified topology/frequency/bandwidths) are computed uncached rather
+//! than risking key aliasing.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::schedule::{
+    run_concurrent, run_sequential, ScheduleResult,
+};
+use crate::sim::{ArchConfig, L1Alloc};
+use crate::workload::blocks::{dwsep_conv_block, fc_softmax_block, mha_block};
+
+use super::scenario::{ArchKnobs, BlockKind, ScheduleMode};
+
+/// Content key of one block-schedule simulation. `iters` is normalized to
+/// 0 for [`BlockKind::Mha`] (its pipeline has a fixed stage count and
+/// ignores the iteration knob), so differing callers still share one entry.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct BlockKey {
+    arch: ArchKnobs,
+    /// `ArchConfig::event_wheel_slots`. Timing-neutral, but part of the
+    /// key so a hit returns EXACTLY what a fresh simulation of the same
+    /// config would (its `raw.noc.wheel_growths` counter does depend on
+    /// the initial footprint).
+    wheel_slots: usize,
+    kind: BlockKind,
+    iters: usize,
+    mode: ScheduleMode,
+}
+
+/// Simulate one compute block under one schedule, uncached. Pure: equal
+/// arguments produce equal results on any thread. `mode` must be
+/// [`ScheduleMode::Sequential`] or [`ScheduleMode::Concurrent`].
+pub fn simulate_block(
+    cfg: &ArchConfig,
+    kind: BlockKind,
+    iters: usize,
+    mode: ScheduleMode,
+) -> ScheduleResult {
+    let mut alloc = L1Alloc::new(cfg);
+    let block = match kind {
+        BlockKind::FcSoftmax => {
+            fc_softmax_block(cfg.num_tes(), &mut alloc, iters)
+        }
+        BlockKind::DwsepConv => {
+            dwsep_conv_block(cfg.num_tes(), &mut alloc, iters)
+        }
+        BlockKind::Mha => mha_block(cfg.num_tes(), &mut alloc),
+    };
+    match mode {
+        ScheduleMode::Sequential => run_sequential(cfg, &block),
+        ScheduleMode::Concurrent => run_concurrent(cfg, &block),
+        other => panic!("{other:?} is not a block schedule mode"),
+    }
+}
+
+/// Thread-safe memo of block-schedule simulations, shared (via `Arc`)
+/// between the sweep runner and any number of [`crate::coordinator::Server`]s.
+#[derive(Default)]
+pub struct BlockScheduleCache {
+    cache: Mutex<HashMap<BlockKey, ScheduleResult>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    /// Runs for configs not expressible as sweep knobs (computed uncached).
+    uncacheable: AtomicU64,
+}
+
+impl BlockScheduleCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// (hits, misses) since construction. Uncacheable runs count as
+    /// neither; see [`BlockScheduleCache::sims_run`].
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Total block simulations actually executed (misses + uncacheable
+    /// runs) — the counter the "second identical TTI performs zero new
+    /// block simulations" regression pins.
+    pub fn sims_run(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+            + self.uncacheable.load(Ordering::Relaxed)
+    }
+
+    /// Distinct block-schedule configurations currently cached.
+    pub fn len(&self) -> usize {
+        self.cache.lock().expect("block cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Run (or recall) one block schedule. Equal (config, kind, iters,
+    /// mode) always yields the identical `ScheduleResult`, cached or not.
+    pub fn run(
+        &self,
+        cfg: &ArchConfig,
+        kind: BlockKind,
+        iters: usize,
+        mode: ScheduleMode,
+    ) -> ScheduleResult {
+        let knobs = ArchKnobs::from_config(cfg);
+        let mut base = knobs.apply();
+        // The event-wheel footprint is a simulator-only, timing-neutral
+        // knob (the wheel grows as needed; `noc` tests pin that its size
+        // never changes a number), so it must not disqualify caching —
+        // it is carried in the key instead (see `BlockKey::wheel_slots`).
+        base.event_wheel_slots = cfg.event_wheel_slots;
+        if &base != cfg {
+            // Not expressible as knobs over the TensorPool base: a knob
+            // key would alias distinct configs, so skip the cache.
+            self.uncacheable.fetch_add(1, Ordering::Relaxed);
+            return simulate_block(cfg, kind, iters, mode);
+        }
+        let key = BlockKey {
+            arch: knobs,
+            wheel_slots: cfg.event_wheel_slots,
+            kind,
+            iters: if kind == BlockKind::Mha { 0 } else { iters },
+            mode,
+        };
+        if let Some(hit) =
+            self.cache.lock().expect("block cache poisoned").get(&key)
+        {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return hit.clone();
+        }
+        // Simulate OUTSIDE the lock (same benign-race policy as the
+        // scenario cache: concurrent misses on one key compute the same
+        // pure result; last insert wins).
+        let r = simulate_block(cfg, kind, iters, mode);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.cache
+            .lock()
+            .expect("block cache poisoned")
+            .insert(key, r.clone());
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repeat_runs_hit_and_match() {
+        let cfg = ArchConfig::tensorpool();
+        let cache = BlockScheduleCache::new();
+        let a = cache.run(&cfg, BlockKind::FcSoftmax, 1, ScheduleMode::Concurrent);
+        let b = cache.run(&cfg, BlockKind::FcSoftmax, 1, ScheduleMode::Concurrent);
+        assert_eq!(cache.stats(), (1, 1));
+        assert_eq!(cache.sims_run(), 1);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.te_macs, b.te_macs);
+        // and the cached result matches a fresh uncached simulation
+        let fresh =
+            simulate_block(&cfg, BlockKind::FcSoftmax, 1, ScheduleMode::Concurrent);
+        assert_eq!(a.cycles, fresh.cycles);
+        assert_eq!(a.te_utilization, fresh.te_utilization);
+    }
+
+    #[test]
+    fn mha_iters_normalize_to_one_entry() {
+        let cfg = ArchConfig::tensorpool();
+        let cache = BlockScheduleCache::new();
+        let a = cache.run(&cfg, BlockKind::Mha, 1, ScheduleMode::Concurrent);
+        let b = cache.run(&cfg, BlockKind::Mha, 7, ScheduleMode::Concurrent);
+        assert_eq!(cache.len(), 1, "MHA ignores iters; keys must collapse");
+        assert_eq!(a.cycles, b.cycles);
+    }
+
+    #[test]
+    fn distinct_modes_and_knobs_do_not_alias() {
+        let cfg = ArchConfig::tensorpool();
+        let cache = BlockScheduleCache::new();
+        cache.run(&cfg, BlockKind::FcSoftmax, 1, ScheduleMode::Sequential);
+        cache.run(&cfg, BlockKind::FcSoftmax, 1, ScheduleMode::Concurrent);
+        cache.run(
+            &cfg.clone().without_burst(),
+            BlockKind::FcSoftmax,
+            1,
+            ScheduleMode::Concurrent,
+        );
+        assert_eq!(cache.len(), 3);
+        assert_eq!(cache.stats(), (0, 3));
+    }
+
+    #[test]
+    fn non_knob_configs_bypass_the_cache() {
+        // A modified topology is not expressible as ArchKnobs: it must be
+        // computed uncached (and still be correct), never cached under an
+        // aliasing key.
+        let mut cfg = ArchConfig::tensorpool();
+        cfg.lat_remote = 6;
+        let cache = BlockScheduleCache::new();
+        let a = cache.run(&cfg, BlockKind::FcSoftmax, 1, ScheduleMode::Concurrent);
+        let b = cache.run(&cfg, BlockKind::FcSoftmax, 1, ScheduleMode::Concurrent);
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.stats(), (0, 0));
+        assert_eq!(cache.sims_run(), 2);
+        assert_eq!(a.cycles, b.cycles, "uncached runs are still pure");
+    }
+
+    #[test]
+    fn wheel_footprint_does_not_disable_the_cache() {
+        // event_wheel_slots is timing-neutral (simulator footprint only):
+        // a config differing ONLY in it must still cache — and must
+        // produce the same numbers as the default-footprint config.
+        let mut cfg = ArchConfig::tensorpool();
+        cfg.event_wheel_slots = 65_536;
+        let cache = BlockScheduleCache::new();
+        let a = cache.run(&cfg, BlockKind::FcSoftmax, 1, ScheduleMode::Concurrent);
+        let b = cache.run(&cfg, BlockKind::FcSoftmax, 1, ScheduleMode::Concurrent);
+        assert_eq!(cache.stats(), (1, 1), "second run must be a hit");
+        assert_eq!(a.cycles, b.cycles);
+        let default_run = simulate_block(
+            &ArchConfig::tensorpool(),
+            BlockKind::FcSoftmax,
+            1,
+            ScheduleMode::Concurrent,
+        );
+        assert_eq!(a.cycles, default_run.cycles, "wheel size is timing-neutral");
+    }
+}

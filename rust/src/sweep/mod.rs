@@ -16,16 +16,29 @@
 //!   simulated once), and
 //! * freedom to re-order/re-balance work without changing any number.
 //!
-//! The figure harnesses (`figures::gemm_figs`, `figures::block_figs`) and
-//! the Fig 7/Fig 10 benches run on this engine.
+//! The figure harnesses (`figures::gemm_figs`, `figures::block_figs`,
+//! `figures::capacity_figs`) and the Fig 7/Fig 10/capacity benches run on
+//! this engine. Capacity studies add a second scenario kind,
+//! [`TtiScenario`] (a multi-TTI serving run), and a second cache layer:
+//! the cross-run [`BlockScheduleCache`] memoizing block-schedule
+//! simulations per (arch knobs × block × iters × mode), shared between
+//! every scenario and any [`crate::coordinator::Server`] built with
+//! `Server::with_cache`.
 
+pub mod block_cache;
 pub mod runner;
 pub mod scenario;
 
-pub use runner::{sweep_with_report, SweepReport, SweepRunner};
+pub use block_cache::{simulate_block, BlockScheduleCache};
+pub use runner::{
+    capacity_sweep_with_report, sweep_with_report, CapacitySweepReport,
+    SweepReport, SweepRunner,
+};
 pub use scenario::{
-    fig7_style_scenarios, independent_gemm_side, run_scenario, ArchKnobs,
-    BlockKind, Scenario, ScenarioResult, ScheduleMode, Workload,
+    fig7_style_scenarios, independent_gemm_side, run_capacity, run_scenario,
+    run_scenario_cached, ArchKnobs, ArrivalPattern, BlockKind, CapacityPoint,
+    CapacityReport, Scenario, ScenarioResult, ScheduleMode, TtiScenario,
+    UserMix, Workload,
 };
 
 // ---- Send/Sync audit -------------------------------------------------------
@@ -36,6 +49,7 @@ pub use scenario::{
 // refactor that sneaks shared-mutable state into an engine fails here, not
 // in a rayon bound error five layers up.
 const fn assert_send<T: Send>() {}
+const fn assert_sync<T: Sync>() {}
 
 const _: () = {
     assert_send::<crate::sim::Sim>();
@@ -48,4 +62,12 @@ const _: () = {
     assert_send::<Scenario>();
     assert_send::<ScenarioResult>();
     assert_send::<SweepRunner>();
+    // Capacity runs move whole serving loops (Server + shared block cache)
+    // across rayon workers; the shared cache must also be Sync.
+    assert_send::<TtiScenario>();
+    assert_send::<CapacityReport>();
+    assert_send::<crate::coordinator::Server>();
+    assert_send::<BlockScheduleCache>();
+    assert_sync::<BlockScheduleCache>();
+    assert_sync::<SweepRunner>();
 };

@@ -15,18 +15,27 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use rayon::prelude::*;
 use serde::{Deserialize, Serialize};
 
-use super::scenario::{run_scenario, Scenario, ScenarioResult};
+use super::block_cache::BlockScheduleCache;
+use super::scenario::{
+    run_capacity, run_scenario_cached, CapacityReport, Scenario,
+    ScenarioResult, TtiScenario,
+};
 
-/// A reusable sweep executor holding the result cache.
+/// A reusable sweep executor holding the result caches: whole-scenario
+/// memos (GEMM/block scenarios and TTI capacity scenarios) plus the
+/// shared cross-run [`BlockScheduleCache`] every scenario and attached
+/// `Server` draws block simulations from.
 #[derive(Default)]
 pub struct SweepRunner {
     cache: Mutex<HashMap<String, ScenarioResult>>,
+    tti_cache: Mutex<HashMap<String, CapacityReport>>,
+    blocks: Arc<BlockScheduleCache>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -36,14 +45,28 @@ impl SweepRunner {
         Self::default()
     }
 
-    /// Cache hits / misses since construction.
+    /// Cache hits / misses since construction (scenario-level, GEMM/block
+    /// and capacity scenarios combined).
     pub fn cache_stats(&self) -> (u64, u64) {
         (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
     }
 
-    /// Number of distinct configurations currently cached.
+    /// Number of distinct GEMM/block configurations currently cached.
     pub fn cache_len(&self) -> usize {
         self.cache.lock().expect("cache poisoned").len()
+    }
+
+    /// Number of distinct capacity scenarios currently cached.
+    pub fn capacity_cache_len(&self) -> usize {
+        self.tti_cache.lock().expect("cache poisoned").len()
+    }
+
+    /// The cross-run block-schedule cache this runner shares with every
+    /// scenario it executes. Hand a clone to [`crate::coordinator::Server`]
+    /// (`Server::with_cache`) to let a serving loop reuse the same block
+    /// simulations.
+    pub fn block_cache(&self) -> &Arc<BlockScheduleCache> {
+        &self.blocks
     }
 
     fn run_one(&self, s: &Scenario) -> ScenarioResult {
@@ -58,7 +81,7 @@ impl SweepRunner {
         // Simulate OUTSIDE the lock: concurrent misses on the same key race
         // benignly (both compute the identical pure result; last insert
         // wins) and long runs never serialize the other workers.
-        let r = run_scenario(s);
+        let r = run_scenario_cached(s, &self.blocks);
         self.misses.fetch_add(1, Ordering::Relaxed);
         self.cache
             .lock()
@@ -76,6 +99,44 @@ impl SweepRunner {
     /// returned in input order.
     pub fn run_parallel(&self, scenarios: &[Scenario]) -> Vec<ScenarioResult> {
         scenarios.par_iter().map(|s| self.run_one(s)).collect()
+    }
+
+    fn run_capacity_one(&self, s: &TtiScenario) -> CapacityReport {
+        let key = s.cache_key();
+        if let Some(hit) =
+            self.tti_cache.lock().expect("cache poisoned").get(&key)
+        {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            let mut r = hit.clone();
+            r.name = s.name.clone();
+            return r;
+        }
+        let r = run_capacity(s, &self.blocks);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.tti_cache
+            .lock()
+            .expect("cache poisoned")
+            .insert(key, r.clone());
+        r
+    }
+
+    /// Run every capacity scenario on the calling thread, in order.
+    pub fn run_capacity_serial(
+        &self,
+        scenarios: &[TtiScenario],
+    ) -> Vec<CapacityReport> {
+        scenarios.iter().map(|s| self.run_capacity_one(s)).collect()
+    }
+
+    /// Fan the capacity scenarios out across the rayon thread pool
+    /// (results in input order). Every run draws block simulations from
+    /// the shared [`BlockScheduleCache`], so the cost of the first AI TTI
+    /// is paid once for the whole grid.
+    pub fn run_capacity_parallel(
+        &self,
+        scenarios: &[TtiScenario],
+    ) -> Vec<CapacityReport> {
+        scenarios.par_iter().map(|s| self.run_capacity_one(s)).collect()
     }
 }
 
@@ -134,6 +195,73 @@ pub fn sweep_with_report(scenarios: &[Scenario], verify: bool) -> SweepReport {
         distinct_configs: runner.cache_len(),
         cache_hits: hits,
         results,
+    }
+}
+
+/// The payload `tensorpool capacity` emits: per-scenario capacity reports
+/// plus the serial-vs-parallel verification and the block-cache dedup
+/// accounting for the parallel run.
+#[derive(Clone, Debug, Serialize, Deserialize)]
+pub struct CapacitySweepReport {
+    /// Per-scenario reports (parallel run; verified equal to serial when
+    /// `verified_identical` is true).
+    pub reports: Vec<CapacityReport>,
+    pub num_scenarios: usize,
+    pub threads: usize,
+    pub serial_wall_s: Option<f64>,
+    pub parallel_wall_s: f64,
+    pub speedup: Option<f64>,
+    /// True when a serial reference run was performed AND produced
+    /// byte-identical per-scenario reports.
+    pub verified_identical: Option<bool>,
+    /// Distinct capacity scenarios simulated in the parallel run.
+    pub distinct_scenarios: usize,
+    /// Scenario-level cache hits (renamed duplicates) in the parallel run.
+    pub scenario_cache_hits: u64,
+    /// Distinct (arch × block × iters × schedule) simulations the shared
+    /// block cache executed for the whole parallel grid — the cross-run
+    /// dedup: without the cache this would be one per AI TTI.
+    pub distinct_block_sims: usize,
+    /// Block schedules served from the cache instead of re-simulated.
+    pub block_cache_hits: u64,
+}
+
+/// Execute a capacity grid in parallel and, when `verify` is set, also
+/// serially (each with a fresh runner, so the comparison times real
+/// simulation work) — returning the combined report.
+pub fn capacity_sweep_with_report(
+    scenarios: &[TtiScenario],
+    verify: bool,
+) -> CapacitySweepReport {
+    let (serial_wall_s, serial_reports) = if verify {
+        let runner = SweepRunner::new();
+        let t0 = Instant::now();
+        let r = runner.run_capacity_serial(scenarios);
+        (Some(t0.elapsed().as_secs_f64()), Some(r))
+    } else {
+        (None, None)
+    };
+
+    let runner = SweepRunner::new();
+    let t0 = Instant::now();
+    let reports = runner.run_capacity_parallel(scenarios);
+    let parallel_wall_s = t0.elapsed().as_secs_f64();
+    let (scenario_hits, _) = runner.cache_stats();
+    let (block_hits, _) = runner.block_cache().stats();
+
+    let verified_identical = serial_reports.as_ref().map(|s| s == &reports);
+    CapacitySweepReport {
+        num_scenarios: scenarios.len(),
+        threads: rayon::current_num_threads(),
+        serial_wall_s,
+        parallel_wall_s,
+        speedup: serial_wall_s.map(|s| s / parallel_wall_s.max(1e-12)),
+        verified_identical,
+        distinct_scenarios: runner.capacity_cache_len(),
+        scenario_cache_hits: scenario_hits,
+        distinct_block_sims: runner.block_cache().len(),
+        block_cache_hits: block_hits,
+        reports,
     }
 }
 
@@ -223,5 +351,107 @@ mod tests {
         // report serializes to JSON
         let js = serde_json::to_string(&rep).expect("report must serialize");
         assert!(js.contains("\"verified_identical\":true"));
+    }
+
+    // ---- capacity grids ---------------------------------------------------
+
+    use crate::coordinator::server::Pipeline;
+    use crate::sweep::scenario::{ArrivalPattern, TtiScenario, UserMix};
+
+    fn capacity_suite() -> Vec<TtiScenario> {
+        let knobs = ArchKnobs::default();
+        let mut out = Vec::new();
+        for (label, mix) in [
+            ("classical", UserMix::pure(Pipeline::Classical)),
+            ("neural_che", UserMix::pure(Pipeline::NeuralChe)),
+            ("mixed", UserMix { neural_receiver: 1, neural_che: 1, classical: 2 }),
+        ] {
+            for users in [1usize, 4] {
+                out.push(TtiScenario {
+                    name: format!("{label}_u{users}"),
+                    arch: knobs.clone(),
+                    mix,
+                    arrival: ArrivalPattern::Uniform,
+                    users_per_tti: users,
+                    num_ttis: 2,
+                    res_per_user: 1024,
+                    budget_cycles: None,
+                    seed: 42,
+                });
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn capacity_parallel_is_byte_identical_to_serial() {
+        let grid = capacity_suite();
+        let serial = SweepRunner::new().run_capacity_serial(&grid);
+        let parallel = SweepRunner::new().run_capacity_parallel(&grid);
+        assert_eq!(serial, parallel);
+        let names: Vec<&str> =
+            parallel.iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "classical_u1",
+                "classical_u4",
+                "neural_che_u1",
+                "neural_che_u4",
+                "mixed_u1",
+                "mixed_u4"
+            ]
+        );
+    }
+
+    #[test]
+    fn capacity_grid_shares_block_simulations() {
+        // Across the whole grid only a handful of distinct block schedules
+        // exist (dwsep+fc for NR, mha+fc for CHE, all Concurrent) — every
+        // further AI TTI must be a cache hit, not a new simulation.
+        let grid = capacity_suite();
+        let runner = SweepRunner::new();
+        let reports = runner.run_capacity_serial(&grid);
+        assert_eq!(reports.len(), 6);
+        let blocks = runner.block_cache();
+        assert!(
+            blocks.len() <= 3,
+            "only dwsep/mha/fc Concurrent schedules exist, got {}",
+            blocks.len()
+        );
+        assert_eq!(blocks.sims_run(), blocks.len() as u64);
+        let (hits, _) = blocks.stats();
+        assert!(hits > 0, "repeated AI TTIs must hit the block cache");
+    }
+
+    #[test]
+    fn capacity_report_verifies_and_serializes() {
+        let grid = capacity_suite();
+        let rep = capacity_sweep_with_report(&grid, true);
+        assert_eq!(rep.num_scenarios, 6);
+        assert_eq!(rep.reports.len(), 6);
+        assert_eq!(rep.verified_identical, Some(true));
+        assert_eq!(rep.distinct_scenarios, 6);
+        assert!(rep.distinct_block_sims <= 3);
+        let js = serde_json::to_string(&rep).expect("report must serialize");
+        assert!(js.contains("\"verified_identical\":true"));
+        let back: CapacitySweepReport =
+            serde_json::from_str(&js).expect("report must round-trip");
+        assert_eq!(back.reports, rep.reports);
+    }
+
+    #[test]
+    fn renamed_capacity_duplicates_hit_the_scenario_cache() {
+        let mut grid = capacity_suite();
+        let mut dup = grid[0].clone();
+        dup.name = "classical_u1_again".into();
+        grid.push(dup);
+        let runner = SweepRunner::new();
+        let reports = runner.run_capacity_serial(&grid);
+        let (hits, misses) = runner.cache_stats();
+        assert_eq!(hits, 1, "the renamed duplicate must be served cached");
+        assert_eq!(misses, 6);
+        assert_eq!(reports[6].name, "classical_u1_again");
+        assert_eq!(reports[6].points, reports[0].points);
     }
 }

@@ -8,11 +8,13 @@
 //! sweep engine's parallel execution byte-identical to serial execution and
 //! its result cache sound.
 
+use std::sync::Arc;
+
 use serde::{Deserialize, Serialize};
 
-use crate::coordinator::schedule::{run_concurrent, run_sequential};
+use crate::coordinator::server::{Pipeline, Server, TtiRequest};
 use crate::sim::{ArchConfig, L1Alloc, Sim};
-use crate::workload::blocks::{dwsep_conv_block, fc_softmax_block, mha_block};
+use crate::sweep::block_cache::BlockScheduleCache;
 use crate::workload::gemm::{
     map_independent, map_single, map_split, GemmRegions, GemmSpec,
 };
@@ -219,6 +221,19 @@ pub struct ScenarioResult {
 /// Run one scenario to completion. Pure and deterministic: equal scenarios
 /// (up to `name`) produce equal results on any thread, in any order.
 pub fn run_scenario(s: &Scenario) -> ScenarioResult {
+    // A throwaway cache: every block run is a (pure) miss, so the result
+    // is byte-identical to the shared-cache path the runner uses.
+    run_scenario_cached(s, &BlockScheduleCache::new())
+}
+
+/// [`run_scenario`] with a shared cross-run block-schedule cache: block
+/// workloads are recalled instead of re-simulated when an equal
+/// (arch × block × iters × mode) was already run. Results are identical
+/// either way (block runs are pure), so caching never changes a number.
+pub fn run_scenario_cached(
+    s: &Scenario,
+    blocks: &BlockScheduleCache,
+) -> ScenarioResult {
     let cfg = s.arch.apply();
     match &s.workload {
         Workload::Gemm { m, k, n, accumulate } => {
@@ -264,23 +279,7 @@ pub fn run_scenario(s: &Scenario) -> ScenarioResult {
             }
         }
         Workload::Block { kind, iters } => {
-            let mut alloc = L1Alloc::new(&cfg);
-            let block = match kind {
-                BlockKind::FcSoftmax => {
-                    fc_softmax_block(cfg.num_tes(), &mut alloc, *iters)
-                }
-                BlockKind::DwsepConv => {
-                    dwsep_conv_block(cfg.num_tes(), &mut alloc, *iters)
-                }
-                BlockKind::Mha => mha_block(cfg.num_tes(), &mut alloc),
-            };
-            let res = match s.mode {
-                ScheduleMode::Sequential => run_sequential(&cfg, &block),
-                ScheduleMode::Concurrent => run_concurrent(&cfg, &block),
-                other => {
-                    unreachable!("constructor rejects {other:?} for blocks")
-                }
-            };
+            let res = blocks.run(&cfg, *kind, *iters, s.mode);
             ScenarioResult {
                 name: s.name.clone(),
                 cycles: res.cycles,
@@ -341,6 +340,232 @@ pub fn fig7_style_scenarios(sizes: &[usize]) -> Vec<Scenario> {
         ));
     }
     out
+}
+
+// ---- TTI serving-loop scenarios (capacity study) ---------------------------
+
+/// Per-TTI user-mix weights, one per serving [`Pipeline`]. Integers (any
+/// scale) so scenarios stay hashable; a user's pipeline is drawn
+/// proportionally to the weights.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
+pub struct UserMix {
+    pub neural_receiver: u32,
+    pub neural_che: u32,
+    pub classical: u32,
+}
+
+impl UserMix {
+    /// A mix that routes every user to `p`.
+    pub fn pure(p: Pipeline) -> Self {
+        match p {
+            Pipeline::NeuralReceiver => {
+                UserMix { neural_receiver: 1, neural_che: 0, classical: 0 }
+            }
+            Pipeline::NeuralChe => {
+                UserMix { neural_receiver: 0, neural_che: 1, classical: 0 }
+            }
+            Pipeline::Classical => {
+                UserMix { neural_receiver: 0, neural_che: 0, classical: 1 }
+            }
+        }
+    }
+
+    pub fn total(&self) -> u32 {
+        self.neural_receiver + self.neural_che + self.classical
+    }
+
+    /// Pipeline of weighted slot `draw` (`draw < total()`). An all-zero
+    /// mix degrades to Classical.
+    fn pipeline_of(&self, draw: u32) -> Pipeline {
+        if draw < self.neural_receiver {
+            Pipeline::NeuralReceiver
+        } else if draw < self.neural_receiver + self.neural_che {
+            Pipeline::NeuralChe
+        } else {
+            Pipeline::Classical
+        }
+    }
+}
+
+/// How the offered load arrives over the TTIs of a scenario.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
+pub enum ArrivalPattern {
+    /// `users_per_tti` new users submitted before every TTI.
+    Uniform,
+    /// The same average load, bunched: `period × users_per_tti` users
+    /// arrive together every `period` TTIs (the backlog-drain stressor).
+    Bursty { period: u32 },
+}
+
+impl ArrivalPattern {
+    /// New users arriving before TTI `tti`.
+    pub fn arrivals(&self, tti: usize, users_per_tti: usize) -> usize {
+        match self {
+            ArrivalPattern::Uniform => users_per_tti,
+            ArrivalPattern::Bursty { period } => {
+                let p = (*period).max(1) as usize;
+                if tti % p == 0 {
+                    users_per_tti * p
+                } else {
+                    0
+                }
+            }
+        }
+    }
+}
+
+/// One point of a capacity study: a multi-TTI serving run — user-mix
+/// distribution × arrival pattern × offered load × cycle budget × arch
+/// knobs × run length. Pure data, hashable; running it
+/// ([`run_capacity`]) is a deterministic pure function, which is what
+/// lets the sweep runner parallelize capacity grids with byte-identical
+/// results and cache repeated points.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
+pub struct TtiScenario {
+    /// Display label only (the result cache keys on the content).
+    pub name: String,
+    pub arch: ArchKnobs,
+    pub mix: UserMix,
+    pub arrival: ArrivalPattern,
+    /// Offered load: new users per TTI (average, see [`ArrivalPattern`]).
+    pub users_per_tti: usize,
+    /// TTIs to simulate.
+    pub num_ttis: usize,
+    /// Resource elements each user occupies (paper reference TTI: 8192).
+    pub res_per_user: usize,
+    /// Per-TTI cycle budget; `None` = 1 ms at the configured clock
+    /// (numerology-0 slot). Tighter budgets model 5G numerologies 1/2.
+    pub budget_cycles: Option<u64>,
+    /// Seed of the deterministic per-user pipeline draw.
+    pub seed: u64,
+}
+
+impl TtiScenario {
+    /// Content key for the capacity result cache (display name excluded).
+    pub fn cache_key(&self) -> String {
+        format!(
+            "tti|{:?}|{:?}|{:?}|{}|{}|{}|{:?}|{}",
+            self.arch,
+            self.mix,
+            self.arrival,
+            self.users_per_tti,
+            self.num_ttis,
+            self.res_per_user,
+            self.budget_cycles,
+            self.seed
+        )
+    }
+}
+
+/// Per-TTI outcome of a capacity run.
+#[derive(Clone, Debug, PartialEq, Serialize, Deserialize)]
+pub struct CapacityPoint {
+    pub tti: usize,
+    /// Users submitted before this TTI.
+    pub submitted: usize,
+    pub served: usize,
+    pub deferred: usize,
+    /// Queue depth after this TTI.
+    pub backlog: usize,
+    pub cycles: u64,
+    pub deadline_met: bool,
+    pub te_utilization: f64,
+}
+
+/// Aggregate result of one [`TtiScenario`]. A pure function of the
+/// scenario content — it deliberately carries NO cache counters, so
+/// cached, uncached, serial, and parallel runs all produce byte-identical
+/// reports.
+#[derive(Clone, Debug, PartialEq, Serialize, Deserialize)]
+pub struct CapacityReport {
+    pub name: String,
+    pub users_per_tti: usize,
+    pub num_ttis: usize,
+    pub submitted_total: u64,
+    pub served_total: u64,
+    /// Fraction of TTIs whose measured cycles exceeded the budget.
+    pub deadline_miss_rate: f64,
+    /// Mean per-TTI TE utilization over the run.
+    pub mean_te_utilization: f64,
+    pub mean_cycles_per_tti: f64,
+    /// Users still queued when the run ended (saturation indicator).
+    pub final_backlog: usize,
+    pub points: Vec<CapacityPoint>,
+}
+
+fn xorshift64(state: &mut u64) -> u64 {
+    let mut x = *state;
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    *state = x;
+    x
+}
+
+/// Run one capacity scenario: drive a [`Server`] for `num_ttis` TTIs with
+/// the scenario's deterministic request stream, recording one
+/// [`CapacityPoint`] per TTI. `blocks` is the shared cross-run
+/// block-schedule cache (results are identical with or without sharing —
+/// block runs are pure — sharing only removes re-simulation).
+pub fn run_capacity(
+    s: &TtiScenario,
+    blocks: &Arc<BlockScheduleCache>,
+) -> CapacityReport {
+    let cfg = s.arch.apply();
+    let mut server = Server::with_cache(&cfg, Arc::clone(blocks));
+    if let Some(b) = s.budget_cycles {
+        server.set_budget_cycles(b);
+    }
+    let mut state = (s.seed ^ 0x9E37_79B9_7F4A_7C15).max(1);
+    let weight_total = u64::from(s.mix.total().max(1));
+    let mut next_user: u32 = 0;
+    let mut points = Vec::with_capacity(s.num_ttis);
+    let mut served_total = 0u64;
+    let mut missed = 0usize;
+    let mut util_acc = 0.0;
+    let mut cycles_acc = 0u64;
+    for tti in 0..s.num_ttis {
+        let arrivals = s.arrival.arrivals(tti, s.users_per_tti);
+        for _ in 0..arrivals {
+            let draw = (xorshift64(&mut state) % weight_total) as u32;
+            server.submit(TtiRequest {
+                user_id: next_user,
+                pipeline: s.mix.pipeline_of(draw),
+                res: s.res_per_user,
+            });
+            next_user += 1;
+        }
+        let rep = server.schedule_tti();
+        served_total += rep.served.len() as u64;
+        if !rep.deadline_met {
+            missed += 1;
+        }
+        util_acc += rep.te_utilization;
+        cycles_acc += rep.cycles;
+        points.push(CapacityPoint {
+            tti,
+            submitted: arrivals,
+            served: rep.served.len(),
+            deferred: rep.deferred.len(),
+            backlog: server.pending(),
+            cycles: rep.cycles,
+            deadline_met: rep.deadline_met,
+            te_utilization: rep.te_utilization,
+        });
+    }
+    let n = s.num_ttis.max(1) as f64;
+    CapacityReport {
+        name: s.name.clone(),
+        users_per_tti: s.users_per_tti,
+        num_ttis: s.num_ttis,
+        submitted_total: u64::from(next_user),
+        served_total,
+        deadline_miss_rate: missed as f64 / n,
+        mean_te_utilization: util_acc / n,
+        mean_cycles_per_tti: cycles_acc as f64 / n,
+        final_backlog: server.pending(),
+        points,
+    }
 }
 
 #[cfg(test)]
@@ -444,5 +669,114 @@ mod tests {
             ScheduleMode::Concurrent,
             ArchKnobs::default(),
         );
+    }
+
+    // ---- TTI capacity scenarios -------------------------------------------
+
+    fn tti(mix: UserMix, users: usize, ttis: usize) -> TtiScenario {
+        TtiScenario {
+            name: "t".into(),
+            arch: ArchKnobs::default(),
+            mix,
+            arrival: ArrivalPattern::Uniform,
+            users_per_tti: users,
+            num_ttis: ttis,
+            res_per_user: 1024,
+            budget_cycles: None,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn mix_draw_covers_all_pipelines() {
+        let mix = UserMix { neural_receiver: 1, neural_che: 1, classical: 2 };
+        assert_eq!(mix.total(), 4);
+        assert_eq!(mix.pipeline_of(0), Pipeline::NeuralReceiver);
+        assert_eq!(mix.pipeline_of(1), Pipeline::NeuralChe);
+        assert_eq!(mix.pipeline_of(2), Pipeline::Classical);
+        assert_eq!(mix.pipeline_of(3), Pipeline::Classical);
+        for p in [
+            Pipeline::NeuralReceiver,
+            Pipeline::NeuralChe,
+            Pipeline::Classical,
+        ] {
+            let pure = UserMix::pure(p);
+            assert_eq!(pure.total(), 1);
+            assert_eq!(pure.pipeline_of(0), p);
+        }
+    }
+
+    #[test]
+    fn arrival_patterns_offer_the_same_load() {
+        let uniform = ArrivalPattern::Uniform;
+        let bursty = ArrivalPattern::Bursty { period: 4 };
+        let sum = |a: &ArrivalPattern| -> usize {
+            (0..8).map(|t| a.arrivals(t, 3)).sum()
+        };
+        assert_eq!(sum(&uniform), 24);
+        assert_eq!(sum(&bursty), 24, "bursty bunches, never drops, load");
+        assert_eq!(bursty.arrivals(0, 3), 12);
+        assert_eq!(bursty.arrivals(1, 3), 0);
+    }
+
+    #[test]
+    fn tti_cache_key_ignores_name_only() {
+        let a = tti(UserMix::pure(Pipeline::Classical), 4, 2);
+        let mut b = a.clone();
+        b.name = "renamed".into();
+        assert_eq!(a.cache_key(), b.cache_key());
+        let mut c = a.clone();
+        c.users_per_tti = 5;
+        assert_ne!(a.cache_key(), c.cache_key());
+        let mut d = a.clone();
+        d.budget_cycles = Some(225_000);
+        assert_ne!(a.cache_key(), d.cache_key());
+    }
+
+    #[test]
+    fn capacity_run_is_pure_and_accounts_every_user() {
+        let s = tti(
+            UserMix { neural_receiver: 1, neural_che: 1, classical: 2 },
+            3,
+            4,
+        );
+        let blocks = Arc::new(BlockScheduleCache::new());
+        let a = run_capacity(&s, &blocks);
+        let b = run_capacity(&s, &blocks);
+        assert_eq!(a, b, "equal scenarios must produce equal reports");
+        assert_eq!(a.submitted_total, 12);
+        assert_eq!(a.points.len(), 4);
+        // conservation: served + final backlog == submitted
+        assert_eq!(
+            a.served_total + a.final_backlog as u64,
+            a.submitted_total
+        );
+        // the shared cache was reused on the second run
+        let (hits, _) = blocks.stats();
+        assert!(hits > 0, "second run must recall block schedules");
+    }
+
+    #[test]
+    fn classical_load_never_misses_the_millisecond() {
+        let s = tti(UserMix::pure(Pipeline::Classical), 4, 3);
+        let r = run_capacity(&s, &Arc::new(BlockScheduleCache::new()));
+        assert_eq!(r.deadline_miss_rate, 0.0);
+        assert_eq!(r.served_total, 12, "classical users are cheap");
+        assert_eq!(r.final_backlog, 0);
+        assert_eq!(r.mean_te_utilization, 0.0, "classical runs on PEs");
+    }
+
+    #[test]
+    fn oversubscribed_ai_load_saturates_and_backlogs() {
+        let mut s = tti(UserMix::pure(Pipeline::NeuralReceiver), 30, 3);
+        s.res_per_user = 8192; // full reference TTI per user
+        let r = run_capacity(&s, &Arc::new(BlockScheduleCache::new()));
+        assert!(r.served_total < r.submitted_total, "must saturate");
+        assert!(r.final_backlog > 0);
+        // admission is estimate-bounded: ~6 users of 150k cycles fit 1 ms
+        for p in &r.points {
+            assert!(p.served <= 7, "admitted {} users in one TTI", p.served);
+        }
+        assert!(r.mean_te_utilization > 0.0);
     }
 }

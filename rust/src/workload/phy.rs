@@ -43,13 +43,13 @@ impl PeKernel {
         let t = self.timing();
         let iters_per_pe =
             (elems as f64 / (pes * self.elems_per_iter) as f64).ceil() as u64;
-        PeWorkload {
+        PeWorkload::new(
             reads,
             writes,
-            instrs_per_pe: iters_per_pe * self.body.len() as u64,
-            ipc: t.ipc,
-            mem_fraction: t.mem_fraction,
-        }
+            iters_per_pe * self.body.len() as u64,
+            t.ipc,
+            t.mem_fraction,
+        )
     }
 }
 
