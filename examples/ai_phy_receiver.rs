@@ -16,7 +16,7 @@
 //!
 //! Run with: `cargo run --release --example ai_phy_receiver`
 
-use tensorpool::coordinator::schedule::run_concurrent;
+use tensorpool::exec::run_concurrent;
 use tensorpool::ppa::power::EnergyModel;
 use tensorpool::runtime::{default_artifacts_dir, Runtime};
 use tensorpool::sim::{ArchConfig, L1Alloc};

@@ -18,7 +18,7 @@
 use std::time::Instant;
 
 use serde::Serialize;
-use tensorpool::coordinator::{Pipeline, Server, TtiRequest};
+use tensorpool::coordinator::{BatchPolicy, Pipeline, Server, TtiRequest};
 use tensorpool::figures::capacity_figs::capacity_grid;
 use tensorpool::sim::ArchConfig;
 use tensorpool::sweep::SweepRunner;
@@ -43,6 +43,10 @@ struct GridTiming {
     parallel_speedup: f64,
     distinct_block_sims: usize,
     block_cache_hits: u64,
+    /// Total simulated cycles across every TTI of the grid — the
+    /// deterministic metric `tensorpool bench-diff` gates on (wall-clock
+    /// numbers are noisy on CI machines; cycle counts are exact).
+    grid_cycles_total: u64,
 }
 
 #[derive(Serialize)]
@@ -70,7 +74,8 @@ fn submit_ai_tti(server: &mut Server, base: u32) {
 fn main() {
     // ---- grid: serial vs parallel vs warm ---------------------------------
     let ttis = 4;
-    let grid = capacity_grid(&[1, 2, 4, 8], ttis, None, true);
+    let grid =
+        capacity_grid(&[1, 2, 4, 8], ttis, None, true, BatchPolicy::Batched);
     println!("capacity grid: {} scenarios x {} TTIs", grid.len(), ttis);
 
     let serial_runner = SweepRunner::new();
@@ -90,6 +95,10 @@ fn main() {
     assert_eq!(warm, parallel, "warm re-run must not change a number");
 
     let (block_hits, _) = runner.block_cache().stats();
+    let grid_cycles_total: u64 = parallel
+        .iter()
+        .flat_map(|r| r.points.iter().map(|p| p.cycles))
+        .sum();
     println!(
         "grid: serial {serial_wall:.3}s, parallel {parallel_wall:.3}s \
          ({:.2}x on {} threads), warm re-run {warm_wall:.4}s; {} distinct \
@@ -137,6 +146,7 @@ fn main() {
             parallel_speedup: serial_wall / parallel_wall.max(1e-12),
             distinct_block_sims: runner.block_cache().len(),
             block_cache_hits: block_hits,
+            grid_cycles_total,
         },
         serving_loop: ServingLoopTiming {
             cold_tti_wall_s: cold,

@@ -15,9 +15,8 @@
 use std::time::Instant;
 
 use serde::Serialize;
-use tensorpool::sweep::{
-    run_scenario, ArchKnobs, Scenario, ScheduleMode, SweepRunner,
-};
+use tensorpool::exec::{ArchKnobs, ScheduleMode};
+use tensorpool::sweep::{run_scenario, Scenario, SweepRunner};
 use tensorpool::workload::gemm::GemmSpec;
 
 /// The `BENCH_sim_hotpath.json` schema (see the checked-in baseline at the

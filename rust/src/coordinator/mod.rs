@@ -1,6 +1,8 @@
-//! The coordinator: maps compute blocks onto TEs/PEs/DMA and executes
-//! sequential or concurrent (double-buffered) schedules (paper Sec V-C).
-pub mod schedule;
+//! The coordinator: the Layer-3 serving loop that routes per-TTI uplink
+//! requests onto the engines. Block *execution* (sequential/concurrent
+//! schedules, paper Sec V-C) lives one layer down in [`crate::exec`]; this
+//! layer decides *what* to execute per TTI and accounts for the 1 ms
+//! deadline. Depends on `sim`/`workload`/`exec` only — never on `sweep`
+//! (enforced by `tests/layering.rs`).
 pub mod server;
-pub use schedule::{compare, run_concurrent, run_sequential, ScheduleResult};
-pub use server::{Pipeline, Server, TtiReport, TtiRequest};
+pub use server::{BatchPolicy, Pipeline, Server, TtiReport, TtiRequest};

@@ -1,0 +1,186 @@
+//! Block identity and the unified block-execution request.
+//!
+//! [`BlockRun`] is the one API every layer above `exec` uses to execute a
+//! Fig 9 compute block: (block kind × iterations × schedule mode), applied
+//! to an [`ArchConfig`], yields a [`ScheduleResult`]. The serving loop, the
+//! sweep scenarios, and the figure harnesses all build `BlockRun`s and hand
+//! them to a [`crate::exec::BlockScheduleCache`] (or call
+//! [`BlockRun::execute`] directly for an uncached run — the results are
+//! byte-identical either way).
+
+use crate::sim::{ArchConfig, L1Alloc};
+use crate::workload::blocks::{
+    dwsep_conv_block, fc_softmax_block, mha_block, BlockIter, CompBlock,
+};
+
+use super::schedule::{
+    run_concurrent, run_sequential, ScheduleMode, ScheduleResult,
+};
+use serde::{Deserialize, Serialize};
+
+/// The Fig 9 compute blocks as executable workloads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
+pub enum BlockKind {
+    FcSoftmax,
+    DwsepConv,
+    Mha,
+}
+
+/// One block-execution request: block × iterations × schedule mode.
+/// Pure data; executing it (with any cache tier or none) is a
+/// deterministic pure function of `(self, cfg)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
+pub struct BlockRun {
+    pub kind: BlockKind,
+    /// Double-bufferable iterations (ignored by [`BlockKind::Mha`], whose
+    /// pipeline has a fixed 5-stage structure).
+    pub iters: usize,
+    /// Must be [`ScheduleMode::Sequential`] or [`ScheduleMode::Concurrent`].
+    pub mode: ScheduleMode,
+}
+
+impl BlockRun {
+    pub fn new(kind: BlockKind, iters: usize, mode: ScheduleMode) -> Self {
+        assert!(!mode.is_gemm_mode(), "{mode:?} is not a block schedule mode");
+        BlockRun { kind, iters, mode }
+    }
+
+    /// Construct the block's engine-level work descriptors. Pure data
+    /// manipulation — allocates regions in a fresh (simulated) L1 but runs
+    /// no simulation, so building is cheap enough to do per cache probe.
+    pub fn build(&self, cfg: &ArchConfig) -> CompBlock {
+        let mut alloc = L1Alloc::new(cfg);
+        match self.kind {
+            BlockKind::FcSoftmax => {
+                fc_softmax_block(cfg.num_tes(), &mut alloc, self.iters)
+            }
+            BlockKind::DwsepConv => {
+                dwsep_conv_block(cfg.num_tes(), &mut alloc, self.iters)
+            }
+            BlockKind::Mha => mha_block(cfg.num_tes(), &mut alloc),
+        }
+    }
+
+    /// Simulate this block uncached (one monolithic `Sim` over all
+    /// iterations). Pure: equal `(self, cfg)` produce equal results on any
+    /// thread.
+    pub fn execute(&self, cfg: &ArchConfig) -> ScheduleResult {
+        run_built(cfg, &self.build(cfg), self.mode)
+    }
+}
+
+/// Run an already-built block under `mode` (monolithic simulation).
+pub(crate) fn run_built(
+    cfg: &ArchConfig,
+    block: &CompBlock,
+    mode: ScheduleMode,
+) -> ScheduleResult {
+    match mode {
+        ScheduleMode::Sequential => run_sequential(cfg, block),
+        ScheduleMode::Concurrent => run_concurrent(cfg, block),
+        other => panic!("{other:?} is not a block schedule mode"),
+    }
+}
+
+/// Simulate one compute block under one schedule, uncached. Pure: equal
+/// arguments produce equal results on any thread. `mode` must be
+/// [`ScheduleMode::Sequential`] or [`ScheduleMode::Concurrent`].
+pub fn simulate_block(
+    cfg: &ArchConfig,
+    kind: BlockKind,
+    iters: usize,
+    mode: ScheduleMode,
+) -> ScheduleResult {
+    BlockRun::new(kind, iters, mode).execute(cfg)
+}
+
+/// Content signature of one block iteration: everything the simulator
+/// consumes, verbatim — the TE job slots (regions, stripe/column orders,
+/// dot length), the PE traffic workload *as the schedule drivers construct
+/// it* (operand regions, instruction budget, IPC, memory fraction), and
+/// the DMA descriptors. Two iterations with equal signatures produce
+/// byte-identical simulations under the same (knobs × wheel × mode) — the
+/// soundness basis of the iteration-level memo in [`crate::exec::cache`].
+pub(crate) fn iteration_signature(cfg: &ArchConfig, it: &BlockIter) -> String {
+    use std::fmt::Write;
+    let mut sig = String::with_capacity(256);
+    write!(sig, "te:{:?}", it.te_jobs).expect("write to String");
+    match &it.pe {
+        None => sig.push_str("|pe:none"),
+        Some(pe) => {
+            // Hash the derived PeWorkload, not the kernel object: the
+            // workload is exactly what `run_sequential`/`run_concurrent`
+            // feed the injectors (kernel name and body are only inputs to
+            // this derivation).
+            let wl = pe.kernel.workload(
+                pe.elems,
+                cfg.num_pes(),
+                pe.reads.clone(),
+                pe.writes.clone(),
+            );
+            write!(sig, "|pe:{wl:?}").expect("write to String");
+        }
+    }
+    write!(sig, "|dma:{:?}", it.dma).expect("write to String");
+    sig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_run_builds_expected_iteration_counts() {
+        let cfg = ArchConfig::tensorpool();
+        let fc = BlockRun::new(BlockKind::FcSoftmax, 3, ScheduleMode::Concurrent);
+        assert_eq!(fc.build(&cfg).iters.len(), 3);
+        // MHA ignores the iteration knob: fixed 5-stage pipeline.
+        let mha = BlockRun::new(BlockKind::Mha, 9, ScheduleMode::Concurrent);
+        assert_eq!(mha.build(&cfg).iters.len(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a block schedule mode")]
+    fn block_run_rejects_gemm_modes() {
+        let _ = BlockRun::new(BlockKind::FcSoftmax, 1, ScheduleMode::SingleTe);
+    }
+
+    #[test]
+    fn iteration_signatures_are_stable_and_content_keyed() {
+        let cfg = ArchConfig::tensorpool();
+        let a = BlockRun::new(BlockKind::FcSoftmax, 2, ScheduleMode::Concurrent)
+            .build(&cfg);
+        let b = BlockRun::new(BlockKind::FcSoftmax, 2, ScheduleMode::Concurrent)
+            .build(&cfg);
+        // rebuilt blocks allocate the same regions -> identical signatures
+        for (x, y) in a.iters.iter().zip(&b.iters) {
+            assert_eq!(
+                iteration_signature(&cfg, x),
+                iteration_signature(&cfg, y)
+            );
+        }
+        // double buffering alternates regions -> distinct signatures
+        assert_ne!(
+            iteration_signature(&cfg, &a.iters[0]),
+            iteration_signature(&cfg, &a.iters[1])
+        );
+    }
+
+    #[test]
+    fn shorter_blocks_are_iteration_prefixes_of_longer_ones() {
+        // The structural basis of cross-run iteration dedup: fc(1) is the
+        // first iteration of fc(2), dwsep(1) the first of dwsep(2).
+        let cfg = ArchConfig::tensorpool();
+        for kind in [BlockKind::FcSoftmax, BlockKind::DwsepConv] {
+            let short =
+                BlockRun::new(kind, 1, ScheduleMode::Concurrent).build(&cfg);
+            let long =
+                BlockRun::new(kind, 2, ScheduleMode::Concurrent).build(&cfg);
+            assert_eq!(
+                iteration_signature(&cfg, &short.iters[0]),
+                iteration_signature(&cfg, &long.iters[0]),
+                "{kind:?}: iteration 0 must be shared"
+            );
+        }
+    }
+}

@@ -1,0 +1,618 @@
+//! The two memoization tiers of block execution.
+//!
+//! **Tier 1 — whole-block recall** (PR 2's cross-run cache, now living in
+//! `exec`): block runs are pure functions of (arch knobs × block × iters ×
+//! mode); same key, same [`ScheduleResult`], byte for byte. One
+//! [`BlockScheduleCache`] is shared (via `Arc`) by the sweep runner and any
+//! number of `Server`s, so the simulation happens once per distinct key.
+//!
+//! **Tier 2 — iteration-level memoization** (ROADMAP: "iteration-level
+//! (sub-block) memoization"): below the block level, every *iteration* of a
+//! block is itself a pure, boundary-isolated simulation — each iteration
+//! starts and ends with the memory system quiescent and the engines
+//! re-initialized, so its cycle count and counters are independent of which
+//! iterations ran before it. The cache therefore memoizes per
+//! (arch knobs × iteration signature × mode) and composes block results
+//! from per-iteration records. Blocks that share iteration structure dedup
+//! *across* block keys: `fc(1)` is the first iteration of `fc(2)`, a
+//! per-user serving mix that runs `dwsep(1)` and `dwsep(2)` simulates two
+//! iterations instead of three, and any future block reusing an existing
+//! GEMM iteration costs nothing new.
+//!
+//! Composition soundness rests on three guarded facts (all pinned by
+//! tests):
+//! * at an iteration boundary the monolithic simulation is *quiescent and
+//!   history-free* — no in-flight NoC traffic, engine streamers fully
+//!   re-initialized by `assign` (including the round-robin pointer), all
+//!   port/channel busy stamps expired (true for burst-enabled arbiters;
+//!   no-burst ablations leave a request port booked up to 4 cycles past its
+//!   last delivery, so they take the monolithic path),
+//! * all counters ([`NocStats`], [`TeRunStats`]) are additive across
+//!   disjoint time segments, with per-TE `finish_cycle` re-offset to the
+//!   segment start, and
+//! * event-wheel growth is the one non-additive counter; a segment that
+//!   grew its wheel aborts composition and falls back to the monolithic
+//!   run (`memo_fallbacks` counts these — zero for every paper workload).
+//!
+//! Determinism contract: a hit at either tier returns exactly the result a
+//! fresh monolithic simulation would produce, so cached, memoized, and
+//! uncached paths are interchangeable — `tests/serving_loop.rs` and the
+//! unit tests below pin this. Configurations NOT expressible as
+//! [`ArchKnobs`] over the TensorPool base (modified topology/frequency/
+//! bandwidths) are computed uncached rather than risking key aliasing.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::sim::{ArchConfig, NocStats, RunResult, Sim, TeRunStats};
+use crate::workload::blocks::BlockIter;
+
+use super::block::{iteration_signature, run_built, BlockKind, BlockRun};
+use super::knobs::ArchKnobs;
+use super::schedule::{
+    active_te_slots, drive_iteration, ScheduleMode, ScheduleResult,
+};
+
+/// Content key of one block-schedule simulation. `iters` is normalized to
+/// 0 for [`BlockKind::Mha`] (its pipeline has a fixed stage count and
+/// ignores the iteration knob), so differing callers still share one entry.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct BlockKey {
+    arch: ArchKnobs,
+    /// `ArchConfig::event_wheel_slots`. Timing-neutral, but part of the
+    /// key so a hit returns EXACTLY what a fresh simulation of the same
+    /// config would (its `raw.noc.wheel_growths` counter does depend on
+    /// the initial footprint).
+    wheel_slots: usize,
+    kind: BlockKind,
+    iters: usize,
+    mode: ScheduleMode,
+}
+
+/// Content key of one memoized iteration segment.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct IterKey {
+    arch: ArchKnobs,
+    wheel_slots: usize,
+    mode: ScheduleMode,
+    /// Full iteration content (see `block::iteration_signature`).
+    sig: String,
+}
+
+/// Result of simulating ONE block iteration on a fresh `Sim`: the raw
+/// counters plus the busy spans the schedule drivers account per
+/// iteration. Everything needed to compose a block-level
+/// [`ScheduleResult`] without re-simulating.
+#[derive(Clone, Debug)]
+struct IterOutcome {
+    raw: RunResult,
+    pe_busy: u64,
+    dma_busy: u64,
+}
+
+/// Simulate one iteration in isolation: the SAME `drive_iteration` body
+/// the monolithic drivers loop over a shared `Sim`, here run on a fresh
+/// one — identical by construction, not by parallel maintenance.
+fn simulate_iteration(
+    cfg: &ArchConfig,
+    it: &BlockIter,
+    mode: ScheduleMode,
+) -> IterOutcome {
+    let mut sim = Sim::new(cfg);
+    let (pe_busy, dma_busy) = drive_iteration(&mut sim, it, mode);
+    IterOutcome { raw: sim.result(), pe_busy, dma_busy }
+}
+
+/// Stitch per-iteration outcomes back into the block-level result
+/// `finalize` would have produced from one monolithic run: cycles and all
+/// counters sum across segments, per-TE finish cycles are re-offset to
+/// each segment's start, and the utilization math matches
+/// `schedule::finalize` exactly.
+fn compose(
+    cfg: &ArchConfig,
+    mode: ScheduleMode,
+    te_engines: usize,
+    outcomes: &[IterOutcome],
+) -> ScheduleResult {
+    let mut tes = vec![TeRunStats::default(); cfg.num_tes()];
+    let mut noc = NocStats::default();
+    let mut cycles = 0u64;
+    let mut total_macs = 0u64;
+    let mut pe_busy = 0u64;
+    let mut dma_busy = 0u64;
+    for o in outcomes {
+        for (acc, seg) in tes.iter_mut().zip(&o.raw.tes) {
+            // Exhaustive destructuring (like NocStats below): adding a
+            // TeRunStats field breaks this line, forcing the composition
+            // to account for it.
+            let TeRunStats {
+                busy_cycles,
+                finish_cycle,
+                macs,
+                stall_wait_x,
+                stall_wait_w,
+                stall_wait_y,
+                stall_z_full,
+            } = seg;
+            acc.busy_cycles += busy_cycles;
+            acc.macs += macs;
+            acc.stall_wait_x += stall_wait_x;
+            acc.stall_wait_w += stall_wait_w;
+            acc.stall_wait_y += stall_wait_y;
+            acc.stall_z_full += stall_z_full;
+            if *finish_cycle > 0 {
+                // The monolithic run records the LAST drain transition per
+                // TE, at an absolute time = segment offset + in-segment
+                // finish.
+                acc.finish_cycle = cycles + finish_cycle;
+            }
+        }
+        // Exhaustive destructuring: adding a NocStats field breaks this
+        // line, forcing the composition to account for it.
+        let NocStats {
+            reads_issued,
+            writes_issued,
+            bank_word_services,
+            bank_conflict_waits,
+            port_grants,
+            port_wait_cycles,
+            resp_beats,
+            resp_wait_cycles,
+            local_hits,
+            wheel_growths,
+        } = &o.raw.noc;
+        noc.reads_issued += reads_issued;
+        noc.writes_issued += writes_issued;
+        noc.bank_word_services += bank_word_services;
+        noc.bank_conflict_waits += bank_conflict_waits;
+        noc.port_grants += port_grants;
+        noc.port_wait_cycles += port_wait_cycles;
+        noc.resp_beats += resp_beats;
+        noc.resp_wait_cycles += resp_wait_cycles;
+        noc.local_hits += local_hits;
+        noc.wheel_growths += wheel_growths;
+        total_macs += o.raw.total_macs;
+        pe_busy += o.pe_busy;
+        dma_busy += o.dma_busy;
+        cycles += o.raw.cycles;
+    }
+    let denom = cycles.max(1);
+    let te_util = if te_engines == 0 {
+        0.0
+    } else {
+        total_macs as f64
+            / (denom as f64 * (te_engines * cfg.te.macs_per_cycle()) as f64)
+    };
+    ScheduleResult {
+        name: match mode {
+            ScheduleMode::Sequential => "sequential",
+            ScheduleMode::Concurrent => "concurrent",
+            other => panic!("{other:?} is not a block schedule mode"),
+        }
+        .to_string(),
+        cycles,
+        te_utilization: te_util,
+        pe_utilization: pe_busy as f64 / denom as f64,
+        dma_utilization: dma_busy as f64 / denom as f64,
+        te_macs: total_macs,
+        raw: RunResult { cycles, tes, noc, total_macs },
+    }
+}
+
+/// Thread-safe memo of block-schedule simulations, shared (via `Arc`)
+/// between the sweep runner and any number of [`crate::coordinator::Server`]s.
+pub struct BlockScheduleCache {
+    blocks: Mutex<HashMap<BlockKey, ScheduleResult>>,
+    iter_memo: Mutex<HashMap<IterKey, IterOutcome>>,
+    /// When false, tier 2 is disabled and block-level misses run the
+    /// monolithic simulation (the PR 2 behavior) — used by the regression
+    /// tests that pin memoized == block-level == uncached.
+    iter_memo_enabled: bool,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    /// Runs for configs not expressible as sweep knobs (computed uncached).
+    uncacheable: AtomicU64,
+    iter_hits: AtomicU64,
+    iter_misses: AtomicU64,
+    /// Raw iteration segments actually simulated, whichever path ran them:
+    /// memoized blocks count their segment misses, monolithic runs count
+    /// their full iteration lists. The comparable "raw simulation work"
+    /// metric the ISSUE's acceptance criterion is stated in.
+    iters_simulated: AtomicU64,
+    /// Memoized compositions aborted because a segment grew its event
+    /// wheel (falls back to the monolithic run; zero for paper workloads).
+    memo_fallbacks: AtomicU64,
+}
+
+impl Default for BlockScheduleCache {
+    fn default() -> Self {
+        BlockScheduleCache {
+            blocks: Mutex::new(HashMap::new()),
+            iter_memo: Mutex::new(HashMap::new()),
+            iter_memo_enabled: true,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            uncacheable: AtomicU64::new(0),
+            iter_hits: AtomicU64::new(0),
+            iter_misses: AtomicU64::new(0),
+            iters_simulated: AtomicU64::new(0),
+            memo_fallbacks: AtomicU64::new(0),
+        }
+    }
+}
+
+impl BlockScheduleCache {
+    /// Both tiers enabled (whole-block recall + iteration-level memo).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Tier 1 only — the PR 2 block-level cache. Misses run the monolithic
+    /// simulation. Exists for the regression tests pinning that the memo
+    /// is semantically invisible (and for A/B accounting of its dedup).
+    pub fn block_level_only() -> Self {
+        BlockScheduleCache { iter_memo_enabled: false, ..Self::default() }
+    }
+
+    /// (hits, misses) since construction — block-level tier. Uncacheable
+    /// runs count as neither; see [`BlockScheduleCache::sims_run`].
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Total block simulations actually executed (block-level misses +
+    /// uncacheable runs) — the counter the "second identical TTI performs
+    /// zero new block simulations" regression pins. A memoized block run
+    /// composed entirely from cached iterations still counts as one block
+    /// simulation here; see [`BlockScheduleCache::iterations_simulated`]
+    /// for the sub-block accounting.
+    pub fn sims_run(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+            + self.uncacheable.load(Ordering::Relaxed)
+    }
+
+    /// (iteration-memo hits, iteration-memo misses) since construction.
+    pub fn iter_stats(&self) -> (u64, u64) {
+        (
+            self.iter_hits.load(Ordering::Relaxed),
+            self.iter_misses.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Raw iteration segments simulated since construction, across every
+    /// path (memoized segment misses + the iteration lists of monolithic
+    /// and uncacheable runs). The unit in which the iteration memo is
+    /// strictly cheaper than block-level caching alone.
+    pub fn iterations_simulated(&self) -> u64 {
+        self.iters_simulated.load(Ordering::Relaxed)
+    }
+
+    /// Memoized compositions that fell back to a monolithic run because a
+    /// segment grew its event wheel.
+    pub fn memo_fallbacks(&self) -> u64 {
+        self.memo_fallbacks.load(Ordering::Relaxed)
+    }
+
+    /// Distinct block-schedule configurations currently cached (tier 1).
+    pub fn len(&self) -> usize {
+        self.blocks.lock().expect("block cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Distinct iteration segments currently memoized (tier 2).
+    pub fn iter_memo_len(&self) -> usize {
+        self.iter_memo.lock().expect("iter memo poisoned").len()
+    }
+
+    /// Run (or recall) one block schedule. Equal (config, run) always
+    /// yields the identical `ScheduleResult` — cached, memoized, or
+    /// simulated fresh.
+    pub fn run(&self, cfg: &ArchConfig, run: BlockRun) -> ScheduleResult {
+        let knobs = ArchKnobs::from_config(cfg);
+        let mut base = knobs.apply();
+        // The event-wheel footprint is a simulator-only, timing-neutral
+        // knob (the wheel grows as needed; `noc` tests pin that its size
+        // never changes a number), so it must not disqualify caching —
+        // it is carried in the key instead (see `BlockKey::wheel_slots`).
+        base.event_wheel_slots = cfg.event_wheel_slots;
+        if &base != cfg {
+            // Not expressible as knobs over the TensorPool base: a knob
+            // key would alias distinct configs, so skip the cache.
+            self.uncacheable.fetch_add(1, Ordering::Relaxed);
+            let block = run.build(cfg);
+            self.iters_simulated
+                .fetch_add(block.iters.len() as u64, Ordering::Relaxed);
+            return run_built(cfg, &block, run.mode);
+        }
+        let key = BlockKey {
+            arch: knobs.clone(),
+            wheel_slots: cfg.event_wheel_slots,
+            kind: run.kind,
+            iters: if run.kind == BlockKind::Mha { 0 } else { run.iters },
+            mode: run.mode,
+        };
+        if let Some(hit) =
+            self.blocks.lock().expect("block cache poisoned").get(&key)
+        {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return hit.clone();
+        }
+        // Simulate OUTSIDE the lock (same benign-race policy as the
+        // scenario cache: concurrent misses on one key compute the same
+        // pure result; last insert wins).
+        let r = if self.iter_memo_enabled && cfg.burst {
+            self.run_memoized(cfg, &knobs, &run)
+        } else {
+            // No-burst configs keep a request port booked up to 4 cycles
+            // past its final delivery, so iteration boundaries are not
+            // history-free — monolithic only.
+            let block = run.build(cfg);
+            self.iters_simulated
+                .fetch_add(block.iters.len() as u64, Ordering::Relaxed);
+            run_built(cfg, &block, run.mode)
+        };
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.blocks
+            .lock()
+            .expect("block cache poisoned")
+            .insert(key, r.clone());
+        r
+    }
+
+    /// Tier 2: build the block, recall or simulate each iteration
+    /// independently, compose. Falls back to the monolithic simulation if
+    /// any segment grew its event wheel (growth persists across a
+    /// monolithic run's iterations, so its counter is not additive).
+    fn run_memoized(
+        &self,
+        cfg: &ArchConfig,
+        knobs: &ArchKnobs,
+        run: &BlockRun,
+    ) -> ScheduleResult {
+        let block = run.build(cfg);
+        let te_engines = block
+            .iters
+            .iter()
+            .map(active_te_slots)
+            .max()
+            .unwrap_or(0);
+        let mut outcomes = Vec::with_capacity(block.iters.len());
+        let mut grew = false;
+        for it in &block.iters {
+            let key = IterKey {
+                arch: knobs.clone(),
+                wheel_slots: cfg.event_wheel_slots,
+                mode: run.mode,
+                sig: iteration_signature(cfg, it),
+            };
+            let hit = self
+                .iter_memo
+                .lock()
+                .expect("iter memo poisoned")
+                .get(&key)
+                .cloned();
+            let outcome = match hit {
+                Some(o) => {
+                    self.iter_hits.fetch_add(1, Ordering::Relaxed);
+                    o
+                }
+                None => {
+                    // Simulate outside the lock; concurrent misses on one
+                    // segment race benignly (identical pure results).
+                    let o = simulate_iteration(cfg, it, run.mode);
+                    self.iter_misses.fetch_add(1, Ordering::Relaxed);
+                    self.iters_simulated.fetch_add(1, Ordering::Relaxed);
+                    self.iter_memo
+                        .lock()
+                        .expect("iter memo poisoned")
+                        .insert(key, o.clone());
+                    o
+                }
+            };
+            grew |= outcome.raw.noc.wheel_growths > 0;
+            outcomes.push(outcome);
+        }
+        if grew {
+            self.memo_fallbacks.fetch_add(1, Ordering::Relaxed);
+            self.iters_simulated
+                .fetch_add(block.iters.len() as u64, Ordering::Relaxed);
+            return run_built(cfg, &block, run.mode);
+        }
+        compose(cfg, run.mode, te_engines, &outcomes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::block::simulate_block;
+    use super::*;
+
+    #[test]
+    fn repeat_runs_hit_and_match() {
+        let cfg = ArchConfig::tensorpool();
+        let cache = BlockScheduleCache::new();
+        let fc = BlockRun::new(BlockKind::FcSoftmax, 1, ScheduleMode::Concurrent);
+        let a = cache.run(&cfg, fc);
+        let b = cache.run(&cfg, fc);
+        assert_eq!(cache.stats(), (1, 1));
+        assert_eq!(cache.sims_run(), 1);
+        assert_eq!(a, b);
+        // and the cached result matches a fresh uncached simulation
+        let fresh =
+            simulate_block(&cfg, BlockKind::FcSoftmax, 1, ScheduleMode::Concurrent);
+        assert_eq!(a, fresh);
+    }
+
+    #[test]
+    fn memoized_blocklevel_and_uncached_runs_are_byte_identical() {
+        // THE determinism pin of the exec layer: for every block kind and
+        // both schedules, the iteration-composed result equals the
+        // block-level-cached result equals the monolithic uncached run —
+        // full `ScheduleResult` equality, `raw` counters included.
+        let cfg = ArchConfig::tensorpool();
+        for kind in [BlockKind::FcSoftmax, BlockKind::DwsepConv, BlockKind::Mha]
+        {
+            for mode in [ScheduleMode::Sequential, ScheduleMode::Concurrent] {
+                for iters in [1usize, 2, 3] {
+                    let run = BlockRun::new(kind, iters, mode);
+                    let uncached = run.execute(&cfg);
+                    let memo = BlockScheduleCache::new().run(&cfg, run);
+                    let block_level =
+                        BlockScheduleCache::block_level_only().run(&cfg, run);
+                    assert_eq!(
+                        memo, uncached,
+                        "{kind:?}/{mode:?}/iters={iters}: memoized result \
+                         diverged from the monolithic run"
+                    );
+                    assert_eq!(
+                        block_level, uncached,
+                        "{kind:?}/{mode:?}/iters={iters}: block-level cache \
+                         diverged from the monolithic run"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn memoized_runs_match_uncached_across_ablation_knobs() {
+        // The memo engages for EVERY knob-expressible burst config, not
+        // just the paper point — so the byte-identity pin must cover the
+        // ablation axes too (K/J widening, in-order streamer, small
+        // Z-FIFO). A knob that violated the iteration-boundary quiescence
+        // assumption the way no-burst does would be caught here.
+        let knob_points = [
+            ArchKnobs::default().with_kj(1, 1),
+            ArchKnobs::default().with_kj(2, 1),
+            ArchKnobs::default().without_rob(),
+            ArchKnobs { z_fifo_depth: 8, ..ArchKnobs::default() },
+        ];
+        for knobs in knob_points {
+            let cfg = knobs.apply();
+            for mode in [ScheduleMode::Sequential, ScheduleMode::Concurrent] {
+                let run = BlockRun::new(BlockKind::FcSoftmax, 2, mode);
+                let memo = BlockScheduleCache::new().run(&cfg, run);
+                assert_eq!(
+                    memo,
+                    run.execute(&cfg),
+                    "{knobs:?}/{mode:?}: memoized result diverged from \
+                     the monolithic run"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn iteration_memo_dedups_across_iteration_counts() {
+        // fc(2) = [A, B]; fc(1) = [A]; fc(3) = [A, B, A]. After fc(2), the
+        // other two cost ZERO new iteration simulations — the dedup the
+        // block-level tier cannot see (distinct keys, full re-simulation).
+        let cfg = ArchConfig::tensorpool();
+        let cache = BlockScheduleCache::new();
+        let run2 = BlockRun::new(BlockKind::FcSoftmax, 2, ScheduleMode::Concurrent);
+        cache.run(&cfg, run2);
+        assert_eq!(cache.iterations_simulated(), 2);
+        assert_eq!(cache.iter_memo_len(), 2);
+        let run1 = BlockRun::new(BlockKind::FcSoftmax, 1, ScheduleMode::Concurrent);
+        let run3 = BlockRun::new(BlockKind::FcSoftmax, 3, ScheduleMode::Concurrent);
+        cache.run(&cfg, run1);
+        cache.run(&cfg, run3);
+        assert_eq!(
+            cache.iterations_simulated(),
+            2,
+            "fc(1) and fc(3) must be composed entirely from fc(2)'s segments"
+        );
+        assert_eq!(cache.sims_run(), 3, "three distinct block keys");
+        let (iter_hits, iter_misses) = cache.iter_stats();
+        assert_eq!(iter_misses, 2);
+        assert_eq!(iter_hits, 4, "fc(1): 1 recall, fc(3): 3 recalls");
+        // And the composed results are exactly the monolithic ones.
+        assert_eq!(cache.run(&cfg, run1), run1.execute(&cfg));
+        assert_eq!(cache.run(&cfg, run3), run3.execute(&cfg));
+        assert_eq!(cache.memo_fallbacks(), 0);
+    }
+
+    #[test]
+    fn mha_iters_normalize_to_one_entry() {
+        let cfg = ArchConfig::tensorpool();
+        let cache = BlockScheduleCache::new();
+        let a = cache
+            .run(&cfg, BlockRun::new(BlockKind::Mha, 1, ScheduleMode::Concurrent));
+        let b = cache
+            .run(&cfg, BlockRun::new(BlockKind::Mha, 7, ScheduleMode::Concurrent));
+        assert_eq!(cache.len(), 1, "MHA ignores iters; keys must collapse");
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn distinct_modes_and_knobs_do_not_alias() {
+        let cfg = ArchConfig::tensorpool();
+        let cache = BlockScheduleCache::new();
+        let fc = |mode| BlockRun::new(BlockKind::FcSoftmax, 1, mode);
+        cache.run(&cfg, fc(ScheduleMode::Sequential));
+        cache.run(&cfg, fc(ScheduleMode::Concurrent));
+        cache.run(&cfg.clone().without_burst(), fc(ScheduleMode::Concurrent));
+        assert_eq!(cache.len(), 3);
+        assert_eq!(cache.stats(), (0, 3));
+    }
+
+    #[test]
+    fn non_knob_configs_bypass_the_cache() {
+        // A modified topology is not expressible as ArchKnobs: it must be
+        // computed uncached (and still be correct), never cached under an
+        // aliasing key.
+        let mut cfg = ArchConfig::tensorpool();
+        cfg.lat_remote = 6;
+        let cache = BlockScheduleCache::new();
+        let run = BlockRun::new(BlockKind::FcSoftmax, 1, ScheduleMode::Concurrent);
+        let a = cache.run(&cfg, run);
+        let b = cache.run(&cfg, run);
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.stats(), (0, 0));
+        assert_eq!(cache.sims_run(), 2);
+        assert_eq!(a, b, "uncached runs are still pure");
+    }
+
+    #[test]
+    fn no_burst_configs_take_the_monolithic_path() {
+        // Without burst grouping a request port stays booked past its last
+        // delivery, so iteration boundaries are not history-free; the memo
+        // must not engage (and the block-level tier still works).
+        let cfg = ArchConfig::tensorpool().without_burst();
+        let cache = BlockScheduleCache::new();
+        let run = BlockRun::new(BlockKind::FcSoftmax, 2, ScheduleMode::Concurrent);
+        let a = cache.run(&cfg, run);
+        assert_eq!(cache.iter_memo_len(), 0, "memo must not engage");
+        assert_eq!(cache.iterations_simulated(), 2, "monolithic: 2 iters");
+        let b = cache.run(&cfg, run);
+        assert_eq!(cache.stats(), (1, 1));
+        assert_eq!(a, b);
+        assert_eq!(a, run.execute(&cfg));
+    }
+
+    #[test]
+    fn wheel_footprint_does_not_disable_the_cache() {
+        // event_wheel_slots is timing-neutral (simulator footprint only):
+        // a config differing ONLY in it must still cache — and must
+        // produce the same numbers as the default-footprint config.
+        let mut cfg = ArchConfig::tensorpool();
+        cfg.event_wheel_slots = 65_536;
+        let cache = BlockScheduleCache::new();
+        let run = BlockRun::new(BlockKind::FcSoftmax, 1, ScheduleMode::Concurrent);
+        let a = cache.run(&cfg, run);
+        let b = cache.run(&cfg, run);
+        assert_eq!(cache.stats(), (1, 1), "second run must be a hit");
+        assert_eq!(a.cycles, b.cycles);
+        let default_run = simulate_block(
+            &ArchConfig::tensorpool(),
+            BlockKind::FcSoftmax,
+            1,
+            ScheduleMode::Concurrent,
+        );
+        assert_eq!(a.cycles, default_run.cycles, "wheel size is timing-neutral");
+    }
+}

@@ -1,0 +1,91 @@
+//! The sweepable architecture knobs, as plain hashable data.
+//!
+//! [`ArchKnobs`] is the content-addressable face of an [`ArchConfig`]: the
+//! handful of parameters the paper ablates (K/J channel widening, burst
+//! grouping, streamer ROB depth, Z-FIFO depth) over the fixed TensorPool
+//! base. Keeping them as a small POD struct is what makes scenario keys and
+//! block-cache keys exactly comparable — everything not listed here
+//! (topology, frequency, bandwidths) stays at the paper's values.
+
+use serde::{Deserialize, Serialize};
+
+use crate::sim::ArchConfig;
+
+/// The architecture knobs a sweep may vary, as plain hashable data.
+/// `apply()` expands them over the paper's TensorPool instance; everything
+/// not listed here (topology, frequency, bandwidths) stays at the paper's
+/// values so scenario keys remain small and exactly comparable.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
+pub struct ArchKnobs {
+    /// Response-grouping factor K (paper nominal: 4).
+    pub resp_k: usize,
+    /// Request-widening factor J (paper nominal: 2).
+    pub req_j: usize,
+    /// Burst support at the Tile arbiters.
+    pub burst: bool,
+    /// Streamer reorder-buffer depth (1 = in-order ablation).
+    pub rob_depth: usize,
+    /// Z-FIFO depth (outstanding wide writes).
+    pub z_fifo_depth: usize,
+}
+
+impl Default for ArchKnobs {
+    fn default() -> Self {
+        ArchKnobs::from_config(&ArchConfig::tensorpool())
+    }
+}
+
+impl ArchKnobs {
+    /// Capture the sweepable knobs of an existing configuration.
+    pub fn from_config(cfg: &ArchConfig) -> Self {
+        ArchKnobs {
+            resp_k: cfg.resp_k,
+            req_j: cfg.req_j,
+            burst: cfg.burst,
+            rob_depth: cfg.rob_depth,
+            z_fifo_depth: cfg.z_fifo_depth,
+        }
+    }
+
+    /// Expand into a full configuration (TensorPool base + these knobs).
+    pub fn apply(&self) -> ArchConfig {
+        let mut cfg = ArchConfig::tensorpool();
+        cfg.resp_k = self.resp_k;
+        cfg.req_j = self.req_j;
+        cfg.burst = self.burst;
+        cfg.rob_depth = self.rob_depth;
+        cfg.z_fifo_depth = self.z_fifo_depth;
+        cfg
+    }
+
+    pub fn with_kj(mut self, k: usize, j: usize) -> Self {
+        self.resp_k = k;
+        self.req_j = j;
+        self
+    }
+
+    pub fn without_burst(mut self) -> Self {
+        self.burst = false;
+        self
+    }
+
+    pub fn without_rob(mut self) -> Self {
+        self.rob_depth = 1;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knobs_round_trip_through_config() {
+        let knobs = ArchKnobs::default().with_kj(2, 1).without_burst();
+        let cfg = knobs.apply();
+        assert_eq!(cfg.resp_k, 2);
+        assert_eq!(cfg.req_j, 1);
+        assert!(!cfg.burst);
+        assert_eq!(ArchKnobs::from_config(&cfg), knobs);
+    }
+}

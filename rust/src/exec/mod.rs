@@ -1,0 +1,39 @@
+//! The execution layer: the single home of compute-block execution.
+//!
+//! Everything that turns a Fig 9 compute block into cycle numbers lives
+//! here — the block identities ([`BlockKind`]), the schedule modes
+//! ([`ScheduleMode`]), the sweepable architecture knobs ([`ArchKnobs`]),
+//! the sequential/concurrent schedule drivers ([`run_sequential`],
+//! [`run_concurrent`]), the unified [`BlockRun`] request (block × iters ×
+//! mode × config → [`ScheduleResult`]), and the two memoization tiers of
+//! [`BlockScheduleCache`] (whole-block recall + iteration-level dedup).
+//!
+//! **Layering contract** (enforced by `tests/layering.rs`): the crate's
+//! dependency graph is strictly one-way,
+//!
+//! ```text
+//! sim → workload → exec → coordinator → sweep → figures / CLI
+//! ```
+//!
+//! `exec` depends only on [`crate::sim`] and [`crate::workload`]; it must
+//! never import `crate::coordinator` or `crate::sweep`. The serving loop
+//! (`coordinator::server`) and the sweep engine both consume block
+//! execution through this module, which is what lets a `Server` and a
+//! `SweepRunner` share one [`BlockScheduleCache`] without a dependency
+//! cycle (PR 2 had `coordinator ↔ sweep` pointing both ways).
+//!
+//! Determinism contract: every entry point here is a pure function of its
+//! arguments — equal (config × block × iters × mode) produce byte-identical
+//! [`ScheduleResult`]s on any thread, cached, memoized, or neither.
+
+pub mod block;
+pub mod cache;
+pub mod knobs;
+pub mod schedule;
+
+pub use block::{simulate_block, BlockKind, BlockRun};
+pub use cache::BlockScheduleCache;
+pub use knobs::ArchKnobs;
+pub use schedule::{
+    compare, run_concurrent, run_sequential, ScheduleMode, ScheduleResult,
+};

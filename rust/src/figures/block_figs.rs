@@ -6,11 +6,10 @@
 //! then folded into a [`Fig10Row`]. Per-point numbers are byte-identical to
 //! the old serial loop.
 
+use crate::exec::{ArchKnobs, BlockKind, ScheduleMode};
 use crate::report::{int, pct, Table};
 use crate::sim::ArchConfig;
-use crate::sweep::{
-    ArchKnobs, BlockKind, Scenario, ScenarioResult, ScheduleMode, SweepRunner,
-};
+use crate::sweep::{Scenario, ScenarioResult, SweepRunner};
 
 /// Results for one block, both schedules.
 #[derive(Clone, Debug)]

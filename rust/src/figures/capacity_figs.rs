@@ -10,10 +10,11 @@
 //! estimate-bounded, so past the capacity knee the backlog grows while
 //! served users plateau), and mean TE utilization.
 
+use crate::coordinator::BatchPolicy;
+use crate::exec::ArchKnobs;
 use crate::report::{f2, int, pct, Table};
 use crate::sweep::{
-    ArchKnobs, ArrivalPattern, CapacityReport, SweepRunner, TtiScenario,
-    UserMix,
+    ArrivalPattern, CapacityReport, SweepRunner, TtiScenario, UserMix,
 };
 
 /// The three serving pipelines as pure user mixes, in display order.
@@ -42,11 +43,15 @@ pub const MIXED_MIX: (&str, UserMix) = (
 /// Build the users-per-TTI × pipeline-mix grid. Every user occupies the
 /// paper's full 8192-RE reference TTI (the demanding Sec V-B use case).
 /// `budget_cycles`: per-TTI budget override (`None` = 1 ms at the clock).
+/// `policy`: how AI blocks scale across a TTI's users (`Batched` = the
+/// optimistic one-pass-per-kind view; `PerUser` = per-user passes, the
+/// deadline-realistic view the `--per-user` CLI flag selects).
 pub fn capacity_grid(
     users: &[usize],
     num_ttis: usize,
     budget_cycles: Option<u64>,
     include_mixed: bool,
+    policy: BatchPolicy,
 ) -> Vec<TtiScenario> {
     let knobs = ArchKnobs::default();
     let mut mixes: Vec<(&str, UserMix)> = PIPELINE_MIXES.to_vec();
@@ -65,6 +70,7 @@ pub fn capacity_grid(
                 num_ttis,
                 res_per_user: 8192,
                 budget_cycles,
+                policy,
                 seed: 0xC0FFEE,
             });
         }
@@ -78,7 +84,13 @@ pub fn capacity_rows(
     num_ttis: usize,
     runner: &SweepRunner,
 ) -> Vec<CapacityReport> {
-    runner.run_capacity_parallel(&capacity_grid(users, num_ttis, None, true))
+    runner.run_capacity_parallel(&capacity_grid(
+        users,
+        num_ttis,
+        None,
+        true,
+        BatchPolicy::Batched,
+    ))
 }
 
 /// The users-per-TTI vs deadline table (one row per grid point).
@@ -114,14 +126,22 @@ mod tests {
 
     #[test]
     fn grid_covers_mixes_by_users() {
-        let g = capacity_grid(&[1, 4, 16], 4, None, true);
+        let g =
+            capacity_grid(&[1, 4, 16], 4, None, true, BatchPolicy::Batched);
         assert_eq!(g.len(), 12); // (3 pipelines + mixed) x 3 loads
         let keys: std::collections::HashSet<String> =
             g.iter().map(|s| s.cache_key()).collect();
         assert_eq!(keys.len(), 12, "every grid point is distinct");
-        let g2 = capacity_grid(&[1, 4], 4, Some(225_000), false);
+        let g2 = capacity_grid(
+            &[1, 4],
+            4,
+            Some(225_000),
+            false,
+            BatchPolicy::PerUser,
+        );
         assert_eq!(g2.len(), 6);
         assert!(g2.iter().all(|s| s.budget_cycles == Some(225_000)));
+        assert!(g2.iter().all(|s| s.policy == BatchPolicy::PerUser));
     }
 
     #[test]

@@ -7,10 +7,9 @@
 //! per-point numbers byte-identical to the old serial loops (each point is
 //! an independent, deterministic `Sim` run).
 
+use crate::exec::{ArchKnobs, ScheduleMode};
 use crate::report::{f2, int, pct, Table};
-use crate::sweep::{
-    independent_gemm_side, ArchKnobs, Scenario, ScheduleMode, SweepRunner,
-};
+use crate::sweep::{independent_gemm_side, Scenario, SweepRunner};
 use crate::workload::gemm::GemmSpec;
 
 /// One Fig 5 sweep point.

@@ -12,8 +12,12 @@
 //! * [`workload`] — GEMM mapping across 16 TEs (incl. the interleaved-W
 //!   scheme of Fig 6), PHY kernel instruction streams, and the Fig 9
 //!   compute blocks.
-//! * [`coordinator`] — sequential vs concurrent (double-buffered) TE/PE/DMA
-//!   schedules and the model-graph mapper.
+//! * [`exec`] — the block-execution layer: sequential vs concurrent
+//!   (double-buffered) TE/PE/DMA schedules, the unified `BlockRun` API,
+//!   and the two-tier block-schedule cache (whole-block recall +
+//!   iteration-level memoization).
+//! * [`coordinator`] — the TTI serving loop (per-user pipeline routing,
+//!   admission, deadline accounting) on top of `exec`.
 //! * [`ppa`] — analytical power/performance/area models: Kung memory
 //!   balances (Eqs 1–6), area/power breakdowns (Figs 12/13), and the 2D vs
 //!   3D routing-channel model (Eqs 7–8, Fig 15).
@@ -26,6 +30,7 @@
 //! * [`report`] — table/series printers matching the paper's figures.
 
 pub mod coordinator;
+pub mod exec;
 pub mod figures;
 pub mod models;
 pub mod ppa;

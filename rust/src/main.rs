@@ -32,13 +32,22 @@ COMMANDS:
             the serial reference, verifies byte-identical per-scenario
             results, and reports the wall-clock speedup.
   capacity [--users U1,U2,..] [--ttis N] [--budget-us B] [--no-mixed]
-           [--out <path>] [--no-verify] [--smoke]
+           [--per-user] [--out <path>] [--no-verify] [--smoke]
             run the TTI serving loop over a users-per-TTI x pipeline-mix
             grid on the sweep engine (shared cross-run block-schedule
             cache) and emit a machine-readable capacity report: deadline
             miss rate, served throughput, backlog, TE utilization per
             point. Verifies parallel == serial byte-identity by default.
-            --smoke runs a 2-point grid for CI.
+            --per-user scales AI blocks per user (res-proportional
+            iteration counts) instead of one batched pass per pipeline
+            kind, the deadline-realistic view. --smoke runs a 2-point
+            grid for CI.
+  bench-diff --baseline <file> --current <file> [--threshold PCT]
+            compare two perf-trajectory JSONs (BENCH_*.json) and exit
+            nonzero if any deterministic cycle-count metric regressed by
+            more than PCT percent (default 5). Wall-clock fields are
+            reported but never gate. Null baselines (schema stubs awaiting
+            their first measured run) pass vacuously.
   artifacts [--dir <path>]
             list the AOT artifacts and validate the manifest
   run --name <artifact> [--dir <path>]
@@ -63,6 +72,7 @@ fn main() {
         "simulate" => simulate(rest),
         "sweep" => sweep(rest),
         "capacity" => capacity(rest),
+        "bench-diff" => bench_diff(rest),
         "artifacts" => artifacts(rest),
         "run" => run_artifact(rest),
         "help" | "--help" | "-h" => {
@@ -335,11 +345,21 @@ fn capacity(rest: &[String]) -> i32 {
         },
     };
     let verify = !has(rest, "--no-verify");
-    let grid =
-        capacity_grid(&users, num_ttis, budget_cycles, !has(rest, "--no-mixed"));
+    let policy = if has(rest, "--per-user") {
+        tensorpool::coordinator::BatchPolicy::PerUser
+    } else {
+        tensorpool::coordinator::BatchPolicy::Batched
+    };
+    let grid = capacity_grid(
+        &users,
+        num_ttis,
+        budget_cycles,
+        !has(rest, "--no-mixed"),
+        policy,
+    );
     eprintln!(
-        "capacity: {} scenarios ({} loads x {} mixes), {} TTIs each, {} \
-         threads, verify={}",
+        "capacity: {} scenarios ({} loads x {} mixes), {} TTIs each, \
+         {policy:?} AI scaling, {} threads, verify={}",
         grid.len(),
         users.len(),
         grid.len() / users.len(),
@@ -378,6 +398,143 @@ fn capacity(rest: &[String]) -> i32 {
             1
         }
         _ => 0,
+    }
+}
+
+/// Diff two perf-trajectory JSONs (`BENCH_*.json`) on their DETERMINISTIC
+/// metrics: simulated cycle counts gate at `--threshold` percent increase,
+/// simulated MAC counts must match exactly (workload identity). Wall-clock
+/// fields are deliberately ignored — CI machines are noisy, cycle counts
+/// are not. A `null` baseline value (schema stub awaiting its first
+/// measured run) passes vacuously; a metric present in the baseline but
+/// missing from the current file fails (schema drift).
+fn bench_diff(rest: &[String]) -> i32 {
+    let (Some(base_path), Some(cur_path)) =
+        (flag(rest, "--baseline"), flag(rest, "--current"))
+    else {
+        eprintln!("bench-diff requires --baseline <file> --current <file>");
+        return 2;
+    };
+    let threshold: f64 = match flag(rest, "--threshold") {
+        None => 5.0,
+        Some(v) => match v.parse::<f64>() {
+            Ok(t) if t >= 0.0 => t,
+            _ => {
+                eprintln!("error: bad --threshold value '{v}'");
+                return 2;
+            }
+        },
+    };
+    let load = |p: &str| -> Option<serde_json::Value> {
+        match std::fs::read_to_string(p)
+            .map_err(|e| e.to_string())
+            .and_then(|s| {
+                serde_json::from_str(&s).map_err(|e| e.to_string())
+            }) {
+            Ok(v) => Some(v),
+            Err(e) => {
+                eprintln!("bench-diff: {p}: {e}");
+                None
+            }
+        }
+    };
+    let (Some(base), Some(cur)) = (load(&base_path), load(&cur_path)) else {
+        return 2;
+    };
+
+    fn flatten(
+        prefix: &str,
+        v: &serde_json::Value,
+        out: &mut Vec<(String, serde_json::Value)>,
+    ) {
+        match v {
+            serde_json::Value::Object(m) => {
+                for (k, v) in m {
+                    let p = if prefix.is_empty() {
+                        k.clone()
+                    } else {
+                        format!("{prefix}.{k}")
+                    };
+                    flatten(&p, v, out);
+                }
+            }
+            serde_json::Value::Array(a) => {
+                for (i, v) in a.iter().enumerate() {
+                    flatten(&format!("{prefix}.{i}"), v, out);
+                }
+            }
+            other => out.push((prefix.to_string(), other.clone())),
+        }
+    }
+    let mut base_flat = Vec::new();
+    flatten("", &base, &mut base_flat);
+    let mut cur_flat = Vec::new();
+    flatten("", &cur, &mut cur_flat);
+    let cur_map: std::collections::HashMap<String, serde_json::Value> =
+        cur_flat.into_iter().collect();
+
+    // Deterministic metrics only: cycle counts gate on the threshold,
+    // MAC counts gate exactly. Everything else (wall-clock, thread
+    // counts, cache hit totals) is informational.
+    const GATED: [&str; 2] = ["sim_cycles", "grid_cycles_total"];
+    const EXACT: [&str; 1] = ["sim_macs"];
+
+    let mut failures = 0usize;
+    let mut checked = 0usize;
+    for (path, bval) in &base_flat {
+        let leaf = path.rsplit('.').next().unwrap_or(path);
+        let gated = GATED.contains(&leaf);
+        let exact = EXACT.contains(&leaf);
+        if !gated && !exact {
+            continue;
+        }
+        let Some(b) = bval.as_f64() else {
+            continue; // null schema stub: nothing to compare yet
+        };
+        let Some(c) = cur_map.get(path).and_then(|v| v.as_f64()) else {
+            eprintln!(
+                "bench-diff: FAIL {path}: present in baseline, \
+                 missing or null in current (schema drift?)"
+            );
+            failures += 1;
+            continue;
+        };
+        checked += 1;
+        if exact {
+            if c != b {
+                eprintln!(
+                    "bench-diff: FAIL {path}: {b} -> {c} (must match \
+                     exactly: the simulated workload changed)"
+                );
+                failures += 1;
+            }
+        } else if c > b * (1.0 + threshold / 100.0) {
+            eprintln!(
+                "bench-diff: FAIL {path}: {b} -> {c} cycles \
+                 (+{:.1}% > {threshold}% threshold)",
+                100.0 * (c / b - 1.0)
+            );
+            failures += 1;
+        } else if b > 0.0 && c < b * (1.0 - threshold / 100.0) {
+            eprintln!(
+                "bench-diff: note {path}: {b} -> {c} cycles \
+                 ({:.1}% improvement — consider refreshing the baseline)",
+                100.0 * (1.0 - c / b)
+            );
+        }
+    }
+    if failures > 0 {
+        eprintln!(
+            "bench-diff: {failures} regression(s) across {checked} \
+             deterministic metrics ({base_path} vs {cur_path})"
+        );
+        1
+    } else {
+        eprintln!(
+            "bench-diff: OK — {checked} deterministic metrics within \
+             {threshold}% ({base_path} vs {cur_path})"
+        );
+        0
     }
 }
 

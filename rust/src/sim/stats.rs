@@ -16,7 +16,7 @@ pub enum TeStall {
 }
 
 /// Aggregate NoC statistics.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct NocStats {
     /// Wide/narrow requests injected.
     pub reads_issued: u64,
@@ -41,7 +41,7 @@ pub struct NocStats {
 }
 
 /// Per-engine result of a simulation run.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct TeRunStats {
     pub busy_cycles: u64,
     pub finish_cycle: u64,
@@ -63,7 +63,7 @@ impl TeRunStats {
 }
 
 /// Result of a full GEMM (or block) run on the simulated Pool.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct RunResult {
     /// Total cycles from t=0 to the last engine retiring.
     pub cycles: u64,

@@ -148,6 +148,12 @@ impl TeEngine {
 
     pub fn assign(&mut self, job: TeJob) {
         assert!(job.k % KBLOCK_ELEMS == 0, "K must be a multiple of 32");
+        // Re-initialize the full streamer state, including the stream
+        // round-robin pointer: a TE's behavior on a new job must not depend
+        // on where a previous job's rotation stopped. This is what makes a
+        // block iteration history-free at its boundary — the basis of the
+        // iteration-level memo in `exec::cache`.
+        self.rr = 0;
         if job.num_out_tiles() == 0 || job.kblocks() == 0 {
             // Degenerate job (zero-sized GEMM, e.g. `GemmSpec::square(0)`):
             // nothing to stream or compute — complete immediately instead

@@ -19,26 +19,33 @@
 //! The figure harnesses (`figures::gemm_figs`, `figures::block_figs`,
 //! `figures::capacity_figs`) and the Fig 7/Fig 10/capacity benches run on
 //! this engine. Capacity studies add a second scenario kind,
-//! [`TtiScenario`] (a multi-TTI serving run), and a second cache layer:
-//! the cross-run [`BlockScheduleCache`] memoizing block-schedule
-//! simulations per (arch knobs × block × iters × mode), shared between
-//! every scenario and any [`crate::coordinator::Server`] built with
-//! `Server::with_cache`.
+//! [`TtiScenario`] (a multi-TTI serving run). Block execution itself —
+//! and both of its memoization tiers (whole-block recall + the
+//! iteration-level memo) — lives one layer down in [`crate::exec`]
+//! ([`crate::exec::BlockScheduleCache`]), shared between every scenario
+//! and any [`crate::coordinator::Server`] built with `Server::with_cache`.
 
-pub mod block_cache;
 pub mod runner;
 pub mod scenario;
 
-pub use block_cache::{simulate_block, BlockScheduleCache};
+// ---- layering shims (slated for removal) -----------------------------------
+// `ArchKnobs`/`BlockKind`/`ScheduleMode`/`BlockScheduleCache`/
+// `simulate_block` moved down into `crate::exec` when the coordinator↔sweep
+// cycle was untangled; these pure re-exports keep historical
+// `tensorpool::sweep::*` call sites compiling. New code should import from
+// `crate::exec` directly.
+pub use crate::exec::{
+    simulate_block, ArchKnobs, BlockKind, BlockScheduleCache, ScheduleMode,
+};
+
 pub use runner::{
     capacity_sweep_with_report, sweep_with_report, CapacitySweepReport,
     SweepReport, SweepRunner,
 };
 pub use scenario::{
     fig7_style_scenarios, independent_gemm_side, run_capacity, run_scenario,
-    run_scenario_cached, ArchKnobs, ArrivalPattern, BlockKind, CapacityPoint,
-    CapacityReport, Scenario, ScenarioResult, ScheduleMode, TtiScenario,
-    UserMix, Workload,
+    run_scenario_cached, ArrivalPattern, CapacityPoint, CapacityReport,
+    Scenario, ScenarioResult, TtiScenario, UserMix, Workload,
 };
 
 // ---- Send/Sync audit -------------------------------------------------------

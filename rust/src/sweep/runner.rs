@@ -21,7 +21,8 @@ use std::time::Instant;
 use rayon::prelude::*;
 use serde::{Deserialize, Serialize};
 
-use super::block_cache::BlockScheduleCache;
+use crate::exec::BlockScheduleCache;
+
 use super::scenario::{
     run_capacity, run_scenario_cached, CapacityReport, Scenario,
     ScenarioResult, TtiScenario,
@@ -29,8 +30,8 @@ use super::scenario::{
 
 /// A reusable sweep executor holding the result caches: whole-scenario
 /// memos (GEMM/block scenarios and TTI capacity scenarios) plus the
-/// shared cross-run [`BlockScheduleCache`] every scenario and attached
-/// `Server` draws block simulations from.
+/// shared cross-run [`BlockScheduleCache`] (from [`crate::exec`]) every
+/// scenario and attached `Server` draws block simulations from.
 #[derive(Default)]
 pub struct SweepRunner {
     cache: Mutex<HashMap<String, ScenarioResult>>,
@@ -268,7 +269,7 @@ pub fn capacity_sweep_with_report(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sweep::scenario::{ArchKnobs, ScheduleMode};
+    use crate::exec::{ArchKnobs, ScheduleMode};
     use crate::workload::gemm::GemmSpec;
 
     fn small_suite() -> Vec<Scenario> {
@@ -355,7 +356,7 @@ mod tests {
 
     // ---- capacity grids ---------------------------------------------------
 
-    use crate::coordinator::server::Pipeline;
+    use crate::coordinator::server::{BatchPolicy, Pipeline};
     use crate::sweep::scenario::{ArrivalPattern, TtiScenario, UserMix};
 
     fn capacity_suite() -> Vec<TtiScenario> {
@@ -376,6 +377,7 @@ mod tests {
                     num_ttis: 2,
                     res_per_user: 1024,
                     budget_cycles: None,
+                    policy: BatchPolicy::default(),
                     seed: 42,
                 });
             }

@@ -7,92 +7,24 @@
 //! deterministic pure function (`run_scenario`), which is what makes the
 //! sweep engine's parallel execution byte-identical to serial execution and
 //! its result cache sound.
+//!
+//! The execution vocabulary ([`ArchKnobs`], [`BlockKind`],
+//! [`ScheduleMode`]) and the block drivers live one layer down in
+//! [`crate::exec`]; this module composes them into sweepable workloads.
 
 use std::sync::Arc;
 
 use serde::{Deserialize, Serialize};
 
-use crate::coordinator::server::{Pipeline, Server, TtiRequest};
-use crate::sim::{ArchConfig, L1Alloc, Sim};
-use crate::sweep::block_cache::BlockScheduleCache;
+use crate::coordinator::server::{BatchPolicy, Pipeline, Server, TtiRequest};
+use crate::exec::{ArchKnobs, BlockKind, BlockRun, BlockScheduleCache, ScheduleMode};
+use crate::sim::{L1Alloc, Sim};
 use crate::workload::gemm::{
     map_independent, map_single, map_split, GemmRegions, GemmSpec,
 };
 
 /// Deadlock guard for scenario runs (same budget the CLI `simulate` uses).
 const MAX_CYCLES: u64 = 10_000_000_000;
-
-/// The architecture knobs a sweep may vary, as plain hashable data.
-/// `apply()` expands them over the paper's TensorPool instance; everything
-/// not listed here (topology, frequency, bandwidths) stays at the paper's
-/// values so scenario keys remain small and exactly comparable.
-#[derive(Clone, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
-pub struct ArchKnobs {
-    /// Response-grouping factor K (paper nominal: 4).
-    pub resp_k: usize,
-    /// Request-widening factor J (paper nominal: 2).
-    pub req_j: usize,
-    /// Burst support at the Tile arbiters.
-    pub burst: bool,
-    /// Streamer reorder-buffer depth (1 = in-order ablation).
-    pub rob_depth: usize,
-    /// Z-FIFO depth (outstanding wide writes).
-    pub z_fifo_depth: usize,
-}
-
-impl Default for ArchKnobs {
-    fn default() -> Self {
-        ArchKnobs::from_config(&ArchConfig::tensorpool())
-    }
-}
-
-impl ArchKnobs {
-    /// Capture the sweepable knobs of an existing configuration.
-    pub fn from_config(cfg: &ArchConfig) -> Self {
-        ArchKnobs {
-            resp_k: cfg.resp_k,
-            req_j: cfg.req_j,
-            burst: cfg.burst,
-            rob_depth: cfg.rob_depth,
-            z_fifo_depth: cfg.z_fifo_depth,
-        }
-    }
-
-    /// Expand into a full configuration (TensorPool base + these knobs).
-    pub fn apply(&self) -> ArchConfig {
-        let mut cfg = ArchConfig::tensorpool();
-        cfg.resp_k = self.resp_k;
-        cfg.req_j = self.req_j;
-        cfg.burst = self.burst;
-        cfg.rob_depth = self.rob_depth;
-        cfg.z_fifo_depth = self.z_fifo_depth;
-        cfg
-    }
-
-    pub fn with_kj(mut self, k: usize, j: usize) -> Self {
-        self.resp_k = k;
-        self.req_j = j;
-        self
-    }
-
-    pub fn without_burst(mut self) -> Self {
-        self.burst = false;
-        self
-    }
-
-    pub fn without_rob(mut self) -> Self {
-        self.rob_depth = 1;
-        self
-    }
-}
-
-/// The Fig 9 compute blocks as sweepable workloads.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
-pub enum BlockKind {
-    FcSoftmax,
-    DwsepConv,
-    Mha,
-}
 
 /// What a scenario simulates.
 #[derive(Clone, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
@@ -102,35 +34,6 @@ pub enum Workload {
     /// A Fig 9 compute block of `iters` double-bufferable iterations
     /// (`iters` is ignored by `Mha`, which has a fixed 5-stage pipeline).
     Block { kind: BlockKind, iters: usize },
-}
-
-/// How the workload is mapped onto the engines.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
-pub enum ScheduleMode {
-    /// GEMM on one TE (Fig 5 reference point).
-    SingleTe,
-    /// GEMM split by row stripes over all 16 TEs, lock-step W walk.
-    SplitLockstep,
-    /// GEMM split with the paper's interleaved-W access scheme (Fig 6).
-    SplitInterleaved,
-    /// One private GEMM of this size per TE (Fig 7 multi-user rows).
-    Independent,
-    /// Block: engines one class at a time (Fig 10 baseline).
-    Sequential,
-    /// Block: TE ∥ PE ∥ DMA with double buffering (Fig 10 contribution).
-    Concurrent,
-}
-
-impl ScheduleMode {
-    pub fn is_gemm_mode(self) -> bool {
-        matches!(
-            self,
-            ScheduleMode::SingleTe
-                | ScheduleMode::SplitLockstep
-                | ScheduleMode::SplitInterleaved
-                | ScheduleMode::Independent
-        )
-    }
 }
 
 /// One point of a sweep. The `name` is a display label only — the result
@@ -228,8 +131,10 @@ pub fn run_scenario(s: &Scenario) -> ScenarioResult {
 
 /// [`run_scenario`] with a shared cross-run block-schedule cache: block
 /// workloads are recalled instead of re-simulated when an equal
-/// (arch × block × iters × mode) was already run. Results are identical
-/// either way (block runs are pure), so caching never changes a number.
+/// (arch × block × iters × mode) was already run — and below the block
+/// level, iterations shared across block keys are memoized. Results are
+/// identical either way (block runs are pure), so caching never changes a
+/// number.
 pub fn run_scenario_cached(
     s: &Scenario,
     blocks: &BlockScheduleCache,
@@ -279,7 +184,7 @@ pub fn run_scenario_cached(
             }
         }
         Workload::Block { kind, iters } => {
-            let res = blocks.run(&cfg, *kind, *iters, s.mode);
+            let res = blocks.run(&cfg, BlockRun::new(*kind, *iters, s.mode));
             ScenarioResult {
                 name: s.name.clone(),
                 cycles: res.cycles,
@@ -415,8 +320,8 @@ impl ArrivalPattern {
 }
 
 /// One point of a capacity study: a multi-TTI serving run — user-mix
-/// distribution × arrival pattern × offered load × cycle budget × arch
-/// knobs × run length. Pure data, hashable; running it
+/// distribution × arrival pattern × offered load × cycle budget × batch
+/// policy × arch knobs × run length. Pure data, hashable; running it
 /// ([`run_capacity`]) is a deterministic pure function, which is what
 /// lets the sweep runner parallelize capacity grids with byte-identical
 /// results and cache repeated points.
@@ -436,6 +341,10 @@ pub struct TtiScenario {
     /// Per-TTI cycle budget; `None` = 1 ms at the configured clock
     /// (numerology-0 slot). Tighter budgets model 5G numerologies 1/2.
     pub budget_cycles: Option<u64>,
+    /// How the AI blocks scale across a TTI's users (`Batched` = one pass
+    /// per pipeline kind; `PerUser` = one res-scaled pass per user).
+    #[serde(default)]
+    pub policy: BatchPolicy,
     /// Seed of the deterministic per-user pipeline draw.
     pub seed: u64,
 }
@@ -444,7 +353,7 @@ impl TtiScenario {
     /// Content key for the capacity result cache (display name excluded).
     pub fn cache_key(&self) -> String {
         format!(
-            "tti|{:?}|{:?}|{:?}|{}|{}|{}|{:?}|{}",
+            "tti|{:?}|{:?}|{:?}|{}|{}|{}|{:?}|{:?}|{}",
             self.arch,
             self.mix,
             self.arrival,
@@ -452,6 +361,7 @@ impl TtiScenario {
             self.num_ttis,
             self.res_per_user,
             self.budget_cycles,
+            self.policy,
             self.seed
         )
     }
@@ -516,6 +426,7 @@ pub fn run_capacity(
     if let Some(b) = s.budget_cycles {
         server.set_budget_cycles(b);
     }
+    server.set_batch_policy(s.policy);
     let mut state = (s.seed ^ 0x9E37_79B9_7F4A_7C15).max(1);
     let weight_total = u64::from(s.mix.total().max(1));
     let mut next_user: u32 = 0;
@@ -571,16 +482,6 @@ pub fn run_capacity(
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn knobs_round_trip_through_config() {
-        let knobs = ArchKnobs::default().with_kj(2, 1).without_burst();
-        let cfg = knobs.apply();
-        assert_eq!(cfg.resp_k, 2);
-        assert_eq!(cfg.req_j, 1);
-        assert!(!cfg.burst);
-        assert_eq!(ArchKnobs::from_config(&cfg), knobs);
-    }
 
     #[test]
     fn cache_key_ignores_name_but_not_config() {
@@ -683,6 +584,7 @@ mod tests {
             num_ttis: ttis,
             res_per_user: 1024,
             budget_cycles: None,
+            policy: BatchPolicy::default(),
             seed: 42,
         }
     }
@@ -731,6 +633,9 @@ mod tests {
         let mut d = a.clone();
         d.budget_cycles = Some(225_000);
         assert_ne!(a.cache_key(), d.cache_key());
+        let mut e = a.clone();
+        e.policy = BatchPolicy::PerUser;
+        assert_ne!(a.cache_key(), e.cache_key(), "policy is part of the key");
     }
 
     #[test]
@@ -778,5 +683,46 @@ mod tests {
             assert!(p.served <= 7, "admitted {} users in one TTI", p.served);
         }
         assert!(r.mean_te_utilization > 0.0);
+    }
+
+    #[test]
+    fn per_user_capacity_run_misses_where_batched_does_not() {
+        // Same oversubscribed NR load, both policies: batched serves its
+        // admitted users in one block pass and sails under 1 ms; per-user
+        // scaling charges every user a full pass, so the measured TTIs
+        // brush the budget and the miss/backlog picture darkens.
+        let mut s = tti(UserMix::pure(Pipeline::NeuralReceiver), 8, 3);
+        s.res_per_user = 8192;
+        let batched = run_capacity(&s, &Arc::new(BlockScheduleCache::new()));
+        s.policy = BatchPolicy::PerUser;
+        let per_user = run_capacity(&s, &Arc::new(BlockScheduleCache::new()));
+        assert_eq!(batched.deadline_miss_rate, 0.0, "batched is optimistic");
+        assert!(
+            per_user.mean_cycles_per_tti > batched.mean_cycles_per_tti,
+            "per-user TTIs must cost more: {} vs {}",
+            per_user.mean_cycles_per_tti,
+            batched.mean_cycles_per_tti
+        );
+        assert_eq!(
+            per_user.served_total + per_user.final_backlog as u64,
+            per_user.submitted_total,
+            "per-user accounting still conserves users"
+        );
+        // And the capacity-level miss curve actually bites: an oversized
+        // user (10x the reference TTI) is head-of-line admitted alone with
+        // a per-user cost far past 1 ms, so EVERY TTI misses — while the
+        // batched view of the same scenario never does.
+        let mut big = tti(UserMix::pure(Pipeline::NeuralReceiver), 2, 2);
+        big.res_per_user = 80_000;
+        let big_batched =
+            run_capacity(&big, &Arc::new(BlockScheduleCache::new()));
+        assert_eq!(big_batched.deadline_miss_rate, 0.0);
+        big.policy = BatchPolicy::PerUser;
+        let big_per_user =
+            run_capacity(&big, &Arc::new(BlockScheduleCache::new()));
+        assert_eq!(
+            big_per_user.deadline_miss_rate, 1.0,
+            "oversized per-user TTIs must miss the millisecond"
+        );
     }
 }

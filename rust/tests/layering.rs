@@ -1,0 +1,86 @@
+//! Architecture guard: the crate's dependency graph must stay strictly
+//! one-way — `sim → workload → exec → coordinator → sweep → figures` —
+//! so the coordinator↔sweep cycle PR 2 introduced (and this layering
+//! untangled) cannot silently return.
+//!
+//! Grep-level enforcement on purpose: an `use crate::sweep` anywhere under
+//! `coordinator/` or `exec/` compiles fine (intra-crate cycles are legal
+//! in Rust), so only a source-text check catches the regression.
+
+use std::fs;
+use std::path::Path;
+
+/// Collect every `.rs` file under `dir`, recursively.
+fn rust_sources(dir: &Path, out: &mut Vec<std::path::PathBuf>) {
+    for entry in fs::read_dir(dir)
+        .unwrap_or_else(|e| panic!("read_dir {}: {e}", dir.display()))
+    {
+        let path = entry.expect("dir entry").path();
+        if path.is_dir() {
+            rust_sources(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// Assert no file under `src/<module>` mentions any of `forbidden`
+/// (as `crate::<name>` — covers `use` items and inline paths alike).
+fn assert_layer_clean(module: &str, forbidden: &[&str]) {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src").join(module);
+    assert!(root.is_dir(), "missing layer directory {}", root.display());
+    let mut files = Vec::new();
+    rust_sources(&root, &mut files);
+    assert!(!files.is_empty(), "no sources under {}", root.display());
+    let mut violations = Vec::new();
+    for file in files {
+        let text = fs::read_to_string(&file)
+            .unwrap_or_else(|e| panic!("read {}: {e}", file.display()));
+        for dep in forbidden {
+            let needle = format!("crate::{dep}");
+            for (lineno, line) in text.lines().enumerate() {
+                // Comments (incl. doc comments with intra-doc links like
+                // `[crate::coordinator::Server]`) are not dependencies.
+                if line.trim_start().starts_with("//") {
+                    continue;
+                }
+                if line.contains(&needle) {
+                    violations.push(format!(
+                        "{}:{}: {}",
+                        file.display(),
+                        lineno + 1,
+                        line.trim()
+                    ));
+                }
+            }
+        }
+    }
+    assert!(
+        violations.is_empty(),
+        "one-way layering violated — `{module}` must not depend on \
+         {forbidden:?}:\n{}",
+        violations.join("\n")
+    );
+}
+
+#[test]
+fn coordinator_does_not_import_sweep() {
+    // The exact cycle PR 2 had: `coordinator::server` importing
+    // `sweep::{block_cache, scenario}`.
+    assert_layer_clean("coordinator", &["sweep", "figures"]);
+}
+
+#[test]
+fn exec_imports_nothing_above_it() {
+    // `exec` sits below the coordinator: it may use `sim` and `workload`
+    // only.
+    assert_layer_clean("exec", &["sweep", "coordinator", "figures"]);
+}
+
+#[test]
+fn workload_and_sim_stay_at_the_bottom() {
+    // The pre-existing bottom layers must not grow upward edges either —
+    // the one-way chain starts at `sim`.
+    assert_layer_clean("sim", &["workload", "exec", "coordinator", "sweep"]);
+    assert_layer_clean("workload", &["exec", "coordinator", "sweep"]);
+}

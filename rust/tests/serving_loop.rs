@@ -1,6 +1,6 @@
 //! Property-style invariants of the TTI serving loop
 //! (`coordinator::server::schedule_tti`) over seeded request mixes, and
-//! the determinism contract of the cross-run block-schedule cache:
+//! the determinism contract of the exec layer's block-schedule cache:
 //!
 //! 1. `served ∪ deferred` is exactly the submitted user set (a permutation
 //!    of it — in fact the FIFO order is preserved).
@@ -8,13 +8,17 @@
 //!    head-of-line user, who is always admitted alone (no livelock).
 //! 3. Cached and uncached `schedule_tti` produce byte-identical
 //!    `TtiReport`s — and the second identical TTI performs ZERO new block
-//!    simulations (the PR's acceptance criterion).
+//!    simulations (PR 2's acceptance criterion).
+//! 4. The iteration-level memo is semantically invisible (byte-identical
+//!    `TtiReport`s vs block-level caching) while performing strictly
+//!    fewer raw iteration simulations on a mixed mha+fc per-user TTI
+//!    (this PR's acceptance criterion).
 
 use std::sync::Arc;
 
-use tensorpool::coordinator::{Pipeline, Server, TtiRequest};
+use tensorpool::coordinator::{BatchPolicy, Pipeline, Server, TtiRequest};
+use tensorpool::exec::BlockScheduleCache;
 use tensorpool::sim::ArchConfig;
-use tensorpool::sweep::BlockScheduleCache;
 
 fn xorshift(state: &mut u64) -> u64 {
     let mut x = *state;
@@ -213,4 +217,97 @@ fn second_identical_tti_performs_zero_new_block_simulations() {
         "second TTI must be served from the cache"
     );
     assert_eq!(first, second, "identical TTIs must report identically");
+}
+
+/// A mixed AI TTI under per-user scaling: CHE users run mha+fc, NR users
+/// run dwsep+fc, with RE footprints that scale dwsep to both 1 and 2
+/// iterations.
+fn submit_mixed_ai_tti(server: &mut Server) {
+    for (u, (p, res)) in [
+        (Pipeline::NeuralChe, 8192),
+        (Pipeline::NeuralReceiver, 8192),
+        (Pipeline::NeuralReceiver, 4096),
+        (Pipeline::NeuralChe, 2048),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        server.submit(TtiRequest { user_id: u as u32, pipeline: p, res });
+    }
+}
+
+#[test]
+fn iteration_memo_beats_block_level_cache_on_mixed_mha_fc_tti() {
+    // THE acceptance criterion of the exec-layer PR: on a mixed mha+fc
+    // capacity TTI, iteration-level memoization performs strictly fewer
+    // raw simulations than PR 2's block-level cache alone — dwsep(1) is
+    // the first iteration of dwsep(2), so the memo simulates 8 distinct
+    // iteration segments where block-level caching simulates 9 — while
+    // reporting byte-identically.
+    let cfg = ArchConfig::tensorpool();
+
+    let memo_cache = Arc::new(BlockScheduleCache::new());
+    let mut memo_server = Server::with_cache(&cfg, Arc::clone(&memo_cache));
+    memo_server.set_batch_policy(BatchPolicy::PerUser);
+    submit_mixed_ai_tti(&mut memo_server);
+    let memo_rep = memo_server.schedule_tti();
+
+    let block_cache = Arc::new(BlockScheduleCache::block_level_only());
+    let mut block_server = Server::with_cache(&cfg, Arc::clone(&block_cache));
+    block_server.set_batch_policy(BatchPolicy::PerUser);
+    submit_mixed_ai_tti(&mut block_server);
+    let block_rep = block_server.schedule_tti();
+
+    assert_eq!(memo_rep.served.len(), 4, "all four users fit one TTI");
+    assert_eq!(
+        memo_rep, block_rep,
+        "the iteration memo must be semantically invisible"
+    );
+    assert!(
+        memo_cache.iterations_simulated()
+            < block_cache.iterations_simulated(),
+        "iteration memo must perform strictly fewer raw simulations: \
+         {} vs {}",
+        memo_cache.iterations_simulated(),
+        block_cache.iterations_simulated()
+    );
+    // The concrete arithmetic (pinned so a workload change that silently
+    // removes the sharing fails loudly): block keys are mha(1)=5 iters,
+    // fc(1)=1, dwsep(2)=2, dwsep(1)=1 -> 9 monolithic iterations; the
+    // memo dedups dwsep(1) against dwsep(2)'s first segment -> 8.
+    assert_eq!(block_cache.iterations_simulated(), 9);
+    assert_eq!(memo_cache.iterations_simulated(), 8);
+    assert_eq!(memo_cache.memo_fallbacks(), 0, "no wheel-growth fallbacks");
+}
+
+#[test]
+fn memoized_serving_loop_is_byte_identical_across_policies_and_seeds() {
+    // Sweep-style robustness: for seeded mixed queues under BOTH batch
+    // policies, a memo-enabled server reports byte-identically to a
+    // block-level-only server.
+    let cfg = ArchConfig::tensorpool();
+    for policy in [BatchPolicy::Batched, BatchPolicy::PerUser] {
+        for seed in 50..54u64 {
+            let reqs = seeded_requests(seed, 10);
+            let mut memo = Server::with_cache(
+                &cfg,
+                Arc::new(BlockScheduleCache::new()),
+            );
+            let mut plain = Server::with_cache(
+                &cfg,
+                Arc::new(BlockScheduleCache::block_level_only()),
+            );
+            memo.set_batch_policy(policy);
+            plain.set_batch_policy(policy);
+            for r in &reqs {
+                memo.submit(*r);
+                plain.submit(*r);
+            }
+            assert_eq!(
+                memo.schedule_tti(),
+                plain.schedule_tti(),
+                "{policy:?}/seed {seed}: memo must not change a number"
+            );
+        }
+    }
 }
