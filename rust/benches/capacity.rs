@@ -43,10 +43,13 @@ struct GridTiming {
     parallel_speedup: f64,
     distinct_block_sims: usize,
     block_cache_hits: u64,
-    /// Total simulated cycles across every TTI of the grid — the
+    /// Total simulated cycles across every TTI of the grid — a
     /// deterministic metric `tensorpool bench-diff` gates on (wall-clock
     /// numbers are noisy on CI machines; cycle counts are exact).
     grid_cycles_total: u64,
+    /// Total energy across every TTI of the grid, priced from simulator
+    /// event counters — deterministic, and also gated by `bench-diff`.
+    total_energy_j: f64,
 }
 
 #[derive(Serialize)]
@@ -74,8 +77,14 @@ fn submit_ai_tti(server: &mut Server, base: u32) {
 fn main() {
     // ---- grid: serial vs parallel vs warm ---------------------------------
     let ttis = 4;
-    let grid =
-        capacity_grid(&[1, 2, 4, 8], ttis, None, true, BatchPolicy::Batched);
+    let grid = capacity_grid(
+        &[1, 2, 4, 8],
+        ttis,
+        None,
+        true,
+        BatchPolicy::Batched,
+        None,
+    );
     println!("capacity grid: {} scenarios x {} TTIs", grid.len(), ttis);
 
     let serial_runner = SweepRunner::new();
@@ -99,6 +108,7 @@ fn main() {
         .iter()
         .flat_map(|r| r.points.iter().map(|p| p.cycles))
         .sum();
+    let total_energy_j: f64 = parallel.iter().map(|r| r.total_energy_j).sum();
     println!(
         "grid: serial {serial_wall:.3}s, parallel {parallel_wall:.3}s \
          ({:.2}x on {} threads), warm re-run {warm_wall:.4}s; {} distinct \
@@ -147,6 +157,7 @@ fn main() {
             distinct_block_sims: runner.block_cache().len(),
             block_cache_hits: block_hits,
             grid_cycles_total,
+            total_energy_j,
         },
         serving_loop: ServingLoopTiming {
             cold_tti_wall_s: cold,

@@ -35,6 +35,9 @@ struct ShapeRow {
     shape: String,
     sim_cycles: u64,
     sim_macs: u64,
+    /// Simulated energy of the shape (calibrated per-event model over the
+    /// run's counters) — deterministic, gated by `bench-diff`.
+    total_energy_j: f64,
     wall_s: f64,
     cycles_per_s: f64,
     msim_macs_per_s: f64,
@@ -119,6 +122,7 @@ fn main() {
                 shape: name.clone(),
                 sim_cycles: r.cycles,
                 sim_macs: r.total_macs,
+                total_energy_j: r.energy_j,
                 wall_s: *dt,
                 cycles_per_s: r.cycles as f64 / dt,
                 msim_macs_per_s: r.total_macs as f64 / dt / 1e6,

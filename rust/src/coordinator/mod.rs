@@ -2,7 +2,10 @@
 //! requests onto the engines. Block *execution* (sequential/concurrent
 //! schedules, paper Sec V-C) lives one layer down in [`crate::exec`]; this
 //! layer decides *what* to execute per TTI and accounts for the 1 ms
-//! deadline. Depends on `sim`/`workload`/`exec` only — never on `sweep`
+//! deadline and the per-TTI power budget. Depends on `sim`/`workload`/
+//! `exec` plus the [`crate::ppa`] energy models only — never on `sweep`
 //! (enforced by `tests/layering.rs`).
 pub mod server;
-pub use server::{BatchPolicy, Pipeline, Server, TtiReport, TtiRequest};
+pub use server::{
+    BatchPolicy, BudgetPolicy, Pipeline, Server, TtiReport, TtiRequest,
+};

@@ -17,8 +17,9 @@ use std::sync::Arc;
 use serde::{Deserialize, Serialize};
 
 use crate::exec::{BlockKind, BlockRun, BlockScheduleCache, ScheduleMode};
+use crate::ppa::power::EnergyModel;
 use crate::sim::ArchConfig;
-use crate::workload::phy::{cfft, ls_che, mimo_mmse};
+use crate::workload::phy::{cfft, ls_che, mimo_mmse, PeKernel};
 
 /// Resource elements of the paper's reference TTI (Sec V-B); per-user
 /// costs scale against this footprint.
@@ -66,6 +67,34 @@ pub struct TtiRequest {
     pub res: usize,
 }
 
+/// The per-TTI admission budgets: a cycle (latency) budget, and optionally
+/// a power cap — the paper's deployment constraint (Sec I: cell-site
+/// densification caps the compute budget at ≤100 W per site; a cluster
+/// gets a slice of that).
+///
+/// The power cap bounds the TTI's *provisioned draw*: each admitted
+/// request is charged its pipeline's average execution power (measured
+/// energy over measured execution time, from the same pure block runs the
+/// TTI will execute), and admission stops before the summed demand
+/// exceeds the cap — the site must budget for its admitted users' draw as
+/// provisioned compute slices, not only for this cluster's time-averaged
+/// Joules. The head-of-line request is always admitted alone (no
+/// livelock), exactly like the cycle budget.
+#[derive(Clone, Copy, Debug, PartialEq, Serialize, Deserialize)]
+pub struct BudgetPolicy {
+    /// Cycle budget per TTI (1 ms at the configured clock by default).
+    pub cycles: u64,
+    /// Optional power cap in Watts; `None` = latency-only admission.
+    pub power_w: Option<f64>,
+}
+
+impl BudgetPolicy {
+    /// The latency-only policy (the pre-power-cap behavior).
+    pub fn latency_only(cycles: u64) -> Self {
+        BudgetPolicy { cycles, power_w: None }
+    }
+}
+
 /// Outcome of one scheduled TTI.
 #[derive(Clone, Debug, PartialEq, Serialize, Deserialize)]
 pub struct TtiReport {
@@ -75,6 +104,28 @@ pub struct TtiReport {
     pub runtime_ms: f64,
     pub deadline_met: bool,
     pub te_utilization: f64,
+    /// Total energy this TTI drew (AI block runs priced from their
+    /// simulator event counters, classical users from the PE instruction
+    /// model). Deterministic: a pure function of the admitted set.
+    #[serde(default)]
+    pub energy_j: f64,
+    /// `energy_j` averaged over the TTI slot (the cycle budget's span).
+    #[serde(default)]
+    pub avg_power_w: f64,
+    /// Highest average power of any single block schedule in the TTI
+    /// (the per-block "how hot does the cluster run" view).
+    #[serde(default)]
+    pub peak_block_power_w: f64,
+    /// Summed power demand of the admitted set (the quantity the
+    /// [`BudgetPolicy::power_w`] cap gates on).
+    #[serde(default)]
+    pub planned_power_w: f64,
+    /// Users the cycle budget alone would have admitted this TTI but the
+    /// power cap turned away (the cap's *marginal* effect — deferred users
+    /// the latency-only admission would also have cut are not counted).
+    /// Zero when the cut was latency-bound or no cap is set.
+    #[serde(default)]
+    pub deferred_for_power: usize,
 }
 
 /// Iteration count of a per-user block pass: `base` iterations cover the
@@ -100,9 +151,12 @@ const MHA_EST: u64 = 78_000;
 pub struct Server {
     cfg: ArchConfig,
     queue: VecDeque<TtiRequest>,
-    /// Cycle budget per TTI (default: 1 ms at the configured clock).
-    budget_cycles: u64,
+    /// Per-TTI admission budgets (cycles + optional power cap).
+    budget: BudgetPolicy,
     policy: BatchPolicy,
+    /// Calibrated per-event energy model (paper Fig 13 / Table II); prices
+    /// every admitted TTI's simulator event counters into Joules.
+    energy: EnergyModel,
     /// Cross-run block-schedule cache: the AI block simulations of a TTI
     /// are pure functions of (config × block × schedule), so repeated
     /// TTIs — and any sweeps sharing this cache via `Arc` — recall them
@@ -124,8 +178,11 @@ impl Server {
         Server {
             cfg: cfg.clone(),
             queue: VecDeque::new(),
-            budget_cycles: (1e-3 * cfg.freq_ghz * 1e9) as u64,
+            budget: BudgetPolicy::latency_only(
+                (1e-3 * cfg.freq_ghz * 1e9) as u64,
+            ),
             policy: BatchPolicy::default(),
+            energy: EnergyModel::calibrate(cfg),
             blocks,
         }
     }
@@ -133,11 +190,21 @@ impl Server {
     /// Override the per-TTI cycle budget (default 1 ms at the configured
     /// clock — numerology-0; tighter budgets model 5G numerologies 1/2).
     pub fn set_budget_cycles(&mut self, budget: u64) {
-        self.budget_cycles = budget;
+        self.budget.cycles = budget;
     }
 
     pub fn budget_cycles(&self) -> u64 {
-        self.budget_cycles
+        self.budget.cycles
+    }
+
+    /// Set (or clear) the per-TTI power cap in Watts — the power-capped
+    /// admission mode. See [`BudgetPolicy`] for the semantics.
+    pub fn set_power_budget_w(&mut self, watts: Option<f64>) {
+        self.budget.power_w = watts;
+    }
+
+    pub fn budget(&self) -> BudgetPolicy {
+        self.budget
     }
 
     /// How AI blocks scale across users (default: [`BatchPolicy::Batched`]).
@@ -197,10 +264,88 @@ impl Server {
         }
     }
 
+    /// The classical chain (CFFT → LS-CHE → MMSE) for `res` REs, as the
+    /// kernel workloads the PE timing/energy models price.
+    fn classical_kernels(res: usize) -> [(PeKernel, usize); 3] {
+        [
+            (cfft(), res * 12),
+            (ls_che(), res),
+            (mimo_mmse(), res * 8),
+        ]
+    }
+
+    /// (cycles, energy) of one classical user: PE-model cycles plus the
+    /// TeraPool-calibrated per-instruction energy. Deterministic — both
+    /// views derive from the same kernel iteration counts.
+    fn classical_cost(&self, res: usize) -> (u64, f64) {
+        let pes = self.cfg.num_pes();
+        let mut cycles = 0u64;
+        let mut instrs = 0u64;
+        for (kernel, elems) in Self::classical_kernels(res) {
+            cycles += kernel.cycles(elems, pes);
+            instrs += kernel.instrs(elems, pes);
+        }
+        (cycles, self.energy.pe_energy_j(instrs))
+    }
+
+    /// THE definition of power demand: average draw while executing —
+    /// `energy` Joules over `cycles` of execution at the configured clock
+    /// (0 for empty work). Both admission paths price through here.
+    fn demand_w(&self, energy: f64, cycles: u64) -> f64 {
+        if cycles == 0 {
+            0.0
+        } else {
+            energy / (cycles as f64 / self.energy.freq_hz)
+        }
+    }
+
+    /// Estimated average power demand of a request while its pipeline
+    /// executes (Watts): measured energy over measured execution time, from
+    /// the same pure block runs / kernel costs `schedule_tti` will charge.
+    /// This is what the [`BudgetPolicy::power_w`] cap sums over the
+    /// admitted set. AI estimates draw from the shared block cache, so the
+    /// simulations are paid once and shared with execution.
+    pub fn estimate_power_w(&self, req: &TtiRequest) -> f64 {
+        let (energy, cycles) = match req.pipeline {
+            Pipeline::Classical => {
+                let (cycles, e) = self.classical_cost(req.res);
+                (e, cycles)
+            }
+            _ => {
+                let mut e = 0.0f64;
+                let mut cycles = 0u64;
+                for run in self.block_runs(req.pipeline, req.res) {
+                    let res = self.blocks.run(&self.cfg, run);
+                    e += self.energy.pool_energy_j(&self.cfg, &res.raw);
+                    cycles += res.cycles;
+                }
+                (e, cycles)
+            }
+        };
+        self.demand_w(energy, cycles)
+    }
+
+    /// Fused admission estimate: (cycles, power demand in Watts). The
+    /// demand is 0 when no power cap is set — latency-only serving must
+    /// not change its simulation footprint (AI power estimates draw block
+    /// simulations through the cache). Classical users price their kernel
+    /// chain ONCE for both views instead of once per view.
+    fn estimate_request(&self, req: &TtiRequest) -> (u64, f64) {
+        if self.budget.power_w.is_none() {
+            return (self.estimate_cycles(req), 0.0);
+        }
+        match req.pipeline {
+            Pipeline::Classical => {
+                let (cycles, e) = self.classical_cost(req.res);
+                (cycles, self.demand_w(e, cycles))
+            }
+            _ => (self.estimate_cycles(req), self.estimate_power_w(req)),
+        }
+    }
+
     /// Estimated cycle cost of a request (used for admission; the actual
     /// schedule is measured on the simulator afterwards).
     pub fn estimate_cycles(&self, req: &TtiRequest) -> u64 {
-        let pes = self.cfg.num_pes();
         match (req.pipeline, self.policy) {
             // measured concurrent-block costs (Fig 10 harness; see the
             // anchor constants above), scaled by the user's share of the
@@ -220,33 +365,42 @@ impl Server {
             (Pipeline::NeuralChe, BatchPolicy::PerUser) => {
                 MHA_EST + FC_ITER_EST * scaled_iters(1, req.res) as u64
             }
-            (Pipeline::Classical, _) => {
-                cfft().cycles(req.res * 12, pes)
-                    + ls_che().cycles(req.res, pes)
-                    + mimo_mmse().cycles(req.res * 8, pes)
-            }
+            (Pipeline::Classical, _) => self.classical_cost(req.res).0,
         }
     }
 
-    /// Admit requests into the current TTI until the budget is filled,
-    /// then run the admitted AI blocks on the simulator (concurrent
-    /// schedule) and charge classical users via the PE timing model.
+    /// Admit requests into the current TTI until a budget is filled —
+    /// the cycle budget always, the power cap when one is set — then run
+    /// the admitted AI blocks on the simulator (concurrent schedule) and
+    /// charge classical users via the PE timing/energy models.
     pub fn schedule_tti(&mut self) -> TtiReport {
         let mut served = Vec::new();
         let mut deferred = Vec::new();
         let mut planned: u64 = 0;
+        let mut planned_w: f64 = 0.0;
+        let mut power_cut = false;
         let mut admitted = Vec::new();
-        // admission: FIFO with budget check (no starvation: the head is
-        // always admitted if it alone fits an empty TTI)
+        // admission: FIFO with budget checks (no starvation: the head is
+        // always admitted if it alone fills an empty TTI, under either
+        // budget)
         while let Some(req) = self.queue.pop_front() {
-            let est = self.estimate_cycles(&req);
-            if planned + est <= self.budget_cycles || served.is_empty() {
+            let (est, demand) = self.estimate_request(&req);
+            let cycles_ok = planned + est <= self.budget.cycles;
+            let power_ok = match self.budget.power_w {
+                None => true,
+                Some(cap) => planned_w + demand <= cap,
+            };
+            if (cycles_ok && power_ok) || served.is_empty() {
                 planned += est;
+                planned_w += demand;
                 served.push(req.user_id);
                 admitted.push(req);
             } else {
                 // return it to the head; the drain below records it (and
                 // everything behind it) as deferred exactly once
+                if cycles_ok && !power_ok {
+                    power_cut = true;
+                }
                 self.queue.push_front(req);
                 break;
             }
@@ -286,6 +440,8 @@ impl Server {
             }
         }
         let mut cycles = 0u64;
+        let mut energy_j = 0.0f64;
+        let mut peak_block_power_w = 0.0f64;
         let mut te_util_acc = 0.0;
         let mut te_runs = 0usize;
         for run in runs {
@@ -293,28 +449,60 @@ impl Server {
             // (config × block × iters × schedule) is recalled, not
             // re-simulated — and below the block level, iterations shared
             // across runs are memoized. The result is byte-identical
-            // either way (pure runs).
+            // either way (pure runs), and so is the energy priced from its
+            // composed event counters.
             let res = self.blocks.run(&self.cfg, run);
             cycles += res.cycles;
+            energy_j += self.energy.pool_energy_j(&self.cfg, &res.raw);
+            let p = self.energy.pool_power(&self.cfg, &res.raw);
+            if p > peak_block_power_w {
+                peak_block_power_w = p;
+            }
             te_util_acc += res.te_utilization;
             te_runs += 1;
         }
         for req in admitted.iter().filter(|r| r.pipeline == Pipeline::Classical) {
-            cycles += self.estimate_cycles(req);
+            let (c, e) = self.classical_cost(req.res);
+            cycles += c;
+            energy_j += e;
         }
 
         let runtime_ms = cycles as f64 / (self.cfg.freq_ghz * 1e9) * 1e3;
+        let slot_s =
+            self.budget.cycles.max(1) as f64 / (self.cfg.freq_ghz * 1e9);
+        // The cap's marginal effect: replay the latency-only admission over
+        // the deferred queue (same FIFO single-cut rule, continuing from
+        // the admitted set's planned cycles) and count how many users it
+        // would still have admitted. Only those are power-deferred; the
+        // tail the cycle budget would have cut anyway is not.
+        let mut deferred_for_power = 0usize;
+        if power_cut {
+            let mut hypothetical = planned;
+            for r in &self.queue {
+                let est = self.estimate_cycles(r);
+                if hypothetical + est > self.budget.cycles {
+                    break;
+                }
+                hypothetical += est;
+                deferred_for_power += 1;
+            }
+        }
         TtiReport {
             served,
             deferred,
             cycles,
             runtime_ms,
-            deadline_met: cycles <= self.budget_cycles,
+            deadline_met: cycles <= self.budget.cycles,
             te_utilization: if te_runs > 0 {
                 te_util_acc / te_runs as f64
             } else {
                 0.0
             },
+            energy_j,
+            avg_power_w: energy_j / slot_s,
+            peak_block_power_w,
+            planned_power_w: planned_w,
+            deferred_for_power,
         }
     }
 }
@@ -474,6 +662,124 @@ mod tests {
             res: 8192,
         });
         assert!(big > small * 4, "cost must grow with REs: {small} vs {big}");
+    }
+
+    // ---- energy & power-capped admission ----------------------------------
+
+    #[test]
+    fn tti_energy_and_power_fields_are_populated() {
+        let mut s = server();
+        s.submit(TtiRequest {
+            user_id: 0,
+            pipeline: Pipeline::NeuralReceiver,
+            res: 8192,
+        });
+        s.submit(TtiRequest {
+            user_id: 1,
+            pipeline: Pipeline::Classical,
+            res: 1024,
+        });
+        let rep = s.schedule_tti();
+        assert_eq!(rep.served.len(), 2);
+        assert!(rep.energy_j > 0.0, "a served TTI must draw energy");
+        assert!(rep.avg_power_w > 0.0);
+        assert!(rep.peak_block_power_w > 0.0, "AI blocks ran");
+        // The per-block average can never exceed the paper's full-pool
+        // GEMM draw by much (4.32 W at near-full utilization).
+        assert!(
+            rep.peak_block_power_w < 4.32 + 0.8,
+            "block power {} W implausibly above the paper's 4.32 W GEMM",
+            rep.peak_block_power_w
+        );
+        // no cap set: nothing is attributed to power deferral
+        assert_eq!(rep.deferred_for_power, 0);
+        assert_eq!(rep.planned_power_w, 0.0);
+    }
+
+    #[test]
+    fn identical_ttis_report_bit_identical_energy() {
+        let mut s = server();
+        let mut energies = Vec::new();
+        for round in 0..2 {
+            s.submit(TtiRequest {
+                user_id: round,
+                pipeline: Pipeline::NeuralChe,
+                res: 4096,
+            });
+            energies.push(s.schedule_tti().energy_j);
+        }
+        assert_eq!(
+            energies[0].to_bits(),
+            energies[1].to_bits(),
+            "cached recall must reproduce energy to the last bit"
+        );
+    }
+
+    #[test]
+    fn power_demand_estimates_are_positive_and_bounded() {
+        let s = server();
+        for p in [
+            Pipeline::NeuralReceiver,
+            Pipeline::NeuralChe,
+            Pipeline::Classical,
+        ] {
+            let d = s.estimate_power_w(&TtiRequest {
+                user_id: 0,
+                pipeline: p,
+                res: 8192,
+            });
+            // every pipeline draws at least the static floor (AI) or the
+            // PE-pool active power (classical), and none can out-draw the
+            // near-peak-utilization GEMM reference by much
+            assert!(d > 0.3, "{p:?}: demand {d:.2} W implausibly low");
+            assert!(d < 5.0, "{p:?}: demand {d:.2} W implausibly high");
+        }
+    }
+
+    #[test]
+    fn power_cap_cuts_admission_and_labels_the_deferral() {
+        let submit_four = |s: &mut Server| {
+            for u in 0..4 {
+                s.submit(TtiRequest {
+                    user_id: u,
+                    pipeline: Pipeline::NeuralReceiver,
+                    res: 8192,
+                });
+            }
+        };
+        // latency-only: four reference NR users fit 1 ms comfortably
+        let mut latency_only = server();
+        submit_four(&mut latency_only);
+        let l = latency_only.schedule_tti();
+        assert_eq!(l.served.len(), 4, "latency-only admits all four");
+        // a cap below a single user's demand: head-of-line only, and the
+        // deferral is attributed to power (the cut request fit the cycles)
+        let mut capped = server();
+        capped.set_power_budget_w(Some(0.5));
+        assert_eq!(capped.budget().power_w, Some(0.5));
+        submit_four(&mut capped);
+        let c = capped.schedule_tti();
+        assert_eq!(c.served, vec![0], "head of line is still never starved");
+        assert_eq!(c.deferred, vec![1, 2, 3]);
+        assert_eq!(c.deferred_for_power, 3, "the cut was power-bound");
+        assert!(c.planned_power_w > 0.5, "head alone already exceeds the cap");
+    }
+
+    #[test]
+    fn clearing_the_power_cap_restores_latency_only_admission() {
+        let mut s = server();
+        s.set_power_budget_w(Some(0.5));
+        s.set_power_budget_w(None);
+        for u in 0..3 {
+            s.submit(TtiRequest {
+                user_id: u,
+                pipeline: Pipeline::NeuralChe,
+                res: 2048,
+            });
+        }
+        let rep = s.schedule_tti();
+        assert_eq!(rep.served.len(), 3);
+        assert_eq!(rep.deferred_for_power, 0);
     }
 
     // ---- per-user batch policy --------------------------------------------

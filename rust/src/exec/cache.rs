@@ -479,6 +479,46 @@ mod tests {
     }
 
     #[test]
+    fn energy_totals_are_bit_identical_across_cache_tiers() {
+        // Energy is priced from the composed event counters (MACs, line
+        // accesses, bank-word services, response beats, cycles) — all of
+        // which compose additively across memoized iterations — and the
+        // pricing formula is applied ONCE to the composed totals. So the
+        // per-iteration-memoized, block-level-cached, and uncached paths
+        // must agree to the last bit, not within a tolerance.
+        use crate::ppa::power::EnergyModel;
+        let cfg = ArchConfig::tensorpool();
+        let em = EnergyModel::calibrate(&cfg);
+        let energy_bits = |r: &ScheduleResult| {
+            em.pool_energy_j(&cfg, &r.raw).to_bits()
+        };
+        for kind in [BlockKind::FcSoftmax, BlockKind::DwsepConv, BlockKind::Mha]
+        {
+            for mode in [ScheduleMode::Sequential, ScheduleMode::Concurrent] {
+                for iters in [1usize, 2] {
+                    let run = BlockRun::new(kind, iters, mode);
+                    let uncached = energy_bits(&run.execute(&cfg));
+                    let memo =
+                        energy_bits(&BlockScheduleCache::new().run(&cfg, run));
+                    let block_level = energy_bits(
+                        &BlockScheduleCache::block_level_only().run(&cfg, run),
+                    );
+                    assert_eq!(
+                        memo, uncached,
+                        "{kind:?}/{mode:?}/iters={iters}: memoized energy \
+                         diverged from the monolithic run"
+                    );
+                    assert_eq!(
+                        block_level, uncached,
+                        "{kind:?}/{mode:?}/iters={iters}: block-cached \
+                         energy diverged from the monolithic run"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn memoized_runs_match_uncached_across_ablation_knobs() {
         // The memo engages for EVERY knob-expressible burst config, not
         // just the paper point — so the byte-identity pin must cover the

@@ -1,0 +1,105 @@
+//! GEMM execution requests — the exec-layer twin of [`super::block`].
+//!
+//! [`GemmRun`] is the one API the layers above `exec` use to run a single
+//! GEMM on the simulated Pool: (problem shape × parallelization mode),
+//! applied to an [`ArchConfig`], yields a raw [`RunResult`]. The sweep
+//! engine's GEMM scenarios and the figure harnesses used to carry this
+//! mapping logic themselves (`sweep::scenario::run_scenario_cached`'s GEMM
+//! arm); hoisting it here finishes the one-way exec refactor — *all*
+//! simulator-facing execution now lives below the coordinator.
+//!
+//! GEMM runs take no cache: unlike the Fig 9 blocks, the scenario layer
+//! already memoizes whole GEMM scenarios content-addressably, and a GEMM
+//! has no iteration substructure to dedup below that.
+
+use crate::sim::{ArchConfig, L1Alloc, RunResult, Sim};
+use crate::workload::gemm::{
+    map_independent, map_single, map_split, GemmRegions, GemmSpec,
+};
+
+use super::schedule::ScheduleMode;
+
+/// Deadlock guard for one GEMM run (same budget the CLI `simulate` uses).
+const GEMM_BUDGET: u64 = 10_000_000_000;
+
+/// One GEMM-execution request: problem shape × parallelization mode.
+/// Pure data; executing it is a deterministic pure function of
+/// `(self, cfg)`. (No `Hash`: GEMM scenarios are memoized one layer up by
+/// `Scenario::cache_key`, which carries the shape fields directly.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmRun {
+    pub spec: GemmSpec,
+    /// Must be one of the four GEMM modes
+    /// ([`ScheduleMode::is_gemm_mode`]).
+    pub mode: ScheduleMode,
+}
+
+impl GemmRun {
+    pub fn new(spec: GemmSpec, mode: ScheduleMode) -> Self {
+        assert!(mode.is_gemm_mode(), "{mode:?} is not a GEMM schedule mode");
+        GemmRun { spec, mode }
+    }
+
+    /// Map the GEMM under `mode` and simulate it to completion. Pure:
+    /// equal `(self, cfg)` produce byte-identical results on any thread.
+    pub fn execute(&self, cfg: &ArchConfig) -> RunResult {
+        let mut alloc = L1Alloc::new(cfg);
+        let mut sim = Sim::new(cfg);
+        let jobs = match self.mode {
+            ScheduleMode::SingleTe => {
+                let regions = GemmRegions::alloc(&self.spec, &mut alloc);
+                let mut jobs: Vec<_> =
+                    (0..cfg.num_tes()).map(|_| None).collect();
+                if !jobs.is_empty() {
+                    jobs[0] = Some(map_single(&self.spec, &regions));
+                }
+                jobs
+            }
+            ScheduleMode::SplitLockstep | ScheduleMode::SplitInterleaved => {
+                let regions = GemmRegions::alloc(&self.spec, &mut alloc);
+                let interleave = self.mode == ScheduleMode::SplitInterleaved;
+                map_split(&self.spec, &regions, cfg.num_tes(), interleave)
+            }
+            ScheduleMode::Independent => {
+                map_independent(&self.spec, cfg.num_tes(), &mut alloc)
+            }
+            other => unreachable!("constructor rejects {other:?} for GEMM"),
+        };
+        sim.assign_gemm(jobs);
+        sim.run(GEMM_BUDGET)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_run_executes_and_is_pure() {
+        let cfg = ArchConfig::tensorpool();
+        let run = GemmRun::new(
+            GemmSpec::square(64),
+            ScheduleMode::SplitInterleaved,
+        );
+        let a = run.execute(&cfg);
+        let b = run.execute(&cfg);
+        assert_eq!(a, b, "GEMM runs must be pure");
+        assert_eq!(a.total_macs, 64 * 64 * 64);
+        assert!(a.cycles > 0);
+    }
+
+    #[test]
+    fn degenerate_gemm_terminates_immediately() {
+        let cfg = ArchConfig::tensorpool();
+        let r = GemmRun::new(GemmSpec::square(0), ScheduleMode::SingleTe)
+            .execute(&cfg);
+        assert_eq!(r.total_macs, 0);
+        assert!(r.cycles <= 2, "must terminate immediately: {}", r.cycles);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a GEMM schedule mode")]
+    fn gemm_run_rejects_block_modes() {
+        let _ = GemmRun::new(GemmSpec::square(64), ScheduleMode::Concurrent);
+    }
+}

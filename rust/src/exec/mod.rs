@@ -5,8 +5,10 @@
 //! ([`ScheduleMode`]), the sweepable architecture knobs ([`ArchKnobs`]),
 //! the sequential/concurrent schedule drivers ([`run_sequential`],
 //! [`run_concurrent`]), the unified [`BlockRun`] request (block × iters ×
-//! mode × config → [`ScheduleResult`]), and the two memoization tiers of
-//! [`BlockScheduleCache`] (whole-block recall + iteration-level dedup).
+//! mode × config → [`ScheduleResult`]), its GEMM twin [`GemmRun`]
+//! (shape × parallelization mode → raw `RunResult`), and the two
+//! memoization tiers of [`BlockScheduleCache`] (whole-block recall +
+//! iteration-level dedup).
 //!
 //! **Layering contract** (enforced by `tests/layering.rs`): the crate's
 //! dependency graph is strictly one-way,
@@ -28,11 +30,13 @@
 
 pub mod block;
 pub mod cache;
+pub mod gemm;
 pub mod knobs;
 pub mod schedule;
 
 pub use block::{simulate_block, BlockKind, BlockRun};
 pub use cache::BlockScheduleCache;
+pub use gemm::GemmRun;
 pub use knobs::ArchKnobs;
 pub use schedule::{
     compare, run_concurrent, run_sequential, ScheduleMode, ScheduleResult,

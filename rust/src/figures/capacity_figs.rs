@@ -43,15 +43,20 @@ pub const MIXED_MIX: (&str, UserMix) = (
 /// Build the users-per-TTI × pipeline-mix grid. Every user occupies the
 /// paper's full 8192-RE reference TTI (the demanding Sec V-B use case).
 /// `budget_cycles`: per-TTI budget override (`None` = 1 ms at the clock).
+/// `include_mixed`: add the half-AI/half-classical mix.
 /// `policy`: how AI blocks scale across a TTI's users (`Batched` = the
 /// optimistic one-pass-per-kind view; `PerUser` = per-user passes, the
 /// deadline-realistic view the `--per-user` CLI flag selects).
+/// `power_budget_mw`: per-TTI power cap (`None` = latency-only admission;
+/// the `--power-budget-w` CLI flag, in milliwatts so scenarios stay
+/// hashable).
 pub fn capacity_grid(
     users: &[usize],
     num_ttis: usize,
     budget_cycles: Option<u64>,
     include_mixed: bool,
     policy: BatchPolicy,
+    power_budget_mw: Option<u32>,
 ) -> Vec<TtiScenario> {
     let knobs = ArchKnobs::default();
     let mut mixes: Vec<(&str, UserMix)> = PIPELINE_MIXES.to_vec();
@@ -71,6 +76,7 @@ pub fn capacity_grid(
                 res_per_user: 8192,
                 budget_cycles,
                 policy,
+                power_budget_mw,
                 seed: 0xC0FFEE,
             });
         }
@@ -90,10 +96,12 @@ pub fn capacity_rows(
         None,
         true,
         BatchPolicy::Batched,
+        None,
     ))
 }
 
-/// The users-per-TTI vs deadline table (one row per grid point).
+/// The users-per-TTI vs deadline table (one row per grid point), now with
+/// the energy columns of the power-budgeted serving study.
 pub fn capacity_table(reports: &[CapacityReport]) -> String {
     let mut t = Table::new(&[
         "scenario",
@@ -104,7 +112,11 @@ pub fn capacity_table(reports: &[CapacityReport]) -> String {
         "mean TE util",
         "kcycles/TTI",
         "backlog",
+        "mJ/TTI",
+        "avg W",
+        "pwr defer",
     ]);
+    let n = |r: &CapacityReport| r.num_ttis.max(1) as f64;
     for r in reports {
         t.row(&[
             r.name.clone(),
@@ -115,6 +127,9 @@ pub fn capacity_table(reports: &[CapacityReport]) -> String {
             pct(r.mean_te_utilization),
             f2(r.mean_cycles_per_tti / 1e3),
             int(r.final_backlog as u64),
+            f2(r.total_energy_j / n(r) * 1e3),
+            f2(r.mean_power_w),
+            int(r.deferred_for_power_total),
         ]);
     }
     t.to_string()
@@ -126,8 +141,14 @@ mod tests {
 
     #[test]
     fn grid_covers_mixes_by_users() {
-        let g =
-            capacity_grid(&[1, 4, 16], 4, None, true, BatchPolicy::Batched);
+        let g = capacity_grid(
+            &[1, 4, 16],
+            4,
+            None,
+            true,
+            BatchPolicy::Batched,
+            None,
+        );
         assert_eq!(g.len(), 12); // (3 pipelines + mixed) x 3 loads
         let keys: std::collections::HashSet<String> =
             g.iter().map(|s| s.cache_key()).collect();
@@ -138,10 +159,12 @@ mod tests {
             Some(225_000),
             false,
             BatchPolicy::PerUser,
+            Some(10_000),
         );
         assert_eq!(g2.len(), 6);
         assert!(g2.iter().all(|s| s.budget_cycles == Some(225_000)));
         assert!(g2.iter().all(|s| s.policy == BatchPolicy::PerUser));
+        assert!(g2.iter().all(|s| s.power_budget_mw == Some(10_000)));
     }
 
     #[test]

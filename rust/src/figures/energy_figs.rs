@@ -1,0 +1,267 @@
+//! Energy harness: the power-capped capacity frontier and the TE-vs-PE
+//! energy-efficiency ratio (paper Sec I / Table II — cell-site
+//! densification caps the compute budget, and TensorPool's answer is a
+//! 9.1× GOPS/W/mm² gain over a core-only cluster).
+//!
+//! Two studies:
+//! * **Frontier** — the users-per-TTI × pipeline-mix serving grid re-run
+//!   under per-TTI power caps ("max users/TTI under 5 W / 10 W / 20 W"):
+//!   for each cap, an oversubscribed offered load is driven through the
+//!   power-capped [`crate::coordinator::Server`] admission and the table
+//!   reports how many users per TTI actually fit, how many were deferred
+//!   for power, and the J/user cost. Every number derives from simulator
+//!   event counters, so the whole table is byte-deterministic.
+//! * **Efficiency ratio** — energy per MAC of the TE-accelerated Pool
+//!   (measured on the paper's 512³ GEMM) against the PE-only TeraPool
+//!   baseline (the `gemm_pe` microkernel priced by the calibrated
+//!   per-instruction energy), reproducing the direction and magnitude of
+//!   the paper's Table II efficiency gain.
+
+use crate::coordinator::BatchPolicy;
+use crate::exec::{GemmRun, ScheduleMode};
+use crate::ppa::power::EnergyModel;
+use crate::report::{f2, int, pct, Table};
+use crate::sim::ArchConfig;
+use crate::sweep::{CapacityReport, SweepRunner, TtiScenario};
+use crate::workload::gemm::GemmSpec;
+use crate::workload::phy::gemm_pe;
+
+use super::capacity_figs::capacity_grid;
+
+/// The per-cluster power caps of the frontier study (milliwatts).
+pub const FRONTIER_BUDGETS_MW: [u32; 3] = [5_000, 10_000, 20_000];
+
+/// The frontier's slack per-TTI cycle budget (10 ms at 0.9 GHz). The
+/// point of the frontier is "max users/TTI under a POWER cap", so the
+/// latency budget is deliberately slackened until the cap is the binding
+/// admission constraint — with the default 1 ms slot, the cycle budget
+/// cuts a 16-user NR TTI at ~6 users before a 5 W cap ever engages (and a
+/// power-bound cut requires the cut request to still fit the cycles).
+pub const FRONTIER_SLOT_CYCLES: u64 = 9_000_000;
+
+/// One row of the power-capped capacity frontier.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FrontierRow {
+    pub mix: String,
+    /// `None` = the latency-only reference row.
+    pub power_budget_w: Option<f64>,
+    /// Offered load the scenario oversubscribes the cap with.
+    pub users_offered: usize,
+    /// Users actually served per TTI under the cap — the frontier metric.
+    pub mean_served_per_tti: f64,
+    pub deferred_for_power_total: u64,
+    pub mean_power_w: f64,
+    pub energy_per_served_user_j: f64,
+    pub deadline_miss_rate: f64,
+}
+
+/// Build the frontier grid: the capacity study's own mix grid (one
+/// offered load, mixed row included) replicated per power cap — an
+/// uncapped reference plus [`FRONTIER_BUDGETS_MW`] — all over the slack
+/// [`FRONTIER_SLOT_CYCLES`] slot so the cap is the binding constraint.
+/// Built by mapping [`capacity_grid`] (not a parallel literal), so the
+/// frontier rows stay comparable to the capacity rows by construction.
+pub fn frontier_grid(
+    users_offered: usize,
+    num_ttis: usize,
+) -> Vec<TtiScenario> {
+    let mut caps: Vec<Option<u32>> = vec![None];
+    caps.extend(FRONTIER_BUDGETS_MW.iter().map(|&mw| Some(mw)));
+    let mut out = Vec::new();
+    for cap in caps {
+        let cap_label = match cap {
+            None => "uncapped".to_string(),
+            Some(mw) => format!("{}w", mw / 1000),
+        };
+        for mut s in capacity_grid(
+            &[users_offered],
+            num_ttis,
+            Some(FRONTIER_SLOT_CYCLES),
+            true,
+            BatchPolicy::Batched,
+            cap,
+        ) {
+            s.name = format!("{}_{cap_label}", s.name);
+            out.push(s);
+        }
+    }
+    out
+}
+
+fn row_of(s: &TtiScenario, r: &CapacityReport) -> FrontierRow {
+    let n = r.num_ttis.max(1) as f64;
+    FrontierRow {
+        mix: s.name.clone(),
+        power_budget_w: s.power_budget_mw.map(|mw| f64::from(mw) / 1e3),
+        users_offered: s.users_per_tti,
+        mean_served_per_tti: r.served_total as f64 / n,
+        deferred_for_power_total: r.deferred_for_power_total,
+        mean_power_w: r.mean_power_w,
+        energy_per_served_user_j: r.energy_per_served_user_j,
+        deadline_miss_rate: r.deadline_miss_rate,
+    }
+}
+
+/// Run the frontier grid on a (shared) sweep runner, in parallel.
+pub fn frontier_rows(
+    users_offered: usize,
+    num_ttis: usize,
+    runner: &SweepRunner,
+) -> Vec<FrontierRow> {
+    let grid = frontier_grid(users_offered, num_ttis);
+    let reports = runner.run_capacity_parallel(&grid);
+    grid.iter().zip(&reports).map(|(s, r)| row_of(s, r)).collect()
+}
+
+/// The frontier table: one row per (mix × cap) point.
+pub fn frontier_table(rows: &[FrontierRow]) -> String {
+    let mut t = Table::new(&[
+        "scenario",
+        "cap W",
+        "offered",
+        "served/TTI",
+        "pwr defer",
+        "mean W",
+        "mJ/user",
+        "miss rate",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.mix.clone(),
+            match r.power_budget_w {
+                None => "-".into(),
+                Some(w) => f2(w),
+            },
+            int(r.users_offered as u64),
+            f2(r.mean_served_per_tti),
+            int(r.deferred_for_power_total),
+            f2(r.mean_power_w),
+            f2(r.energy_per_served_user_j * 1e3),
+            pct(r.deadline_miss_rate),
+        ]);
+    }
+    t.to_string()
+}
+
+/// TE-vs-PE energy efficiency, measured (not transcribed): energy per MAC
+/// of the TE-accelerated Pool on the paper's 512³ GEMM vs the PE-only
+/// TeraPool baseline microkernel.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyEfficiency {
+    /// TE path: GMACs per Joule achieved by the simulated Pool GEMM.
+    pub te_gmacs_per_j: f64,
+    /// PE-only baseline: GMACs per Joule of the `gemm_pe` microkernel at
+    /// the TeraPool-calibrated per-instruction energy.
+    pub pe_gmacs_per_j: f64,
+    /// The efficiency gain (paper Table II direction: 8.8–9.1×).
+    pub gain: f64,
+}
+
+pub fn efficiency_summary() -> EnergyEfficiency {
+    let cfg = ArchConfig::tensorpool();
+    let em = EnergyModel::calibrate(&cfg);
+    let r = GemmRun::new(GemmSpec::square(512), ScheduleMode::SplitInterleaved)
+        .execute(&cfg);
+    let te_energy = em.pool_energy_j(&cfg, &r);
+    let te = r.total_macs as f64 / te_energy / 1e9;
+    // PE-only: the TeraPool GEMM microkernel retires `elems_per_iter` MACs
+    // per `body.len()`-instruction iteration; per-MAC energy follows from
+    // the calibrated per-instruction energy alone (throughput cancels).
+    let kernel = gemm_pe();
+    let instrs_per_mac =
+        kernel.body.len() as f64 / kernel.elems_per_iter as f64;
+    let pe = 1.0 / (em.pe_energy_j(1) * instrs_per_mac) / 1e9;
+    EnergyEfficiency { te_gmacs_per_j: te, pe_gmacs_per_j: pe, gain: te / pe }
+}
+
+/// The CLI `figures energy` payload: efficiency ratio + frontier table.
+pub fn energy_report() -> String {
+    let eff = efficiency_summary();
+    let runner = SweepRunner::new();
+    let rows = frontier_rows(16, 4, &runner);
+    format!(
+        "TE-accelerated vs PE-only energy efficiency (Table II direction):\n  \
+         TE Pool  : {:.1} GMAC/J\n  PE-only  : {:.1} GMAC/J\n  gain     : \
+         {:.1}x (paper: 8.8x GOPS/W, 9.1x GOPS/W/mm2)\n\n\
+         Power-capped capacity frontier (16 users/TTI offered, 8192 REs \
+         each,\nslack 10 ms slot so the power cap is the binding \
+         constraint):\n{}",
+        eff.te_gmacs_per_j,
+        eff.pe_gmacs_per_j,
+        eff.gain,
+        frontier_table(&rows)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn efficiency_gain_reproduces_the_papers_direction() {
+        let eff = efficiency_summary();
+        assert!(eff.te_gmacs_per_j > eff.pe_gmacs_per_j);
+        assert!(
+            eff.gain > 6.0,
+            "TE efficiency gain {:.1}x must exceed 6x (paper: ~9x)",
+            eff.gain
+        );
+        assert!(
+            eff.gain < 40.0,
+            "gain {:.1}x implausibly far above the paper's ~9x",
+            eff.gain
+        );
+    }
+
+    #[test]
+    fn frontier_grid_covers_caps_by_mixes() {
+        let g = frontier_grid(16, 4);
+        assert_eq!(g.len(), 16); // (3 pipelines + mixed) x (uncapped + 3 caps)
+        let keys: std::collections::HashSet<String> =
+            g.iter().map(|s| s.cache_key()).collect();
+        assert_eq!(keys.len(), 16, "every frontier point is distinct");
+    }
+
+    #[test]
+    fn tighter_power_caps_serve_fewer_users() {
+        // The frontier property: for the pure-NR mix, served users per TTI
+        // are monotonically nondecreasing in the cap, and the tightest cap
+        // serves strictly fewer than the uncapped reference (which, over
+        // the slack frontier slot, admits the whole offered load) while
+        // deferring for power. Soundness floor: a 5 W cap over 16 users
+        // whose demand each exceeds the 0.648 W static floor must cut
+        // (16 x 0.648 = 10.4 W > 5 W), regardless of the dynamic energy
+        // the first compiled run measures.
+        let runner = SweepRunner::new();
+        let rows = frontier_rows(16, 2, &runner);
+        let nr: Vec<&FrontierRow> = rows
+            .iter()
+            .filter(|r| r.mix.starts_with("neural_receiver"))
+            .collect();
+        assert_eq!(nr.len(), 4);
+        let uncapped = nr.iter().find(|r| r.power_budget_w.is_none()).unwrap();
+        let capped: Vec<&&FrontierRow> =
+            nr.iter().filter(|r| r.power_budget_w.is_some()).collect();
+        for pair in capped.windows(2) {
+            let (lo, hi) = (pair[0], pair[1]);
+            assert!(lo.power_budget_w < hi.power_budget_w);
+            assert!(
+                lo.mean_served_per_tti <= hi.mean_served_per_tti,
+                "served/TTI must grow with the cap: {} @ {:?} vs {} @ {:?}",
+                lo.mean_served_per_tti,
+                lo.power_budget_w,
+                hi.mean_served_per_tti,
+                hi.power_budget_w
+            );
+        }
+        let tightest = capped[0];
+        assert!(
+            tightest.mean_served_per_tti < uncapped.mean_served_per_tti,
+            "a 5 W cap must bite at 16 offered NR users/TTI"
+        );
+        assert!(tightest.deferred_for_power_total > 0);
+        // the table renders one line per row plus header + rule
+        let table = frontier_table(&rows);
+        assert_eq!(table.lines().count(), rows.len() + 2);
+    }
+}

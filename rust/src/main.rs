@@ -5,7 +5,9 @@
 //! ad-hoc simulations, and run parallel scenario sweeps (`sweep`).
 //! Argument parsing is hand-rolled (no clap in the dependency set).
 
-use tensorpool::figures::{block_figs, gemm_figs, pe_figs, ppa_figs, tables};
+use tensorpool::figures::{
+    block_figs, energy_figs, gemm_figs, pe_figs, ppa_figs, tables,
+};
 use tensorpool::report::Table;
 use tensorpool::runtime::{default_artifacts_dir, Runtime};
 use tensorpool::sim::ArchConfig;
@@ -16,8 +18,11 @@ tensorpool — reproduction of the TensorPool AI-RAN processor (CS.AR 2026)
 USAGE: tensorpool <COMMAND> [ARGS]
 
 COMMANDS:
-  figures [fig1|fig5|fig7|fig8|fig10|fig12|fig13|fig15|all]
-            regenerate the paper's figures (default: all)
+  figures [fig1|fig5|fig7|fig8|fig10|fig12|fig13|fig15|energy|all]
+            regenerate the paper's figures (default: all). `energy` is the
+            power-budgeted serving study: TE-vs-PE energy-efficiency ratio
+            (Table II direction) + the power-capped capacity frontier
+            (max users/TTI under 5/10/20 W caps)
   tables  [table1|table2|table3|all]
             regenerate the paper's tables (default: all)
   balance   Sec IV memory-balance analysis (Eqs 1-6)
@@ -32,22 +37,26 @@ COMMANDS:
             the serial reference, verifies byte-identical per-scenario
             results, and reports the wall-clock speedup.
   capacity [--users U1,U2,..] [--ttis N] [--budget-us B] [--no-mixed]
-           [--per-user] [--out <path>] [--no-verify] [--smoke]
+           [--per-user] [--power-budget-w W] [--out <path>] [--no-verify]
+           [--smoke]
             run the TTI serving loop over a users-per-TTI x pipeline-mix
             grid on the sweep engine (shared cross-run block-schedule
             cache) and emit a machine-readable capacity report: deadline
-            miss rate, served throughput, backlog, TE utilization per
-            point. Verifies parallel == serial byte-identity by default.
-            --per-user scales AI blocks per user (res-proportional
-            iteration counts) instead of one batched pass per pipeline
-            kind, the deadline-realistic view. --smoke runs a 2-point
-            grid for CI.
+            miss rate, served throughput, backlog, TE utilization, energy
+            (J/TTI, avg W) per point. Verifies parallel == serial
+            byte-identity by default. --per-user scales AI blocks per user
+            (res-proportional iteration counts) instead of one batched
+            pass per pipeline kind, the deadline-realistic view.
+            --power-budget-w caps each TTI's admitted power demand at W
+            Watts (power-capped admission; deferred-for-power counts show
+            up per point). --smoke runs a 2-point grid for CI.
   bench-diff --baseline <file> --current <file> [--threshold PCT]
             compare two perf-trajectory JSONs (BENCH_*.json) and exit
-            nonzero if any deterministic cycle-count metric regressed by
-            more than PCT percent (default 5). Wall-clock fields are
-            reported but never gate. Null baselines (schema stubs awaiting
-            their first measured run) pass vacuously.
+            nonzero if any deterministic metric (simulated cycle counts,
+            simulated energy totals) regressed by more than PCT percent
+            (default 5). Wall-clock fields are reported but never gate.
+            Null baselines (schema stubs awaiting their first measured
+            run) pass vacuously.
   artifacts [--dir <path>]
             list the AOT artifacts and validate the manifest
   run --name <artifact> [--dir <path>]
@@ -137,6 +146,10 @@ fn figures(rest: &[String]) -> i32 {
     }
     if all || which == "fig15" {
         println!("{}", ppa_figs::fig15_report());
+    }
+    if all || which == "energy" {
+        println!("Energy — TE-vs-PE efficiency + power-capped frontier");
+        println!("{}", energy_figs::energy_report());
     }
     0
 }
@@ -344,6 +357,22 @@ fn capacity(rest: &[String]) -> i32 {
             }
         },
     };
+    // Per-TTI power cap in Watts (milliwatt-quantized so scenarios stay
+    // hashable); engages the power-capped admission mode.
+    let power_budget_mw: Option<u32> = match flag(rest, "--power-budget-w") {
+        None => None,
+        Some(v) => match v.parse::<f64>() {
+            // floor at 1 mW: sub-milliwatt values must not round to a 0 mW
+            // cap (which would differ from the rejected explicit 0)
+            Ok(w) if w > 0.0 && w.is_finite() => {
+                Some(((w * 1e3).round() as u32).max(1))
+            }
+            _ => {
+                eprintln!("error: bad --power-budget-w value '{v}'");
+                return 2;
+            }
+        },
+    };
     let verify = !has(rest, "--no-verify");
     let policy = if has(rest, "--per-user") {
         tensorpool::coordinator::BatchPolicy::PerUser
@@ -356,14 +385,19 @@ fn capacity(rest: &[String]) -> i32 {
         budget_cycles,
         !has(rest, "--no-mixed"),
         policy,
+        power_budget_mw,
     );
     eprintln!(
         "capacity: {} scenarios ({} loads x {} mixes), {} TTIs each, \
-         {policy:?} AI scaling, {} threads, verify={}",
+         {policy:?} AI scaling, power cap {}, {} threads, verify={}",
         grid.len(),
         users.len(),
         grid.len() / users.len(),
         num_ttis,
+        match power_budget_mw {
+            None => "none".to_string(),
+            Some(mw) => format!("{:.3} W", f64::from(mw) / 1e3),
+        },
         rayon::current_num_threads(),
         verify,
     );
@@ -384,6 +418,19 @@ fn capacity(rest: &[String]) -> i32 {
          across the grid",
         report.distinct_block_sims, report.block_cache_hits,
     );
+    if power_budget_mw.is_some() {
+        let power_deferred: u64 = report
+            .reports
+            .iter()
+            .map(|r| r.deferred_for_power_total)
+            .sum();
+        let total_energy: f64 =
+            report.reports.iter().map(|r| r.total_energy_j).sum();
+        eprintln!(
+            "capacity: power cap deferred {power_deferred} admissions; \
+             {total_energy:.6} J drawn across the grid",
+        );
+    }
     if let (Some(s), Some(sp)) = (report.serial_wall_s, report.speedup) {
         eprintln!(
             "capacity: serial {s:.2}s, parallel {:.2}s -> {sp:.2}x speedup; \
@@ -473,10 +520,12 @@ fn bench_diff(rest: &[String]) -> i32 {
     let cur_map: std::collections::HashMap<String, serde_json::Value> =
         cur_flat.into_iter().collect();
 
-    // Deterministic metrics only: cycle counts gate on the threshold,
-    // MAC counts gate exactly. Everything else (wall-clock, thread
-    // counts, cache hit totals) is informational.
-    const GATED: [&str; 2] = ["sim_cycles", "grid_cycles_total"];
+    // Deterministic metrics only: cycle counts and simulated energy
+    // totals (priced from simulator event counters — byte-deterministic)
+    // gate on the threshold, MAC counts gate exactly. Everything else
+    // (wall-clock, thread counts, cache hit totals) is informational.
+    const GATED: [&str; 3] =
+        ["sim_cycles", "grid_cycles_total", "total_energy_j"];
     const EXACT: [&str; 1] = ["sim_macs"];
 
     let mut failures = 0usize;
@@ -510,14 +559,14 @@ fn bench_diff(rest: &[String]) -> i32 {
             }
         } else if c > b * (1.0 + threshold / 100.0) {
             eprintln!(
-                "bench-diff: FAIL {path}: {b} -> {c} cycles \
+                "bench-diff: FAIL {path}: {b} -> {c} \
                  (+{:.1}% > {threshold}% threshold)",
                 100.0 * (c / b - 1.0)
             );
             failures += 1;
         } else if b > 0.0 && c < b * (1.0 - threshold / 100.0) {
             eprintln!(
-                "bench-diff: note {path}: {b} -> {c} cycles \
+                "bench-diff: note {path}: {b} -> {c} \
                  ({:.1}% improvement — consider refreshing the baseline)",
                 100.0 * (1.0 - c / b)
             );

@@ -53,18 +53,48 @@ impl EnergyModel {
         }
     }
 
+    /// Dynamic energy (Joules) of a run's event counts, excluding the
+    /// static floor. Additive across disjoint time segments by
+    /// construction: every term is a per-event energy times a counter that
+    /// the exec layer composes additively (see `exec::cache::compose`).
+    fn dynamic_energy_j(&self, cfg: &ArchConfig, r: &RunResult) -> f64 {
+        let lines = (r.noc.reads_issued + r.noc.writes_issued) as f64;
+        self.e_mac * r.total_macs as f64
+            + self.e_line * lines
+            + self.e_bank_word * r.noc.bank_word_services as f64
+            + self.e_hop_word * (r.noc.resp_beats * cfg.resp_k as u64) as f64
+    }
+
+    /// Total energy (Joules) a run draws over the whole Pool: the dynamic
+    /// per-event energies plus the static floor integrated over the run's
+    /// elapsed cycles. Because every input (counters *and* cycles) is
+    /// additive across the iteration segments the exec layer composes, and
+    /// the formula is applied once to the composed totals, memoized,
+    /// block-cached, and uncached runs yield bit-identical energies.
+    pub fn pool_energy_j(&self, cfg: &ArchConfig, r: &RunResult) -> f64 {
+        if r.cycles == 0 {
+            return 0.0;
+        }
+        let t = r.cycles as f64 / self.freq_hz;
+        self.dynamic_energy_j(cfg, r)
+            + self.p_static_subgroup * cfg.num_subgroups() as f64 * t
+    }
+
     /// Average power of a simulated run over the whole Pool.
     pub fn pool_power(&self, cfg: &ArchConfig, r: &RunResult) -> f64 {
         if r.cycles == 0 {
             return 0.0;
         }
         let t = r.cycles as f64 / self.freq_hz;
-        let lines = (r.noc.reads_issued + r.noc.writes_issued) as f64;
-        let e = self.e_mac * r.total_macs as f64
-            + self.e_line * lines
-            + self.e_bank_word * r.noc.bank_word_services as f64
-            + self.e_hop_word * (r.noc.resp_beats * cfg.resp_k as u64) as f64;
-        e / t + self.p_static_subgroup * cfg.num_subgroups() as f64
+        self.dynamic_energy_j(cfg, r) / t
+            + self.p_static_subgroup * cfg.num_subgroups() as f64
+    }
+
+    /// Energy (Joules) of `instrs` PE instructions (the TeraPool-calibrated
+    /// per-instruction energy; prices the classical-chain kernels the
+    /// serving loop runs on the PE pool).
+    pub fn pe_energy_j(&self, instrs: u64) -> f64 {
+        self.e_pe_instr * instrs as f64
     }
 
     /// Power of a PE-only workload (the TeraPool baseline GEMM).
@@ -135,6 +165,46 @@ mod tests {
             (eff - 1.53).abs() < 0.35,
             "efficiency {eff:.2} TFLOPS/W vs paper 1.53"
         );
+    }
+
+    #[test]
+    fn energy_and_power_views_agree() {
+        // pool_energy_j integrates exactly what pool_power rates: for any
+        // run, energy / elapsed-time == average power (up to f64 rounding).
+        let cfg = ArchConfig::tensorpool();
+        let em = EnergyModel::calibrate(&cfg);
+        let spec = GemmSpec::square(256);
+        let mut alloc = L1Alloc::new(&cfg);
+        let regions = GemmRegions::alloc(&spec, &mut alloc);
+        let mut sim = Sim::new(&cfg);
+        sim.assign_gemm(map_split(&spec, &regions, 16, true));
+        let r = sim.run(1_000_000_000);
+        let t = r.cycles as f64 / em.freq_hz;
+        let e = em.pool_energy_j(&cfg, &r);
+        let p = em.pool_power(&cfg, &r);
+        assert!(e > 0.0 && p > 0.0);
+        assert!(
+            (e / t - p).abs() / p < 1e-9,
+            "energy/time {} vs power {p}",
+            e / t
+        );
+        // zero-cycle runs draw nothing
+        assert_eq!(em.pool_energy_j(&cfg, &RunResult::default()), 0.0);
+    }
+
+    #[test]
+    fn pe_energy_prices_instructions_linearly() {
+        let cfg = ArchConfig::tensorpool();
+        let em = EnergyModel::calibrate(&cfg);
+        assert_eq!(em.pe_energy_j(0), 0.0);
+        let one = em.pe_energy_j(1);
+        assert!(one > 0.0);
+        assert!((em.pe_energy_j(1000) - 1000.0 * one).abs() < 1e-18);
+        // calibration identity: 1024 PEs at IPC 0.6 for one second of
+        // instructions draw the TeraPool 6.33 W
+        let instrs_per_s = 1024.0 * 0.6 * em.freq_hz;
+        let p = em.pe_energy_j(instrs_per_s as u64);
+        assert!((p - 6.33).abs() < 0.01);
     }
 
     #[test]

@@ -28,15 +28,10 @@
 pub mod runner;
 pub mod scenario;
 
-// ---- layering shims (slated for removal) -----------------------------------
-// `ArchKnobs`/`BlockKind`/`ScheduleMode`/`BlockScheduleCache`/
-// `simulate_block` moved down into `crate::exec` when the coordinator↔sweep
-// cycle was untangled; these pure re-exports keep historical
-// `tensorpool::sweep::*` call sites compiling. New code should import from
-// `crate::exec` directly.
-pub use crate::exec::{
-    simulate_block, ArchKnobs, BlockKind, BlockScheduleCache, ScheduleMode,
-};
+// NOTE: the layering shims that once re-exported the exec vocabulary
+// (`ArchKnobs`, `BlockKind`, `ScheduleMode`, `BlockScheduleCache`,
+// `simulate_block`) from here are gone — import from [`crate::exec`].
+// `tests/layering.rs` pins that they stay gone.
 
 pub use runner::{
     capacity_sweep_with_report, sweep_with_report, CapacitySweepReport,
@@ -74,7 +69,7 @@ const _: () = {
     assert_send::<TtiScenario>();
     assert_send::<CapacityReport>();
     assert_send::<crate::coordinator::Server>();
-    assert_send::<BlockScheduleCache>();
-    assert_sync::<BlockScheduleCache>();
+    assert_send::<crate::exec::BlockScheduleCache>();
+    assert_sync::<crate::exec::BlockScheduleCache>();
     assert_sync::<SweepRunner>();
 };

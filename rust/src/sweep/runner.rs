@@ -378,6 +378,7 @@ mod tests {
                     res_per_user: 1024,
                     budget_cycles: None,
                     policy: BatchPolicy::default(),
+                    power_budget_mw: None,
                     seed: 42,
                 });
             }

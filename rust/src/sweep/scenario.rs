@@ -17,14 +17,11 @@ use std::sync::Arc;
 use serde::{Deserialize, Serialize};
 
 use crate::coordinator::server::{BatchPolicy, Pipeline, Server, TtiRequest};
-use crate::exec::{ArchKnobs, BlockKind, BlockRun, BlockScheduleCache, ScheduleMode};
-use crate::sim::{L1Alloc, Sim};
-use crate::workload::gemm::{
-    map_independent, map_single, map_split, GemmRegions, GemmSpec,
+use crate::exec::{
+    ArchKnobs, BlockKind, BlockRun, BlockScheduleCache, GemmRun, ScheduleMode,
 };
-
-/// Deadlock guard for scenario runs (same budget the CLI `simulate` uses).
-const MAX_CYCLES: u64 = 10_000_000_000;
+use crate::ppa::power::EnergyModel;
+use crate::workload::gemm::GemmSpec;
 
 /// What a scenario simulates.
 #[derive(Clone, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
@@ -119,6 +116,13 @@ pub struct ScenarioResult {
     /// NoC traffic counters (reads/writes injected).
     pub reads_issued: u64,
     pub writes_issued: u64,
+    /// Total energy the run drew (calibrated per-event model over the
+    /// simulator counters — deterministic, like every field above).
+    #[serde(default)]
+    pub energy_j: f64,
+    /// Average power over the run's elapsed cycles.
+    #[serde(default)]
+    pub avg_power_w: f64,
 }
 
 /// Run one scenario to completion. Pure and deterministic: equal scenarios
@@ -140,33 +144,13 @@ pub fn run_scenario_cached(
     blocks: &BlockScheduleCache,
 ) -> ScenarioResult {
     let cfg = s.arch.apply();
+    let em = EnergyModel::calibrate(&cfg);
     match &s.workload {
         Workload::Gemm { m, k, n, accumulate } => {
             let spec = GemmSpec { m: *m, k: *k, n: *n, accumulate: *accumulate };
-            let mut alloc = L1Alloc::new(&cfg);
-            let mut sim = Sim::new(&cfg);
-            let jobs = match s.mode {
-                ScheduleMode::SingleTe => {
-                    let regions = GemmRegions::alloc(&spec, &mut alloc);
-                    let mut jobs: Vec<_> =
-                        (0..cfg.num_tes()).map(|_| None).collect();
-                    if !jobs.is_empty() {
-                        jobs[0] = Some(map_single(&spec, &regions));
-                    }
-                    jobs
-                }
-                ScheduleMode::SplitLockstep | ScheduleMode::SplitInterleaved => {
-                    let regions = GemmRegions::alloc(&spec, &mut alloc);
-                    let interleave = s.mode == ScheduleMode::SplitInterleaved;
-                    map_split(&spec, &regions, cfg.num_tes(), interleave)
-                }
-                ScheduleMode::Independent => {
-                    map_independent(&spec, cfg.num_tes(), &mut alloc)
-                }
-                other => unreachable!("constructor rejects {other:?} for GEMM"),
-            };
-            sim.assign_gemm(jobs);
-            let r = sim.run(MAX_CYCLES);
+            // Mapping + simulation live one layer down in the exec layer
+            // (the GEMM twin of `BlockRun`).
+            let r = GemmRun::new(spec, s.mode).execute(&cfg);
             let util = r.fma_utilization(cfg.te.macs_per_cycle());
             ScenarioResult {
                 name: s.name.clone(),
@@ -181,6 +165,8 @@ pub fn run_scenario_cached(
                 dma_utilization: 0.0,
                 reads_issued: r.noc.reads_issued,
                 writes_issued: r.noc.writes_issued,
+                energy_j: em.pool_energy_j(&cfg, &r),
+                avg_power_w: em.pool_power(&cfg, &r),
             }
         }
         Workload::Block { kind, iters } => {
@@ -198,6 +184,8 @@ pub fn run_scenario_cached(
                 dma_utilization: res.dma_utilization,
                 reads_issued: res.raw.noc.reads_issued,
                 writes_issued: res.raw.noc.writes_issued,
+                energy_j: em.pool_energy_j(&cfg, &res.raw),
+                avg_power_w: em.pool_power(&cfg, &res.raw),
             }
         }
     }
@@ -345,6 +333,11 @@ pub struct TtiScenario {
     /// per pipeline kind; `PerUser` = one res-scaled pass per user).
     #[serde(default)]
     pub policy: BatchPolicy,
+    /// Per-TTI power cap in milliwatts (integer so scenarios stay
+    /// hashable); `None` = latency-only admission. See
+    /// [`crate::coordinator::BudgetPolicy`] for the cap's semantics.
+    #[serde(default)]
+    pub power_budget_mw: Option<u32>,
     /// Seed of the deterministic per-user pipeline draw.
     pub seed: u64,
 }
@@ -353,7 +346,7 @@ impl TtiScenario {
     /// Content key for the capacity result cache (display name excluded).
     pub fn cache_key(&self) -> String {
         format!(
-            "tti|{:?}|{:?}|{:?}|{}|{}|{}|{:?}|{:?}|{}",
+            "tti|{:?}|{:?}|{:?}|{}|{}|{}|{:?}|{:?}|{:?}|{}",
             self.arch,
             self.mix,
             self.arrival,
@@ -362,6 +355,7 @@ impl TtiScenario {
             self.res_per_user,
             self.budget_cycles,
             self.policy,
+            self.power_budget_mw,
             self.seed
         )
     }
@@ -380,6 +374,15 @@ pub struct CapacityPoint {
     pub cycles: u64,
     pub deadline_met: bool,
     pub te_utilization: f64,
+    /// Energy this TTI drew (Joules; deterministic, see [`crate::coordinator::TtiReport`]).
+    #[serde(default)]
+    pub energy_j: f64,
+    /// Energy averaged over the TTI slot (Watts).
+    #[serde(default)]
+    pub avg_power_w: f64,
+    /// Users deferred by the power cap in this TTI (0 without a cap).
+    #[serde(default)]
+    pub deferred_for_power: usize,
 }
 
 /// Aggregate result of one [`TtiScenario`]. A pure function of the
@@ -400,6 +403,22 @@ pub struct CapacityReport {
     pub mean_cycles_per_tti: f64,
     /// Users still queued when the run ended (saturation indicator).
     pub final_backlog: usize,
+    /// Total energy the run drew across all TTIs (Joules).
+    #[serde(default)]
+    pub total_energy_j: f64,
+    /// Mean per-TTI average power (Watts over the TTI slot).
+    #[serde(default)]
+    pub mean_power_w: f64,
+    /// Highest single-block average power seen in any TTI (Watts).
+    #[serde(default)]
+    pub peak_block_power_w: f64,
+    /// `total_energy_j / served_total` (0 when nothing was served) — the
+    /// J/user figure of merit for the power-budget frontier.
+    #[serde(default)]
+    pub energy_per_served_user_j: f64,
+    /// Users deferred by the power cap, summed over the run.
+    #[serde(default)]
+    pub deferred_for_power_total: u64,
     pub points: Vec<CapacityPoint>,
 }
 
@@ -427,6 +446,7 @@ pub fn run_capacity(
         server.set_budget_cycles(b);
     }
     server.set_batch_policy(s.policy);
+    server.set_power_budget_w(s.power_budget_mw.map(|mw| f64::from(mw) / 1e3));
     let mut state = (s.seed ^ 0x9E37_79B9_7F4A_7C15).max(1);
     let weight_total = u64::from(s.mix.total().max(1));
     let mut next_user: u32 = 0;
@@ -435,6 +455,10 @@ pub fn run_capacity(
     let mut missed = 0usize;
     let mut util_acc = 0.0;
     let mut cycles_acc = 0u64;
+    let mut energy_acc = 0.0f64;
+    let mut power_acc = 0.0f64;
+    let mut peak_block_power = 0.0f64;
+    let mut power_deferred = 0u64;
     for tti in 0..s.num_ttis {
         let arrivals = s.arrival.arrivals(tti, s.users_per_tti);
         for _ in 0..arrivals {
@@ -453,6 +477,12 @@ pub fn run_capacity(
         }
         util_acc += rep.te_utilization;
         cycles_acc += rep.cycles;
+        energy_acc += rep.energy_j;
+        power_acc += rep.avg_power_w;
+        if rep.peak_block_power_w > peak_block_power {
+            peak_block_power = rep.peak_block_power_w;
+        }
+        power_deferred += rep.deferred_for_power as u64;
         points.push(CapacityPoint {
             tti,
             submitted: arrivals,
@@ -462,6 +492,9 @@ pub fn run_capacity(
             cycles: rep.cycles,
             deadline_met: rep.deadline_met,
             te_utilization: rep.te_utilization,
+            energy_j: rep.energy_j,
+            avg_power_w: rep.avg_power_w,
+            deferred_for_power: rep.deferred_for_power,
         });
     }
     let n = s.num_ttis.max(1) as f64;
@@ -475,6 +508,15 @@ pub fn run_capacity(
         mean_te_utilization: util_acc / n,
         mean_cycles_per_tti: cycles_acc as f64 / n,
         final_backlog: server.pending(),
+        total_energy_j: energy_acc,
+        mean_power_w: power_acc / n,
+        peak_block_power_w: peak_block_power,
+        energy_per_served_user_j: if served_total > 0 {
+            energy_acc / served_total as f64
+        } else {
+            0.0
+        },
+        deferred_for_power_total: power_deferred,
         points,
     }
 }
@@ -585,6 +627,7 @@ mod tests {
             res_per_user: 1024,
             budget_cycles: None,
             policy: BatchPolicy::default(),
+            power_budget_mw: None,
             seed: 42,
         }
     }
@@ -636,6 +679,13 @@ mod tests {
         let mut e = a.clone();
         e.policy = BatchPolicy::PerUser;
         assert_ne!(a.cache_key(), e.cache_key(), "policy is part of the key");
+        let mut f = a.clone();
+        f.power_budget_mw = Some(5_000);
+        assert_ne!(
+            a.cache_key(),
+            f.cache_key(),
+            "the power cap is part of the key"
+        );
     }
 
     #[test]
@@ -683,6 +733,59 @@ mod tests {
             assert!(p.served <= 7, "admitted {} users in one TTI", p.served);
         }
         assert!(r.mean_te_utilization > 0.0);
+    }
+
+    #[test]
+    fn capacity_energy_fields_sum_over_ttis() {
+        let mut s = tti(
+            UserMix { neural_receiver: 1, neural_che: 1, classical: 1 },
+            3,
+            4,
+        );
+        s.res_per_user = 8192;
+        let r = run_capacity(&s, &Arc::new(BlockScheduleCache::new()));
+        assert!(r.total_energy_j > 0.0, "AI + classical TTIs draw energy");
+        let point_sum: f64 = r.points.iter().map(|p| p.energy_j).sum();
+        assert_eq!(
+            r.total_energy_j.to_bits(),
+            point_sum.to_bits(),
+            "report total must be exactly the per-TTI sum"
+        );
+        assert!(r.mean_power_w > 0.0);
+        assert!(r.peak_block_power_w > 0.0);
+        assert!(
+            (r.energy_per_served_user_j
+                - r.total_energy_j / r.served_total as f64)
+                .abs()
+                < 1e-18
+        );
+        // no cap set: nothing attributed to power deferral
+        assert_eq!(r.deferred_for_power_total, 0);
+    }
+
+    #[test]
+    fn power_capped_scenario_defers_what_latency_alone_admits() {
+        // Same offered NR load twice: latency-only keeps up; a 1.5 W cap
+        // cuts admission below the offered load, defers for power, and
+        // grows a backlog — the power-capped serving mode in one scenario.
+        let mut s = tti(UserMix::pure(Pipeline::NeuralReceiver), 3, 3);
+        s.res_per_user = 8192;
+        let latency = run_capacity(&s, &Arc::new(BlockScheduleCache::new()));
+        assert_eq!(latency.deferred_for_power_total, 0);
+        assert_eq!(latency.final_backlog, 0, "3 NR users/TTI fit 1 ms");
+        s.power_budget_mw = Some(1_500);
+        let capped = run_capacity(&s, &Arc::new(BlockScheduleCache::new()));
+        assert!(
+            capped.deferred_for_power_total > 0,
+            "the cap must defer work latency admits"
+        );
+        assert!(capped.served_total < latency.served_total);
+        assert!(capped.final_backlog > 0, "deferred users stay queued");
+        // conservation still holds under the cap
+        assert_eq!(
+            capped.served_total + capped.final_backlog as u64,
+            capped.submitted_total
+        );
     }
 
     #[test]

@@ -36,6 +36,15 @@ impl PeKernel {
         t.cycles
     }
 
+    /// Instructions retired across ALL `pes` PEs for `elems` elements —
+    /// the counter the energy model prices (same iteration rounding as
+    /// [`PeKernel::cycles`], so energy and cycles describe the same run).
+    pub fn instrs(&self, elems: usize, pes: usize) -> u64 {
+        let iters_per_pe =
+            (elems as f64 / (pes * self.elems_per_iter) as f64).ceil() as u64;
+        iters_per_pe.max(1) * self.body.len() as u64 * pes as u64
+    }
+
     /// Contention-model view for concurrent scheduling (Fig 10): IPC and
     /// memory fraction drive the per-Tile word-traffic injectors.
     pub fn workload(&self, elems: usize, pes: usize,
@@ -346,6 +355,27 @@ mod tests {
             (0.4..=0.9).contains(&macs_per_cycle),
             "PE GEMM {macs_per_cycle:.2} MACs/cycle implausible vs paper 0.59"
         );
+    }
+
+    #[test]
+    fn instrs_track_cycles_through_ipc() {
+        // instrs / (cycles × pes) must equal the kernel's steady-state IPC
+        // (large iteration counts; the same rounding feeds both views).
+        let pes = 256;
+        for k in [cfft(), ls_che(), mimo_mmse()] {
+            let elems = 8192 * 8;
+            let instrs = k.instrs(elems, pes);
+            let cycles = k.cycles(elems, pes);
+            let ipc = instrs as f64 / (cycles * pes as u64) as f64;
+            let steady = k.timing().ipc;
+            assert!(
+                (ipc - steady).abs() < 0.1,
+                "{}: derived IPC {ipc:.2} vs steady-state {steady:.2}",
+                k.name
+            );
+        }
+        // degenerate workloads still retire at least one iteration
+        assert!(relu().instrs(0, pes) > 0);
     }
 
     #[test]

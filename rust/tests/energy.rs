@@ -1,0 +1,218 @@
+//! Serving-level energy and power-budget tests:
+//!
+//! 1. Energy additivity identity — a TTI's energy is bit-identical whether
+//!    its blocks ran per-iteration-memoized, block-level-cached, or
+//!    uncached (the exec-layer unit version lives in `exec::cache`; this
+//!    is the end-to-end serving-loop version).
+//! 2. Power-capped admission defers work a latency-only budget admits
+//!    (the power-budgeted serving regression).
+//! 3. A full AI TTI's average power lands inside the paper's 4.3 W
+//!    envelope, scaled by the achieved TE utilization (Table II sanity at
+//!    the serving level).
+//! 4. The TE-vs-PE energy-efficiency ratio reproduces the paper's
+//!    Table II direction (>6×; the paper reports 8.8–9.1×).
+//! 5. The power-capped capacity scenario the CI smoke step runs defers at
+//!    least one request (the in-repo mirror of the CI assertion).
+
+use std::sync::Arc;
+
+use tensorpool::coordinator::{BatchPolicy, Pipeline, Server, TtiRequest};
+use tensorpool::exec::{ArchKnobs, BlockScheduleCache};
+use tensorpool::figures::energy_figs;
+use tensorpool::ppa::power::{EnergyModel, FRAC_OTHERS, SUBGROUP_GEMM_W};
+use tensorpool::sim::ArchConfig;
+use tensorpool::sweep::{
+    run_capacity, ArrivalPattern, TtiScenario, UserMix,
+};
+
+/// A mixed AI TTI with RE footprints that exercise both 1- and 2-iteration
+/// per-user scaling (the same mix the serving-loop memo acceptance test
+/// uses).
+fn submit_mixed_ai_tti(server: &mut Server) {
+    for (u, (p, res)) in [
+        (Pipeline::NeuralChe, 8192),
+        (Pipeline::NeuralReceiver, 8192),
+        (Pipeline::NeuralReceiver, 4096),
+        (Pipeline::NeuralChe, 2048),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        server.submit(TtiRequest { user_id: u as u32, pipeline: p, res });
+    }
+}
+
+#[test]
+fn tti_energy_is_bit_identical_across_cache_tiers() {
+    // Energy is priced once from composed, additive event counters, so the
+    // three execution paths must agree to the last bit — not a tolerance.
+    let cfg = ArchConfig::tensorpool();
+    let mut reports = Vec::new();
+    for cache in [
+        BlockScheduleCache::new(),
+        BlockScheduleCache::block_level_only(),
+    ] {
+        let mut server = Server::with_cache(&cfg, Arc::new(cache));
+        server.set_batch_policy(BatchPolicy::PerUser);
+        submit_mixed_ai_tti(&mut server);
+        reports.push(server.schedule_tti());
+    }
+    let (memo, block_level) = (&reports[0], &reports[1]);
+    assert_eq!(memo, block_level, "full reports must match");
+    assert!(memo.energy_j > 0.0);
+    assert_eq!(
+        memo.energy_j.to_bits(),
+        block_level.energy_j.to_bits(),
+        "memoized vs block-cached TTI energy diverged"
+    );
+    assert_eq!(
+        memo.avg_power_w.to_bits(),
+        block_level.avg_power_w.to_bits()
+    );
+    assert_eq!(
+        memo.peak_block_power_w.to_bits(),
+        block_level.peak_block_power_w.to_bits()
+    );
+    // and a second identical TTI (pure cache recall) reproduces the bits
+    let mut server =
+        Server::with_cache(&cfg, Arc::new(BlockScheduleCache::new()));
+    server.set_batch_policy(BatchPolicy::PerUser);
+    submit_mixed_ai_tti(&mut server);
+    let first = server.schedule_tti();
+    submit_mixed_ai_tti(&mut server);
+    let second = server.schedule_tti();
+    assert_eq!(first.energy_j.to_bits(), second.energy_j.to_bits());
+    assert_eq!(first.energy_j.to_bits(), memo.energy_j.to_bits());
+}
+
+#[test]
+fn power_cap_defers_what_a_latency_only_budget_admits() {
+    // Four reference-TTI neural-receiver users fit the 1 ms cycle budget
+    // with room to spare; a tight power cap must cut the same queue down
+    // and label the deferral as power-bound.
+    let cfg = ArchConfig::tensorpool();
+    let submit_four = |s: &mut Server| {
+        for u in 0..4 {
+            s.submit(TtiRequest {
+                user_id: u,
+                pipeline: Pipeline::NeuralReceiver,
+                res: 8192,
+            });
+        }
+    };
+    let mut latency_only = Server::new(&cfg);
+    submit_four(&mut latency_only);
+    let l = latency_only.schedule_tti();
+    assert_eq!(l.served.len(), 4, "latency-only admits all four: {l:?}");
+    assert_eq!(l.deferred_for_power, 0);
+
+    let mut capped = Server::new(&cfg);
+    capped.set_power_budget_w(Some(0.5));
+    submit_four(&mut capped);
+    let c = capped.schedule_tti();
+    assert!(
+        c.served.len() < l.served.len(),
+        "the cap must defer users latency admitted"
+    );
+    assert_eq!(c.served[0], 0, "head of line is never starved");
+    assert!(c.deferred_for_power > 0, "deferral must be power-labeled");
+    assert_eq!(
+        c.served.len() + c.deferred.len(),
+        4,
+        "power deferral defers, never drops"
+    );
+}
+
+#[test]
+fn full_ai_tti_average_power_sits_in_the_papers_envelope() {
+    // Table II sanity at the serving level: the Pool burns 4.32 W on GEMM
+    // at near-full TE utilization. A full AI TTI runs the Fig 9 blocks at
+    // lower utilization, so its busy-time average power must land below
+    // the GEMM point but above the utilization-scaled floor (and above
+    // the static floor alone).
+    let cfg = ArchConfig::tensorpool();
+    let mut server = Server::new(&cfg);
+    server.submit(TtiRequest {
+        user_id: 0,
+        pipeline: Pipeline::NeuralReceiver,
+        res: 8192,
+    });
+    let rep = server.schedule_tti();
+    assert_eq!(rep.served, vec![0]);
+    assert!(rep.cycles > 0 && rep.energy_j > 0.0);
+    let busy_s = rep.cycles as f64 / (cfg.freq_ghz * 1e9);
+    let p = rep.energy_j / busy_s;
+    let util = rep.te_utilization;
+    assert!(util > 0.1, "AI blocks must exercise the TEs: {util}");
+    assert!(
+        p < 4.32 + 0.6,
+        "busy power {p:.2} W above the paper's full-utilization 4.32 W"
+    );
+    assert!(
+        p > 4.32 * util * 0.25,
+        "busy power {p:.2} W implausibly below the utilization-scaled \
+         floor (util {util:.2})"
+    );
+    let static_floor =
+        SUBGROUP_GEMM_W * FRAC_OTHERS * cfg.num_subgroups() as f64;
+    assert!(
+        p > static_floor,
+        "busy power {p:.2} W below the {static_floor:.2} W static floor"
+    );
+}
+
+#[test]
+fn te_efficiency_gain_reproduces_table2_direction() {
+    // pe_pool_power vs TE-accelerated energy/inference: the paper's
+    // Table II reports an 8.8x GOPS/W (9.1x GOPS/W/mm²) gain of the
+    // TE-accelerated Pool over the core-only TeraPool cluster. Our
+    // measured ratio must reproduce the direction with margin.
+    let eff = energy_figs::efficiency_summary();
+    assert!(
+        eff.gain > 6.0,
+        "TE/PE efficiency gain {:.1}x too small vs the paper's ~9x",
+        eff.gain
+    );
+    // and the calibration anchor: pe_pool_power at the TeraPool operating
+    // point reproduces its Table II power
+    let em = EnergyModel::calibrate(&ArchConfig::tensorpool());
+    assert!((em.pe_pool_power(1024, 0.6) - 6.33).abs() < 0.01);
+}
+
+#[test]
+fn ci_power_smoke_scenario_defers_for_power() {
+    // In-repo mirror of the CI step `capacity --smoke --power-budget-w 5
+    // --users 1,8 --budget-us 10000`: eight reference NR users per TTI
+    // under a 5 W cap must defer at least one admission FOR POWER, while
+    // the energy fields stay populated and deterministic. The slack 10 ms
+    // cycle budget is load-bearing: it admits all eight users on latency
+    // alone, so the static-floor argument (8 × 0.648 W = 5.18 W > 5 W)
+    // guarantees the cut is power-bound whatever dynamic energy the first
+    // compiled run measures. (Under the default 1 ms slot the cycle
+    // budget would cut at ~6 users first and the deferral could be
+    // latency-labeled.)
+    let s = TtiScenario {
+        name: "neural_receiver_u8_cap5w".into(),
+        arch: ArchKnobs::default(),
+        mix: UserMix::pure(Pipeline::NeuralReceiver),
+        arrival: ArrivalPattern::Uniform,
+        users_per_tti: 8,
+        num_ttis: 2,
+        res_per_user: 8192,
+        budget_cycles: Some(9_000_000),
+        policy: BatchPolicy::Batched,
+        power_budget_mw: Some(5_000),
+        seed: 0xC0FFEE,
+    };
+    let blocks = Arc::new(BlockScheduleCache::new());
+    let a = run_capacity(&s, &blocks);
+    assert!(
+        a.deferred_for_power_total >= 1,
+        "the 5 W cap must defer at least one of 8 offered NR users"
+    );
+    assert!(a.total_energy_j > 0.0);
+    assert!(a.mean_power_w > 0.0);
+    let b = run_capacity(&s, &blocks);
+    assert_eq!(a, b, "power-capped capacity runs must be pure");
+    assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+}

@@ -84,3 +84,45 @@ fn workload_and_sim_stay_at_the_bottom() {
     assert_layer_clean("sim", &["workload", "exec", "coordinator", "sweep"]);
     assert_layer_clean("workload", &["exec", "coordinator", "sweep"]);
 }
+
+#[test]
+fn ppa_sits_beside_workload_below_the_execution_stack() {
+    // The energy/area models price simulator outputs; they sit at the
+    // workload level (sim + workload only), so `exec` and the coordinator
+    // may consume them without creating a cycle.
+    assert_layer_clean("ppa", &["exec", "coordinator", "sweep", "figures"]);
+}
+
+#[test]
+fn sweep_does_not_reach_into_figures() {
+    // `figures` is the top of the chain: the sweep engine must never
+    // depend on a harness that runs on it.
+    assert_layer_clean("sweep", &["figures"]);
+}
+
+#[test]
+fn sweep_re_export_shims_stay_deleted() {
+    // The historical `pub use crate::exec::{ArchKnobs, ...}` shims in
+    // `sweep` were removed once all call sites migrated to `crate::exec`;
+    // a re-export quietly re-added would resurrect the pre-refactor
+    // import surface.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src/sweep");
+    let mut files = Vec::new();
+    rust_sources(&root, &mut files);
+    for file in files {
+        let text = fs::read_to_string(&file)
+            .unwrap_or_else(|e| panic!("read {}: {e}", file.display()));
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim_start().starts_with("//") {
+                continue;
+            }
+            assert!(
+                !line.contains("pub use crate::exec"),
+                "{}:{}: sweep must not re-export exec vocabulary: {}",
+                file.display(),
+                lineno + 1,
+                line.trim()
+            );
+        }
+    }
+}
