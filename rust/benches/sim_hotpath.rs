@@ -15,7 +15,7 @@
 use std::time::Instant;
 
 use serde::Serialize;
-use tensorpool::exec::{ArchKnobs, ScheduleMode};
+use tensorpool::exec::{ArchKnobs, GemmRun, ScheduleMode};
 use tensorpool::sweep::{run_scenario, Scenario, SweepRunner};
 use tensorpool::workload::gemm::GemmSpec;
 
@@ -41,6 +41,17 @@ struct ShapeRow {
     wall_s: f64,
     cycles_per_s: f64,
     msim_macs_per_s: f64,
+    /// Cycles the fast-forward engine skipped on this shape.
+    /// Deterministic, but informational only — NOT in `bench-diff`'s
+    /// gated list (the gated metrics must not move when the stepper
+    /// changes; this one exists to change).
+    cycles_fast_forwarded: u64,
+    /// Wall-clock of the same shape forced through the dense stepper
+    /// (`Sim::run_dense`) — informational, never gates.
+    dense_wall_s: f64,
+    /// dense_wall_s / the fast-forward wall-clock of the identical
+    /// `GemmRun` — the shape's fast-forward speedup (informational).
+    fastforward_speedup: f64,
 }
 
 #[derive(Serialize)]
@@ -51,28 +62,24 @@ struct SweepTiming {
     speedup: f64,
 }
 
-fn shapes() -> Vec<Scenario> {
-    let knobs = ArchKnobs::default();
+fn shape_specs() -> Vec<(&'static str, GemmSpec, ScheduleMode)> {
     vec![
-        Scenario::gemm(
-            "single_te_256",
-            GemmSpec::square(256),
-            ScheduleMode::SingleTe,
-            knobs.clone(),
-        ),
-        Scenario::gemm(
-            "single_te_512",
-            GemmSpec::square(512),
-            ScheduleMode::SingleTe,
-            knobs.clone(),
-        ),
-        Scenario::gemm(
+        ("single_te_256", GemmSpec::square(256), ScheduleMode::SingleTe),
+        ("single_te_512", GemmSpec::square(512), ScheduleMode::SingleTe),
+        (
             "split_interleaved_512",
             GemmSpec::square(512),
             ScheduleMode::SplitInterleaved,
-            knobs,
         ),
     ]
+}
+
+fn shapes() -> Vec<Scenario> {
+    let knobs = ArchKnobs::default();
+    shape_specs()
+        .into_iter()
+        .map(|(name, spec, mode)| Scenario::gemm(name, spec, mode, knobs.clone()))
+        .collect()
 }
 
 fn main() {
@@ -99,6 +106,35 @@ fn main() {
     }
     let serial_wall = serial_t0.elapsed().as_secs_f64();
 
+    // Dense-vs-fast-forward differential per shape: run the identical
+    // `GemmRun` through both steppers, assert byte-identity, and report
+    // the skip counter + wall-clock ratio (informational — `bench-diff`
+    // gates only the deterministic cycle/MAC/energy metrics above).
+    println!("fast-forward engine, per traffic shape (dense baseline):");
+    let cfg = ArchKnobs::default().apply();
+    let mut ff_rows = Vec::new();
+    for (name, spec, mode) in shape_specs() {
+        let run = GemmRun::new(spec, mode);
+        // Explicit steppers on both legs: an exported
+        // TENSORPOOL_NO_FASTFORWARD must not silently turn this into a
+        // dense-vs-dense comparison recorded as measured.
+        let t0 = Instant::now();
+        let ff = run.execute_fast_forward(&cfg);
+        let ff_wall = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let dense = run.execute_dense(&cfg);
+        let dense_wall = t0.elapsed().as_secs_f64();
+        assert_eq!(ff, dense, "{name}: fast-forward diverged from dense");
+        let speedup = dense_wall / ff_wall.max(1e-12);
+        println!(
+            "{:28} {:>9}/{:<9} cycles fast-forwarded  \
+             dense {:>7.3}s vs ff {:>7.3}s = {:>5.2}x",
+            name, ff.cycles_fast_forwarded, ff.cycles, dense_wall, ff_wall,
+            speedup,
+        );
+        ff_rows.push((ff.cycles_fast_forwarded, dense_wall, speedup));
+    }
+
     // Same shapes through the parallel runner: the sweep-engine view.
     let runner = SweepRunner::new();
     let t0 = Instant::now();
@@ -118,7 +154,8 @@ fn main() {
         status: "measured",
         shapes: rows
             .iter()
-            .map(|(name, r, dt)| ShapeRow {
+            .zip(&ff_rows)
+            .map(|((name, r, dt), (skipped, dense_wall, speedup))| ShapeRow {
                 shape: name.clone(),
                 sim_cycles: r.cycles,
                 sim_macs: r.total_macs,
@@ -126,6 +163,9 @@ fn main() {
                 wall_s: *dt,
                 cycles_per_s: r.cycles as f64 / dt,
                 msim_macs_per_s: r.total_macs as f64 / dt / 1e6,
+                cycles_fast_forwarded: *skipped,
+                dense_wall_s: *dense_wall,
+                fastforward_speedup: *speedup,
             })
             .collect(),
         sweep: SweepTiming {

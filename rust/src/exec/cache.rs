@@ -121,6 +121,7 @@ fn compose(
     let mut total_macs = 0u64;
     let mut pe_busy = 0u64;
     let mut dma_busy = 0u64;
+    let mut cycles_fast_forwarded = 0u64;
     for o in outcomes {
         for (acc, seg) in tes.iter_mut().zip(&o.raw.tes) {
             // Exhaustive destructuring (like NocStats below): adding a
@@ -176,6 +177,9 @@ fn compose(
         pe_busy += o.pe_busy;
         dma_busy += o.dma_busy;
         cycles += o.raw.cycles;
+        // Diagnostic, excluded from RunResult equality — still composed
+        // additively so memoized runs report their segments' skips.
+        cycles_fast_forwarded += o.raw.cycles_fast_forwarded;
     }
     let denom = cycles.max(1);
     let te_util = if te_engines == 0 {
@@ -196,7 +200,7 @@ fn compose(
         pe_utilization: pe_busy as f64 / denom as f64,
         dma_utilization: dma_busy as f64 / denom as f64,
         te_macs: total_macs,
-        raw: RunResult { cycles, tes, noc, total_macs },
+        raw: RunResult { cycles, tes, noc, total_macs, cycles_fast_forwarded },
     }
 }
 

@@ -42,7 +42,29 @@ impl GemmRun {
 
     /// Map the GEMM under `mode` and simulate it to completion. Pure:
     /// equal `(self, cfg)` produce byte-identical results on any thread.
+    /// Uses the process default stepper (fast-forward unless
+    /// `TENSORPOOL_NO_FASTFORWARD` is set).
     pub fn execute(&self, cfg: &ArchConfig) -> RunResult {
+        self.run_on(cfg, Stepper::Auto)
+    }
+
+    /// [`GemmRun::execute`] forced through the dense (non-fast-forward)
+    /// stepper — the differential baseline `benches/sim_hotpath.rs` times
+    /// against. The result is byte-identical to `execute`; only wall-clock
+    /// and the diagnostic `cycles_fast_forwarded` counter differ.
+    pub fn execute_dense(&self, cfg: &ArchConfig) -> RunResult {
+        self.run_on(cfg, Stepper::Dense)
+    }
+
+    /// [`GemmRun::execute`] forced through the fast-forward stepper,
+    /// regardless of `TENSORPOOL_NO_FASTFORWARD`. The bench's
+    /// dense-vs-fast-forward differential uses this so an exported escape
+    /// hatch cannot silently turn it into dense-vs-dense.
+    pub fn execute_fast_forward(&self, cfg: &ArchConfig) -> RunResult {
+        self.run_on(cfg, Stepper::FastForward)
+    }
+
+    fn run_on(&self, cfg: &ArchConfig, stepper: Stepper) -> RunResult {
         let mut alloc = L1Alloc::new(cfg);
         let mut sim = Sim::new(cfg);
         let jobs = match self.mode {
@@ -66,8 +88,22 @@ impl GemmRun {
             other => unreachable!("constructor rejects {other:?} for GEMM"),
         };
         sim.assign_gemm(jobs);
-        sim.run(GEMM_BUDGET)
+        match stepper {
+            Stepper::Auto => sim.run(GEMM_BUDGET),
+            Stepper::Dense => sim.run_dense(GEMM_BUDGET),
+            Stepper::FastForward => sim.run_fast_forward(GEMM_BUDGET),
+        }
     }
+}
+
+/// Which `Sim` run loop [`GemmRun::run_on`] drives.
+#[derive(Clone, Copy)]
+enum Stepper {
+    /// Process default (`Sim::run`): fast-forward unless the
+    /// `TENSORPOOL_NO_FASTFORWARD` escape hatch is set.
+    Auto,
+    Dense,
+    FastForward,
 }
 
 #[cfg(test)]
@@ -101,5 +137,18 @@ mod tests {
     #[should_panic(expected = "not a GEMM schedule mode")]
     fn gemm_run_rejects_block_modes() {
         let _ = GemmRun::new(GemmSpec::square(64), ScheduleMode::Concurrent);
+    }
+
+    #[test]
+    fn dense_and_default_steppers_agree() {
+        let cfg = ArchConfig::tensorpool();
+        for mode in [ScheduleMode::SingleTe, ScheduleMode::SplitInterleaved] {
+            let run = GemmRun::new(GemmSpec::square(64), mode);
+            assert_eq!(
+                run.execute(&cfg),
+                run.execute_dense(&cfg),
+                "{mode:?}: fast-forward result diverged from dense"
+            );
+        }
     }
 }

@@ -30,7 +30,13 @@ COMMANDS:
             L2-streamed GEMM with DMA double buffering (Eq 1 validation)
   ablations burst / ROB / interleaving ablation study
   simulate --n <size> [--tes <1|16>] [--k <K>] [--j <J>] [--no-interleave]
-            run one GEMM on the simulated Pool and report cycles/utilization
+           [--no-rob] [--out <path>]
+            run one GEMM on the simulated Pool and report cycles/utilization.
+            --no-rob runs the in-order-streamer ablation (stall-heavy, the
+            fast-forward engine's showcase); --out writes a machine-readable
+            JSON summary (sim_cycles, sim_macs, cycles_fast_forwarded —
+            the CI fast-forward smoke diffs it against a
+            TENSORPOOL_NO_FASTFORWARD=1 run)
   sweep   [--sizes N1,N2,..] [--out <path>] [--no-verify]
             run a Fig 7-style scenario sweep in parallel on the sweep
             engine and emit machine-readable JSON. By default also runs
@@ -189,7 +195,10 @@ fn simulate(rest: &[String]) -> i32 {
     let k: usize = flag(rest, "--k").and_then(|v| v.parse().ok()).unwrap_or(4);
     let j: usize = flag(rest, "--j").and_then(|v| v.parse().ok()).unwrap_or(2);
     let interleave = !has(rest, "--no-interleave");
-    let cfg = ArchConfig::tensorpool().with_kj(k, j);
+    let mut cfg = ArchConfig::tensorpool().with_kj(k, j);
+    if has(rest, "--no-rob") {
+        cfg = cfg.without_rob();
+    }
     let spec = GemmSpec::square(n);
     let mut alloc = L1Alloc::new(&cfg);
     let regions = GemmRegions::alloc(&spec, &mut alloc);
@@ -203,15 +212,36 @@ fn simulate(rest: &[String]) -> i32 {
     }
     let r = sim.run(10_000_000_000);
     println!(
-        "GEMM {n}³ on {tes} TE(s), K={k} J={j}, interleave={interleave}:\n  \
+        "GEMM {n}³ on {tes} TE(s), K={k} J={j}, interleave={interleave}, \
+         rob={}:\n  \
          cycles={}  FMA-util={:.1}%  MACs/cycle={:.0}  {:.2} TFLOPS @0.9GHz  \
-         runtime={:.3} ms",
+         runtime={:.3} ms  fast-forwarded={} cycles",
+        cfg.rob_depth,
         r.cycles,
         100.0 * r.fma_utilization(cfg.te.macs_per_cycle()),
         r.macs_per_cycle(),
         r.tflops(cfg.freq_ghz),
         r.runtime_ms(cfg.freq_ghz),
+        r.cycles_fast_forwarded,
     );
+    if let Some(path) = flag(rest, "--out") {
+        // Machine-readable summary: the deterministic identity fields
+        // (sim_cycles/sim_macs must be byte-identical across steppers)
+        // plus the fast-forward diagnostic the CI smoke asserts on.
+        let json = serde_json::json!({
+            "shape": format!("gemm_{n}x{n}x{n}"),
+            "tes": tes,
+            "sim_cycles": r.cycles,
+            "sim_macs": r.total_macs,
+            "cycles_fast_forwarded": r.cycles_fast_forwarded,
+        });
+        let text = serde_json::to_string_pretty(&json).expect("serializes");
+        if let Err(e) = std::fs::write(&path, &text) {
+            eprintln!("error writing {path}: {e}");
+            return 1;
+        }
+        eprintln!("simulate: summary written to {path}");
+    }
     0
 }
 

@@ -133,6 +133,29 @@ impl Dma {
         }
     }
 
+    /// First future cycle at which the DMA can make progress WITHOUT a NoC
+    /// delivery, or `None` if only a delivery can wake it. The DMA issues
+    /// every cycle it has beats left (so it is simply "active"), and a
+    /// blocked DMA (all beats issued, responses in flight) mutates nothing
+    /// per cycle — there is no state to replay across a skip.
+    pub fn wake_at(&self, now: u64) -> Option<u64> {
+        if self.finish_cycle.is_some() {
+            return None;
+        }
+        match &self.active {
+            // Never programmed (or drained): the next step records the
+            // finish stamp — an event.
+            None => Some(now + 1),
+            Some(a) => {
+                if a.next < a.lines.len() || a.outstanding == 0 {
+                    Some(now + 1) // will issue a beat / advance the queue
+                } else {
+                    None // all beats in flight: delivery-gated
+                }
+            }
+        }
+    }
+
     /// Issue up to the L2 bandwidth in line beats, one per SubGroup max.
     pub fn step(&mut self, noc: &mut Noc) {
         if self.finish_cycle.is_some() {

@@ -141,6 +141,80 @@ impl Noc {
             && self.active_ports.is_empty()
     }
 
+    /// O(1): some bank queue is non-empty, so the NoC is guaranteed to do
+    /// work next cycle. Cheap pre-check for the fast-forward engine —
+    /// during long bank-service spans it short-circuits the whole
+    /// per-engine wake scan.
+    pub fn banks_active(&self) -> bool {
+        !self.active_banks.is_empty()
+    }
+
+    /// Earliest future cycle at which the NoC itself will do work — grant
+    /// a queued request, serve a bank word, or pop a wheel event — or
+    /// `None` if no such cycle exists at or before `cap` (the caller's
+    /// horizon is already tighter, so scanning further is wasted work).
+    ///
+    /// Used by the fast-forward engine (`Sim::run`): every cycle strictly
+    /// before the returned time is guaranteed to mutate nothing in the
+    /// NoC except the per-cycle `port_wait_cycles` tick, which
+    /// [`Noc::fast_forward`] replays in closed form. The wheel is scanned
+    /// lazily (no per-event bookkeeping on the dense path); the scan cost
+    /// is bounded by the distance to the nearest event, i.e. by the very
+    /// cycles the caller is about to skip.
+    pub fn next_event_at(&self, cap: u64) -> Option<u64> {
+        // Banks serve one word per cycle: any active bank is progress.
+        if self.banks_active() {
+            return Some(self.now + 1);
+        }
+        let mut next = u64::MAX;
+        for &qi in &self.active_ports {
+            let t = (self.now + 1).max(self.port_busy_until[qi as usize]);
+            if t == self.now + 1 {
+                return Some(t); // a queued request is grantable next cycle
+            }
+            next = next.min(t);
+        }
+        if self.pending_events > 0 && self.now + 1 < next {
+            // All pending events have absolute times in
+            // (now, now + wheel_len) — see `schedule`/`grow_wheel` — so a
+            // bounded forward scan over the ring finds the nearest one.
+            let len = self.wheel.len() as u64;
+            let hi = next.min(cap).min(self.now + len);
+            for t in self.now + 1..=hi {
+                if !self.wheel[(t % len) as usize].is_empty() {
+                    next = next.min(t);
+                    break;
+                }
+            }
+        }
+        if next == u64::MAX || next > cap {
+            None
+        } else {
+            Some(next)
+        }
+    }
+
+    /// Jump `now` to `to`, replaying the only per-cycle state the skipped
+    /// (event-free) cycles would have mutated: each active request port is
+    /// busy throughout the skip, so it accrues one `port_wait_cycles` tick
+    /// per cycle, exactly as the dense stepper's stage 1 would. The caller
+    /// (`Sim`) guarantees no wheel event, port grant, or bank service
+    /// falls in `(now, to]`.
+    pub fn fast_forward(&mut self, to: u64) {
+        debug_assert!(to >= self.now, "fast-forward must not rewind");
+        debug_assert!(self.active_banks.is_empty(), "banks always progress");
+        debug_assert!(
+            self.active_ports
+                .iter()
+                .all(|&qi| self.port_busy_until[qi as usize] > to),
+            "skipped span must not contain a port grant"
+        );
+        let skipped = to - self.now;
+        self.stats.port_wait_cycles +=
+            skipped * self.active_ports.len() as u64;
+        self.now = to;
+    }
+
     fn alloc_req(&mut self, r: Req) -> u32 {
         if let Some(id) = self.free.pop() {
             self.reqs[id as usize] = r;

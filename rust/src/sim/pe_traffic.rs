@@ -150,6 +150,72 @@ impl PeTraffic {
         self.outstanding -= 1;
     }
 
+    /// First future cycle at which this injector can make progress WITHOUT
+    /// a NoC delivery, or `None` if only a delivery can wake it. An
+    /// injector self-wakes when enough fractional issue credit accrues.
+    ///
+    /// The crossing is found by replaying the dense stepper's exact
+    /// per-cycle float ops (add, compare, cap) for a short window — which
+    /// covers every realistic rate in a handful of iterations and is
+    /// never late. For very low rates (crossing beyond the window) it
+    /// falls back to an analytic estimate pulled EARLY by a safety margin
+    /// that dominates the worst-case float error: waking early only costs
+    /// a re-check, waking late would skip a real issue. This keeps
+    /// `wake_at` cheap even when it is polled every dense cycle.
+    pub fn wake_at(&self, now: u64) -> Option<u64> {
+        const EXACT_REPLAY: u64 = 128;
+        if self.finish_cycle.is_some() {
+            return None;
+        }
+        if self.next >= self.seq.len() {
+            // Memory drained: the next step records the finish (an event);
+            // with responses still in flight only a delivery matters.
+            return (self.outstanding == 0).then_some(now + 1);
+        }
+        if self.outstanding >= self.max_outstanding {
+            return None; // scoreboard full: delivery-gated
+        }
+        if self.rate <= 0.0 {
+            return None; // zero-rate injector never self-wakes
+        }
+        // Credit-starved: replay the accrual until the issue threshold.
+        let cap = self.pes as f64;
+        let mut credit = self.credit;
+        for k in 1..=EXACT_REPLAY {
+            credit += self.rate;
+            if credit >= 1.0 {
+                return Some(now + k);
+            }
+            credit = credit.min(cap);
+        }
+        // Crossing is provably past the window. Analytic estimate, capped
+        // (bounds the error analysis) and pulled early by a relative +
+        // absolute margin far larger than the accumulated-rounding error
+        // of up to ~2^30 sequential adds.
+        let est = ((1.0 - self.credit) / self.rate).floor();
+        let est = est.min(1_073_741_824.0) as u64; // 2^30
+        let margin = (est >> 20) + 2;
+        Some(now + est.saturating_sub(margin).max(EXACT_REPLAY + 1))
+    }
+
+    /// Replay `cycles` blocked cycles: a blocked injector still accrues
+    /// (capped) issue credit every cycle, with exactly the float-op
+    /// sequence the dense stepper applies — credit feeds future issue
+    /// counts, so the replay must be bit-exact, not analytic.
+    pub fn fast_forward(&mut self, cycles: u64) {
+        if self.finish_cycle.is_some() {
+            return;
+        }
+        let cap = self.pes as f64;
+        let mut left = cycles;
+        while left > 0 && self.credit < cap {
+            self.credit = (self.credit + self.rate).min(cap);
+            left -= 1;
+        }
+        // At the cap the accrual is a fixed point: min(cap + rate, cap)
+        // == cap, so the remaining cycles are no-ops.
+    }
+
     /// Issue up to the rate-budgeted number of word requests this cycle.
     pub fn step(&mut self, noc: &mut Noc) {
         if self.finish_cycle.is_some() {

@@ -8,6 +8,22 @@ use super::pe_traffic::{PeTraffic, PeWorkload};
 use super::stats::RunResult;
 use super::te::{TeEngine, TeJob};
 
+/// True unless `TENSORPOOL_NO_FASTFORWARD` is set (to anything but `0` or
+/// the empty string) — the escape hatch that forces the naive dense
+/// stepper, kept for differential testing (CI runs a smoke comparison
+/// under both settings; `tests/fastforward.rs` fuzzes them in-process via
+/// [`Sim::run_dense`]). Read once per process: the env var selects a
+/// process-wide mode, in-process tests pick the stepper explicitly.
+fn fast_forward_default() -> bool {
+    static ENABLED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *ENABLED.get_or_init(|| {
+        match std::env::var_os("TENSORPOOL_NO_FASTFORWARD") {
+            None => true,
+            Some(v) => v.is_empty() || v == "0",
+        }
+    })
+}
+
 /// Engine-token layout: TEs first, then PE injectors, then the DMA.
 pub struct Sim {
     pub cfg: ArchConfig,
@@ -19,6 +35,13 @@ pub struct Sim {
     /// Reusable delivery buffer (§Perf: a per-cycle `to_vec()` allocation
     /// showed up second in the hot-path profile).
     scratch: Vec<super::noc::Delivery>,
+    /// Whether [`Sim::run`] uses the event-horizon fast-forward loop
+    /// (default) or the dense stepper (`TENSORPOOL_NO_FASTFORWARD=1`).
+    fast_forward: bool,
+    /// Cycles jumped over by the fast-forward engine (surfaced in
+    /// [`RunResult::cycles_fast_forwarded`]; excluded from result
+    /// equality).
+    cycles_fast_forwarded: u64,
 }
 
 impl Sim {
@@ -35,6 +58,8 @@ impl Sim {
             dma: None,
             te_finish: vec![0; nt],
             scratch: Vec::with_capacity(64),
+            fast_forward: fast_forward_default(),
+            cycles_fast_forwarded: 0,
         }
     }
 
@@ -126,16 +151,126 @@ impl Sim {
     }
 
     /// Run to completion (or panic past `max_cycles` — deadlock guard).
+    ///
+    /// Dispatches to the event-horizon fast-forward loop unless
+    /// `TENSORPOOL_NO_FASTFORWARD` forced the dense stepper; the two are
+    /// byte-identical in everything they compute (`RunResult` cycles,
+    /// per-TE stats, NoC counters — and hence energy), differing only in
+    /// wall-clock and in the diagnostic `cycles_fast_forwarded` counter.
     pub fn run(&mut self, max_cycles: u64) -> RunResult {
+        if self.fast_forward {
+            self.run_fast_forward(max_cycles)
+        } else {
+            self.run_dense(max_cycles)
+        }
+    }
+
+    /// The naive stepper: advance one cycle at a time, touching every
+    /// engine every cycle. Kept as the differential-testing baseline for
+    /// [`Sim::run_fast_forward`].
+    pub fn run_dense(&mut self, max_cycles: u64) -> RunResult {
         while self.step() {
             if self.noc.now() > max_cycles {
-                panic!(
-                    "simulation exceeded {max_cycles} cycles — \
-                     engine deadlock or undersized budget"
-                );
+                budget_exceeded(max_cycles);
             }
         }
         self.result()
+    }
+
+    /// The fast-forward loop: step densely while any component can make
+    /// progress in the coming cycle, otherwise jump `now` straight to the
+    /// next-event horizon — the earliest cycle at which a wheel event
+    /// fires, a port grant becomes possible, or an engine self-wakes.
+    /// Skipped cycles are provably inert except for per-cycle bookkeeping
+    /// (TE stall counters, NoC port-wait ticks, PE credit accrual), which
+    /// each component replays exactly, so the result is byte-identical to
+    /// [`Sim::run_dense`].
+    pub fn run_fast_forward(&mut self, max_cycles: u64) -> RunResult {
+        while self.step() {
+            if self.noc.now() > max_cycles {
+                budget_exceeded(max_cycles);
+            }
+            self.try_fast_forward(max_cycles);
+            // A skip may land past the budget; the dense stepper would
+            // have panicked while stepping through that span, so panic
+            // here too — the two steppers must fail on exactly the same
+            // (workload, budget) pairs, not just match on success.
+            if self.noc.now() > max_cycles {
+                budget_exceeded(max_cycles);
+            }
+        }
+        self.result()
+    }
+
+    /// If no component can make progress next cycle, jump to one cycle
+    /// before the earliest wake/event time and replay the skipped span's
+    /// bookkeeping. `wake_at` contracts are conservative: a component may
+    /// report an earlier wake than its true one (costing only a re-check),
+    /// never a later one.
+    fn try_fast_forward(&mut self, max_cycles: u64) {
+        // O(1) pre-check: a non-empty bank queue forces a dense step next
+        // cycle — skip the engine wake scan entirely during bank-service
+        // spans.
+        if self.noc.banks_active() {
+            return;
+        }
+        let now = self.noc.now();
+        let near = now + 1;
+        let mut horizon = u64::MAX;
+        for te in &self.tes {
+            if let Some(t) = te.wake_at(now) {
+                if t <= near {
+                    return; // active next cycle: step densely
+                }
+                horizon = horizon.min(t);
+            }
+        }
+        // DMA before the PE injectors: its wake check is O(1) and a
+        // streaming DMA keeps the sim dense, short-circuiting the walk
+        // over (possibly many) injectors.
+        if let Some(t) = self.dma.as_ref().and_then(|d| d.wake_at(now)) {
+            if t <= near {
+                return;
+            }
+            horizon = horizon.min(t);
+        }
+        for p in &self.pe_traffic {
+            if let Some(t) = p.wake_at(now) {
+                if t <= near {
+                    return;
+                }
+                horizon = horizon.min(t);
+            }
+        }
+        // The NoC last, capped by the engine horizon: its wheel scan is
+        // bounded by the distance it is allowed to matter.
+        match self.noc.next_event_at(horizon) {
+            Some(t) if t <= near => return,
+            Some(t) => horizon = horizon.min(t),
+            None => {}
+        }
+        if horizon == u64::MAX {
+            // No event in flight and no engine can ever self-wake while
+            // work remains: a genuine deadlock. The dense stepper would
+            // spin to the budget and panic; fail the same way, now.
+            budget_exceeded(max_cycles);
+        }
+        let skipped = horizon - 1 - now;
+        // Defensive only: every wake/event time <= now+1 early-returned
+        // above, so horizon >= now+2 and skipped >= 1 here. (Likewise the
+        // TE min() above is future-proofing — today TeEngine::wake_at
+        // only ever reports now+1 or None.)
+        if skipped == 0 {
+            return;
+        }
+        self.noc.fast_forward(horizon - 1);
+        for te in &mut self.tes {
+            te.fast_forward(skipped);
+        }
+        for p in &mut self.pe_traffic {
+            p.fast_forward(skipped);
+        }
+        self.cycles_fast_forwarded += skipped;
     }
 
     /// Collect the run result (cycles count from 0 to last drain).
@@ -153,8 +288,19 @@ impl Sim {
             tes,
             noc: self.noc.stats.clone(),
             total_macs,
+            cycles_fast_forwarded: self.cycles_fast_forwarded,
         }
     }
+}
+
+/// The dense stepper's deadlock-guard panic, shared verbatim by the
+/// fast-forward loop (including its immediate-deadlock detection) so both
+/// steppers fail identically.
+fn budget_exceeded(max_cycles: u64) -> ! {
+    panic!(
+        "simulation exceeded {max_cycles} cycles — \
+         engine deadlock or undersized budget"
+    );
 }
 
 #[cfg(test)]
@@ -202,5 +348,51 @@ mod tests {
         assert_eq!(r.total_macs, 64 * 64 * 64);
         assert!(r.tes[0].busy_cycles > 0);
         assert!(r.tes[1].busy_cycles == 0);
+    }
+
+    /// A single-TE GEMM with remote traffic, built identically twice.
+    fn stall_heavy_sim(cfg: &ArchConfig) -> Sim {
+        let mut sim = Sim::new(cfg);
+        let mut alloc = L1Alloc::new(cfg);
+        let x = alloc.alloc(64, 64);
+        let w = alloc.alloc(64, 64);
+        let z = alloc.alloc(64, 64);
+        let mut jobs: Vec<Option<TeJob>> = (0..16).map(|_| None).collect();
+        jobs[0] = Some(TeJob {
+            x,
+            w,
+            y: None,
+            z,
+            row_tiles: vec![0, 1],
+            col_order: vec![0, 1],
+            k: 64,
+        });
+        sim.assign_gemm(jobs);
+        sim
+    }
+
+    #[test]
+    fn fast_forward_matches_dense_byte_for_byte() {
+        let cfg = ArchConfig::tensorpool();
+        let ff = stall_heavy_sim(&cfg).run_fast_forward(1_000_000);
+        let dense = stall_heavy_sim(&cfg).run_dense(1_000_000);
+        assert_eq!(ff, dense, "fast-forward diverged from the dense stepper");
+        assert_eq!(dense.cycles_fast_forwarded, 0);
+    }
+
+    #[test]
+    fn stall_heavy_shape_actually_fast_forwards() {
+        // The in-order-streamer ablation round-trips every read: most of
+        // the run is wire-latency waiting, the fast-forward engine's bread
+        // and butter. If this stops skipping, the optimization has
+        // silently disabled itself.
+        let cfg = ArchConfig::tensorpool().without_rob();
+        let ff = stall_heavy_sim(&cfg).run_fast_forward(10_000_000);
+        assert!(
+            ff.cycles_fast_forwarded > 0,
+            "no cycles were fast-forwarded on an in-order stall-heavy run"
+        );
+        let dense = stall_heavy_sim(&cfg).run_dense(10_000_000);
+        assert_eq!(ff, dense);
     }
 }

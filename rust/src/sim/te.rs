@@ -241,6 +241,107 @@ impl TeEngine {
         region.line_of_elem(row, ct * geom.tile_n())
     }
 
+    // ---- issue/compute readiness predicates --------------------------------
+    //
+    // One definition each, shared by the dense stepper (`try_issue`/
+    // `advance_compute`) and the fast-forward engine (`wake_at`/
+    // `fast_forward`) — the two MUST agree on what "can make progress"
+    // means, so the conditions live here and nowhere else.
+
+    fn can_issue_w(&self, job: &TeJob) -> bool {
+        let (gkb, _) = self.w_issue;
+        gkb < job.num_out_tiles() * job.kblocks()
+            && gkb < self.arr_base + ARR_WINDOW
+            && self.w_out < self.rob_depth
+    }
+
+    fn can_issue_x(&self, job: &TeJob) -> bool {
+        let (gkb, _) = self.x_issue;
+        gkb < job.num_out_tiles() * job.kblocks()
+            && gkb < self.arr_base + ARR_WINDOW
+            && self.x_out < self.rob_depth
+    }
+
+    fn can_issue_y(&self, job: &TeJob) -> bool {
+        if job.y.is_none() {
+            return false;
+        }
+        let (t, _) = self.y_issue;
+        t < job.num_out_tiles()
+            && t < self.y_base + 2
+            && self.y_out < self.rob_depth
+            && self.y_out + self.z_out < self.z_fifo_depth
+    }
+
+    fn can_issue_z(&self) -> bool {
+        !self.z_pending.is_empty() && self.z_out < self.z_fifo_depth
+    }
+
+    /// Can the next k-block start computing this cycle?
+    fn compute_ready(&self, job: &TeJob) -> bool {
+        let gkb = self.tile_idx * job.kblocks() + self.kb;
+        let a = self.arr[gkb % ARR_WINDOW];
+        let y_ready = job.y.is_none() || self.y_got[self.tile_idx % 2] >= 32;
+        a.x as usize >= 32 && a.w as usize >= KBLOCK_ELEMS && y_ready
+    }
+
+    /// Why the idle compute pipeline cannot start (priority: Y, X, W —
+    /// the dense stepper's stall-accounting order).
+    fn stall_cause(&self, job: &TeJob) -> TeStall {
+        let gkb = self.tile_idx * job.kblocks() + self.kb;
+        let a = self.arr[gkb % ARR_WINDOW];
+        let y_ready = job.y.is_none() || self.y_got[self.tile_idx % 2] >= 32;
+        if !y_ready {
+            TeStall::WaitY
+        } else if (a.x as usize) < 32 {
+            TeStall::WaitX
+        } else {
+            TeStall::WaitW
+        }
+    }
+
+    /// First future cycle at which this engine can make progress WITHOUT a
+    /// NoC delivery, or `None` if only a delivery can wake it. Must be
+    /// conservative: waking early merely costs a dense step, waking late
+    /// would skip real work (a correctness bug — see README
+    /// "Fast-forward engine").
+    pub fn wake_at(&self, now: u64) -> Option<u64> {
+        let job = self.job.as_ref()?;
+        if self.done {
+            // Compute retired; only the Z-writeback drain remains, and it
+            // progresses whenever FIFO credit is available.
+            return self.can_issue_z().then_some(now + 1);
+        }
+        let active = self.compute_left > 0
+            || self.can_issue_w(job)
+            || self.can_issue_x(job)
+            || self.can_issue_y(job)
+            || self.can_issue_z()
+            || self.compute_ready(job);
+        active.then_some(now + 1)
+    }
+
+    /// Replay `cycles` blocked cycles in closed form: the only per-cycle
+    /// state a delivery-starved TE mutates is its stall counter, whose
+    /// cause cannot change while no delivery arrives (arrivals, issue
+    /// pointers, and compute position are all frozen).
+    pub fn fast_forward(&mut self, cycles: u64) {
+        let Some(job) = self.job.take() else { return };
+        if !self.done {
+            debug_assert!(
+                self.compute_left == 0 && !self.compute_ready(&job),
+                "fast-forwarded a TE that could compute"
+            );
+            match self.stall_cause(&job) {
+                TeStall::WaitY => self.stats.stall_wait_y += cycles,
+                TeStall::WaitX => self.stats.stall_wait_x += cycles,
+                TeStall::WaitW => self.stats.stall_wait_w += cycles,
+                other => unreachable!("stall_cause returned {other:?}"),
+            }
+        }
+        self.job = Some(job);
+    }
+
     /// Advance the arrival window when compute moves past a global k-block.
     fn retire_gkb(&mut self, gkb: usize) {
         debug_assert_eq!(gkb, self.arr_base);
@@ -260,7 +361,7 @@ impl TeEngine {
     fn try_issue(&mut self, noc: &mut Noc) {
         if self.done {
             // Drain remaining Z lines even after compute finished.
-            if !self.z_pending.is_empty() && self.z_out < self.z_fifo_depth {
+            if self.can_issue_z() {
                 let line = self.z_pending.pop().unwrap();
                 self.z_out += 1;
                 noc.write_line(self.token, STREAM_Z, 0, self.home_tile, line);
@@ -268,9 +369,7 @@ impl TeEngine {
             return;
         }
         let job = self.job.take().expect("job present while not done");
-        let ntiles = job.num_out_tiles();
         let kbl = job.kblocks();
-        let total_gkb = ntiles * kbl;
 
         // One request per cycle max; rotate across streams for fairness.
         for attempt in 0..4 {
@@ -278,11 +377,8 @@ impl TeEngine {
             match s {
                 0 => {
                     // W stream: prefetch window = current..current+ARR_WINDOW
-                    let (gkb, l) = self.w_issue;
-                    if gkb < total_gkb
-                        && gkb < self.arr_base + ARR_WINDOW
-                        && self.w_out < self.rob_depth
-                    {
+                    if self.can_issue_w(&job) {
+                        let (gkb, l) = self.w_issue;
                         let (t, kb) = (gkb / kbl, gkb % kbl);
                         let line = Self::w_line(&self.geom, &job, t, kb, l);
                         self.w_out += 1;
@@ -293,11 +389,8 @@ impl TeEngine {
                     }
                 }
                 1 => {
-                    let (gkb, l) = self.x_issue;
-                    if gkb < total_gkb
-                        && gkb < self.arr_base + ARR_WINDOW
-                        && self.x_out < self.rob_depth
-                    {
+                    if self.can_issue_x(&job) {
+                        let (gkb, l) = self.x_issue;
                         let (t, kb) = (gkb / kbl, gkb % kbl);
                         let line = Self::x_line(&self.geom, &job, t, kb, l);
                         self.x_out += 1;
@@ -310,24 +403,19 @@ impl TeEngine {
                 2 => {
                     // Y preload: current tile + one ahead, sharing FIFO
                     // credit with Z (paper: Y/Z share the same buffer).
-                    if let Some(y) = job.y {
+                    if self.can_issue_y(&job) {
+                        let y = job.y.expect("can_issue_y implies Y region");
                         let (t, l) = self.y_issue;
-                        if t < ntiles
-                            && t < self.y_base + 2
-                            && self.y_out < self.rob_depth
-                            && self.y_out + self.z_out < self.z_fifo_depth
-                        {
-                            let line = Self::yz_line(&self.geom, &job, &y, t, l);
-                            self.y_out += 1;
-                            noc.read_line(self.token, STREAM_Y, t as u32, self.home_tile, line);
-                            self.y_issue = if l + 1 == 32 { (t + 1, 0) } else { (t, l + 1) };
-                            self.rr = (s + 1) % 4;
-                            break;
-                        }
+                        let line = Self::yz_line(&self.geom, &job, &y, t, l);
+                        self.y_out += 1;
+                        noc.read_line(self.token, STREAM_Y, t as u32, self.home_tile, line);
+                        self.y_issue = if l + 1 == 32 { (t + 1, 0) } else { (t, l + 1) };
+                        self.rr = (s + 1) % 4;
+                        break;
                     }
                 }
                 3 => {
-                    if !self.z_pending.is_empty() && self.z_out < self.z_fifo_depth {
+                    if self.can_issue_z() {
                         let line = self.z_pending.pop().unwrap();
                         self.z_out += 1;
                         noc.write_line(self.token, STREAM_Z, 0, self.home_tile, line);
@@ -351,26 +439,15 @@ impl TeEngine {
 
         // Idle: can the next k-block start this cycle?
         if self.compute_left == 0 {
-            let gkb = self.tile_idx * kbl + self.kb;
-            let a = self.arr[gkb % ARR_WINDOW];
-            let y_ready =
-                job.y.is_none() || self.y_got[self.tile_idx % 2] >= 32;
-            if a.x as usize >= 32 && a.w as usize >= KBLOCK_ELEMS && y_ready {
+            if self.compute_ready(&job) {
                 self.compute_left = KBLOCK_CYCLES;
             } else {
                 // stall accounting (priority: Y, then X, then W)
-                let cause = if !y_ready {
-                    TeStall::WaitY
-                } else if (a.x as usize) < 32 {
-                    TeStall::WaitX
-                } else {
-                    TeStall::WaitW
-                };
-                match cause {
+                match self.stall_cause(&job) {
                     TeStall::WaitY => self.stats.stall_wait_y += 1,
                     TeStall::WaitX => self.stats.stall_wait_x += 1,
                     TeStall::WaitW => self.stats.stall_wait_w += 1,
-                    _ => {}
+                    other => unreachable!("stall_cause returned {other:?}"),
                 }
                 self.job = Some(job);
                 return;

@@ -1,0 +1,223 @@
+//! Differential fuzz for the event-horizon fast-forward engine: across
+//! randomized (config × workload) points, `Sim::run_fast_forward` must
+//! produce a `RunResult` byte-identical to `Sim::run_dense` — cycles,
+//! per-TE stats (busy/stall/finish counters), every `NocStats` field, and
+//! MAC totals. The only tolerated difference is the diagnostic
+//! `cycles_fast_forwarded` counter, which equality deliberately excludes
+//! (and which this suite pins to be >0 on stall-heavy shapes, so the
+//! optimization cannot silently disable itself).
+
+use tensorpool::sim::{
+    ArchConfig, DmaDir, DmaXfer, L1Alloc, PeWorkload, RunResult, Sim,
+};
+use tensorpool::workload::gemm::{
+    map_independent, map_single, map_split, GemmRegions, GemmSpec,
+};
+
+/// xorshift64: deterministic, seedable, dependency-free.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).max(1))
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+
+    fn pick<T: Copy>(&mut self, xs: &[T]) -> T {
+        xs[(self.next_u64() % xs.len() as u64) as usize]
+    }
+
+    fn chance(&mut self, percent: u64) -> bool {
+        self.next_u64() % 100 < percent
+    }
+}
+
+/// Deterministically derive one randomized simulation from `seed`:
+/// ablation knobs (K/J widening, burst on/off, ROB depth, Z-FIFO depth,
+/// wheel footprint down to 4 slots so growth paths are exercised) × GEMM
+/// shape and split mode × optional PE background traffic × optional DMA
+/// transfer. Calling twice with one seed builds two identical sims.
+fn build(seed: u64) -> (String, Sim) {
+    let mut rng = Rng::new(seed);
+    let mut cfg = ArchConfig::tensorpool();
+    cfg.resp_k = rng.pick(&[1, 2, 4]);
+    cfg.req_j = rng.pick(&[1, 2]);
+    cfg.burst = rng.chance(70);
+    cfg.rob_depth = rng.pick(&[1, 4, 16]);
+    cfg.z_fifo_depth = rng.pick(&[8, 32]);
+    cfg.event_wheel_slots = rng.pick(&[4, 256, 8192]);
+
+    let spec = GemmSpec {
+        m: 32 * (1 + (rng.next_u64() % 3) as usize),
+        k: 32 * (1 + (rng.next_u64() % 3) as usize),
+        n: 32 * (1 + (rng.next_u64() % 3) as usize),
+        accumulate: rng.chance(30),
+    };
+    let mode = rng.next_u64() % 4;
+
+    let mut alloc = L1Alloc::new(&cfg);
+    let mut sim = Sim::new(&cfg);
+    let jobs = match mode {
+        0 => {
+            let regions = GemmRegions::alloc(&spec, &mut alloc);
+            let mut jobs: Vec<_> = (0..cfg.num_tes()).map(|_| None).collect();
+            jobs[0] = Some(map_single(&spec, &regions));
+            jobs
+        }
+        1 | 2 => {
+            let regions = GemmRegions::alloc(&spec, &mut alloc);
+            map_split(&spec, &regions, cfg.num_tes(), mode == 2)
+        }
+        _ => map_independent(&spec, cfg.num_tes(), &mut alloc),
+    };
+    sim.assign_gemm(jobs);
+
+    let with_pe = rng.chance(50);
+    if with_pe {
+        let reads = alloc.alloc(64, 64);
+        let writes = alloc.alloc(64, 64);
+        let wl = PeWorkload::new(
+            vec![reads],
+            vec![writes],
+            rng.pick(&[500, 2000]),
+            rng.pick(&[0.4, 0.8]),
+            rng.pick(&[0.1, 0.4]),
+        );
+        sim.add_pe_workload(&wl);
+    }
+    let with_dma = rng.chance(50);
+    if with_dma {
+        let region = alloc.alloc(128, 128);
+        let dir = if rng.chance(50) { DmaDir::In } else { DmaDir::Out };
+        let now = sim.noc.now();
+        sim.dma_mut().program(vec![DmaXfer { region, dir }], now);
+    }
+
+    let desc = format!(
+        "k={} j={} burst={} rob={} zfifo={} wheel={} gemm={}x{}x{} acc={} \
+         mode={mode} pe={with_pe} dma={with_dma}",
+        cfg.resp_k,
+        cfg.req_j,
+        cfg.burst,
+        cfg.rob_depth,
+        cfg.z_fifo_depth,
+        cfg.event_wheel_slots,
+        spec.m,
+        spec.k,
+        spec.n,
+        spec.accumulate,
+    );
+    (desc, sim)
+}
+
+const BUDGET: u64 = 200_000_000;
+
+#[test]
+fn fastforward_equals_dense_over_randomized_configs() {
+    let mut total_skipped = 0u64;
+    let mut saw_wheel_growth = false;
+    for seed in 0..30u64 {
+        let (desc, mut ff_sim) = build(seed);
+        let (_, mut dense_sim) = build(seed);
+        let ff = ff_sim.run_fast_forward(BUDGET);
+        let dense = dense_sim.run_dense(BUDGET);
+        assert_eq!(
+            ff, dense,
+            "seed {seed} ({desc}): fast-forward RunResult diverged from dense"
+        );
+        assert_eq!(
+            dense.cycles_fast_forwarded, 0,
+            "seed {seed}: the dense stepper must never fast-forward"
+        );
+        total_skipped += ff.cycles_fast_forwarded;
+        saw_wheel_growth |= ff.noc.wheel_growths > 0;
+    }
+    assert!(
+        total_skipped > 0,
+        "30 randomized runs skipped zero cycles — the fast-forward engine \
+         has silently disabled itself"
+    );
+    assert!(
+        saw_wheel_growth,
+        "the 4-slot wheel configs must exercise wheel growth under \
+         fast-forward"
+    );
+}
+
+#[test]
+fn stall_heavy_in_order_shape_fast_forwards() {
+    // The in-order streamer (rob_depth=1) round-trips every wide read:
+    // almost the whole run is wire-latency waiting, so a healthy
+    // fast-forward engine must skip a large share of it.
+    let cfg = ArchConfig::tensorpool().without_rob();
+    let single = |spec: &GemmSpec, cfg: &ArchConfig| -> Sim {
+        let mut alloc = L1Alloc::new(cfg);
+        let mut sim = Sim::new(cfg);
+        let regions = GemmRegions::alloc(spec, &mut alloc);
+        let mut jobs: Vec<_> = (0..cfg.num_tes()).map(|_| None).collect();
+        jobs[0] = Some(map_single(spec, &regions));
+        sim.assign_gemm(jobs);
+        sim
+    };
+    let spec = GemmSpec::square(64);
+    let ff = single(&spec, &cfg).run_fast_forward(BUDGET);
+    let dense = single(&spec, &cfg).run_dense(BUDGET);
+    assert_eq!(ff, dense, "in-order single-TE run diverged");
+    assert!(
+        ff.cycles_fast_forwarded > 0,
+        "stall-heavy in-order shape fast-forwarded nothing \
+         (cycles={}, stalls={})",
+        ff.cycles,
+        ff.tes[0].stall_wait_w + ff.tes[0].stall_wait_x
+    );
+}
+
+#[test]
+fn sequential_multi_phase_run_matches_dense() {
+    // The exec layer's Sequential schedule re-runs ONE sim across TE,
+    // PE, and DMA phases; the fast-forward loop must stay exact across
+    // phase boundaries (stale port bookings, re-armed engines, DMA
+    // reprogramming on a non-zero clock).
+    let phases = |dense: bool| -> RunResult {
+        let cfg = ArchConfig::tensorpool();
+        let mut alloc = L1Alloc::new(&cfg);
+        let mut sim = Sim::new(&cfg);
+        let spec = GemmSpec::square(64);
+        let regions = GemmRegions::alloc(&spec, &mut alloc);
+        let run = |sim: &mut Sim| {
+            if dense {
+                sim.run_dense(BUDGET)
+            } else {
+                sim.run_fast_forward(BUDGET)
+            }
+        };
+        sim.assign_gemm(map_split(&spec, &regions, cfg.num_tes(), true));
+        run(&mut sim);
+        let reads = alloc.alloc(128, 128);
+        let writes = alloc.alloc(128, 128);
+        sim.add_pe_workload(&PeWorkload::new(
+            vec![reads],
+            vec![writes],
+            1000,
+            0.8,
+            0.3,
+        ));
+        run(&mut sim);
+        let region = alloc.alloc(128, 128);
+        let now = sim.noc.now();
+        sim.dma_mut()
+            .program(vec![DmaXfer { region, dir: DmaDir::In }], now);
+        run(&mut sim)
+    };
+    let ff = phases(false);
+    let dense = phases(true);
+    assert_eq!(ff, dense, "multi-phase sequential run diverged");
+}
