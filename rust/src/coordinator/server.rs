@@ -16,10 +16,12 @@ use std::sync::Arc;
 
 use serde::{Deserialize, Serialize};
 
-use crate::exec::{BlockKind, BlockRun, BlockScheduleCache, ScheduleMode};
+use crate::exec::{
+    ArchSpec, BlockKind, BlockRun, BlockScheduleCache, ScheduleMode,
+    Substrate,
+};
 use crate::ppa::power::EnergyModel;
 use crate::sim::ArchConfig;
-use crate::workload::phy::{cfft, ls_che, mimo_mmse, PeKernel};
 
 /// Resource elements of the paper's reference TTI (Sec V-B); per-user
 /// costs scale against this footprint.
@@ -150,6 +152,15 @@ const MHA_EST: u64 = 78_000;
 /// needs them, Sec V-B).
 pub struct Server {
     cfg: ArchConfig,
+    /// Which compute substrate executes this server's work. TensorPool
+    /// (the default) runs the cycle-level simulator path unchanged;
+    /// the analytic substrates route block execution through
+    /// [`BlockScheduleCache::run_arch`].
+    substrate: Substrate,
+    /// The full spec behind `substrate` — present iff the server was
+    /// built via [`Server::for_spec`]; the analytic arms need the knobs
+    /// for their cache keys.
+    arch: Option<ArchSpec>,
     queue: VecDeque<TtiRequest>,
     /// Per-TTI admission budgets (cycles + optional power cap).
     budget: BudgetPolicy,
@@ -177,6 +188,8 @@ impl Server {
     ) -> Self {
         Server {
             cfg: cfg.clone(),
+            substrate: Substrate::TensorPool,
+            arch: None,
             queue: VecDeque::new(),
             budget: BudgetPolicy::latency_only(
                 (1e-3 * cfg.freq_ghz * 1e9) as u64,
@@ -185,6 +198,35 @@ impl Server {
             energy: EnergyModel::calibrate(cfg),
             blocks,
         }
+    }
+
+    /// A server executing on an explicit architecture spec — the
+    /// substrate-generic constructor. `Substrate::TensorPool` specs behave
+    /// byte-for-byte like `with_cache(&spec.apply(), blocks)`; the
+    /// analytic substrates route AI blocks and the classical chain
+    /// through their `exec::substrate` cost models.
+    pub fn for_spec(
+        spec: &ArchSpec,
+        blocks: Arc<BlockScheduleCache>,
+    ) -> Self {
+        let cfg = spec.apply();
+        let mut s = Self::with_cache(&cfg, blocks);
+        s.substrate = spec.substrate;
+        s.arch = Some(spec.clone());
+        s
+    }
+
+    /// The substrate this server executes on.
+    pub fn substrate(&self) -> Substrate {
+        self.substrate
+    }
+
+    /// The spec behind a non-TensorPool server (analytic arms need the
+    /// knobs for cache keys). Only reachable when built via `for_spec`.
+    fn arch_spec(&self) -> ArchSpec {
+        self.arch
+            .clone()
+            .expect("non-TensorPool servers are built via Server::for_spec")
     }
 
     /// Override the per-TTI cycle budget (default 1 ms at the configured
@@ -264,28 +306,39 @@ impl Server {
         }
     }
 
-    /// The classical chain (CFFT → LS-CHE → MMSE) for `res` REs, as the
-    /// kernel workloads the PE timing/energy models price.
-    fn classical_kernels(res: usize) -> [(PeKernel, usize); 3] {
-        [
-            (cfft(), res * 12),
-            (ls_che(), res),
-            (mimo_mmse(), res * 8),
-        ]
-    }
-
-    /// (cycles, energy) of one classical user: PE-model cycles plus the
-    /// TeraPool-calibrated per-instruction energy. Deterministic — both
+    /// (cycles, energy) of one classical user on this server's substrate:
+    /// PE-model cycles plus the TeraPool-calibrated per-instruction
+    /// energy, delegated to [`crate::exec::substrate::classical_cost`]
+    /// (the single source of truth; the TensorPool arm reproduces the
+    /// historical coordinator sum bit-for-bit). Deterministic — both
     /// views derive from the same kernel iteration counts.
     fn classical_cost(&self, res: usize) -> (u64, f64) {
-        let pes = self.cfg.num_pes();
-        let mut cycles = 0u64;
-        let mut instrs = 0u64;
-        for (kernel, elems) in Self::classical_kernels(res) {
-            cycles += kernel.cycles(elems, pes);
-            instrs += kernel.instrs(elems, pes);
+        crate::exec::substrate::classical_cost(
+            self.substrate,
+            &self.cfg,
+            &self.energy,
+            res,
+        )
+    }
+
+    /// Run one AI block pass on this server's substrate, returning
+    /// `(cycles, energy_j, avg_power_w, compute_utilization)`. The
+    /// TensorPool arm is the legacy simulator-plus-`EnergyModel` path,
+    /// byte-for-byte; the analytic substrates go through
+    /// [`BlockScheduleCache::run_arch`].
+    fn run_block(&self, run: BlockRun) -> (u64, f64, f64, f64) {
+        if self.substrate == Substrate::TensorPool {
+            let res = self.blocks.run(&self.cfg, run);
+            (
+                res.cycles,
+                self.energy.pool_energy_j(&self.cfg, &res.raw),
+                self.energy.pool_power(&self.cfg, &res.raw),
+                res.te_utilization,
+            )
+        } else {
+            let a = self.blocks.run_arch(&self.arch_spec(), run);
+            (a.cycles, a.energy_j, a.avg_power_w, a.compute_utilization)
         }
-        (cycles, self.energy.pe_energy_j(instrs))
     }
 
     /// THE definition of power demand: average draw while executing —
@@ -315,9 +368,9 @@ impl Server {
                 let mut e = 0.0f64;
                 let mut cycles = 0u64;
                 for run in self.block_runs(req.pipeline, req.res) {
-                    let res = self.blocks.run(&self.cfg, run);
-                    e += self.energy.pool_energy_j(&self.cfg, &res.raw);
-                    cycles += res.cycles;
+                    let (c, block_e, _, _) = self.run_block(run);
+                    e += block_e;
+                    cycles += c;
                 }
                 (e, cycles)
             }
@@ -450,15 +503,15 @@ impl Server {
             // re-simulated — and below the block level, iterations shared
             // across runs are memoized. The result is byte-identical
             // either way (pure runs), and so is the energy priced from its
-            // composed event counters.
-            let res = self.blocks.run(&self.cfg, run);
-            cycles += res.cycles;
-            energy_j += self.energy.pool_energy_j(&self.cfg, &res.raw);
-            let p = self.energy.pool_power(&self.cfg, &res.raw);
+            // composed event counters. Analytic substrates route through
+            // the same cache's `run_arch` tier.
+            let (c, e, p, util) = self.run_block(run);
+            cycles += c;
+            energy_j += e;
             if p > peak_block_power_w {
                 peak_block_power_w = p;
             }
-            te_util_acc += res.te_utilization;
+            te_util_acc += util;
             te_runs += 1;
         }
         for req in admitted.iter().filter(|r| r.pipeline == Pipeline::Classical) {
@@ -847,6 +900,67 @@ mod tests {
         );
         // identical per-user runs are still recalled, not re-simulated
         assert_eq!(per_user.block_cache().sims_run(), 2, "dwsep(1) + fc(1)");
+    }
+
+    // ---- architecture substrates ------------------------------------------
+
+    #[test]
+    fn core_only_server_serves_analytically_without_simulating() {
+        let spec = ArchSpec::from(Substrate::CoreOnly);
+        let mut s =
+            Server::for_spec(&spec, Arc::new(BlockScheduleCache::new()));
+        assert_eq!(s.substrate(), Substrate::CoreOnly);
+        s.submit(TtiRequest {
+            user_id: 0,
+            pipeline: Pipeline::NeuralReceiver,
+            res: 8192,
+        });
+        s.submit(TtiRequest {
+            user_id: 1,
+            pipeline: Pipeline::Classical,
+            res: 1024,
+        });
+        let rep = s.schedule_tti();
+        assert_eq!(rep.served.len(), 2);
+        assert!(rep.energy_j > 0.0, "analytic arm must price energy");
+        assert!(rep.cycles > 0);
+        assert_eq!(
+            s.block_cache().sims_run(),
+            0,
+            "the analytic arm must never touch the cycle-level simulator"
+        );
+        assert!(
+            s.block_cache().analytic_len() > 0,
+            "analytic runs are cached under their ArchSpec key"
+        );
+    }
+
+    #[test]
+    fn tensorpool_spec_server_matches_legacy_byte_for_byte() {
+        let run = |mut s: Server| {
+            s.submit(TtiRequest {
+                user_id: 0,
+                pipeline: Pipeline::NeuralChe,
+                res: 4096,
+            });
+            s.schedule_tti()
+        };
+        let legacy = run(Server::new(&ArchConfig::tensorpool()));
+        let via_spec = run(Server::for_spec(
+            &ArchSpec::default(),
+            Arc::new(BlockScheduleCache::new()),
+        ));
+        assert_eq!(legacy.cycles, via_spec.cycles);
+        assert_eq!(
+            legacy.energy_j.to_bits(),
+            via_spec.energy_j.to_bits(),
+            "TensorPool spec must reproduce the legacy path bit-for-bit"
+        );
+        assert_eq!(
+            legacy.peak_block_power_w.to_bits(),
+            via_spec.peak_block_power_w.to_bits()
+        );
+        assert_eq!(legacy.te_utilization, via_spec.te_utilization);
     }
 
     #[test]

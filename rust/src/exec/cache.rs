@@ -45,6 +45,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::ppa::power::EnergyModel;
 use crate::sim::{ArchConfig, NocStats, RunResult, Sim, TeRunStats};
 use crate::workload::blocks::BlockIter;
 
@@ -53,13 +54,16 @@ use super::knobs::ArchKnobs;
 use super::schedule::{
     active_te_slots, drive_iteration, ScheduleMode, ScheduleResult,
 };
+use super::substrate::{analytic_block, ArchRun, ArchSpec, Substrate};
 
 /// Content key of one block-schedule simulation. `iters` is normalized to
 /// 0 for [`BlockKind::Mha`] (its pipeline has a fixed stage count and
 /// ignores the iteration knob), so differing callers still share one entry.
+/// The architecture identity is the full [`ArchSpec`] — substrate × knobs
+/// — so entries for different substrates can never alias.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 struct BlockKey {
-    arch: ArchKnobs,
+    arch: ArchSpec,
     /// `ArchConfig::event_wheel_slots`. Timing-neutral, but part of the
     /// key so a hit returns EXACTLY what a fresh simulation of the same
     /// config would (its `raw.noc.wheel_growths` counter does depend on
@@ -73,7 +77,7 @@ struct BlockKey {
 /// Content key of one memoized iteration segment.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 struct IterKey {
-    arch: ArchKnobs,
+    arch: ArchSpec,
     wheel_slots: usize,
     mode: ScheduleMode,
     /// Full iteration content (see `block::iteration_signature`).
@@ -209,6 +213,10 @@ fn compose(
 pub struct BlockScheduleCache {
     blocks: Mutex<HashMap<BlockKey, ScheduleResult>>,
     iter_memo: Mutex<HashMap<IterKey, IterOutcome>>,
+    /// Analytic-substrate block runs (`CoreOnly` / `NpuWideMac`), keyed by
+    /// the same content key as tier 1 — the substrate inside
+    /// [`ArchSpec`] keeps entries from ever aliasing across machines.
+    analytic: Mutex<HashMap<BlockKey, ArchRun>>,
     /// When false, tier 2 is disabled and block-level misses run the
     /// monolithic simulation (the PR 2 behavior) — used by the regression
     /// tests that pin memoized == block-level == uncached.
@@ -234,6 +242,7 @@ impl Default for BlockScheduleCache {
         BlockScheduleCache {
             blocks: Mutex::new(HashMap::new()),
             iter_memo: Mutex::new(HashMap::new()),
+            analytic: Mutex::new(HashMap::new()),
             iter_memo_enabled: true,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
@@ -312,6 +321,11 @@ impl BlockScheduleCache {
         self.iter_memo.lock().expect("iter memo poisoned").len()
     }
 
+    /// Distinct analytic-substrate block runs currently cached.
+    pub fn analytic_len(&self) -> usize {
+        self.analytic.lock().expect("analytic cache poisoned").len()
+    }
+
     /// Run (or recall) one block schedule. Equal (config, run) always
     /// yields the identical `ScheduleResult` — cached, memoized, or
     /// simulated fresh.
@@ -333,7 +347,7 @@ impl BlockScheduleCache {
             return run_built(cfg, &block, run.mode);
         }
         let key = BlockKey {
-            arch: knobs.clone(),
+            arch: ArchSpec::from(knobs.clone()),
             wheel_slots: cfg.event_wheel_slots,
             kind: run.kind,
             iters: if run.kind == BlockKind::Mha { 0 } else { run.iters },
@@ -388,7 +402,7 @@ impl BlockScheduleCache {
         let mut grew = false;
         for it in &block.iters {
             let key = IterKey {
-                arch: knobs.clone(),
+                arch: ArchSpec::from(knobs.clone()),
                 wheel_slots: cfg.event_wheel_slots,
                 mode: run.mode,
                 sig: iteration_signature(cfg, it),
@@ -427,6 +441,57 @@ impl BlockScheduleCache {
             return run_built(cfg, &block, run.mode);
         }
         compose(cfg, run.mode, te_engines, &outcomes)
+    }
+
+    /// Substrate-generic block execution: run `run` on `spec`'s machine
+    /// and price it through the calibrated [`EnergyModel`].
+    ///
+    /// * `Substrate::TensorPool` delegates to [`BlockScheduleCache::run`]
+    ///   — the existing simulator path, byte-for-byte — and prices the
+    ///   returned counters exactly the way the serving loop always has
+    ///   (`pool_energy_j` / `pool_power` on the raw run).
+    /// * The analytic substrates reprice the block's machine-independent
+    ///   content ([`BlockRun::build`], which is pure and cheap) through
+    ///   [`analytic_block`], cached per content key — the substrate inside
+    ///   the key rules out cross-substrate aliasing.
+    pub fn run_arch(&self, spec: &ArchSpec, run: BlockRun) -> ArchRun {
+        let cfg = spec.apply();
+        let em = EnergyModel::calibrate(&cfg);
+        if spec.substrate == Substrate::TensorPool {
+            let res = self.run(&cfg, run);
+            return ArchRun {
+                substrate: Substrate::TensorPool,
+                cycles: res.cycles,
+                macs: res.te_macs,
+                energy_j: em.pool_energy_j(&cfg, &res.raw),
+                avg_power_w: em.pool_power(&cfg, &res.raw),
+                compute_utilization: res.te_utilization,
+            };
+        }
+        let key = BlockKey {
+            arch: spec.clone(),
+            wheel_slots: cfg.event_wheel_slots,
+            kind: run.kind,
+            iters: if run.kind == BlockKind::Mha { 0 } else { run.iters },
+            mode: run.mode,
+        };
+        if let Some(hit) = self
+            .analytic
+            .lock()
+            .expect("analytic cache poisoned")
+            .get(&key)
+        {
+            return *hit;
+        }
+        // Build + price outside the lock (benign race: pure result).
+        let block = run.build(&cfg);
+        let r = analytic_block(spec, &block, &em)
+            .expect("non-TensorPool substrate has an analytic model");
+        self.analytic
+            .lock()
+            .expect("analytic cache poisoned")
+            .insert(key, r);
+        r
     }
 }
 

@@ -33,6 +33,7 @@ pub mod cache;
 pub mod gemm;
 pub mod knobs;
 pub mod schedule;
+pub mod substrate;
 
 pub use block::{simulate_block, BlockKind, BlockRun};
 pub use cache::BlockScheduleCache;
@@ -41,3 +42,4 @@ pub use knobs::ArchKnobs;
 pub use schedule::{
     compare, run_concurrent, run_sequential, ScheduleMode, ScheduleResult,
 };
+pub use substrate::{ArchRun, ArchSpec, Substrate};

@@ -1,0 +1,554 @@
+//! The architecture axis: which compute substrate executes a request.
+//!
+//! The paper's headline claims are *comparative* — Table II pits the
+//! TE-accelerated TensorPool cluster against the core-only TeraPool-style
+//! baseline (609 vs 3643 MACs/cycle, 8.8× TFLOPS/W, 9.1× GFLOPS/W/mm²),
+//! and PAPERS.md adds the AI-RAN-on-NPUs wide-MAC alternative. This module
+//! lifts that axis out of the leaves (the old `table2_measure` special
+//! case, the coordinator's PE-only classical chain) into one place:
+//!
+//! * [`Substrate`] names the machine model;
+//! * [`ArchSpec`] = substrate × [`ArchKnobs`] is the hashable,
+//!   content-addressable architecture key every cache and scenario carries;
+//! * the analytic cost models for the non-simulated substrates live here,
+//!   priced through the same calibrated [`EnergyModel`] as the simulator
+//!   path.
+//!
+//! Dispatch contract: `Substrate::TensorPool` is **always** the existing
+//! cycle-level simulator path, byte-for-byte — callers match on the
+//! substrate and only route through the analytic models below for
+//! `CoreOnly` / `NpuWideMac`. The identity is pinned by
+//! `tests/substrate.rs`.
+//!
+//! Calibration sources:
+//! * `CoreOnly` — the TeraPool-style 1024-PE cluster (paper Table II;
+//!   the 410 GFLOP/s core-only cluster paper, arXiv 2509.08608). Costs
+//!   come from the `gemm_pe` SIMD microkernel timing model and the
+//!   TeraPool-anchored `e_pe_instr` (6.33 W at 1024 PEs × IPC 0.6).
+//! * `NpuWideMac` — an AI-RAN-on-NPUs-style wide-MAC array
+//!   (arXiv 2607.04224): a monolithic MAC array sustains a high dense-GEMM
+//!   rate but pays more energy per operand fetch than the 3D-stacked SRAM
+//!   (no per-SubGroup locality) and keeps a vector unit for the non-GEMM
+//!   kernels. Constants below are direction-calibrated, not transcribed.
+//!
+//! To add a fourth substrate: add the variant, a `parse`/`label` arm, an
+//! analytic arm in [`analytic_gemm`] / [`analytic_block`] /
+//! [`classical_cost`], and a [`gemm_reference`] row — every study
+//! (capacity grid, energy frontier, Table II, `figures frontier`) picks it
+//! up through those four dispatch points.
+
+use serde::{Deserialize, Serialize};
+
+use crate::ppa::power::EnergyModel;
+use crate::sim::ArchConfig;
+use crate::workload::blocks::CompBlock;
+use crate::workload::gemm::GemmSpec;
+use crate::workload::phy::{cfft, gemm_pe, ls_che, mimo_mmse, PeKernel};
+
+use super::knobs::ArchKnobs;
+
+/// Which machine model executes the work.
+#[derive(
+    Clone, Copy, Debug, Default, PartialEq, Eq, Hash, Serialize, Deserialize,
+)]
+pub enum Substrate {
+    /// The paper's TE+PE cluster, cycle-level simulated. The default — and
+    /// the only substrate that existed before the axis was lifted here.
+    #[default]
+    TensorPool,
+    /// TeraPool-style core-only cluster: 1024 PEs on the SIMD GEMM
+    /// microkernel, no tensor engines (paper Table II baseline).
+    CoreOnly,
+    /// AI-RAN-on-NPUs-style wide-MAC array + vector unit (analytic).
+    NpuWideMac,
+}
+
+impl Substrate {
+    /// Every substrate, in report order.
+    pub const ALL: [Substrate; 3] =
+        [Substrate::TensorPool, Substrate::CoreOnly, Substrate::NpuWideMac];
+
+    /// CLI / report label (also the `parse` spelling).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Substrate::TensorPool => "tensorpool",
+            Substrate::CoreOnly => "core-only",
+            Substrate::NpuWideMac => "npu",
+        }
+    }
+
+    /// Parse a CLI spelling (`--arch tensorpool|core-only|npu`).
+    pub fn parse(s: &str) -> Option<Substrate> {
+        match s {
+            "tensorpool" => Some(Substrate::TensorPool),
+            "core-only" | "coreonly" | "terapool" => Some(Substrate::CoreOnly),
+            "npu" | "npu-wide-mac" => Some(Substrate::NpuWideMac),
+            _ => None,
+        }
+    }
+}
+
+/// The full architecture identity a run is keyed on: substrate × knobs.
+///
+/// Replaces bare [`ArchKnobs`] as the content-addressable key of
+/// `BlockScheduleCache`, scenarios, and capacity studies. The knobs only
+/// parameterize the TensorPool simulator; the analytic substrates carry
+/// them inertly so one `ArchSpec` type keys every cache without aliasing
+/// (same knobs, different substrate → different key).
+///
+/// Serde note: `knobs` is flattened and `substrate` defaults, so reports
+/// serialized before the axis existed (bare knobs) still deserialize.
+#[derive(Clone, Debug, Default, PartialEq, Eq, Hash, Serialize, Deserialize)]
+pub struct ArchSpec {
+    #[serde(default)]
+    pub substrate: Substrate,
+    #[serde(flatten)]
+    pub knobs: ArchKnobs,
+}
+
+impl ArchSpec {
+    pub fn new(substrate: Substrate, knobs: ArchKnobs) -> Self {
+        ArchSpec { substrate, knobs }
+    }
+
+    /// The paper's TensorPool instance at default knobs.
+    pub fn tensorpool() -> Self {
+        ArchSpec::default()
+    }
+
+    /// Default knobs on `substrate`.
+    pub fn with_substrate(substrate: Substrate) -> Self {
+        ArchSpec { substrate, knobs: ArchKnobs::default() }
+    }
+
+    /// Expand the knobs over the TensorPool base config (the simulator
+    /// input; analytic substrates use it only for frequency/geometry).
+    pub fn apply(&self) -> ArchConfig {
+        self.knobs.apply()
+    }
+}
+
+impl From<ArchKnobs> for ArchSpec {
+    fn from(knobs: ArchKnobs) -> Self {
+        ArchSpec { substrate: Substrate::TensorPool, knobs }
+    }
+}
+
+impl From<Substrate> for ArchSpec {
+    fn from(substrate: Substrate) -> Self {
+        ArchSpec::with_substrate(substrate)
+    }
+}
+
+/// One executed request on an analytic (or simulated-and-priced)
+/// substrate: the substrate-generic result shape layers above `exec`
+/// consume when they don't need the full simulator counters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ArchRun {
+    pub substrate: Substrate,
+    pub cycles: u64,
+    pub macs: u64,
+    pub energy_j: f64,
+    pub avg_power_w: f64,
+    /// Achieved MACs/cycle over the substrate's steady-state GEMM rate.
+    pub compute_utilization: f64,
+}
+
+// ---- core-only (TeraPool-style) constants ------------------------------
+
+/// IPC of the SIMD GEMM microkernel at the TeraPool Table II operating
+/// point (the same 0.6 the `e_pe_instr` calibration is anchored to).
+pub const CORE_ONLY_GEMM_IPC: f64 = 0.6;
+
+// ---- NPU (wide-MAC) constants — direction-calibrated from the
+// ---- AI-RAN-on-NPUs paper (arXiv 2607.04224) ---------------------------
+
+/// Peak MACs/cycle of the monolithic wide-MAC array.
+pub const NPU_MAC_LANES: usize = 2048;
+/// Sustained fraction of peak on dense GEMM (array refill + edge tiles).
+pub const NPU_GEMM_UTILIZATION: f64 = 0.70;
+/// Vector-unit lanes the non-GEMM PHY kernels run on.
+pub const NPU_VECTOR_LANES: usize = 256;
+/// Per-MAC energy vs the TensorPool `e_mac`: the wide array reads
+/// operands from a flat SRAM without the 3D-stacked per-SubGroup
+/// locality, so each MAC pays more fetch energy.
+pub const NPU_E_MAC_FACTOR: f64 = 2.5;
+/// Idle/leakage floor of the NPU complex (W).
+pub const NPU_STATIC_W: f64 = 2.0;
+
+/// Number of PEs in the core-only cluster (single-sourced from the
+/// TeraPool base config).
+pub fn core_only_pes() -> usize {
+    ArchConfig::terapool().num_pes()
+}
+
+/// Steady-state MACs/cycle of the core-only cluster on the SIMD GEMM
+/// microkernel (paper Table II: 609). This is the one source of truth the
+/// old `table2_measure` TeraPool special case collapsed into.
+pub fn core_only_gemm_macs_per_cycle() -> f64 {
+    let t = gemm_pe().timing();
+    // 16 MACs per body iteration / steady-state cycles per iteration.
+    let cycles_per_iter = t.cycles as f64 / 2000.0;
+    let macs_per_pe = 16.0 / cycles_per_iter;
+    macs_per_pe * core_only_pes() as f64
+}
+
+/// Core-only cluster power at the Table II GEMM operating point
+/// (calibration identity: 6.33 W).
+pub fn core_only_gemm_power_w(em: &EnergyModel) -> f64 {
+    em.pe_pool_power(core_only_pes(), CORE_ONLY_GEMM_IPC)
+}
+
+/// Sustained MACs/cycle of the NPU wide-MAC array on dense GEMM.
+pub fn npu_gemm_macs_per_cycle() -> f64 {
+    NPU_MAC_LANES as f64 * NPU_GEMM_UTILIZATION
+}
+
+/// NPU power at the sustained dense-GEMM rate.
+pub fn npu_gemm_power_w(em: &EnergyModel) -> f64 {
+    npu_gemm_macs_per_cycle() * em.freq_hz * em.e_mac * NPU_E_MAC_FACTOR
+        + NPU_STATIC_W
+}
+
+/// Steady-state Table II reference point `(MACs/cycle, Watts)` for the
+/// analytic substrates. `None` for TensorPool — its point is *simulated*
+/// (`figures::tables::table2_measure`), never transcribed.
+pub fn gemm_reference(
+    substrate: Substrate,
+    em: &EnergyModel,
+) -> Option<(f64, f64)> {
+    match substrate {
+        Substrate::TensorPool => None,
+        Substrate::CoreOnly => Some((
+            core_only_gemm_macs_per_cycle(),
+            core_only_gemm_power_w(em),
+        )),
+        Substrate::NpuWideMac => {
+            Some((npu_gemm_macs_per_cycle(), npu_gemm_power_w(em)))
+        }
+    }
+}
+
+fn finish(
+    substrate: Substrate,
+    cycles: u64,
+    macs: u64,
+    energy_j: f64,
+    steady_macs_per_cycle: f64,
+    em: &EnergyModel,
+) -> ArchRun {
+    let t = cycles as f64 / em.freq_hz;
+    let achieved = if cycles == 0 { 0.0 } else { macs as f64 / cycles as f64 };
+    ArchRun {
+        substrate,
+        cycles,
+        macs,
+        energy_j,
+        avg_power_w: if cycles == 0 { 0.0 } else { energy_j / t },
+        compute_utilization: achieved / steady_macs_per_cycle,
+    }
+}
+
+/// Analytic GEMM execution for the non-simulated substrates. Returns
+/// `None` for `TensorPool` — callers must run the simulator (`GemmRun`)
+/// there, keeping the byte-identity contract trivially true.
+pub fn analytic_gemm(
+    spec: &ArchSpec,
+    g: &GemmSpec,
+    em: &EnergyModel,
+) -> Option<ArchRun> {
+    let macs = g.macs();
+    match spec.substrate {
+        Substrate::TensorPool => None,
+        Substrate::CoreOnly => {
+            if macs == 0 {
+                return Some(finish(
+                    Substrate::CoreOnly, 0, 0, 0.0, 1.0, em,
+                ));
+            }
+            let pes = core_only_pes();
+            let k = gemm_pe();
+            // One microkernel "element" = one MAC (elems_per_iter = 16
+            // MACs per 22-instruction body iteration).
+            let cycles = k.cycles(macs as usize, pes);
+            let instrs = k.instrs(macs as usize, pes);
+            Some(finish(
+                Substrate::CoreOnly,
+                cycles,
+                macs,
+                em.pe_energy_j(instrs),
+                core_only_gemm_macs_per_cycle(),
+                em,
+            ))
+        }
+        Substrate::NpuWideMac => {
+            if macs == 0 {
+                return Some(finish(
+                    Substrate::NpuWideMac, 0, 0, 0.0, 1.0, em,
+                ));
+            }
+            let rate = npu_gemm_macs_per_cycle();
+            let cycles = (macs as f64 / rate).ceil() as u64;
+            let t = cycles as f64 / em.freq_hz;
+            let energy = macs as f64 * em.e_mac * NPU_E_MAC_FACTOR
+                + NPU_STATIC_W * t;
+            Some(finish(Substrate::NpuWideMac, cycles, macs, energy, rate, em))
+        }
+    }
+}
+
+/// Reprice a TensorPool compute block's *content* (TE GEMM MACs + PE
+/// kernel work per iteration, from `BlockRun::build`) on an analytic
+/// substrate. Iterations run back-to-back with no TE/PE overlap: the
+/// core-only cluster time-multiplexes everything on the PEs, and the NPU
+/// serializes array (GEMM) and vector (kernel) phases.
+///
+/// Returns `None` for `TensorPool` (simulate instead).
+pub fn analytic_block(
+    spec: &ArchSpec,
+    block: &CompBlock,
+    em: &EnergyModel,
+) -> Option<ArchRun> {
+    if spec.substrate == Substrate::TensorPool {
+        return None;
+    }
+    let gemm_kernel = gemm_pe();
+    let mut cycles = 0u64;
+    let mut macs = 0u64;
+    let mut pe_instrs = 0u64;
+    let mut mac_energy = 0.0f64;
+    for it in &block.iters {
+        let te_macs: u64 =
+            it.te_jobs.iter().flatten().map(|j| j.total_macs()).sum();
+        macs += te_macs;
+        match spec.substrate {
+            Substrate::CoreOnly => {
+                let pes = core_only_pes();
+                if te_macs > 0 {
+                    cycles += gemm_kernel.cycles(te_macs as usize, pes);
+                    pe_instrs += gemm_kernel.instrs(te_macs as usize, pes);
+                }
+                if let Some(w) = &it.pe {
+                    cycles += w.kernel.cycles(w.elems, pes);
+                    pe_instrs += w.kernel.instrs(w.elems, pes);
+                }
+            }
+            Substrate::NpuWideMac => {
+                if te_macs > 0 {
+                    let rate = npu_gemm_macs_per_cycle();
+                    cycles += (te_macs as f64 / rate).ceil() as u64;
+                    mac_energy +=
+                        te_macs as f64 * em.e_mac * NPU_E_MAC_FACTOR;
+                }
+                if let Some(w) = &it.pe {
+                    cycles += w.kernel.cycles(w.elems, NPU_VECTOR_LANES);
+                    pe_instrs += w.kernel.instrs(w.elems, NPU_VECTOR_LANES);
+                }
+            }
+            Substrate::TensorPool => unreachable!("early return above"),
+        }
+    }
+    let steady = match spec.substrate {
+        Substrate::CoreOnly => core_only_gemm_macs_per_cycle(),
+        _ => npu_gemm_macs_per_cycle(),
+    };
+    let mut energy = em.pe_energy_j(pe_instrs) + mac_energy;
+    if spec.substrate == Substrate::NpuWideMac {
+        energy += NPU_STATIC_W * cycles as f64 / em.freq_hz;
+    }
+    Some(finish(spec.substrate, cycles, macs, energy, steady, em))
+}
+
+/// The classical PHY chain the serving loop prices per user: CFFT across
+/// 12 symbols, LS channel estimation, MMSE equalization across layers
+/// (moved here from `coordinator::Server` so every substrate costs the
+/// same chain).
+pub fn classical_chain(res: usize) -> [(PeKernel, usize); 3] {
+    [(cfft(), res * 12), (ls_che(), res), (mimo_mmse(), res * 8)]
+}
+
+/// `(cycles, energy_j)` of the classical chain on `substrate`.
+///
+/// The TensorPool arm reproduces the coordinator's historical
+/// `classical_cost` bit-for-bit: the chain runs on the Pool's own
+/// `cfg.num_pes()` scalar cores, cycles and instructions summed across
+/// kernels, energy priced once from the summed instruction count.
+pub fn classical_cost(
+    substrate: Substrate,
+    cfg: &ArchConfig,
+    em: &EnergyModel,
+    res: usize,
+) -> (u64, f64) {
+    let pes = match substrate {
+        Substrate::TensorPool => cfg.num_pes(),
+        Substrate::CoreOnly => core_only_pes(),
+        Substrate::NpuWideMac => NPU_VECTOR_LANES,
+    };
+    let mut cycles = 0u64;
+    let mut instrs = 0u64;
+    for (kernel, elems) in classical_chain(res) {
+        cycles += kernel.cycles(elems, pes);
+        instrs += kernel.instrs(elems, pes);
+    }
+    (cycles, em.pe_energy_j(instrs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::blocks::fc_softmax_block;
+    use crate::sim::L1Alloc;
+
+    fn em() -> EnergyModel {
+        EnergyModel::calibrate(&ArchConfig::tensorpool())
+    }
+
+    #[test]
+    fn spec_defaults_to_tensorpool_and_knobs_convert() {
+        assert_eq!(ArchSpec::default().substrate, Substrate::TensorPool);
+        let spec: ArchSpec = ArchKnobs::default().into();
+        assert_eq!(spec, ArchSpec::tensorpool());
+        let spec: ArchSpec = Substrate::CoreOnly.into();
+        assert_eq!(spec.knobs, ArchKnobs::default());
+        assert_eq!(spec.substrate, Substrate::CoreOnly);
+    }
+
+    #[test]
+    fn labels_parse_round_trip() {
+        for s in Substrate::ALL {
+            assert_eq!(Substrate::parse(s.label()), Some(s));
+        }
+        assert_eq!(Substrate::parse("terapool"), Some(Substrate::CoreOnly));
+        assert_eq!(Substrate::parse("quantum"), None);
+    }
+
+    #[test]
+    fn spec_serde_accepts_bare_knobs() {
+        // Reports serialized before the axis existed carry bare knobs;
+        // the flattened spec must read them back as TensorPool.
+        let knobs_json = serde_json::to_string(&ArchKnobs::default()).unwrap();
+        let spec: ArchSpec = serde_json::from_str(&knobs_json).unwrap();
+        assert_eq!(spec, ArchSpec::tensorpool());
+        let spec = ArchSpec::with_substrate(Substrate::NpuWideMac);
+        let round: ArchSpec =
+            serde_json::from_str(&serde_json::to_string(&spec).unwrap())
+                .unwrap();
+        assert_eq!(round, spec);
+    }
+
+    #[test]
+    fn core_only_reference_matches_table2_baseline() {
+        let em = em();
+        let (macs, power) =
+            gemm_reference(Substrate::CoreOnly, &em).unwrap();
+        // paper Table II: 609 MACs/cycle, 6.33 W
+        assert!(
+            (450.0..=800.0).contains(&macs),
+            "core-only {macs:.0} MACs/cycle vs paper 609"
+        );
+        assert!((power - 6.33).abs() < 0.01, "calibration identity");
+        assert!(gemm_reference(Substrate::TensorPool, &em).is_none());
+    }
+
+    #[test]
+    fn npu_reference_sits_between_core_only_and_tensorpool() {
+        let em = em();
+        let (core_macs, core_w) =
+            gemm_reference(Substrate::CoreOnly, &em).unwrap();
+        let (npu_macs, npu_w) =
+            gemm_reference(Substrate::NpuWideMac, &em).unwrap();
+        assert!(npu_macs > core_macs, "wide array beats scalar cores");
+        assert!(npu_macs < 3400.0, "but trails the simulated TensorPool");
+        let core_eff = core_macs / core_w;
+        let npu_eff = npu_macs / npu_w;
+        assert!(
+            npu_eff > core_eff,
+            "NPU MACs/cycle/W {npu_eff:.0} must beat core-only {core_eff:.0}"
+        );
+    }
+
+    #[test]
+    fn analytic_gemm_is_pure_and_prices_energy() {
+        let em = em();
+        let g = GemmSpec::square(512);
+        for sub in [Substrate::CoreOnly, Substrate::NpuWideMac] {
+            let spec = ArchSpec::with_substrate(sub);
+            let a = analytic_gemm(&spec, &g, &em).unwrap();
+            let b = analytic_gemm(&spec, &g, &em).unwrap();
+            assert_eq!(a, b, "{sub:?}: analytic runs must be pure");
+            assert_eq!(a.macs, g.macs());
+            assert!(a.cycles > 0 && a.energy_j > 0.0 && a.avg_power_w > 0.0);
+            assert!(
+                a.compute_utilization > 0.5 && a.compute_utilization <= 1.001,
+                "{sub:?}: large GEMM should run near steady state: {}",
+                a.compute_utilization
+            );
+        }
+        let spec = ArchSpec::tensorpool();
+        assert!(analytic_gemm(&spec, &g, &em).is_none());
+        // degenerate shapes terminate with zero cost
+        let z = analytic_gemm(
+            &ArchSpec::with_substrate(Substrate::CoreOnly),
+            &GemmSpec::square(0),
+            &em,
+        )
+        .unwrap();
+        assert_eq!((z.cycles, z.energy_j), (0, 0.0));
+    }
+
+    #[test]
+    fn analytic_block_reprices_content_sequentially() {
+        let cfg = ArchConfig::tensorpool();
+        let em = em();
+        let mut alloc = L1Alloc::new(&cfg);
+        let block = fc_softmax_block(cfg.num_tes(), &mut alloc, 2);
+        let core = analytic_block(
+            &ArchSpec::with_substrate(Substrate::CoreOnly),
+            &block,
+            &em,
+        )
+        .unwrap();
+        let npu = analytic_block(
+            &ArchSpec::with_substrate(Substrate::NpuWideMac),
+            &block,
+            &em,
+        )
+        .unwrap();
+        assert!(
+            analytic_block(&ArchSpec::tensorpool(), &block, &em).is_none()
+        );
+        for r in [&core, &npu] {
+            assert_eq!(r.macs, 2 * block.te_macs_per_iter);
+            assert!(r.cycles > 0 && r.energy_j > 0.0);
+        }
+        assert!(
+            npu.cycles < core.cycles,
+            "the wide-MAC array must outrun the scalar cores on GEMM-heavy \
+             blocks ({} vs {})",
+            npu.cycles,
+            core.cycles
+        );
+    }
+
+    #[test]
+    fn classical_cost_tensorpool_arm_matches_manual_sum() {
+        let cfg = ArchConfig::tensorpool();
+        let em = em();
+        let res = 8192usize;
+        let mut cycles = 0u64;
+        let mut instrs = 0u64;
+        for (kernel, elems) in classical_chain(res) {
+            cycles += kernel.cycles(elems, cfg.num_pes());
+            instrs += kernel.instrs(elems, cfg.num_pes());
+        }
+        let (c, e) = classical_cost(Substrate::TensorPool, &cfg, &em, res);
+        assert_eq!(c, cycles);
+        assert_eq!(e.to_bits(), em.pe_energy_j(instrs).to_bits());
+        // the 1024-PE cluster finishes the chain faster than the Pool's
+        // 256 scalar cores
+        let (c_core, e_core) =
+            classical_cost(Substrate::CoreOnly, &cfg, &em, res);
+        assert!(c_core < c, "more cores, fewer cycles");
+        assert!(e_core > 0.0);
+    }
+}

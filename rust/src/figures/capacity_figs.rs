@@ -11,7 +11,7 @@
 //! served users plateau), and mean TE utilization.
 
 use crate::coordinator::BatchPolicy;
-use crate::exec::ArchKnobs;
+use crate::exec::ArchSpec;
 use crate::report::{f2, int, pct, Table};
 use crate::sweep::{
     ArrivalPattern, CapacityReport, SweepRunner, TtiScenario, UserMix,
@@ -58,7 +58,30 @@ pub fn capacity_grid(
     policy: BatchPolicy,
     power_budget_mw: Option<u32>,
 ) -> Vec<TtiScenario> {
-    let knobs = ArchKnobs::default();
+    capacity_grid_for(
+        &ArchSpec::default(),
+        users,
+        num_ttis,
+        budget_cycles,
+        include_mixed,
+        policy,
+        power_budget_mw,
+    )
+}
+
+/// [`capacity_grid`] on an explicit architecture spec — the substrate
+/// axis of the cross-architecture frontier. `capacity_grid` is this on
+/// the default (TensorPool) spec.
+#[allow(clippy::too_many_arguments)]
+pub fn capacity_grid_for(
+    arch: &ArchSpec,
+    users: &[usize],
+    num_ttis: usize,
+    budget_cycles: Option<u64>,
+    include_mixed: bool,
+    policy: BatchPolicy,
+    power_budget_mw: Option<u32>,
+) -> Vec<TtiScenario> {
     let mut mixes: Vec<(&str, UserMix)> = PIPELINE_MIXES.to_vec();
     if include_mixed {
         mixes.push(MIXED_MIX);
@@ -68,7 +91,7 @@ pub fn capacity_grid(
         for &u in users {
             out.push(TtiScenario {
                 name: format!("{label}_u{u}"),
-                arch: knobs.clone(),
+                arch: arch.clone(),
                 mix,
                 arrival: ArrivalPattern::Uniform,
                 users_per_tti: u,
@@ -165,6 +188,30 @@ mod tests {
         assert!(g2.iter().all(|s| s.budget_cycles == Some(225_000)));
         assert!(g2.iter().all(|s| s.policy == BatchPolicy::PerUser));
         assert!(g2.iter().all(|s| s.power_budget_mw == Some(10_000)));
+    }
+
+    #[test]
+    fn grid_points_differ_by_substrate() {
+        use crate::exec::Substrate;
+        let tp =
+            capacity_grid(&[1], 2, None, false, BatchPolicy::Batched, None);
+        let co = capacity_grid_for(
+            &ArchSpec::from(Substrate::CoreOnly),
+            &[1],
+            2,
+            None,
+            false,
+            BatchPolicy::Batched,
+            None,
+        );
+        assert_eq!(tp.len(), co.len());
+        for (a, b) in tp.iter().zip(&co) {
+            assert_ne!(
+                a.cache_key(),
+                b.cache_key(),
+                "substrate must be part of the scenario key"
+            );
+        }
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Fig 1 + Tables I/II/III harnesses.
 
+use crate::exec::substrate::gemm_reference;
+use crate::exec::Substrate;
 use crate::models::zoo;
 use crate::ppa::area::{POOL_MM2, TERAPOOL_POOL_MM2};
 use crate::ppa::normalize::{area_node, gops_frequency};
@@ -8,7 +10,6 @@ use crate::ppa::routing3d::{footprint, RoutingTech};
 use crate::report::{f2, pct, Table};
 use crate::sim::{ArchConfig, L1Alloc, RunResult, Sim};
 use crate::workload::gemm::{map_split, GemmRegions, GemmSpec};
-use crate::workload::phy::gemm_pe;
 
 /// Fig 1: the AI-Native PHY model survey.
 pub fn fig1_report() -> String {
@@ -73,7 +74,9 @@ pub struct Table2Data {
 }
 
 /// Run the Table II experiment: a large GEMM on TensorPool (simulated) and
-/// on the TeraPool PE-only baseline (instruction-timing model).
+/// on the TeraPool-style core-only baseline, whose steady-state point now
+/// comes from the one source of truth in `exec::substrate`
+/// ([`gemm_reference`]) instead of duplicated inline math.
 pub fn table2_measure() -> Table2Data {
     let cfg = ArchConfig::tensorpool();
     let spec = GemmSpec::square(512);
@@ -85,22 +88,13 @@ pub fn table2_measure() -> Table2Data {
     let em = EnergyModel::calibrate(&cfg);
     let power = em.pool_power(&cfg, &run);
 
-    // TeraPool: 1024 PEs on the SIMD GEMM microkernel.
-    let tera = ArchConfig::terapool();
-    let k = gemm_pe();
-    let t = k.timing();
-    let macs_per_pe_cycle = 16.0 * t.ipc / k.body.len() as f64 * 2000.0
-        / (t.instrs as f64 / t.cycles as f64) // = 16 / cycles_per_iter
-        / 2000.0;
-    // simpler: 16 MACs per iteration / cycles per iteration
-    let cycles_per_iter = t.cycles as f64 / 2000.0;
-    let macs_per_pe = 16.0 / cycles_per_iter;
-    let _ = macs_per_pe_cycle;
+    let (tera_macs, tera_power) = gemm_reference(Substrate::CoreOnly, &em)
+        .expect("core-only substrate has an analytic GEMM reference");
     Table2Data {
         tensorpool_run: run,
         tensorpool_power_w: power,
-        terapool_macs_per_cycle: macs_per_pe * tera.num_pes() as f64,
-        terapool_power_w: EnergyModel::calibrate(&cfg).pe_pool_power(tera.num_pes(), 0.6),
+        terapool_macs_per_cycle: tera_macs,
+        terapool_power_w: tera_power,
     }
 }
 

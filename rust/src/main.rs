@@ -6,7 +6,8 @@
 //! Argument parsing is hand-rolled (no clap in the dependency set).
 
 use tensorpool::figures::{
-    block_figs, energy_figs, gemm_figs, pe_figs, ppa_figs, tables,
+    block_figs, energy_figs, frontier_figs, gemm_figs, pe_figs, ppa_figs,
+    tables,
 };
 use tensorpool::report::Table;
 use tensorpool::runtime::{default_artifacts_dir, Runtime};
@@ -18,11 +19,15 @@ tensorpool — reproduction of the TensorPool AI-RAN processor (CS.AR 2026)
 USAGE: tensorpool <COMMAND> [ARGS]
 
 COMMANDS:
-  figures [fig1|fig5|fig7|fig8|fig10|fig12|fig13|fig15|energy|all]
+  figures [fig1|fig5|fig7|fig8|fig10|fig12|fig13|fig15|energy|frontier|all]
             regenerate the paper's figures (default: all). `energy` is the
             power-budgeted serving study: TE-vs-PE energy-efficiency ratio
             (Table II direction) + the power-capped capacity frontier
-            (max users/TTI under 5/10/20 W caps)
+            (max users/TTI under 5/10/20 W caps). `frontier` is the
+            cross-architecture frontier: every exec::Substrate
+            (tensorpool / core-only / npu) on one table — MACs/cycle,
+            GOPS/W, area-normalized GOPS/W/mm², and users served per TTI
+            under each power cap — plus the paper's 6x/9.1x ratio lines
   tables  [table1|table2|table3|all]
             regenerate the paper's tables (default: all)
   balance   Sec IV memory-balance analysis (Eqs 1-6)
@@ -37,14 +42,16 @@ COMMANDS:
             JSON summary (sim_cycles, sim_macs, cycles_fast_forwarded —
             the CI fast-forward smoke diffs it against a
             TENSORPOOL_NO_FASTFORWARD=1 run)
-  sweep   [--sizes N1,N2,..] [--out <path>] [--no-verify]
+  sweep   [--sizes N1,N2,..] [--archs A1,A2,..] [--out <path>] [--no-verify]
             run a Fig 7-style scenario sweep in parallel on the sweep
             engine and emit machine-readable JSON. By default also runs
             the serial reference, verifies byte-identical per-scenario
-            results, and reports the wall-clock speedup.
+            results, and reports the wall-clock speedup. --archs adds the
+            architecture axis: the whole grid is replicated per substrate
+            (tensorpool|core-only|npu; default tensorpool only)
   capacity [--users U1,U2,..] [--ttis N] [--budget-us B] [--no-mixed]
-           [--per-user] [--power-budget-w W] [--out <path>] [--no-verify]
-           [--smoke]
+           [--per-user] [--power-budget-w W] [--arch SUBSTRATE]
+           [--out <path>] [--no-verify] [--smoke]
             run the TTI serving loop over a users-per-TTI x pipeline-mix
             grid on the sweep engine (shared cross-run block-schedule
             cache) and emit a machine-readable capacity report: deadline
@@ -55,7 +62,9 @@ COMMANDS:
             pass per pipeline kind, the deadline-realistic view.
             --power-budget-w caps each TTI's admitted power demand at W
             Watts (power-capped admission; deferred-for-power counts show
-            up per point). --smoke runs a 2-point grid for CI.
+            up per point). --arch runs the grid on a different substrate
+            (tensorpool|core-only|npu; the report labels it). --smoke runs
+            a 2-point grid for CI.
   bench-diff --baseline <file> --current <file> [--threshold PCT]
             compare two perf-trajectory JSONs (BENCH_*.json) and exit
             nonzero if any deterministic metric (simulated cycle counts,
@@ -156,6 +165,9 @@ fn figures(rest: &[String]) -> i32 {
     if all || which == "energy" {
         println!("Energy — TE-vs-PE efficiency + power-capped frontier");
         println!("{}", energy_figs::energy_report());
+    }
+    if all || which == "frontier" {
+        println!("{}", frontier_figs::frontier_report());
     }
     0
 }
@@ -293,12 +305,55 @@ fn sweep(rest: &[String]) -> i32 {
             sizes
         }
     };
+    // The architecture axis: replicate the whole grid per requested
+    // substrate (default: TensorPool only).
+    let substrates: Vec<tensorpool::exec::Substrate> =
+        match flag(rest, "--archs") {
+            None => vec![tensorpool::exec::Substrate::TensorPool],
+            Some(s) => {
+                let mut out = Vec::new();
+                for t in s.split(',') {
+                    match tensorpool::exec::Substrate::parse(t.trim()) {
+                        Some(sub) if !out.contains(&sub) => out.push(sub),
+                        Some(_) => {}
+                        None => {
+                            eprintln!(
+                                "error: bad --archs value '{}' \
+                                 (tensorpool|core-only|npu)",
+                                t.trim()
+                            );
+                            return 2;
+                        }
+                    }
+                }
+                if out.is_empty() {
+                    eprintln!(
+                        "error: --archs requires a comma-separated list"
+                    );
+                    return 2;
+                }
+                out
+            }
+        };
     let verify = !has(rest, "--no-verify");
-    let scenarios = fig7_style_scenarios(&sizes);
+    let base = fig7_style_scenarios(&sizes);
+    let mut scenarios = Vec::with_capacity(base.len() * substrates.len());
+    for &sub in &substrates {
+        for s in &base {
+            let mut s = s.clone();
+            s.arch.substrate = sub;
+            if substrates.len() > 1 {
+                s.name = format!("{}_{}", s.name, sub.label());
+            }
+            scenarios.push(s);
+        }
+    }
     eprintln!(
-        "sweep: {} scenarios ({} sizes x 4 modes), {} threads, verify={}",
+        "sweep: {} scenarios ({} sizes x 4 modes x {} archs), {} threads, \
+         verify={}",
         scenarios.len(),
         sizes.len(),
+        substrates.len(),
         rayon::current_num_threads(),
         verify,
     );
@@ -333,7 +388,9 @@ fn sweep(rest: &[String]) -> i32 {
 /// Run the TTI serving loop over a users-per-TTI × pipeline-mix grid on
 /// the sweep engine and emit a machine-readable capacity report.
 fn capacity(rest: &[String]) -> i32 {
-    use tensorpool::figures::capacity_figs::{capacity_grid, capacity_table};
+    use tensorpool::figures::capacity_figs::{
+        capacity_grid_for, capacity_table,
+    };
     use tensorpool::sweep::capacity_sweep_with_report;
     let smoke = has(rest, "--smoke");
     let users: Vec<usize> = match flag(rest, "--users") {
@@ -403,13 +460,27 @@ fn capacity(rest: &[String]) -> i32 {
             }
         },
     };
+    // The substrate the grid executes on (the exec::Substrate axis).
+    let arch = match flag(rest, "--arch") {
+        None => tensorpool::exec::ArchSpec::default(),
+        Some(s) => match tensorpool::exec::Substrate::parse(&s) {
+            Some(sub) => tensorpool::exec::ArchSpec::with_substrate(sub),
+            None => {
+                eprintln!(
+                    "error: bad --arch value '{s}' (tensorpool|core-only|npu)"
+                );
+                return 2;
+            }
+        },
+    };
     let verify = !has(rest, "--no-verify");
     let policy = if has(rest, "--per-user") {
         tensorpool::coordinator::BatchPolicy::PerUser
     } else {
         tensorpool::coordinator::BatchPolicy::Batched
     };
-    let grid = capacity_grid(
+    let grid = capacity_grid_for(
+        &arch,
         &users,
         num_ttis,
         budget_cycles,
@@ -418,11 +489,12 @@ fn capacity(rest: &[String]) -> i32 {
         power_budget_mw,
     );
     eprintln!(
-        "capacity: {} scenarios ({} loads x {} mixes), {} TTIs each, \
+        "capacity: {} scenarios ({} loads x {} mixes) on {}, {} TTIs each, \
          {policy:?} AI scaling, power cap {}, {} threads, verify={}",
         grid.len(),
         users.len(),
         grid.len() / users.len(),
+        arch.substrate.label(),
         num_ttis,
         match power_budget_mw {
             None => "none".to_string(),

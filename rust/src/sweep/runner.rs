@@ -370,7 +370,7 @@ mod tests {
             for users in [1usize, 4] {
                 out.push(TtiScenario {
                     name: format!("{label}_u{users}"),
-                    arch: knobs.clone(),
+                    arch: knobs.clone().into(),
                     mix,
                     arrival: ArrivalPattern::Uniform,
                     users_per_tti: users,

@@ -8,17 +8,21 @@
 //! sweep engine's parallel execution byte-identical to serial execution and
 //! its result cache sound.
 //!
-//! The execution vocabulary ([`ArchKnobs`], [`BlockKind`],
+//! The execution vocabulary ([`ArchSpec`], [`BlockKind`],
 //! [`ScheduleMode`]) and the block drivers live one layer down in
 //! [`crate::exec`]; this module composes them into sweepable workloads.
+//! Scenarios carry the full architecture identity — substrate × knobs —
+//! so the sweep engine sweeps *architectures* like any other axis.
 
 use std::sync::Arc;
 
 use serde::{Deserialize, Serialize};
 
 use crate::coordinator::server::{BatchPolicy, Pipeline, Server, TtiRequest};
+use crate::exec::substrate::analytic_gemm;
 use crate::exec::{
-    ArchKnobs, BlockKind, BlockRun, BlockScheduleCache, GemmRun, ScheduleMode,
+    ArchKnobs, ArchSpec, BlockKind, BlockRun, BlockScheduleCache, GemmRun,
+    ScheduleMode, Substrate,
 };
 use crate::ppa::power::EnergyModel;
 use crate::workload::gemm::GemmSpec;
@@ -38,7 +42,9 @@ pub enum Workload {
 #[derive(Clone, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
 pub struct Scenario {
     pub name: String,
-    pub arch: ArchKnobs,
+    /// Full architecture identity (substrate × knobs). Bare [`ArchKnobs`]
+    /// convert (`.into()`) to the TensorPool substrate.
+    pub arch: ArchSpec,
     pub workload: Workload,
     pub mode: ScheduleMode,
 }
@@ -49,12 +55,12 @@ impl Scenario {
         name: impl Into<String>,
         spec: GemmSpec,
         mode: ScheduleMode,
-        arch: ArchKnobs,
+        arch: impl Into<ArchSpec>,
     ) -> Self {
         assert!(mode.is_gemm_mode(), "{mode:?} is not a GEMM schedule mode");
         Scenario {
             name: name.into(),
-            arch,
+            arch: arch.into(),
             workload: Workload::Gemm {
                 m: spec.m,
                 k: spec.k,
@@ -71,12 +77,12 @@ impl Scenario {
         kind: BlockKind,
         iters: usize,
         mode: ScheduleMode,
-        arch: ArchKnobs,
+        arch: impl Into<ArchSpec>,
     ) -> Self {
         assert!(!mode.is_gemm_mode(), "{mode:?} is not a block schedule mode");
         Scenario {
             name: name.into(),
-            arch,
+            arch: arch.into(),
             workload: Workload::Block { kind, iters },
             mode,
         }
@@ -148,6 +154,12 @@ pub fn run_scenario_cached(
     match &s.workload {
         Workload::Gemm { m, k, n, accumulate } => {
             let spec = GemmSpec { m: *m, k: *k, n: *n, accumulate: *accumulate };
+            // Analytic substrates (core-only / NPU) cost the GEMM without
+            // the simulator; `TensorPool` falls through to the unchanged
+            // simulated path below.
+            if let Some(a) = analytic_gemm(&s.arch, &spec, &em) {
+                return analytic_scenario_result(&s.name, &cfg, a);
+            }
             // Mapping + simulation live one layer down in the exec layer
             // (the GEMM twin of `BlockRun`).
             let r = GemmRun::new(spec, s.mode).execute(&cfg);
@@ -170,6 +182,11 @@ pub fn run_scenario_cached(
             }
         }
         Workload::Block { kind, iters } => {
+            if s.arch.substrate != Substrate::TensorPool {
+                let a = blocks
+                    .run_arch(&s.arch, BlockRun::new(*kind, *iters, s.mode));
+                return analytic_scenario_result(&s.name, &cfg, a);
+            }
             let res = blocks.run(&cfg, BlockRun::new(*kind, *iters, s.mode));
             ScenarioResult {
                 name: s.name.clone(),
@@ -188,6 +205,37 @@ pub fn run_scenario_cached(
                 avg_power_w: em.pool_power(&cfg, &res.raw),
             }
         }
+    }
+}
+
+/// Fold an analytic-substrate [`crate::exec::ArchRun`] into the common
+/// result shape. The simulator-only fields (NoC traffic, PE/DMA busy
+/// fractions) are zero — the analytic machines have no NoC model.
+fn analytic_scenario_result(
+    name: &str,
+    cfg: &crate::sim::ArchConfig,
+    a: crate::exec::ArchRun,
+) -> ScenarioResult {
+    let mpc = if a.cycles == 0 {
+        0.0
+    } else {
+        a.macs as f64 / a.cycles as f64
+    };
+    ScenarioResult {
+        name: name.to_string(),
+        cycles: a.cycles,
+        total_macs: a.macs,
+        fma_utilization: a.compute_utilization,
+        macs_per_cycle: mpc,
+        tflops: 2.0 * mpc * cfg.freq_ghz / 1000.0,
+        runtime_ms: a.cycles as f64 / (cfg.freq_ghz * 1e6),
+        te_utilization: a.compute_utilization,
+        pe_utilization: 0.0,
+        dma_utilization: 0.0,
+        reads_issued: 0,
+        writes_issued: 0,
+        energy_j: a.energy_j,
+        avg_power_w: a.avg_power_w,
     }
 }
 
@@ -317,7 +365,8 @@ impl ArrivalPattern {
 pub struct TtiScenario {
     /// Display label only (the result cache keys on the content).
     pub name: String,
-    pub arch: ArchKnobs,
+    /// Full architecture identity (substrate × knobs).
+    pub arch: ArchSpec,
     pub mix: UserMix,
     pub arrival: ArrivalPattern,
     /// Offered load: new users per TTI (average, see [`ArrivalPattern`]).
@@ -392,6 +441,9 @@ pub struct CapacityPoint {
 #[derive(Clone, Debug, PartialEq, Serialize, Deserialize)]
 pub struct CapacityReport {
     pub name: String,
+    /// Label of the substrate that served the run (`Substrate::label`).
+    #[serde(default)]
+    pub substrate: String,
     pub users_per_tti: usize,
     pub num_ttis: usize,
     pub submitted_total: u64,
@@ -440,8 +492,7 @@ pub fn run_capacity(
     s: &TtiScenario,
     blocks: &Arc<BlockScheduleCache>,
 ) -> CapacityReport {
-    let cfg = s.arch.apply();
-    let mut server = Server::with_cache(&cfg, Arc::clone(blocks));
+    let mut server = Server::for_spec(&s.arch, Arc::clone(blocks));
     if let Some(b) = s.budget_cycles {
         server.set_budget_cycles(b);
     }
@@ -500,6 +551,7 @@ pub fn run_capacity(
     let n = s.num_ttis.max(1) as f64;
     CapacityReport {
         name: s.name.clone(),
+        substrate: s.arch.substrate.label().to_string(),
         users_per_tti: s.users_per_tti,
         num_ttis: s.num_ttis,
         submitted_total: u64::from(next_user),
@@ -592,6 +644,30 @@ mod tests {
     }
 
     #[test]
+    fn substrate_is_part_of_scenario_key_and_dispatch() {
+        let mk = |arch: ArchSpec| {
+            Scenario::gemm(
+                "g",
+                GemmSpec::square(128),
+                ScheduleMode::SplitInterleaved,
+                arch,
+            )
+        };
+        let tp = mk(ArchSpec::default());
+        let core = mk(Substrate::CoreOnly.into());
+        assert_ne!(
+            tp.cache_key(),
+            core.cache_key(),
+            "same knobs, different substrate must never share a key"
+        );
+        let r = run_scenario(&core);
+        assert_eq!(r.total_macs, 128 * 128 * 128);
+        assert!(r.cycles > 0 && r.energy_j > 0.0 && r.avg_power_w > 0.0);
+        assert_eq!(r.reads_issued, 0, "analytic substrates have no NoC");
+        assert_eq!(run_scenario(&core), r, "analytic runs are pure");
+    }
+
+    #[test]
     fn fig7_style_list_has_four_modes_per_size() {
         let list = fig7_style_scenarios(&[128, 256, 384, 512]);
         assert_eq!(list.len(), 16);
@@ -619,7 +695,7 @@ mod tests {
     fn tti(mix: UserMix, users: usize, ttis: usize) -> TtiScenario {
         TtiScenario {
             name: "t".into(),
-            arch: ArchKnobs::default(),
+            arch: ArchSpec::default(),
             mix,
             arrival: ArrivalPattern::Uniform,
             users_per_tti: users,

@@ -17,7 +17,7 @@
 use std::sync::Arc;
 
 use tensorpool::coordinator::{BatchPolicy, Pipeline, Server, TtiRequest};
-use tensorpool::exec::{ArchKnobs, BlockScheduleCache};
+use tensorpool::exec::{ArchSpec, BlockScheduleCache};
 use tensorpool::figures::energy_figs;
 use tensorpool::ppa::power::{EnergyModel, FRAC_OTHERS, SUBGROUP_GEMM_W};
 use tensorpool::sim::ArchConfig;
@@ -193,7 +193,7 @@ fn ci_power_smoke_scenario_defers_for_power() {
     // latency-labeled.)
     let s = TtiScenario {
         name: "neural_receiver_u8_cap5w".into(),
-        arch: ArchKnobs::default(),
+        arch: ArchSpec::default(),
         mix: UserMix::pure(Pipeline::NeuralReceiver),
         arrival: ArrivalPattern::Uniform,
         users_per_tti: 8,

@@ -101,6 +101,49 @@ fn sweep_does_not_reach_into_figures() {
 }
 
 #[test]
+fn substrate_types_live_in_exec() {
+    // The architecture axis is exec vocabulary: `Substrate` and `ArchSpec`
+    // must be DEFINED under `src/exec` (not in the coordinator, sweep, or
+    // figures layers), and the `exec` layering test above already pins
+    // that the module has no upward `crate::` references.
+    let substrate = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("src/exec/substrate.rs");
+    assert!(
+        substrate.is_file(),
+        "missing {} — substrate types must live in exec",
+        substrate.display()
+    );
+    let text = fs::read_to_string(&substrate)
+        .unwrap_or_else(|e| panic!("read {}: {e}", substrate.display()));
+    assert!(
+        text.contains("pub enum Substrate"),
+        "exec/substrate.rs must define `pub enum Substrate`"
+    );
+    assert!(
+        text.contains("pub struct ArchSpec"),
+        "exec/substrate.rs must define `pub struct ArchSpec`"
+    );
+    // and no other layer may re-define them
+    for layer in ["coordinator", "sweep", "figures"] {
+        let root =
+            Path::new(env!("CARGO_MANIFEST_DIR")).join("src").join(layer);
+        let mut files = Vec::new();
+        rust_sources(&root, &mut files);
+        for file in files {
+            let text = fs::read_to_string(&file)
+                .unwrap_or_else(|e| panic!("read {}: {e}", file.display()));
+            for needle in ["enum Substrate", "struct ArchSpec"] {
+                assert!(
+                    !text.contains(needle),
+                    "{}: `{needle}` must only be defined in exec",
+                    file.display()
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn sweep_re_export_shims_stay_deleted() {
     // The historical `pub use crate::exec::{ArchKnobs, ...}` shims in
     // `sweep` were removed once all call sites migrated to `crate::exec`;

@@ -1,0 +1,132 @@
+//! Substrate-identity suite (the architecture-axis acceptance tests):
+//!
+//! 1. `Substrate::TensorPool` reproduces the legacy results byte-for-byte
+//!    across ALL cache tiers — uncached, block-level-cached, and
+//!    iteration-memoized — and `run_arch` prices energy bit-identically
+//!    to the legacy `EnergyModel` path.
+//! 2. No cache-key aliasing across substrates: the same knobs on a
+//!    different substrate get a different cache entry and different
+//!    numbers.
+//! 3. Direction pin: core-only MACs/cycle trails TensorPool by the
+//!    paper's Table II margin on the 512³ GEMM.
+
+use std::sync::Arc;
+
+use tensorpool::exec::substrate::gemm_reference;
+use tensorpool::exec::{
+    ArchSpec, BlockKind, BlockRun, BlockScheduleCache, ScheduleMode,
+    Substrate,
+};
+use tensorpool::figures::tables::table2_measure;
+use tensorpool::ppa::power::EnergyModel;
+use tensorpool::sim::ArchConfig;
+
+/// The block runs of both AI serving pipelines (dwsep + fc + mha), the
+/// work every capacity study executes.
+fn ai_runs() -> Vec<BlockRun> {
+    vec![
+        BlockRun::new(BlockKind::DwsepConv, 2, ScheduleMode::Concurrent),
+        BlockRun::new(BlockKind::FcSoftmax, 1, ScheduleMode::Concurrent),
+        BlockRun::new(BlockKind::Mha, 1, ScheduleMode::Concurrent),
+    ]
+}
+
+#[test]
+fn tensorpool_results_identical_across_all_cache_tiers() {
+    let cfg = ArchConfig::tensorpool();
+    for run in ai_runs() {
+        let uncached = run.execute(&cfg);
+        let block_cached =
+            BlockScheduleCache::block_level_only().run(&cfg, run);
+        let memoized = BlockScheduleCache::new().run(&cfg, run);
+        assert_eq!(
+            uncached, block_cached,
+            "{:?}: block-level cache must be semantically invisible",
+            run
+        );
+        assert_eq!(
+            uncached, memoized,
+            "{:?}: iteration memoization must be semantically invisible",
+            run
+        );
+    }
+}
+
+#[test]
+fn run_arch_tensorpool_prices_exactly_like_the_legacy_path() {
+    let spec = ArchSpec::default();
+    assert_eq!(spec.substrate, Substrate::TensorPool);
+    let cfg = spec.apply();
+    let em = EnergyModel::calibrate(&cfg);
+    let cache = Arc::new(BlockScheduleCache::new());
+    for run in ai_runs() {
+        let a = cache.run_arch(&spec, run);
+        let legacy = cache.run(&cfg, run);
+        assert_eq!(a.substrate, Substrate::TensorPool);
+        assert_eq!(a.cycles, legacy.cycles);
+        assert_eq!(a.macs, legacy.te_macs);
+        assert_eq!(
+            a.energy_j.to_bits(),
+            em.pool_energy_j(&cfg, &legacy.raw).to_bits(),
+            "{run:?}: run_arch must price energy bit-identically"
+        );
+        assert_eq!(
+            a.avg_power_w.to_bits(),
+            em.pool_power(&cfg, &legacy.raw).to_bits()
+        );
+        assert_eq!(a.compute_utilization, legacy.te_utilization);
+    }
+}
+
+#[test]
+fn substrates_never_alias_cache_entries() {
+    let cache = BlockScheduleCache::new();
+    let run =
+        BlockRun::new(BlockKind::FcSoftmax, 2, ScheduleMode::Concurrent);
+    let tp = cache.run_arch(&ArchSpec::default(), run);
+    let core =
+        cache.run_arch(&ArchSpec::with_substrate(Substrate::CoreOnly), run);
+    let npu = cache
+        .run_arch(&ArchSpec::with_substrate(Substrate::NpuWideMac), run);
+    // same knobs, three substrates: one simulated entry + one analytic
+    // entry per analytic substrate — never shared
+    assert_eq!(cache.len(), 1, "one simulated (TensorPool) schedule");
+    assert_eq!(
+        cache.analytic_len(),
+        2,
+        "one analytic entry per analytic substrate"
+    );
+    assert_ne!(
+        tp.cycles, core.cycles,
+        "substrates must not share results"
+    );
+    assert_ne!(core.cycles, npu.cycles);
+    assert!(tp.energy_j > 0.0 && core.energy_j > 0.0 && npu.energy_j > 0.0);
+    // repeated analytic runs are recalls: same bytes, no new entries
+    let core2 =
+        cache.run_arch(&ArchSpec::with_substrate(Substrate::CoreOnly), run);
+    assert_eq!(core, core2);
+    assert_eq!(cache.analytic_len(), 2);
+}
+
+#[test]
+fn core_only_trails_tensorpool_by_the_papers_margin() {
+    let d = table2_measure();
+    let em = EnergyModel::calibrate(&ArchConfig::tensorpool());
+    let (core_macs, core_power) =
+        gemm_reference(Substrate::CoreOnly, &em)
+            .expect("core-only has an analytic reference");
+    assert_eq!(
+        d.terapool_macs_per_cycle.to_bits(),
+        core_macs.to_bits(),
+        "Table II must read its core-only row from exec::substrate"
+    );
+    assert_eq!(d.terapool_power_w.to_bits(), core_power.to_bits());
+    let ratio = d.tensorpool_run.macs_per_cycle() / core_macs;
+    // paper: 3643/609 = 6.0x; same tolerance policy as the Table II tests
+    assert!(
+        (5.0..=8.0).contains(&ratio),
+        "TensorPool must lead core-only by ~6x MACs/cycle (paper 6.0x), \
+         got {ratio:.2}"
+    );
+}
