@@ -84,6 +84,7 @@ fn main() {
         true,
         BatchPolicy::Batched,
         None,
+        false,
     );
     println!("capacity grid: {} scenarios x {} TTIs", grid.len(), ttis);
 

@@ -82,18 +82,34 @@ pub struct TtiRequest {
 /// provisioned compute slices, not only for this cluster's time-averaged
 /// Joules. The head-of-line request is always admitted alone (no
 /// livelock), exactly like the cycle budget.
+///
+/// `what_if` switches admission to *counterfactual* pricing: instead of
+/// the analytic cycle anchors, each candidate is charged the measured
+/// marginal cost of actually admitting it — the block runs execution will
+/// perform, priced through the shared block cache (whole-block recall,
+/// iteration memo, or snapshot prefix-resume), so a warm cache answers
+/// every counterfactual with zero raw simulations. Under `Batched`
+/// scaling the marginal cost of a second same-kind AI user is therefore
+/// *zero* (it rides the already-admitted batch), which is exactly the
+/// sharing the analytic anchors cannot see. Rejection is a rollback: the
+/// candidate's priced delta is simply never committed. `what_if: false`
+/// is the kill switch back to whole-block analytic pricing.
 #[derive(Clone, Copy, Debug, PartialEq, Serialize, Deserialize)]
 pub struct BudgetPolicy {
     /// Cycle budget per TTI (1 ms at the configured clock by default).
     pub cycles: u64,
     /// Optional power cap in Watts; `None` = latency-only admission.
     pub power_w: Option<f64>,
+    /// Counterfactual admission (measured marginal pricing on rolled-back
+    /// state) instead of the analytic anchors. Defaults off.
+    #[serde(default)]
+    pub what_if: bool,
 }
 
 impl BudgetPolicy {
     /// The latency-only policy (the pre-power-cap behavior).
     pub fn latency_only(cycles: u64) -> Self {
-        BudgetPolicy { cycles, power_w: None }
+        BudgetPolicy { cycles, power_w: None, what_if: false }
     }
 }
 
@@ -173,6 +189,9 @@ pub struct Server {
     /// TTIs — and any sweeps sharing this cache via `Arc` — recall them
     /// instead of re-simulating. Results are identical either way.
     blocks: Arc<BlockScheduleCache>,
+    /// Candidates priced counterfactually across this server's lifetime
+    /// (admission + power-deferral replay). Only grows in what-if mode.
+    counterfactual_evals: u64,
 }
 
 impl Server {
@@ -197,6 +216,7 @@ impl Server {
             policy: BatchPolicy::default(),
             energy: EnergyModel::calibrate(cfg),
             blocks,
+            counterfactual_evals: 0,
         }
     }
 
@@ -247,6 +267,22 @@ impl Server {
 
     pub fn budget(&self) -> BudgetPolicy {
         self.budget
+    }
+
+    /// Switch admission to counterfactual (what-if) pricing — see
+    /// [`BudgetPolicy::what_if`].
+    pub fn set_what_if(&mut self, on: bool) {
+        self.budget.what_if = on;
+    }
+
+    pub fn what_if(&self) -> bool {
+        self.budget.what_if
+    }
+
+    /// How many candidates this server has priced counterfactually (zero
+    /// unless what-if admission ran).
+    pub fn counterfactual_evals(&self) -> u64 {
+        self.counterfactual_evals
     }
 
     /// How AI blocks scale across users (default: [`BatchPolicy::Batched`]).
@@ -396,6 +432,52 @@ impl Server {
         }
     }
 
+    /// The measured *marginal* price of admitting `req` on top of an
+    /// admitted set that already batches `admitted_kinds`: (cycles, power
+    /// demand in Watts). This is the what-if counterfactual — the exact
+    /// block runs execution would add for this candidate, priced through
+    /// the block cache (so a warm cache answers with zero raw
+    /// simulations, via whole-block recall or snapshot prefix-resume).
+    /// Under `Batched`, a same-kind AI user after the first adds nothing;
+    /// under `PerUser`, every user pays its own res-scaled passes. Demand
+    /// is 0 when no power cap is set (same contract as
+    /// [`Server::estimate_request`]), and the (cycles, energy) fold order
+    /// matches [`Server::estimate_power_w`] bit-for-bit.
+    fn counterfactual_price(
+        &self,
+        req: &TtiRequest,
+        admitted_kinds: &[Pipeline],
+    ) -> (u64, f64) {
+        let want_power = self.budget.power_w.is_some();
+        let runs = match req.pipeline {
+            Pipeline::Classical => {
+                let (cycles, e) = self.classical_cost(req.res);
+                let d =
+                    if want_power { self.demand_w(e, cycles) } else { 0.0 };
+                return (cycles, d);
+            }
+            kind => match self.policy {
+                BatchPolicy::Batched => {
+                    if admitted_kinds.contains(&kind) {
+                        // rides the already-admitted batch: marginal zero
+                        return (0, 0.0);
+                    }
+                    self.block_runs(kind, REFERENCE_RES)
+                }
+                BatchPolicy::PerUser => self.block_runs(kind, req.res),
+            },
+        };
+        let mut e = 0.0f64;
+        let mut cycles = 0u64;
+        for run in runs {
+            let (c, block_e, _, _) = self.run_block(run);
+            e += block_e;
+            cycles += c;
+        }
+        let d = if want_power { self.demand_w(e, cycles) } else { 0.0 };
+        (cycles, d)
+    }
+
     /// Estimated cycle cost of a request (used for admission; the actual
     /// schedule is measured on the simulator afterwards).
     pub fn estimate_cycles(&self, req: &TtiRequest) -> u64 {
@@ -433,11 +515,19 @@ impl Server {
         let mut planned_w: f64 = 0.0;
         let mut power_cut = false;
         let mut admitted = Vec::new();
+        // what-if bookkeeping: which AI kinds the admitted set already
+        // batches (marginal cost of the next same-kind user is zero)
+        let mut admitted_kinds: Vec<Pipeline> = Vec::new();
         // admission: FIFO with budget checks (no starvation: the head is
         // always admitted if it alone fills an empty TTI, under either
         // budget)
         while let Some(req) = self.queue.pop_front() {
-            let (est, demand) = self.estimate_request(&req);
+            let (est, demand) = if self.budget.what_if {
+                self.counterfactual_evals += 1;
+                self.counterfactual_price(&req, &admitted_kinds)
+            } else {
+                self.estimate_request(&req)
+            };
             let cycles_ok = planned + est <= self.budget.cycles;
             let power_ok = match self.budget.power_w {
                 None => true,
@@ -446,9 +536,16 @@ impl Server {
             if (cycles_ok && power_ok) || served.is_empty() {
                 planned += est;
                 planned_w += demand;
+                if req.pipeline != Pipeline::Classical
+                    && !admitted_kinds.contains(&req.pipeline)
+                {
+                    admitted_kinds.push(req.pipeline);
+                }
                 served.push(req.user_id);
                 admitted.push(req);
             } else {
+                // rejection is a pure rollback: the candidate's priced
+                // delta was never committed to planned/planned_w
                 // return it to the head; the drain below records it (and
                 // everything behind it) as deferred exactly once
                 if cycles_ok && !power_ok {
@@ -470,20 +567,14 @@ impl Server {
         match self.policy {
             BatchPolicy::Batched => {
                 // Batch each AI pipeline kind into ONE pass, in first-seen
-                // order. (`Vec::dedup` only removes *consecutive*
-                // duplicates, so an interleaved queue like [NR, CHE, NR]
-                // used to run the NeuralReceiver blocks twice and blow the
-                // TTI budget.)
-                let mut ai_kinds: Vec<Pipeline> = Vec::new();
-                for r in &admitted {
-                    if r.pipeline != Pipeline::Classical
-                        && !ai_kinds.contains(&r.pipeline)
-                    {
-                        ai_kinds.push(r.pipeline);
-                    }
-                }
-                for kind in ai_kinds {
-                    runs.extend(self.block_runs(kind, REFERENCE_RES));
+                // order — `admitted_kinds`, the same set the what-if
+                // pricing charged (first-of-kind pays, the rest ride).
+                // (Kept as a contains-scan, not `Vec::dedup`: dedup only
+                // removes *consecutive* duplicates, so an interleaved
+                // queue like [NR, CHE, NR] used to run the NeuralReceiver
+                // blocks twice and blow the TTI budget.)
+                for kind in &admitted_kinds {
+                    runs.extend(self.block_runs(*kind, REFERENCE_RES));
                 }
             }
             BatchPolicy::PerUser => {
@@ -531,14 +622,29 @@ impl Server {
         let mut deferred_for_power = 0usize;
         if power_cut {
             let mut hypothetical = planned;
+            // what-if replay continues from the admitted set's batching
+            // state: a deferred same-kind user would have ridden the batch
+            let mut kinds = admitted_kinds.clone();
+            let mut replay_evals = 0u64;
             for r in &self.queue {
-                let est = self.estimate_cycles(r);
+                let est = if self.budget.what_if {
+                    replay_evals += 1;
+                    self.counterfactual_price(r, &kinds).0
+                } else {
+                    self.estimate_cycles(r)
+                };
                 if hypothetical + est > self.budget.cycles {
                     break;
                 }
                 hypothetical += est;
+                if r.pipeline != Pipeline::Classical
+                    && !kinds.contains(&r.pipeline)
+                {
+                    kinds.push(r.pipeline);
+                }
                 deferred_for_power += 1;
             }
+            self.counterfactual_evals += replay_evals;
         }
         TtiReport {
             served,
@@ -833,6 +939,48 @@ mod tests {
         let rep = s.schedule_tti();
         assert_eq!(rep.served.len(), 3);
         assert_eq!(rep.deferred_for_power, 0);
+    }
+
+    #[test]
+    fn what_if_batched_prices_marginal_users_free() {
+        // 30 reference NR users: the analytic anchors charge every user a
+        // full pass, so default admission cuts the queue; counterfactual
+        // pricing sees that users 2..30 ride the first user's batch
+        // (marginal cost zero) and admits everyone — and because it
+        // priced the exact runs execution performs, the TTI meets the
+        // deadline it planned and no extra block simulations happen.
+        let submit = |s: &mut Server| {
+            for u in 0..30 {
+                s.submit(TtiRequest {
+                    user_id: u,
+                    pipeline: Pipeline::NeuralReceiver,
+                    res: 8192,
+                });
+            }
+        };
+        let mut plain = server();
+        submit(&mut plain);
+        let d = plain.schedule_tti();
+        assert!(d.served.len() < 30, "analytic anchors cut the queue");
+        assert_eq!(plain.counterfactual_evals(), 0, "what-if never ran");
+
+        let mut what_if = server();
+        what_if.set_what_if(true);
+        assert!(what_if.what_if());
+        submit(&mut what_if);
+        let w = what_if.schedule_tti();
+        assert_eq!(w.served.len(), 30, "marginal batched users are free");
+        assert!(
+            w.served.len() > d.served.len(),
+            "counterfactual pricing must admit strictly more than anchors"
+        );
+        assert!(w.deadline_met, "planned == executed for a batched what-if");
+        assert_eq!(what_if.counterfactual_evals(), 30);
+        assert_eq!(
+            what_if.block_cache().sims_run(),
+            2,
+            "admission priced the same dwsep+fc runs execution reused"
+        );
     }
 
     // ---- per-user batch policy --------------------------------------------

@@ -1,4 +1,4 @@
-//! The two memoization tiers of block execution.
+//! The three memoization tiers of block execution.
 //!
 //! **Tier 1 — whole-block recall** (PR 2's cross-run cache, now living in
 //! `exec`): block runs are pure functions of (arch knobs × block × iters ×
@@ -34,7 +34,18 @@
 //!   grew its wheel aborts composition and falls back to the monolithic
 //!   run (`memo_fallbacks` counts these — zero for every paper workload).
 //!
-//! Determinism contract: a hit at either tier returns exactly the result a
+//! **Tier 3 — prefix-resume over `Sim` snapshots** (the snapshot/rollback
+//! PR): exactly where tier 2 must stand down — no-burst ablations, whose
+//! iteration boundaries are not history-free — the monolithic driver
+//! snapshots the whole simulator at every iteration boundary
+//! ([`crate::exec::ResumableBlockSim`]). A later block sharing a prefix of
+//! iteration content restores the saved state and drives only the suffix.
+//! Because state is captured rather than composed, nothing needs to be
+//! additive: port bookings, in-flight traffic, and even a grown event
+//! wheel ride along in the snapshot, so this tier needs no wheel-growth
+//! fallback.
+//!
+//! Determinism contract: a hit at any tier returns exactly the result a
 //! fresh monolithic simulation would produce, so cached, memoized, and
 //! uncached paths are interchangeable — `tests/serving_loop.rs` and the
 //! unit tests below pin this. Configurations NOT expressible as
@@ -51,6 +62,7 @@ use crate::workload::blocks::BlockIter;
 
 use super::block::{iteration_signature, run_built, BlockKind, BlockRun};
 use super::knobs::ArchKnobs;
+use super::resume::{ResumableBlockSim, ResumePoint};
 use super::schedule::{
     active_te_slots, drive_iteration, ScheduleMode, ScheduleResult,
 };
@@ -82,6 +94,17 @@ struct IterKey {
     mode: ScheduleMode,
     /// Full iteration content (see `block::iteration_signature`).
     sig: String,
+}
+
+/// Content key of one saved block-run prefix (tier 3): the ordered
+/// signatures of every iteration driven so far. Two blocks sharing a
+/// prefix of iteration content share the saved state at that boundary.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct PrefixKey {
+    arch: ArchSpec,
+    wheel_slots: usize,
+    mode: ScheduleMode,
+    sigs: Vec<String>,
 }
 
 /// Result of simulating ONE block iteration on a fresh `Sim`: the raw
@@ -213,6 +236,13 @@ fn compose(
 pub struct BlockScheduleCache {
     blocks: Mutex<HashMap<BlockKey, ScheduleResult>>,
     iter_memo: Mutex<HashMap<IterKey, IterOutcome>>,
+    /// Tier 3 — prefix-resume over `Sim` snapshots: saved
+    /// [`ResumePoint`]s at every iteration boundary of blocks the
+    /// monolithic no-burst path drove. Where tier 2's additive
+    /// composition is unsound (no-burst boundaries are not history-free),
+    /// restoring captured state is still exact, so a block extends the
+    /// longest saved prefix instead of re-simulating from cycle 0.
+    prefix: Mutex<HashMap<PrefixKey, ResumePoint>>,
     /// Analytic-substrate block runs (`CoreOnly` / `NpuWideMac`), keyed by
     /// the same content key as tier 1 — the substrate inside
     /// [`ArchSpec`] keeps entries from ever aliasing across machines.
@@ -235,6 +265,9 @@ pub struct BlockScheduleCache {
     /// Memoized compositions aborted because a segment grew its event
     /// wheel (falls back to the monolithic run; zero for paper workloads).
     memo_fallbacks: AtomicU64,
+    /// Block runs that started from a restored prefix snapshot (tier 3)
+    /// instead of cycle 0.
+    prefix_resumes: AtomicU64,
 }
 
 impl Default for BlockScheduleCache {
@@ -242,6 +275,7 @@ impl Default for BlockScheduleCache {
         BlockScheduleCache {
             blocks: Mutex::new(HashMap::new()),
             iter_memo: Mutex::new(HashMap::new()),
+            prefix: Mutex::new(HashMap::new()),
             analytic: Mutex::new(HashMap::new()),
             iter_memo_enabled: true,
             hits: AtomicU64::new(0),
@@ -251,6 +285,7 @@ impl Default for BlockScheduleCache {
             iter_misses: AtomicU64::new(0),
             iters_simulated: AtomicU64::new(0),
             memo_fallbacks: AtomicU64::new(0),
+            prefix_resumes: AtomicU64::new(0),
         }
     }
 }
@@ -305,6 +340,17 @@ impl BlockScheduleCache {
     /// segment grew its event wheel.
     pub fn memo_fallbacks(&self) -> u64 {
         self.memo_fallbacks.load(Ordering::Relaxed)
+    }
+
+    /// Block runs resumed from a saved prefix snapshot (tier 3) instead of
+    /// starting at cycle 0.
+    pub fn prefix_resumes(&self) -> u64 {
+        self.prefix_resumes.load(Ordering::Relaxed)
+    }
+
+    /// Saved prefix boundaries currently held (tier 3).
+    pub fn prefix_len(&self) -> usize {
+        self.prefix.lock().expect("prefix cache poisoned").len()
     }
 
     /// Distinct block-schedule configurations currently cached (tier 1).
@@ -362,16 +408,22 @@ impl BlockScheduleCache {
         // Simulate OUTSIDE the lock (same benign-race policy as the
         // scenario cache: concurrent misses on one key compute the same
         // pure result; last insert wins).
-        let r = if self.iter_memo_enabled && cfg.burst {
-            self.run_memoized(cfg, &knobs, &run)
-        } else {
-            // No-burst configs keep a request port booked up to 4 cycles
-            // past its final delivery, so iteration boundaries are not
-            // history-free — monolithic only.
+        let r = if !self.iter_memo_enabled {
+            // Tier 1 only (the PR 2 baseline the regression tests pin
+            // against): monolithic, no sub-block reuse of any kind.
             let block = run.build(cfg);
             self.iters_simulated
                 .fetch_add(block.iters.len() as u64, Ordering::Relaxed);
             run_built(cfg, &block, run.mode)
+        } else if cfg.burst {
+            self.run_memoized(cfg, &knobs, &run)
+        } else {
+            // No-burst configs keep a request port booked up to 4 cycles
+            // past its final delivery, so iteration boundaries are not
+            // history-free and the additive memo cannot engage. Snapshots
+            // can: tier 3 restores the longest saved prefix's state and
+            // drives only the suffix.
+            self.run_resumable(cfg, &knobs, &run)
         };
         self.misses.fetch_add(1, Ordering::Relaxed);
         self.blocks
@@ -441,6 +493,59 @@ impl BlockScheduleCache {
             return run_built(cfg, &block, run.mode);
         }
         compose(cfg, run.mode, te_engines, &outcomes)
+    }
+
+    /// Tier 3: one monolithic simulation, resumed from the longest saved
+    /// prefix of iteration content and snapshotted at every boundary it
+    /// drives. Byte-identical to `run_built` by the snapshot contract —
+    /// state is CAPTURED rather than composed, so nothing needs to be
+    /// additive across segments and wheel growth needs no fallback (a
+    /// grown wheel is simply part of the captured state).
+    fn run_resumable(
+        &self,
+        cfg: &ArchConfig,
+        knobs: &ArchKnobs,
+        run: &BlockRun,
+    ) -> ScheduleResult {
+        let block = run.build(cfg);
+        let sigs: Vec<String> = block
+            .iters
+            .iter()
+            .map(|it| iteration_signature(cfg, it))
+            .collect();
+        let key_for = |n: usize| PrefixKey {
+            arch: ArchSpec::from(knobs.clone()),
+            wheel_slots: cfg.event_wheel_slots,
+            mode: run.mode,
+            sigs: sigs[..n].to_vec(),
+        };
+        let mut driver = ResumableBlockSim::new(cfg);
+        let mut start = 0usize;
+        {
+            let prefixes = self.prefix.lock().expect("prefix cache poisoned");
+            for n in (1..=sigs.len()).rev() {
+                if let Some(p) = prefixes.get(&key_for(n)) {
+                    driver.restore(p);
+                    start = n;
+                    break;
+                }
+            }
+        }
+        if start > 0 {
+            self.prefix_resumes.fetch_add(1, Ordering::Relaxed);
+        }
+        for (i, it) in block.iters.iter().enumerate().skip(start) {
+            // Drive OUTSIDE the lock (benign race: two threads extending
+            // the same prefix save identical pure states; last insert
+            // wins).
+            driver.drive(it, run.mode);
+            self.iters_simulated.fetch_add(1, Ordering::Relaxed);
+            self.prefix
+                .lock()
+                .expect("prefix cache poisoned")
+                .insert(key_for(i + 1), driver.save());
+        }
+        driver.finalize(run.mode)
     }
 
     /// Substrate-generic block execution: run `run` on `spec`'s machine
@@ -701,6 +806,43 @@ mod tests {
         assert_eq!(cache.stats(), (1, 1));
         assert_eq!(a, b);
         assert_eq!(a, run.execute(&cfg));
+    }
+
+    #[test]
+    fn no_burst_blocks_resume_from_snapshot_prefixes() {
+        // Tier 3: where the iteration memo cannot engage, snapshots dedup
+        // anyway. fc(2) = [A, B] drives 2 iterations and saves boundaries
+        // [A] and [A, B]; fc(1) = [A] then costs ZERO new iterations
+        // (restore [A], finalize), and fc(3) = [A, B, A] costs ONE
+        // (restore [A, B], drive the suffix).
+        let cfg = ArchConfig::tensorpool().without_burst();
+        let cache = BlockScheduleCache::new();
+        let fc = |iters| {
+            BlockRun::new(BlockKind::FcSoftmax, iters, ScheduleMode::Concurrent)
+        };
+        cache.run(&cfg, fc(2));
+        assert_eq!(cache.iterations_simulated(), 2);
+        assert_eq!(cache.prefix_len(), 2);
+        assert_eq!(cache.prefix_resumes(), 0);
+        assert_eq!(cache.iter_memo_len(), 0, "tier 2 must stay out");
+        let a = cache.run(&cfg, fc(1));
+        assert_eq!(
+            cache.iterations_simulated(),
+            2,
+            "fc(1) must finalize a restored prefix, not re-simulate"
+        );
+        assert_eq!(cache.prefix_resumes(), 1);
+        let b = cache.run(&cfg, fc(3));
+        assert_eq!(
+            cache.iterations_simulated(),
+            3,
+            "fc(3) must drive only its third iteration"
+        );
+        assert_eq!(cache.prefix_resumes(), 2);
+        // Byte-identity against the monolithic runs — the whole point.
+        assert_eq!(a, fc(1).execute(&cfg));
+        assert_eq!(b, fc(3).execute(&cfg));
+        assert_eq!(cache.sims_run(), 3, "three distinct block keys");
     }
 
     #[test]

@@ -6,9 +6,11 @@
 //! the sequential/concurrent schedule drivers ([`run_sequential`],
 //! [`run_concurrent`]), the unified [`BlockRun`] request (block × iters ×
 //! mode × config → [`ScheduleResult`]), its GEMM twin [`GemmRun`]
-//! (shape × parallelization mode → raw `RunResult`), and the two
+//! (shape × parallelization mode → raw `RunResult`), the three
 //! memoization tiers of [`BlockScheduleCache`] (whole-block recall +
-//! iteration-level dedup).
+//! iteration-level dedup + snapshot prefix-resume), and the
+//! snapshot-aware incremental driver ([`ResumableBlockSim`]) the third
+//! tier is built on.
 //!
 //! **Layering contract** (enforced by `tests/layering.rs`): the crate's
 //! dependency graph is strictly one-way,
@@ -32,6 +34,7 @@ pub mod block;
 pub mod cache;
 pub mod gemm;
 pub mod knobs;
+pub mod resume;
 pub mod schedule;
 pub mod substrate;
 
@@ -39,6 +42,7 @@ pub use block::{simulate_block, BlockKind, BlockRun};
 pub use cache::BlockScheduleCache;
 pub use gemm::GemmRun;
 pub use knobs::ArchKnobs;
+pub use resume::{ResumableBlockSim, ResumePoint};
 pub use schedule::{
     compare, run_concurrent, run_sequential, ScheduleMode, ScheduleResult,
 };

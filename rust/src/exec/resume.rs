@@ -1,0 +1,165 @@
+//! Snapshot-aware incremental block execution.
+//!
+//! [`ResumableBlockSim`] wraps one monolithic `Sim` being driven iteration
+//! by iteration — the exact loop `run_sequential`/`run_concurrent` execute
+//! — and exposes [`ResumableBlockSim::save`]/[`ResumableBlockSim::restore`]
+//! at iteration boundaries. A [`ResumePoint`] is a full [`SimSnapshot`]
+//! plus the busy-span accumulators the schedule drivers carry alongside
+//! the sim, so restoring one and driving the remaining iterations produces
+//! a result byte-identical to a fresh monolithic run over the whole list
+//! (the snapshot contract, pinned differentially by `tests/snapshot.rs`).
+//!
+//! This is what the cache's prefix-resume tier
+//! ([`crate::exec::BlockScheduleCache`]) is built on: where the additive
+//! iteration memo cannot engage (no-burst ablations leave a request port
+//! booked across the boundary, so iterations are not history-free),
+//! snapshots still can — state is captured, not composed, so nothing
+//! needs to be additive, and wheel growth needs no fallback.
+
+use crate::sim::{ArchConfig, Sim, SimSnapshot};
+use crate::workload::blocks::BlockIter;
+
+use super::schedule::{
+    active_te_slots, drive_iteration, finalize, ScheduleMode, ScheduleResult,
+};
+
+/// A saved execution point of a block run: the full simulator state plus
+/// the driver's accumulated busy spans. Restorable any number of times.
+#[derive(Clone)]
+pub struct ResumePoint {
+    sim: SimSnapshot,
+    te_engines: usize,
+    pe_busy: u64,
+    dma_busy: u64,
+    iters_driven: usize,
+}
+
+impl ResumePoint {
+    /// Iterations the saved run had driven when captured.
+    pub fn iters_driven(&self) -> usize {
+        self.iters_driven
+    }
+}
+
+/// One monolithic block simulation, driven iteration by iteration, with
+/// snapshot/rollback at every iteration boundary. Mirrors the private
+/// `run_schedule` loop in `exec::schedule` exactly: same
+/// `drive_iteration`, same accumulators, same `finalize` — so a driver
+/// that never saves or restores is byte-for-byte `BlockRun::execute`.
+pub struct ResumableBlockSim {
+    sim: Sim,
+    te_engines: usize,
+    pe_busy: u64,
+    dma_busy: u64,
+    iters_driven: usize,
+}
+
+impl ResumableBlockSim {
+    pub fn new(cfg: &ArchConfig) -> Self {
+        ResumableBlockSim {
+            sim: Sim::new(cfg),
+            te_engines: 0,
+            pe_busy: 0,
+            dma_busy: 0,
+            iters_driven: 0,
+        }
+    }
+
+    /// Drive ONE iteration on the shared sim (the monolithic semantics —
+    /// state carries across iterations).
+    pub fn drive(&mut self, it: &BlockIter, mode: ScheduleMode) {
+        self.te_engines = self.te_engines.max(active_te_slots(it));
+        let (pe, dma) = drive_iteration(&mut self.sim, it, mode);
+        self.pe_busy += pe;
+        self.dma_busy += dma;
+        self.iters_driven += 1;
+    }
+
+    /// Capture the current iteration boundary.
+    pub fn save(&self) -> ResumePoint {
+        ResumePoint {
+            sim: self.sim.snapshot(),
+            te_engines: self.te_engines,
+            pe_busy: self.pe_busy,
+            dma_busy: self.dma_busy,
+            iters_driven: self.iters_driven,
+        }
+    }
+
+    /// Roll this driver to a captured boundary. The driver must have been
+    /// built from the same [`ArchConfig`] as the point's source.
+    pub fn restore(&mut self, p: &ResumePoint) {
+        self.sim.restore(&p.sim);
+        self.te_engines = p.te_engines;
+        self.pe_busy = p.pe_busy;
+        self.dma_busy = p.dma_busy;
+        self.iters_driven = p.iters_driven;
+    }
+
+    /// Iterations driven since construction (or since the last restore's
+    /// capture point).
+    pub fn iters_driven(&self) -> usize {
+        self.iters_driven
+    }
+
+    /// Fold the run into a [`ScheduleResult`], exactly as the monolithic
+    /// drivers do.
+    pub fn finalize(&self, mode: ScheduleMode) -> ScheduleResult {
+        let name = match mode {
+            ScheduleMode::Sequential => "sequential",
+            ScheduleMode::Concurrent => "concurrent",
+            other => panic!("{other:?} is not a block schedule mode"),
+        };
+        finalize(name, &self.sim, self.te_engines, self.pe_busy, self.dma_busy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::block::BlockRun;
+    use super::super::BlockKind;
+    use super::*;
+
+    #[test]
+    fn uninterrupted_driver_is_byte_identical_to_execute() {
+        let cfg = ArchConfig::tensorpool();
+        for mode in [ScheduleMode::Sequential, ScheduleMode::Concurrent] {
+            let run = BlockRun::new(BlockKind::FcSoftmax, 2, mode);
+            let block = run.build(&cfg);
+            let mut driver = ResumableBlockSim::new(&cfg);
+            for it in &block.iters {
+                driver.drive(it, mode);
+            }
+            assert_eq!(driver.iters_driven(), 2);
+            assert_eq!(driver.finalize(mode), run.execute(&cfg));
+        }
+    }
+
+    #[test]
+    fn rollback_and_extend_matches_the_monolithic_run() {
+        // Drive [A], save, drive [B], roll back, drive [B] again: both the
+        // rolled-back finalize and the re-driven one must equal fresh
+        // monolithic runs of fc(1) and fc(2) respectively.
+        let cfg = ArchConfig::tensorpool();
+        let mode = ScheduleMode::Concurrent;
+        let run1 = BlockRun::new(BlockKind::FcSoftmax, 1, mode);
+        let run2 = BlockRun::new(BlockKind::FcSoftmax, 2, mode);
+        let block = run2.build(&cfg);
+        let mut driver = ResumableBlockSim::new(&cfg);
+        driver.drive(&block.iters[0], mode);
+        let boundary = driver.save();
+        assert_eq!(boundary.iters_driven(), 1);
+        driver.drive(&block.iters[1], mode);
+        let full = driver.finalize(mode);
+        assert_eq!(full, run2.execute(&cfg));
+        driver.restore(&boundary);
+        assert_eq!(driver.iters_driven(), 1);
+        assert_eq!(driver.finalize(mode), run1.execute(&cfg));
+        driver.drive(&block.iters[1], mode);
+        assert_eq!(
+            driver.finalize(mode),
+            full,
+            "resumed suffix diverged from the uninterrupted run"
+        );
+    }
+}

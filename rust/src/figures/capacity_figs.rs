@@ -50,6 +50,8 @@ pub const MIXED_MIX: (&str, UserMix) = (
 /// `power_budget_mw`: per-TTI power cap (`None` = latency-only admission;
 /// the `--power-budget-w` CLI flag, in milliwatts so scenarios stay
 /// hashable).
+/// `what_if`: counterfactual admission — candidates priced by measured
+/// marginal cost through the block cache (the `--what-if` CLI flag).
 pub fn capacity_grid(
     users: &[usize],
     num_ttis: usize,
@@ -57,6 +59,7 @@ pub fn capacity_grid(
     include_mixed: bool,
     policy: BatchPolicy,
     power_budget_mw: Option<u32>,
+    what_if: bool,
 ) -> Vec<TtiScenario> {
     capacity_grid_for(
         &ArchSpec::default(),
@@ -66,6 +69,7 @@ pub fn capacity_grid(
         include_mixed,
         policy,
         power_budget_mw,
+        what_if,
     )
 }
 
@@ -81,6 +85,7 @@ pub fn capacity_grid_for(
     include_mixed: bool,
     policy: BatchPolicy,
     power_budget_mw: Option<u32>,
+    what_if: bool,
 ) -> Vec<TtiScenario> {
     let mut mixes: Vec<(&str, UserMix)> = PIPELINE_MIXES.to_vec();
     if include_mixed {
@@ -100,6 +105,7 @@ pub fn capacity_grid_for(
                 budget_cycles,
                 policy,
                 power_budget_mw,
+                what_if,
                 seed: 0xC0FFEE,
             });
         }
@@ -120,6 +126,7 @@ pub fn capacity_rows(
         true,
         BatchPolicy::Batched,
         None,
+        false,
     ))
 }
 
@@ -171,6 +178,7 @@ mod tests {
             true,
             BatchPolicy::Batched,
             None,
+            false,
         );
         assert_eq!(g.len(), 12); // (3 pipelines + mixed) x 3 loads
         let keys: std::collections::HashSet<String> =
@@ -183,18 +191,27 @@ mod tests {
             false,
             BatchPolicy::PerUser,
             Some(10_000),
+            true,
         );
         assert_eq!(g2.len(), 6);
         assert!(g2.iter().all(|s| s.budget_cycles == Some(225_000)));
         assert!(g2.iter().all(|s| s.policy == BatchPolicy::PerUser));
         assert!(g2.iter().all(|s| s.power_budget_mw == Some(10_000)));
+        assert!(g2.iter().all(|s| s.what_if), "what-if flag threads through");
     }
 
     #[test]
     fn grid_points_differ_by_substrate() {
         use crate::exec::Substrate;
-        let tp =
-            capacity_grid(&[1], 2, None, false, BatchPolicy::Batched, None);
+        let tp = capacity_grid(
+            &[1],
+            2,
+            None,
+            false,
+            BatchPolicy::Batched,
+            None,
+            false,
+        );
         let co = capacity_grid_for(
             &ArchSpec::from(Substrate::CoreOnly),
             &[1],
@@ -203,6 +220,7 @@ mod tests {
             false,
             BatchPolicy::Batched,
             None,
+            false,
         );
         assert_eq!(tp.len(), co.len());
         for (a, b) in tp.iter().zip(&co) {

@@ -80,6 +80,7 @@ pub fn frontier_grid(
             true,
             BatchPolicy::Batched,
             cap,
+            false,
         ) {
             s.name = format!("{}_{cap_label}", s.name);
             out.push(s);

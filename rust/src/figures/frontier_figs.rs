@@ -78,6 +78,7 @@ fn nr_cap_grid(substrate: Substrate) -> Vec<TtiScenario> {
             budget_cycles: Some(FRONTIER_SLOT_CYCLES),
             policy: BatchPolicy::Batched,
             power_budget_mw: Some(mw),
+            what_if: false,
             seed: 0xC0FFEE,
         })
         .collect()

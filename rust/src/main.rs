@@ -50,7 +50,7 @@ COMMANDS:
             architecture axis: the whole grid is replicated per substrate
             (tensorpool|core-only|npu; default tensorpool only)
   capacity [--users U1,U2,..] [--ttis N] [--budget-us B] [--no-mixed]
-           [--per-user] [--power-budget-w W] [--arch SUBSTRATE]
+           [--per-user] [--power-budget-w W] [--what-if] [--arch SUBSTRATE]
            [--out <path>] [--no-verify] [--smoke]
             run the TTI serving loop over a users-per-TTI x pipeline-mix
             grid on the sweep engine (shared cross-run block-schedule
@@ -62,7 +62,11 @@ COMMANDS:
             pass per pipeline kind, the deadline-realistic view.
             --power-budget-w caps each TTI's admitted power demand at W
             Watts (power-capped admission; deferred-for-power counts show
-            up per point). --arch runs the grid on a different substrate
+            up per point). --what-if switches admission to counterfactual
+            pricing: each candidate is charged its measured marginal cost
+            through the block cache (zero raw simulations when the cache
+            can answer) instead of the analytic anchors.
+            --arch runs the grid on a different substrate
             (tensorpool|core-only|npu; the report labels it). --smoke runs
             a 2-point grid for CI.
   bench-diff --baseline <file> --current <file> [--threshold PCT]
@@ -479,6 +483,10 @@ fn capacity(rest: &[String]) -> i32 {
     } else {
         tensorpool::coordinator::BatchPolicy::Batched
     };
+    // Counterfactual (what-if) admission: price each candidate by its
+    // measured marginal cost through the block cache instead of the
+    // analytic anchors.
+    let what_if = has(rest, "--what-if");
     let grid = capacity_grid_for(
         &arch,
         &users,
@@ -487,10 +495,12 @@ fn capacity(rest: &[String]) -> i32 {
         !has(rest, "--no-mixed"),
         policy,
         power_budget_mw,
+        what_if,
     );
     eprintln!(
         "capacity: {} scenarios ({} loads x {} mixes) on {}, {} TTIs each, \
-         {policy:?} AI scaling, power cap {}, {} threads, verify={}",
+         {policy:?} AI scaling, power cap {}, {} admission, {} threads, \
+         verify={}",
         grid.len(),
         users.len(),
         grid.len() / users.len(),
@@ -500,6 +510,7 @@ fn capacity(rest: &[String]) -> i32 {
             None => "none".to_string(),
             Some(mw) => format!("{:.3} W", f64::from(mw) / 1e3),
         },
+        if what_if { "what-if" } else { "anchor-estimate" },
         rayon::current_num_threads(),
         verify,
     );
@@ -531,6 +542,17 @@ fn capacity(rest: &[String]) -> i32 {
         eprintln!(
             "capacity: power cap deferred {power_deferred} admissions; \
              {total_energy:.6} J drawn across the grid",
+        );
+    }
+    if what_if {
+        let evals: u64 = report
+            .reports
+            .iter()
+            .map(|r| r.counterfactual_evals)
+            .sum();
+        eprintln!(
+            "capacity: what-if admission priced {evals} candidates \
+             counterfactually through the block cache",
         );
     }
     if let (Some(s), Some(sp)) = (report.serial_wall_s, report.speedup) {

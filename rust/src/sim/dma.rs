@@ -30,6 +30,7 @@ pub struct DmaXfer {
     pub dir: DmaDir,
 }
 
+#[derive(Clone)]
 struct Active {
     lines: Vec<u64>,
     next: usize,
@@ -190,6 +191,88 @@ impl Dma {
             self.lines_moved += 1;
             self.subgroup_lines[sg] += 1;
             noc.dma_line(self.token, 0, 0, line, a.write);
+        }
+    }
+}
+
+/// Deep copy of the DMA engine. Like [`super::pe_traffic::PeTraffic`]'s
+/// snapshot this captures the FULL struct, configuration included:
+/// `Sim.dma` is an `Option` that `dma_mut` materializes lazily, so a DMA
+/// programmed after a snapshot must disappear wholesale on restore —
+/// restore reconstructs the engine from the snapshot rather than patching
+/// one in place.
+#[derive(Clone)]
+pub struct DmaSnapshot {
+    token: u16,
+    per_cycle_lines: usize,
+    subgroup_lines: Vec<u64>,
+    tiles_per_subgroup: usize,
+    num_tiles: usize,
+    active: Option<Active>,
+    queue: Vec<DmaXfer>,
+    lines_moved: u64,
+    finish_cycle: Option<u64>,
+    started_at: u64,
+}
+
+impl Dma {
+    /// Capture the engine, in-flight deliveries included. Exhaustive
+    /// destructure — every field named, no `..` rest pattern — so a new
+    /// field fails to compile here until its snapshot treatment is decided
+    /// (`tests/layering.rs` greps that the rest-pattern ban holds).
+    pub fn snapshot(&self) -> DmaSnapshot {
+        let Dma {
+            token,
+            per_cycle_lines,
+            subgroup_lines,
+            tiles_per_subgroup,
+            num_tiles,
+            active,
+            queue,
+            lines_moved,
+            finish_cycle,
+            started_at,
+        } = self;
+        DmaSnapshot {
+            token: *token,
+            per_cycle_lines: *per_cycle_lines,
+            subgroup_lines: subgroup_lines.clone(),
+            tiles_per_subgroup: *tiles_per_subgroup,
+            num_tiles: *num_tiles,
+            active: active.clone(),
+            queue: queue.clone(),
+            lines_moved: *lines_moved,
+            finish_cycle: *finish_cycle,
+            started_at: *started_at,
+        }
+    }
+
+    /// Rebuild an engine from a snapshot. Exhaustive destructure of the
+    /// snapshot (no `..`).
+    pub fn from_snapshot(s: &DmaSnapshot) -> Dma {
+        let DmaSnapshot {
+            token,
+            per_cycle_lines,
+            subgroup_lines,
+            tiles_per_subgroup,
+            num_tiles,
+            active,
+            queue,
+            lines_moved,
+            finish_cycle,
+            started_at,
+        } = s;
+        Dma {
+            token: *token,
+            per_cycle_lines: *per_cycle_lines,
+            subgroup_lines: subgroup_lines.clone(),
+            tiles_per_subgroup: *tiles_per_subgroup,
+            num_tiles: *num_tiles,
+            active: active.clone(),
+            queue: queue.clone(),
+            lines_moved: *lines_moved,
+            finish_cycle: *finish_cycle,
+            started_at: *started_at,
         }
     }
 }

@@ -20,9 +20,9 @@ pub use addr::{
     LINE_WORDS,
 };
 pub use config::{ArchConfig, TeGeometry};
-pub use dma::{Dma, DmaDir, DmaXfer};
-pub use noc::{Delivery, Noc};
-pub use pe_traffic::{PeTraffic, PeWorkload};
-pub use pool::Sim;
+pub use dma::{Dma, DmaDir, DmaSnapshot, DmaXfer};
+pub use noc::{Delivery, Noc, NocSnapshot};
+pub use pe_traffic::{PeTraffic, PeTrafficSnapshot, PeWorkload};
+pub use pool::{Sim, SimSnapshot};
 pub use stats::{NocStats, RunResult, TeRunStats};
-pub use te::{TeEngine, TeJob};
+pub use te::{TeEngine, TeJob, TeSnapshot};

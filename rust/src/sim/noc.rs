@@ -547,6 +547,133 @@ impl Noc {
     }
 }
 
+/// Deep copy of the NoC's mutable state: the clock, the request table and
+/// free list, bank/port queues and their dense active sets (ordering
+/// preserved — `swap_remove` iteration order is architectural state),
+/// channel busy-horizons, the event wheel (at its *current*, possibly
+/// grown, length), and the stats counters. The config and address map are
+/// immutable wiring and deliberately NOT captured; `events_scratch` is
+/// empty between steps (transient) and is cleared on restore.
+#[derive(Clone)]
+pub struct NocSnapshot {
+    now: u64,
+    // (fields mirror `Noc`'s mutable subset; see `Noc::snapshot`)
+    reqs: Vec<Req>,
+    free: Vec<u32>,
+    bank_q: Vec<VecDeque<u32>>,
+    active_banks: Vec<u32>,
+    bank_active: Vec<bool>,
+    port_q: Vec<VecDeque<u32>>,
+    port_busy_until: Vec<u64>,
+    active_ports: Vec<u32>,
+    port_active: Vec<bool>,
+    resp_ingress_busy: Vec<u64>,
+    resp_egress_busy: Vec<u64>,
+    wheel: Vec<Vec<Event>>,
+    pending_events: u64,
+    stats: NocStats,
+    delivered: Vec<Delivery>,
+}
+
+impl NocSnapshot {
+    /// The clock at capture time.
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+}
+
+impl Noc {
+    /// Capture the NoC's mutable state. Exhaustive destructure — every
+    /// field named, `field: _` marking immutable wiring and transients, no
+    /// `..` rest pattern — so a new mutable field fails to compile here
+    /// until its snapshot treatment is decided (`tests/layering.rs` greps
+    /// that the rest-pattern ban holds).
+    pub fn snapshot(&self) -> NocSnapshot {
+        let Noc {
+            cfg: _,
+            map: _,
+            now,
+            reqs,
+            free,
+            bank_q,
+            active_banks,
+            bank_active,
+            port_q,
+            port_busy_until,
+            active_ports,
+            port_active,
+            resp_ingress_busy,
+            resp_egress_busy,
+            wheel,
+            events_scratch: _,
+            pending_events,
+            stats,
+            delivered,
+        } = self;
+        NocSnapshot {
+            now: *now,
+            reqs: reqs.clone(),
+            free: free.clone(),
+            bank_q: bank_q.clone(),
+            active_banks: active_banks.clone(),
+            bank_active: bank_active.clone(),
+            port_q: port_q.clone(),
+            port_busy_until: port_busy_until.clone(),
+            active_ports: active_ports.clone(),
+            port_active: port_active.clone(),
+            resp_ingress_busy: resp_ingress_busy.clone(),
+            resp_egress_busy: resp_egress_busy.clone(),
+            wheel: wheel.clone(),
+            pending_events: *pending_events,
+            stats: stats.clone(),
+            delivered: delivered.clone(),
+        }
+    }
+
+    /// Restore a state captured by [`Noc::snapshot`] onto a NoC of the
+    /// same configuration. The wheel is restored at its captured length,
+    /// so a snapshot taken after a `grow_wheel` resumes with the grown
+    /// horizon — byte-identical to the uninterrupted run. Exhaustive
+    /// destructure of the snapshot (no `..`).
+    pub fn restore(&mut self, s: &NocSnapshot) {
+        let NocSnapshot {
+            now,
+            reqs,
+            free,
+            bank_q,
+            active_banks,
+            bank_active,
+            port_q,
+            port_busy_until,
+            active_ports,
+            port_active,
+            resp_ingress_busy,
+            resp_egress_busy,
+            wheel,
+            pending_events,
+            stats,
+            delivered,
+        } = s;
+        self.now = *now;
+        self.reqs.clone_from(reqs);
+        self.free.clone_from(free);
+        self.bank_q.clone_from(bank_q);
+        self.active_banks.clone_from(active_banks);
+        self.bank_active.clone_from(bank_active);
+        self.port_q.clone_from(port_q);
+        self.port_busy_until.clone_from(port_busy_until);
+        self.active_ports.clone_from(active_ports);
+        self.port_active.clone_from(port_active);
+        self.resp_ingress_busy.clone_from(resp_ingress_busy);
+        self.resp_egress_busy.clone_from(resp_egress_busy);
+        self.wheel.clone_from(wheel);
+        self.events_scratch.clear();
+        self.pending_events = *pending_events;
+        self.stats = stats.clone();
+        self.delivered.clone_from(delivered);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

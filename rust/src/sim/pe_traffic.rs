@@ -245,6 +245,98 @@ impl PeTraffic {
     }
 }
 
+/// Deep copy of one injector — unlike the TE/NoC snapshots this captures
+/// the FULL struct, configuration included, because `Sim.pe_traffic` is a
+/// growable Vec: injectors added after a snapshot must disappear on
+/// restore, so restore reconstructs the whole population from snapshots
+/// rather than patching engines in place.
+#[derive(Clone)]
+pub struct PeTrafficSnapshot {
+    token: u16,
+    tile: usize,
+    pes: usize,
+    rate: f64,
+    credit: f64,
+    seq: Vec<(u64, bool)>,
+    next: usize,
+    outstanding: usize,
+    max_outstanding: usize,
+    min_cycles: u64,
+    started_at: u64,
+    finish_cycle: Option<u64>,
+}
+
+impl PeTraffic {
+    /// Capture the injector. Exhaustive destructure — every field named,
+    /// no `..` rest pattern — so a new field fails to compile here until
+    /// its snapshot treatment is decided (`tests/layering.rs` greps that
+    /// the rest-pattern ban holds).
+    pub fn snapshot(&self) -> PeTrafficSnapshot {
+        let PeTraffic {
+            token,
+            tile,
+            pes,
+            rate,
+            credit,
+            seq,
+            next,
+            outstanding,
+            max_outstanding,
+            min_cycles,
+            started_at,
+            finish_cycle,
+        } = self;
+        PeTrafficSnapshot {
+            token: *token,
+            tile: *tile,
+            pes: *pes,
+            rate: *rate,
+            credit: *credit,
+            seq: seq.clone(),
+            next: *next,
+            outstanding: *outstanding,
+            max_outstanding: *max_outstanding,
+            min_cycles: *min_cycles,
+            started_at: *started_at,
+            finish_cycle: *finish_cycle,
+        }
+    }
+
+    /// Rebuild an injector from a snapshot (exact, bit-for-bit — the
+    /// fractional `credit` accumulator included). Exhaustive destructure
+    /// of the snapshot (no `..`).
+    pub fn from_snapshot(s: &PeTrafficSnapshot) -> PeTraffic {
+        let PeTrafficSnapshot {
+            token,
+            tile,
+            pes,
+            rate,
+            credit,
+            seq,
+            next,
+            outstanding,
+            max_outstanding,
+            min_cycles,
+            started_at,
+            finish_cycle,
+        } = s;
+        PeTraffic {
+            token: *token,
+            tile: *tile,
+            pes: *pes,
+            rate: *rate,
+            credit: *credit,
+            seq: seq.clone(),
+            next: *next,
+            outstanding: *outstanding,
+            max_outstanding: *max_outstanding,
+            min_cycles: *min_cycles,
+            started_at: *started_at,
+            finish_cycle: *finish_cycle,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -2,11 +2,11 @@
 //! NoC, stepped cycle by cycle until every engine drains.
 
 use super::config::ArchConfig;
-use super::dma::Dma;
-use super::noc::Noc;
-use super::pe_traffic::{PeTraffic, PeWorkload};
+use super::dma::{Dma, DmaSnapshot};
+use super::noc::{Noc, NocSnapshot};
+use super::pe_traffic::{PeTraffic, PeTrafficSnapshot, PeWorkload};
 use super::stats::RunResult;
-use super::te::{TeEngine, TeJob};
+use super::te::{TeEngine, TeJob, TeSnapshot};
 
 /// True unless `TENSORPOOL_NO_FASTFORWARD` is set (to anything but `0` or
 /// the empty string) — the escape hatch that forces the naive dense
@@ -293,6 +293,103 @@ impl Sim {
     }
 }
 
+/// A full deep copy of a [`Sim`]'s mutable state, restorable any number of
+/// times onto a `Sim` built from the same [`ArchConfig`].
+///
+/// The byte-identity contract (pinned differentially by
+/// `tests/snapshot.rs`): for any run, `snapshot()` at an arbitrary cycle,
+/// running further, `restore()`, and resuming produces a [`RunResult`]
+/// byte-identical to the uninterrupted run — under either stepper.
+/// Taking a snapshot never perturbs the run it was taken from.
+#[derive(Clone)]
+pub struct SimSnapshot {
+    noc: NocSnapshot,
+    tes: Vec<TeSnapshot>,
+    pe_traffic: Vec<PeTrafficSnapshot>,
+    dma: Option<DmaSnapshot>,
+    te_finish: Vec<u64>,
+    cycles_fast_forwarded: u64,
+}
+
+impl SimSnapshot {
+    /// The simulation clock at capture time.
+    pub fn now(&self) -> u64 {
+        self.noc.now()
+    }
+}
+
+impl Sim {
+    /// Capture every mutable component: TE streamer/stall state, the NoC
+    /// event wheel and port bookings, PE injector credits, DMA in-flight
+    /// deliveries, and all stats counters.
+    ///
+    /// Exhaustive destructure — every `Sim` field named, `field: _`
+    /// marking config (`cfg`), transients (`scratch`, empty between
+    /// steps), and the process-wide stepper selection (`fast_forward`) —
+    /// with NO `..` rest pattern, so adding a mutable field to `Sim`
+    /// without deciding its snapshot treatment fails to compile
+    /// (`tests/layering.rs` greps that the rest-pattern ban holds).
+    pub fn snapshot(&self) -> SimSnapshot {
+        let Sim {
+            cfg: _,
+            noc,
+            tes,
+            pe_traffic,
+            dma,
+            te_finish,
+            scratch: _,
+            fast_forward: _,
+            cycles_fast_forwarded,
+        } = self;
+        SimSnapshot {
+            noc: noc.snapshot(),
+            tes: tes.iter().map(TeEngine::snapshot).collect(),
+            pe_traffic: pe_traffic.iter().map(PeTraffic::snapshot).collect(),
+            dma: dma.as_ref().map(Dma::snapshot),
+            te_finish: te_finish.clone(),
+            cycles_fast_forwarded: *cycles_fast_forwarded,
+        }
+    }
+
+    /// Roll this simulation back (or forward) to a captured state. The
+    /// target must have been built from the same [`ArchConfig`] as the
+    /// snapshot's source; the TE count is asserted as a cheap proxy.
+    /// Restoring does not consume the snapshot — restore-twice lands on
+    /// the identical state. The stepper selection (`fast_forward`) and
+    /// `cfg` are deliberately left untouched: they describe HOW the sim
+    /// runs, not WHERE it is. Exhaustive destructure of the snapshot (no
+    /// `..`).
+    pub fn restore(&mut self, s: &SimSnapshot) {
+        let SimSnapshot {
+            noc,
+            tes,
+            pe_traffic,
+            dma,
+            te_finish,
+            cycles_fast_forwarded,
+        } = s;
+        assert_eq!(
+            self.tes.len(),
+            tes.len(),
+            "snapshot restored onto a Sim of a different configuration"
+        );
+        self.noc.restore(noc);
+        for (te, snap) in self.tes.iter_mut().zip(tes) {
+            te.restore(snap);
+        }
+        // Injectors and the DMA are created lazily mid-run, so the
+        // populations may have grown since the capture: rebuild them
+        // wholesale from the snapshots.
+        self.pe_traffic.clear();
+        self.pe_traffic
+            .extend(pe_traffic.iter().map(PeTraffic::from_snapshot));
+        self.dma = dma.as_ref().map(Dma::from_snapshot);
+        self.te_finish.clone_from(te_finish);
+        self.scratch.clear();
+        self.cycles_fast_forwarded = *cycles_fast_forwarded;
+    }
+}
+
 /// The dense stepper's deadlock-guard panic, shared verbatim by the
 /// fast-forward loop (including its immediate-deadlock detection) so both
 /// steppers fail identically.
@@ -378,6 +475,66 @@ mod tests {
         let dense = stall_heavy_sim(&cfg).run_dense(1_000_000);
         assert_eq!(ff, dense, "fast-forward diverged from the dense stepper");
         assert_eq!(dense.cycles_fast_forwarded, 0);
+    }
+
+    #[test]
+    fn snapshot_restore_resume_is_byte_identical() {
+        // The core contract in miniature (tests/snapshot.rs fuzzes it):
+        // interrupt, poison by running to completion, roll back, resume —
+        // the result must match the uninterrupted run exactly, twice.
+        let cfg = ArchConfig::tensorpool();
+        let reference = stall_heavy_sim(&cfg).run_dense(1_000_000);
+        let mut sim = stall_heavy_sim(&cfg);
+        for _ in 0..500 {
+            if !sim.step() {
+                break;
+            }
+        }
+        let snap = sim.snapshot();
+        let poisoned = sim.run_dense(1_000_000);
+        assert_eq!(poisoned, reference, "snapshot capture perturbed the run");
+        sim.restore(&snap);
+        assert_eq!(sim.noc.now(), snap.now());
+        assert_eq!(sim.run_dense(1_000_000), reference);
+        sim.restore(&snap);
+        assert_eq!(
+            sim.run_dense(1_000_000),
+            reference,
+            "restore must not consume the snapshot"
+        );
+    }
+
+    #[test]
+    fn restore_discards_engines_added_after_the_capture() {
+        // PE injectors and the DMA are created lazily mid-run; a rollback
+        // across such a creation must make them disappear.
+        let cfg = ArchConfig::tensorpool();
+        let mut sim = stall_heavy_sim(&cfg);
+        let snap = sim.snapshot();
+        assert!(sim.pe_traffic.is_empty() && sim.dma.is_none());
+        let mut alloc = L1Alloc::new(&cfg);
+        let a = alloc.alloc(64, 64);
+        let b = alloc.alloc(64, 64);
+        sim.add_pe_workload(&crate::sim::PeWorkload::new(
+            vec![a],
+            vec![b],
+            1000,
+            0.8,
+            0.3,
+        ));
+        let now = sim.noc.now();
+        sim.dma_mut().program(
+            vec![crate::sim::DmaXfer {
+                region: a,
+                dir: crate::sim::DmaDir::In,
+            }],
+            now,
+        );
+        assert!(!sim.pe_traffic.is_empty() && sim.dma.is_some());
+        sim.restore(&snap);
+        assert!(sim.pe_traffic.is_empty(), "injectors must roll back");
+        assert!(sim.dma.is_none(), "DMA must roll back");
+        assert_eq!(sim.run_dense(1_000_000), stall_heavy_sim(&cfg).run_dense(1_000_000));
     }
 
     #[test]

@@ -1,4 +1,13 @@
 //! Counters collected during simulation, used by every figure harness.
+//!
+//! Every counter here is mutable run state, and therefore part of the
+//! snapshot/rollback surface: `Sim::snapshot` captures `TeRunStats` and
+//! `NocStats` wholesale, so a restored simulation resumes with exactly the
+//! counters it had at capture time. That is what lets the differential
+//! suite (`tests/snapshot.rs`) demand byte-identical `RunResult`s from an
+//! interrupted-and-resumed run — stats are part of the identity contract,
+//! not a diagnostic sidecar (the one exception, `cycles_fast_forwarded`,
+//! is excluded from equality below for the same reason it always was).
 
 /// Reasons a tensor engine spends a non-compute cycle.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

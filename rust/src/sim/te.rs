@@ -485,6 +485,141 @@ impl TeEngine {
     }
 }
 
+/// Deep copy of a [`TeEngine`]'s mutable state — everything `assign`,
+/// `step`, `on_delivery`, and `fast_forward` touch. Immutable wiring
+/// (`token`, `home_tile`, `geom`, `rob_depth`, `z_fifo_depth`) is fixed by
+/// the [`ArchConfig`] the engine was built from and is deliberately NOT
+/// captured: a snapshot may only be restored onto an engine of the same
+/// configuration.
+#[derive(Clone)]
+pub struct TeSnapshot {
+    job: Option<TeJob>,
+    tile_idx: usize,
+    kb: usize,
+    compute_left: u64,
+    x_issue: (usize, usize),
+    w_issue: (usize, usize),
+    y_issue: (usize, usize),
+    z_pending: Vec<u64>,
+    rr: u8,
+    arr: Vec<KbArrivals>,
+    arr_base: usize,
+    y_got: [u16; 2],
+    y_base: usize,
+    x_out: usize,
+    w_out: usize,
+    y_out: usize,
+    z_out: usize,
+    stats: TeRunStats,
+    done: bool,
+}
+
+impl TeEngine {
+    /// Capture the engine's mutable state.
+    ///
+    /// The destructuring below is deliberately exhaustive — every field of
+    /// `TeEngine` is named, with `field: _` marking the config-immutable
+    /// ones — and uses NO `..` rest pattern, so adding a mutable field to
+    /// the engine without deciding how to snapshot it fails to compile
+    /// (`tests/layering.rs` greps that the rest-pattern ban holds).
+    pub fn snapshot(&self) -> TeSnapshot {
+        let TeEngine {
+            token: _,
+            home_tile: _,
+            geom: _,
+            rob_depth: _,
+            z_fifo_depth: _,
+            job,
+            tile_idx,
+            kb,
+            compute_left,
+            x_issue,
+            w_issue,
+            y_issue,
+            z_pending,
+            rr,
+            arr,
+            arr_base,
+            y_got,
+            y_base,
+            x_out,
+            w_out,
+            y_out,
+            z_out,
+            stats,
+            done,
+        } = self;
+        TeSnapshot {
+            job: job.clone(),
+            tile_idx: *tile_idx,
+            kb: *kb,
+            compute_left: *compute_left,
+            x_issue: *x_issue,
+            w_issue: *w_issue,
+            y_issue: *y_issue,
+            z_pending: z_pending.clone(),
+            rr: *rr,
+            arr: arr.clone(),
+            arr_base: *arr_base,
+            y_got: *y_got,
+            y_base: *y_base,
+            x_out: *x_out,
+            w_out: *w_out,
+            y_out: *y_out,
+            z_out: *z_out,
+            stats: stats.clone(),
+            done: *done,
+        }
+    }
+
+    /// Restore a state previously captured by [`TeEngine::snapshot`] from
+    /// an engine of the same configuration. Exhaustive destructure of the
+    /// snapshot (no `..`): a snapshot field that stops being written back
+    /// fails to compile.
+    pub fn restore(&mut self, s: &TeSnapshot) {
+        let TeSnapshot {
+            job,
+            tile_idx,
+            kb,
+            compute_left,
+            x_issue,
+            w_issue,
+            y_issue,
+            z_pending,
+            rr,
+            arr,
+            arr_base,
+            y_got,
+            y_base,
+            x_out,
+            w_out,
+            y_out,
+            z_out,
+            stats,
+            done,
+        } = s;
+        self.job = job.clone();
+        self.tile_idx = *tile_idx;
+        self.kb = *kb;
+        self.compute_left = *compute_left;
+        self.x_issue = *x_issue;
+        self.w_issue = *w_issue;
+        self.y_issue = *y_issue;
+        self.z_pending.clone_from(z_pending);
+        self.rr = *rr;
+        self.arr.clone_from(arr);
+        self.arr_base = *arr_base;
+        self.y_got = *y_got;
+        self.y_base = *y_base;
+        self.x_out = *x_out;
+        self.w_out = *w_out;
+        self.y_out = *y_out;
+        self.z_out = *z_out;
+        self.stats = stats.clone();
+        self.done = *done;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -379,6 +379,7 @@ mod tests {
                     budget_cycles: None,
                     policy: BatchPolicy::default(),
                     power_budget_mw: None,
+                    what_if: false,
                     seed: 42,
                 });
             }

@@ -387,6 +387,11 @@ pub struct TtiScenario {
     /// [`crate::coordinator::BudgetPolicy`] for the cap's semantics.
     #[serde(default)]
     pub power_budget_mw: Option<u32>,
+    /// Counterfactual (what-if) admission: candidates are priced by their
+    /// measured marginal cost through the block cache instead of the
+    /// analytic anchors. See [`crate::coordinator::BudgetPolicy`].
+    #[serde(default)]
+    pub what_if: bool,
     /// Seed of the deterministic per-user pipeline draw.
     pub seed: u64,
 }
@@ -395,7 +400,7 @@ impl TtiScenario {
     /// Content key for the capacity result cache (display name excluded).
     pub fn cache_key(&self) -> String {
         format!(
-            "tti|{:?}|{:?}|{:?}|{}|{}|{}|{:?}|{:?}|{:?}|{}",
+            "tti|{:?}|{:?}|{:?}|{}|{}|{}|{:?}|{:?}|{:?}|{}|{}",
             self.arch,
             self.mix,
             self.arrival,
@@ -405,6 +410,7 @@ impl TtiScenario {
             self.budget_cycles,
             self.policy,
             self.power_budget_mw,
+            self.what_if,
             self.seed
         )
     }
@@ -471,6 +477,12 @@ pub struct CapacityReport {
     /// Users deferred by the power cap, summed over the run.
     #[serde(default)]
     pub deferred_for_power_total: u64,
+    /// Candidates the what-if admission priced counterfactually over the
+    /// run (0 unless the scenario sets `what_if`). NOT a cache counter —
+    /// it is a pure function of the scenario content, so the byte-identity
+    /// of cached/uncached/parallel reports is preserved.
+    #[serde(default)]
+    pub counterfactual_evals: u64,
     pub points: Vec<CapacityPoint>,
 }
 
@@ -498,6 +510,7 @@ pub fn run_capacity(
     }
     server.set_batch_policy(s.policy);
     server.set_power_budget_w(s.power_budget_mw.map(|mw| f64::from(mw) / 1e3));
+    server.set_what_if(s.what_if);
     let mut state = (s.seed ^ 0x9E37_79B9_7F4A_7C15).max(1);
     let weight_total = u64::from(s.mix.total().max(1));
     let mut next_user: u32 = 0;
@@ -569,6 +582,7 @@ pub fn run_capacity(
             0.0
         },
         deferred_for_power_total: power_deferred,
+        counterfactual_evals: server.counterfactual_evals(),
         points,
     }
 }
@@ -704,6 +718,7 @@ mod tests {
             budget_cycles: None,
             policy: BatchPolicy::default(),
             power_budget_mw: None,
+            what_if: false,
             seed: 42,
         }
     }
@@ -761,6 +776,13 @@ mod tests {
             a.cache_key(),
             f.cache_key(),
             "the power cap is part of the key"
+        );
+        let mut g = a.clone();
+        g.what_if = true;
+        assert_ne!(
+            a.cache_key(),
+            g.cache_key(),
+            "what-if admission is part of the key"
         );
     }
 
@@ -861,6 +883,30 @@ mod tests {
         assert_eq!(
             capped.served_total + capped.final_backlog as u64,
             capped.submitted_total
+        );
+    }
+
+    #[test]
+    fn what_if_capacity_reports_counterfactual_evaluations() {
+        // 3 NR users/TTI fit the millisecond under either pricing, so the
+        // serving outcome is identical — but the what-if run records the
+        // candidates it priced counterfactually, and stays pure.
+        let mut s = tti(UserMix::pure(Pipeline::NeuralReceiver), 3, 3);
+        s.res_per_user = 8192;
+        let plain = run_capacity(&s, &Arc::new(BlockScheduleCache::new()));
+        assert_eq!(plain.counterfactual_evals, 0, "what-if never ran");
+        s.what_if = true;
+        let w = run_capacity(&s, &Arc::new(BlockScheduleCache::new()));
+        assert_eq!(
+            w.counterfactual_evals, 9,
+            "every candidate of every TTI is priced exactly once"
+        );
+        assert_eq!(w.served_total, plain.served_total);
+        assert_eq!(w.final_backlog, 0);
+        assert_eq!(
+            run_capacity(&s, &Arc::new(BlockScheduleCache::new())),
+            w,
+            "what-if capacity runs must stay pure"
         );
     }
 

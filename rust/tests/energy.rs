@@ -13,6 +13,10 @@
 //!    Table II direction (>6×; the paper reports 8.8–9.1×).
 //! 5. The power-capped capacity scenario the CI smoke step runs defers at
 //!    least one request (the in-repo mirror of the CI assertion).
+//! 6. What-if (counterfactual) admission under a tight per-user power cap
+//!    defers exactly the users the default pricing defers — the marginal
+//!    demand folds the same (cycles, energy) sequence bit-for-bit — and
+//!    the slack-cycle replay labels every one of them power-deferred.
 
 use std::sync::Arc;
 
@@ -124,6 +128,54 @@ fn power_cap_defers_what_a_latency_only_budget_admits() {
 }
 
 #[test]
+fn tight_power_cap_defers_identically_under_what_if() {
+    // Under a PerUser 5 W cap, the what-if marginal demand folds the same
+    // (cycles, energy) sequence as the default `estimate_power_w`, so the
+    // cap must cut the SAME users and the reports must be byte-identical.
+    // The slack cycle budget is load-bearing twice over: it guarantees the
+    // cut is power-bound (8 × 0.648 W static floor alone exceeds 5 W), and
+    // it makes the latency-only replay admit every deferred user — so
+    // `deferred_for_power` must equal the full deferred count.
+    let cfg = ArchConfig::tensorpool();
+    let run = |what_if: bool| {
+        let mut s =
+            Server::with_cache(&cfg, Arc::new(BlockScheduleCache::new()));
+        s.set_batch_policy(BatchPolicy::PerUser);
+        s.set_budget_cycles(100_000_000);
+        s.set_power_budget_w(Some(5.0));
+        s.set_what_if(what_if);
+        for u in 0..8 {
+            s.submit(TtiRequest {
+                user_id: u,
+                pipeline: Pipeline::NeuralReceiver,
+                res: 8192,
+            });
+        }
+        (s.schedule_tti(), s.counterfactual_evals())
+    };
+    let (plain, plain_evals) = run(false);
+    let (what_if, what_if_evals) = run(true);
+    assert!(
+        !plain.deferred.is_empty(),
+        "the 5 W cap must cut eight reference NR users: {plain:?}"
+    );
+    assert_eq!(
+        plain.deferred_for_power,
+        plain.deferred.len(),
+        "with slack cycles every deferred user is power-deferred"
+    );
+    assert_eq!(
+        plain, what_if,
+        "what-if must defer exactly the users default pricing defers"
+    );
+    assert_eq!(plain_evals, 0);
+    assert!(
+        what_if_evals > 0,
+        "what-if priced admission AND the deferral replay"
+    );
+}
+
+#[test]
 fn full_ai_tti_average_power_sits_in_the_papers_envelope() {
     // Table II sanity at the serving level: the Pool burns 4.32 W on GEMM
     // at near-full TE utilization. A full AI TTI runs the Fig 9 blocks at
@@ -202,6 +254,7 @@ fn ci_power_smoke_scenario_defers_for_power() {
         budget_cycles: Some(9_000_000),
         policy: BatchPolicy::Batched,
         power_budget_mw: Some(5_000),
+        what_if: false,
         seed: 0xC0FFEE,
     };
     let blocks = Arc::new(BlockScheduleCache::new());

@@ -143,6 +143,88 @@ fn substrate_types_live_in_exec() {
     }
 }
 
+/// Every body of a definition of `fn <name>(` in `text`, by brace
+/// matching from the body's opening brace. Good enough for the sim
+/// sources, which keep braces out of string literals in these functions.
+fn fn_bodies(text: &str, fn_name: &str) -> Vec<String> {
+    let needle = format!("fn {fn_name}(");
+    let mut out = Vec::new();
+    let mut start = 0;
+    while let Some(pos) = text[start..].find(&needle) {
+        let abs = start + pos;
+        let Some(open) = text[abs..].find('{').map(|o| abs + o) else {
+            break;
+        };
+        let mut depth = 0usize;
+        let mut end = open;
+        for (i, b) in text.as_bytes()[open..].iter().enumerate() {
+            match b {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = open + i;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        out.push(text[open..=end].to_string());
+        start = end + 1;
+    }
+    out
+}
+
+#[test]
+fn sim_snapshots_destructure_exhaustively() {
+    // The snapshot/rollback state inventory is enforced structurally: the
+    // snapshot/restore functions of every mutable sim component
+    // destructure their struct field-by-field with NO `..` rest pattern,
+    // so adding a field without deciding its snapshot treatment breaks
+    // compilation instead of silently leaking state across a restore.
+    // This guard pins the idiom itself: a `..` quietly added to one of
+    // those destructures would defeat the exhaustiveness check.
+    let sim_files = ["te.rs", "noc.rs", "pe_traffic.rs", "dma.rs", "pool.rs"];
+    for f in sim_files {
+        let path =
+            Path::new(env!("CARGO_MANIFEST_DIR")).join("src/sim").join(f);
+        let text = fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+        let mut bodies: Vec<(&str, String)> = Vec::new();
+        for name in ["snapshot", "restore", "from_snapshot"] {
+            bodies.extend(
+                fn_bodies(&text, name).into_iter().map(|b| (name, b)),
+            );
+        }
+        assert!(
+            bodies.iter().any(|(n, _)| *n == "snapshot"),
+            "{f}: every snapshot-bearing sim component must define \
+             `fn snapshot`"
+        );
+        for (name, body) in &bodies {
+            // comments are not patterns
+            let stripped: String = body
+                .lines()
+                .filter(|l| !l.trim_start().starts_with("//"))
+                .collect::<Vec<_>>()
+                .join("\n");
+            let mut i = 0;
+            while let Some(p) = stripped[i..].find("..") {
+                let abs = i + p;
+                let after = stripped[abs + 2..].trim_start();
+                assert!(
+                    !after.starts_with('}'),
+                    "{f} `fn {name}`: a `..` rest pattern defeats the \
+                     field-exhaustiveness guard — destructure every field \
+                     explicitly (use `field: _` for non-state fields)"
+                );
+                i = abs + 2;
+            }
+        }
+    }
+}
+
 #[test]
 fn sweep_re_export_shims_stay_deleted() {
     // The historical `pub use crate::exec::{ArchKnobs, ...}` shims in

@@ -12,7 +12,11 @@
 //! 4. The iteration-level memo is semantically invisible (byte-identical
 //!    `TtiReport`s vs block-level caching) while performing strictly
 //!    fewer raw iteration simulations on a mixed mha+fc per-user TTI
-//!    (this PR's acceptance criterion).
+//!    (the exec-layer PR's acceptance criterion).
+//! 5. What-if (counterfactual) admission is byte-identical to the default
+//!    policy under slack budgets, and a warm block cache answers every
+//!    counterfactual with ZERO raw block simulations (the
+//!    snapshot/rollback PR's acceptance criterion).
 
 use std::sync::Arc;
 
@@ -278,6 +282,86 @@ fn iteration_memo_beats_block_level_cache_on_mixed_mha_fc_tti() {
     assert_eq!(block_cache.iterations_simulated(), 9);
     assert_eq!(memo_cache.iterations_simulated(), 8);
     assert_eq!(memo_cache.memo_fallbacks(), 0, "no wheel-growth fallbacks");
+}
+
+#[test]
+fn what_if_admission_is_byte_identical_under_slack_budgets() {
+    // When no budget binds, counterfactual pricing must be semantically
+    // invisible: every candidate is admitted either way, and the report
+    // is byte-identical. Two arms cover both demand paths:
+    // - Batched, no power cap: planned demand is 0.0 in both modes;
+    // - PerUser, slack power cap: the what-if marginal demand folds the
+    //   exact (cycles, energy) sequence `estimate_power_w` folds, so the
+    //   summed `planned_power_w` is bit-identical.
+    let cfg = ArchConfig::tensorpool();
+    let slack_cycles = 100_000_000u64;
+    for (policy, cap_w) in [
+        (BatchPolicy::Batched, None),
+        (BatchPolicy::PerUser, Some(50.0)),
+    ] {
+        for seed in 60..64u64 {
+            let reqs = seeded_requests(seed, 8);
+            let mut plain =
+                Server::with_cache(&cfg, Arc::new(BlockScheduleCache::new()));
+            let mut what_if =
+                Server::with_cache(&cfg, Arc::new(BlockScheduleCache::new()));
+            what_if.set_what_if(true);
+            for s in [&mut plain, &mut what_if] {
+                s.set_batch_policy(policy);
+                s.set_budget_cycles(slack_cycles);
+                s.set_power_budget_w(cap_w);
+            }
+            for r in &reqs {
+                plain.submit(*r);
+                what_if.submit(*r);
+            }
+            let p = plain.schedule_tti();
+            let w = what_if.schedule_tti();
+            assert_eq!(p.served.len(), 8, "slack budgets admit everyone");
+            assert_eq!(
+                p, w,
+                "{policy:?}/cap {cap_w:?}/seed {seed}: what-if must be \
+                 byte-identical under slack budgets"
+            );
+            assert!(
+                what_if.counterfactual_evals() >= 8,
+                "every candidate must have been priced counterfactually"
+            );
+            assert_eq!(plain.counterfactual_evals(), 0);
+        }
+    }
+}
+
+#[test]
+fn warm_cache_answers_what_if_counterfactuals_with_zero_simulations() {
+    // THE acceptance criterion of the snapshot/rollback PR, serving-loop
+    // side: when the block cache already holds the schedules a TTI needs,
+    // what-if admission must price every counterfactual from recall —
+    // zero raw block simulations, admission and execution sharing the
+    // same cache keys.
+    let cfg = ArchConfig::tensorpool();
+    let cache = Arc::new(BlockScheduleCache::new());
+    let mut warmer = Server::with_cache(&cfg, Arc::clone(&cache));
+    submit_mixed_ai_tti(&mut warmer);
+    let _ = warmer.schedule_tti();
+    let sims_warm = cache.sims_run();
+    assert!(sims_warm > 0, "the warming TTI must simulate blocks");
+
+    let mut what_if = Server::with_cache(&cfg, Arc::clone(&cache));
+    what_if.set_what_if(true);
+    submit_mixed_ai_tti(&mut what_if);
+    let rep = what_if.schedule_tti();
+    assert_eq!(rep.served.len(), 4, "all four users fit one TTI");
+    assert!(
+        what_if.counterfactual_evals() > 0,
+        "counterfactuals must have been priced"
+    );
+    assert_eq!(
+        cache.sims_run(),
+        sims_warm,
+        "a warm cache must answer every counterfactual with zero raw \
+         block simulations"
+    );
 }
 
 #[test]

@@ -1,0 +1,262 @@
+//! Differential fuzz for `Sim::snapshot`/`Sim::restore`: across randomized
+//! (config × workload) points, interrupting a run mid-flight — snapshot,
+//! run to completion, restore, resume — must produce a `RunResult`
+//! byte-identical to the uninterrupted run, under BOTH steppers (dense and
+//! event-horizon fast-forward). Three properties are pinned per seed:
+//!
+//! 1. capture is free: taking a snapshot must not perturb the run it was
+//!    taken from (the "poisoned" continuation equals the reference);
+//! 2. restore+resume is exact: the resumed run equals the reference
+//!    byte-for-byte (every `TeRunStats`/`NocStats` counter, via the
+//!    `RunResult` equality that only excludes `cycles_fast_forwarded`);
+//! 3. restore is repeatable: a second restore from the same snapshot
+//!    resumes to the same result (snapshots are not consumed).
+//!
+//! The random sweep covers the full mutable-state inventory the snapshot
+//! must capture: GEMM shape/split mode (TE streamer state), ROB on/off
+//! (stall bookkeeping), burst on/off, K/J widening (port bookings), PE
+//! background traffic (credit state), DMA transfers (in-flight
+//! deliveries), and 4-slot event wheels (growth segments ride along in
+//! the captured state).
+
+use tensorpool::exec::{
+    BlockKind, BlockRun, ResumableBlockSim, ScheduleMode,
+};
+use tensorpool::sim::{
+    ArchConfig, DmaDir, DmaXfer, L1Alloc, PeWorkload, RunResult, Sim,
+};
+use tensorpool::workload::gemm::{
+    map_independent, map_single, map_split, GemmRegions, GemmSpec,
+};
+
+/// xorshift64: deterministic, seedable, dependency-free.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).max(1))
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+
+    fn pick<T: Copy>(&mut self, xs: &[T]) -> T {
+        xs[(self.next_u64() % xs.len() as u64) as usize]
+    }
+
+    fn chance(&mut self, percent: u64) -> bool {
+        self.next_u64() % 100 < percent
+    }
+}
+
+/// Deterministically derive one randomized simulation from `seed` (same
+/// generator family as `tests/fastforward.rs`): ablation knobs × GEMM
+/// shape and split mode × optional PE background traffic × optional DMA
+/// transfer. Calling twice with one seed builds two identical sims.
+fn build(seed: u64) -> (String, Sim) {
+    let mut rng = Rng::new(seed);
+    let mut cfg = ArchConfig::tensorpool();
+    cfg.resp_k = rng.pick(&[1, 2, 4]);
+    cfg.req_j = rng.pick(&[1, 2]);
+    cfg.burst = rng.chance(70);
+    cfg.rob_depth = rng.pick(&[1, 4, 16]);
+    cfg.z_fifo_depth = rng.pick(&[8, 32]);
+    cfg.event_wheel_slots = rng.pick(&[4, 256, 8192]);
+
+    let spec = GemmSpec {
+        m: 32 * (1 + (rng.next_u64() % 3) as usize),
+        k: 32 * (1 + (rng.next_u64() % 3) as usize),
+        n: 32 * (1 + (rng.next_u64() % 3) as usize),
+        accumulate: rng.chance(30),
+    };
+    let mode = rng.next_u64() % 4;
+
+    let mut alloc = L1Alloc::new(&cfg);
+    let mut sim = Sim::new(&cfg);
+    let jobs = match mode {
+        0 => {
+            let regions = GemmRegions::alloc(&spec, &mut alloc);
+            let mut jobs: Vec<_> = (0..cfg.num_tes()).map(|_| None).collect();
+            jobs[0] = Some(map_single(&spec, &regions));
+            jobs
+        }
+        1 | 2 => {
+            let regions = GemmRegions::alloc(&spec, &mut alloc);
+            map_split(&spec, &regions, cfg.num_tes(), mode == 2)
+        }
+        _ => map_independent(&spec, cfg.num_tes(), &mut alloc),
+    };
+    sim.assign_gemm(jobs);
+
+    let with_pe = rng.chance(50);
+    if with_pe {
+        let reads = alloc.alloc(64, 64);
+        let writes = alloc.alloc(64, 64);
+        let wl = PeWorkload::new(
+            vec![reads],
+            vec![writes],
+            rng.pick(&[500, 2000]),
+            rng.pick(&[0.4, 0.8]),
+            rng.pick(&[0.1, 0.4]),
+        );
+        sim.add_pe_workload(&wl);
+    }
+    let with_dma = rng.chance(50);
+    if with_dma {
+        let region = alloc.alloc(128, 128);
+        let dir = if rng.chance(50) { DmaDir::In } else { DmaDir::Out };
+        let now = sim.noc.now();
+        sim.dma_mut().program(vec![DmaXfer { region, dir }], now);
+    }
+
+    let desc = format!(
+        "k={} j={} burst={} rob={} zfifo={} wheel={} gemm={}x{}x{} acc={} \
+         mode={mode} pe={with_pe} dma={with_dma}",
+        cfg.resp_k,
+        cfg.req_j,
+        cfg.burst,
+        cfg.rob_depth,
+        cfg.z_fifo_depth,
+        cfg.event_wheel_slots,
+        spec.m,
+        spec.k,
+        spec.n,
+        spec.accumulate,
+    );
+    (desc, sim)
+}
+
+const BUDGET: u64 = 200_000_000;
+
+fn complete(sim: &mut Sim, dense: bool) -> RunResult {
+    if dense {
+        sim.run_dense(BUDGET)
+    } else {
+        sim.run_fast_forward(BUDGET)
+    }
+}
+
+#[test]
+fn snapshot_restore_resume_equals_uninterrupted_across_seeds() {
+    for dense in [false, true] {
+        let stepper = if dense { "dense" } else { "fast-forward" };
+        for seed in 0..30u64 {
+            let (desc, mut reference) = build(seed);
+            let expect = complete(&mut reference, dense);
+
+            let (_, mut sim) = build(seed);
+            // interrupt a seed-derived prefix of the run (1..500 dense
+            // steps; stop early if the run drains first)
+            let steps = 1 + (seed.wrapping_mul(37)) % 499;
+            for _ in 0..steps {
+                if !sim.step() {
+                    break;
+                }
+            }
+            let snap = sim.snapshot();
+
+            // 1. capture is free: completing the interrupted run (which
+            //    the snapshot was taken from) matches the reference
+            let poisoned = complete(&mut sim, dense);
+            assert_eq!(
+                poisoned, expect,
+                "seed {seed} ({desc}) [{stepper}]: taking a snapshot \
+                 perturbed the run it was captured from"
+            );
+
+            // 2. restore + resume is exact
+            sim.restore(&snap);
+            assert_eq!(
+                sim.noc.now(),
+                snap.now(),
+                "seed {seed} ({desc}): restore must rewind the clock to \
+                 the capture point"
+            );
+            let resumed = complete(&mut sim, dense);
+            assert_eq!(
+                resumed, expect,
+                "seed {seed} ({desc}) [{stepper}]: restore+resume \
+                 diverged from the uninterrupted run"
+            );
+
+            // 3. snapshots are not consumed: restore twice, same result
+            sim.restore(&snap);
+            let again = complete(&mut sim, dense);
+            assert_eq!(
+                again, expect,
+                "seed {seed} ({desc}) [{stepper}]: second restore from \
+                 the same snapshot diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn snapshot_after_completion_restores_the_drained_state() {
+    // Edge case: capturing AFTER the run has drained must restore to a
+    // terminal state — resuming adds nothing and reports the same result.
+    for seed in [3u64, 11, 19] {
+        let (desc, mut sim) = build(seed);
+        let done = complete(&mut sim, true);
+        let snap = sim.snapshot();
+        sim.restore(&snap);
+        assert!(
+            !sim.step(),
+            "seed {seed} ({desc}): a restored drained sim must stay done"
+        );
+        let resumed = complete(&mut sim, true);
+        assert_eq!(
+            resumed, done,
+            "seed {seed} ({desc}): resuming a drained sim changed the \
+             result"
+        );
+    }
+}
+
+#[test]
+fn resumable_block_driver_round_trips_every_boundary() {
+    // ScheduleResult-level check: roll the incremental block driver back
+    // to EVERY saved iteration boundary and re-drive the suffix; each
+    // finalize must equal the monolithic `BlockRun::execute` byte-for-byte
+    // (this is the contract the cache's prefix-resume tier stands on).
+    let cfg = ArchConfig::tensorpool();
+    for (kind, iters) in [
+        (BlockKind::DwsepConv, 2),
+        (BlockKind::FcSoftmax, 3),
+        (BlockKind::Mha, 1),
+    ] {
+        for mode in [ScheduleMode::Sequential, ScheduleMode::Concurrent] {
+            let run = BlockRun::new(kind, iters, mode);
+            let expect = run.execute(&cfg);
+            let block = run.build(&cfg);
+            let mut driver = ResumableBlockSim::new(&cfg);
+            let mut boundaries = Vec::new();
+            for it in &block.iters {
+                driver.drive(it, mode);
+                boundaries.push(driver.save());
+            }
+            assert_eq!(
+                driver.finalize(mode),
+                expect,
+                "{kind:?}/{mode:?}: uninterrupted driver diverged"
+            );
+            for (i, b) in boundaries.iter().enumerate() {
+                driver.restore(b);
+                for it in &block.iters[i + 1..] {
+                    driver.drive(it, mode);
+                }
+                assert_eq!(
+                    driver.finalize(mode),
+                    expect,
+                    "{kind:?}/{mode:?}: resume from boundary {i} diverged"
+                );
+            }
+        }
+    }
+}
