@@ -1,0 +1,154 @@
+//! Bench: fleet-scale multi-cell serving on the lock-striped block cache.
+//!
+//! Three measurements feed the perf trajectory:
+//! * **drive**: wall-clock of a 64-cell fleet, serial vs parallel drives
+//!   (fresh caches each), asserting the reports are byte-identical — the
+//!   striping must never change a number.
+//! * **dedup**: distinct raw block simulations with one SHARED cache
+//!   across all 64 cells vs the sum over 64 INDEPENDENT single-cell
+//!   fleets — the shared count must be strictly smaller (the whole point
+//!   of sharing).
+//! * **determinism anchors**: `fleet_cycles_total` (total simulated
+//!   cycles across every cell TTI) and `total_energy_j` are exact
+//!   functions of the scenario; `tensorpool bench-diff` gates on them
+//!   while wall clocks stay informational.
+//!
+//! Emits the repo's perf-trajectory JSON (`BENCH_fleet.json` schema) on
+//! stdout; set `TENSORPOOL_BENCH_OUT=<path>` to also write the file. The
+//! bench process runs with cwd = the package root (`rust/`), so the
+//! checked-in workspace-root baseline is refreshed with:
+//! `TENSORPOOL_BENCH_OUT=../BENCH_fleet.json cargo bench --bench fleet`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use serde::Serialize;
+use tensorpool::exec::BlockScheduleCache;
+use tensorpool::fleet::{run_fleet, FleetScenario};
+
+#[derive(Serialize)]
+struct BenchReport {
+    bench: &'static str,
+    unit: &'static str,
+    status: &'static str,
+    fleet: FleetTiming,
+}
+
+#[derive(Serialize)]
+struct FleetTiming {
+    cells: usize,
+    mean_users_per_cell: usize,
+    ttis: usize,
+    serial_wall_s: f64,
+    parallel_wall_s: f64,
+    threads: usize,
+    parallel_speedup: f64,
+    served_total: u64,
+    handovers: u64,
+    deferred_for_power_total: u64,
+    /// Total simulated cycles across every cell TTI — deterministic,
+    /// gated by `tensorpool bench-diff`.
+    fleet_cycles_total: u64,
+    /// Site energy priced from simulator event counters — deterministic,
+    /// also gated by `bench-diff`.
+    total_energy_j: f64,
+    /// Distinct raw block simulations when all 64 cells share one
+    /// striped cache…
+    shared_distinct_block_sims: usize,
+    /// …vs the sum over 64 independent single-cell fleets. Shared must
+    /// be strictly smaller.
+    independent_distinct_block_sims: usize,
+    shared_cache_hits: u64,
+}
+
+fn main() {
+    let s = FleetScenario::new("bench_fleet_64c", 64, 2, 4);
+    println!(
+        "fleet bench: {} cells x {} TTIs, mean {} users/cell/TTI",
+        s.cells, s.num_ttis, s.mean_users_per_cell,
+    );
+
+    // ---- drive: serial vs parallel, byte-identical ------------------------
+    let t0 = Instant::now();
+    let serial =
+        run_fleet(&s, &Arc::new(BlockScheduleCache::new()), false);
+    let serial_wall = t0.elapsed().as_secs_f64();
+
+    let shared = Arc::new(BlockScheduleCache::new());
+    let t0 = Instant::now();
+    let report = run_fleet(&s, &shared, true);
+    let parallel_wall = t0.elapsed().as_secs_f64();
+    assert_eq!(serial, report, "parallel must be byte-identical to serial");
+    println!(
+        "drive: serial {serial_wall:.3}s, parallel {parallel_wall:.3}s \
+         ({:.2}x on {} threads); served {}/{} users, {} handovers",
+        serial_wall / parallel_wall.max(1e-12),
+        rayon::current_num_threads(),
+        report.served_total,
+        report.submitted_total,
+        report.handovers,
+    );
+
+    // ---- dedup: one shared cache vs 64 independent caches -----------------
+    let (shared_hits, _) = shared.stats();
+    let independent_sims: usize = (0..s.cells)
+        .map(|c| {
+            let mut one = FleetScenario::new(
+                format!("bench_fleet_1c_{c}"),
+                1,
+                s.mean_users_per_cell,
+                s.num_ttis,
+            );
+            // a distinct arrival stream per stand-alone cell, mirroring
+            // the per-cell streams of the shared fleet
+            one.seed = s.seed.wrapping_add(1 + c as u64).max(1);
+            let own = Arc::new(BlockScheduleCache::new());
+            run_fleet(&one, &own, false);
+            own.len()
+        })
+        .sum();
+    assert!(
+        shared.len() < independent_sims,
+        "sharing must strictly reduce raw block simulations \
+         (shared {} vs independent {})",
+        shared.len(),
+        independent_sims,
+    );
+    println!(
+        "dedup: {} distinct block sims shared across 64 cells \
+         ({shared_hits} recalls) vs {independent_sims} summed over 64 \
+         independent caches",
+        shared.len(),
+    );
+
+    // ---- perf-trajectory JSON (BENCH_fleet.json schema) -------------------
+    let out = BenchReport {
+        bench: "fleet",
+        unit: "wall-clock seconds (64-cell lockstep drive) + dedup counts",
+        status: "measured",
+        fleet: FleetTiming {
+            cells: s.cells,
+            mean_users_per_cell: s.mean_users_per_cell,
+            ttis: s.num_ttis,
+            serial_wall_s: serial_wall,
+            parallel_wall_s: parallel_wall,
+            threads: rayon::current_num_threads(),
+            parallel_speedup: serial_wall / parallel_wall.max(1e-12),
+            served_total: report.served_total,
+            handovers: report.handovers,
+            deferred_for_power_total: report.deferred_for_power_total,
+            fleet_cycles_total: report.total_cycles,
+            total_energy_j: report.site_energy_j,
+            shared_distinct_block_sims: shared.len(),
+            independent_distinct_block_sims: independent_sims,
+            shared_cache_hits: shared_hits,
+        },
+    };
+    let json =
+        serde_json::to_string_pretty(&out).expect("report serializes");
+    println!("{json}");
+    if let Some(path) = std::env::var_os("TENSORPOOL_BENCH_OUT") {
+        std::fs::write(&path, &json).expect("write bench JSON");
+        eprintln!("[bench] wrote {}", path.to_string_lossy());
+    }
+}

@@ -307,6 +307,15 @@ impl Server {
         self.queue.len()
     }
 
+    /// Pop the NEWEST queued request (the tail) — the fleet balancer's
+    /// shedding primitive. Taking from the tail preserves FIFO fairness
+    /// for the users who have waited longest here, while the youngest —
+    /// who would wait the longest anyway — are handed to a less-loaded
+    /// neighbor. Returns `None` on an empty queue.
+    pub fn take_newest(&mut self) -> Option<TtiRequest> {
+        self.queue.pop_back()
+    }
+
     /// The block passes one request contributes under `policy`. Batched
     /// runs are per *pipeline kind* at reference scale (callers dedup);
     /// per-user runs scale iteration counts by the user's RE share.

@@ -52,9 +52,9 @@
 //! [`ArchKnobs`] over the TensorPool base (modified topology/frequency/
 //! bandwidths) are computed uncached rather than risking key aliasing.
 
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+
+use serde::{Deserialize, Serialize};
 
 use crate::ppa::power::EnergyModel;
 use crate::sim::{ArchConfig, NocStats, RunResult, Sim, TeRunStats};
@@ -66,6 +66,7 @@ use super::resume::{ResumableBlockSim, ResumePoint};
 use super::schedule::{
     active_te_slots, drive_iteration, ScheduleMode, ScheduleResult,
 };
+use super::stripe::StripedMap;
 use super::substrate::{analytic_block, ArchRun, ArchSpec, Substrate};
 
 /// Content key of one block-schedule simulation. `iters` is normalized to
@@ -232,31 +233,37 @@ fn compose(
 }
 
 /// Thread-safe memo of block-schedule simulations, shared (via `Arc`)
-/// between the sweep runner and any number of [`crate::coordinator::Server`]s.
+/// between the sweep runner, any number of
+/// [`crate::coordinator::Server`]s, and every cell of a fleet.
+///
+/// Each tier is a lock-striped [`StripedMap`] (64 shards, shard = the
+/// key-hash's high bits), so hundreds of rayon-sharded cells recalling
+/// blocks concurrently contend only when two keys share a shard — never
+/// on one global lock. Striping is invisible to content addressing
+/// (shard choice is a pure function of the key hash; see
+/// [`crate::exec::stripe`]), so recall results stay byte-identical by
+/// construction, and the per-shard hit/miss counters fold into the same
+/// `(hits, misses)` totals the old global counters reported.
 pub struct BlockScheduleCache {
-    blocks: Mutex<HashMap<BlockKey, ScheduleResult>>,
-    iter_memo: Mutex<HashMap<IterKey, IterOutcome>>,
+    blocks: StripedMap<BlockKey, ScheduleResult>,
+    iter_memo: StripedMap<IterKey, IterOutcome>,
     /// Tier 3 — prefix-resume over `Sim` snapshots: saved
     /// [`ResumePoint`]s at every iteration boundary of blocks the
     /// monolithic no-burst path drove. Where tier 2's additive
     /// composition is unsound (no-burst boundaries are not history-free),
     /// restoring captured state is still exact, so a block extends the
     /// longest saved prefix instead of re-simulating from cycle 0.
-    prefix: Mutex<HashMap<PrefixKey, ResumePoint>>,
+    prefix: StripedMap<PrefixKey, ResumePoint>,
     /// Analytic-substrate block runs (`CoreOnly` / `NpuWideMac`), keyed by
     /// the same content key as tier 1 — the substrate inside
     /// [`ArchSpec`] keeps entries from ever aliasing across machines.
-    analytic: Mutex<HashMap<BlockKey, ArchRun>>,
+    analytic: StripedMap<BlockKey, ArchRun>,
     /// When false, tier 2 is disabled and block-level misses run the
     /// monolithic simulation (the PR 2 behavior) — used by the regression
     /// tests that pin memoized == block-level == uncached.
     iter_memo_enabled: bool,
-    hits: AtomicU64,
-    misses: AtomicU64,
     /// Runs for configs not expressible as sweep knobs (computed uncached).
     uncacheable: AtomicU64,
-    iter_hits: AtomicU64,
-    iter_misses: AtomicU64,
     /// Raw iteration segments actually simulated, whichever path ran them:
     /// memoized blocks count their segment misses, monolithic runs count
     /// their full iteration lists. The comparable "raw simulation work"
@@ -273,21 +280,57 @@ pub struct BlockScheduleCache {
 impl Default for BlockScheduleCache {
     fn default() -> Self {
         BlockScheduleCache {
-            blocks: Mutex::new(HashMap::new()),
-            iter_memo: Mutex::new(HashMap::new()),
-            prefix: Mutex::new(HashMap::new()),
-            analytic: Mutex::new(HashMap::new()),
+            blocks: StripedMap::new(),
+            iter_memo: StripedMap::new(),
+            prefix: StripedMap::new(),
+            analytic: StripedMap::new(),
             iter_memo_enabled: true,
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
             uncacheable: AtomicU64::new(0),
-            iter_hits: AtomicU64::new(0),
-            iter_misses: AtomicU64::new(0),
             iters_simulated: AtomicU64::new(0),
             memo_fallbacks: AtomicU64::new(0),
             prefix_resumes: AtomicU64::new(0),
         }
     }
+}
+
+/// Per-tier hit/miss/entry accounting plus the raw-work counters —
+/// everything `tensorpool capacity --cache-stats` / `fleet --cache-stats`
+/// print. Pure observability: nothing here feeds back into execution.
+#[derive(
+    Clone, Copy, Debug, Default, PartialEq, Serialize, Deserialize,
+)]
+pub struct CacheStats {
+    /// Tier 1 (whole-block recall) lookups.
+    pub block_hits: u64,
+    pub block_misses: u64,
+    pub block_entries: usize,
+    /// Tier 2 (iteration memo) lookups.
+    pub iter_hits: u64,
+    pub iter_misses: u64,
+    pub iter_entries: usize,
+    /// Tier 3 probe counts: the prefix scan probes boundaries longest
+    /// first, so one block run may count several probe misses before its
+    /// hit (or none — a cold run probes every boundary).
+    pub prefix_probe_hits: u64,
+    pub prefix_probe_misses: u64,
+    pub prefix_entries: usize,
+    /// Analytic-substrate (CoreOnly / NpuWideMac) lookups.
+    pub analytic_hits: u64,
+    pub analytic_misses: u64,
+    pub analytic_entries: usize,
+    /// Non-knob configs computed uncached (no tier touched).
+    pub uncacheable_runs: u64,
+    /// Block simulations actually executed (tier-1 misses + uncacheable).
+    pub raw_block_sims: u64,
+    /// Raw iteration segments simulated across every path.
+    pub raw_iterations: u64,
+    /// Tier-2 compositions that fell back to a monolithic run.
+    pub memo_fallbacks: u64,
+    /// Tier-3 runs that started from a restored snapshot.
+    pub prefix_resumes: u64,
+    /// Deepest shard across all four striped tiers — the stripe
+    /// load-balance diagnostic.
+    pub shard_max_depth: usize,
 }
 
 impl BlockScheduleCache {
@@ -303,10 +346,11 @@ impl BlockScheduleCache {
         BlockScheduleCache { iter_memo_enabled: false, ..Self::default() }
     }
 
-    /// (hits, misses) since construction — block-level tier. Uncacheable
-    /// runs count as neither; see [`BlockScheduleCache::sims_run`].
+    /// (hits, misses) since construction — block-level tier, folded
+    /// across the per-shard counters. Uncacheable runs count as neither;
+    /// see [`BlockScheduleCache::sims_run`].
     pub fn stats(&self) -> (u64, u64) {
-        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+        self.blocks.stats()
     }
 
     /// Total block simulations actually executed (block-level misses +
@@ -316,16 +360,12 @@ impl BlockScheduleCache {
     /// simulation here; see [`BlockScheduleCache::iterations_simulated`]
     /// for the sub-block accounting.
     pub fn sims_run(&self) -> u64 {
-        self.misses.load(Ordering::Relaxed)
-            + self.uncacheable.load(Ordering::Relaxed)
+        self.blocks.stats().1 + self.uncacheable.load(Ordering::Relaxed)
     }
 
     /// (iteration-memo hits, iteration-memo misses) since construction.
     pub fn iter_stats(&self) -> (u64, u64) {
-        (
-            self.iter_hits.load(Ordering::Relaxed),
-            self.iter_misses.load(Ordering::Relaxed),
-        )
+        self.iter_memo.stats()
     }
 
     /// Raw iteration segments simulated since construction, across every
@@ -350,12 +390,12 @@ impl BlockScheduleCache {
 
     /// Saved prefix boundaries currently held (tier 3).
     pub fn prefix_len(&self) -> usize {
-        self.prefix.lock().expect("prefix cache poisoned").len()
+        self.prefix.len()
     }
 
     /// Distinct block-schedule configurations currently cached (tier 1).
     pub fn len(&self) -> usize {
-        self.blocks.lock().expect("block cache poisoned").len()
+        self.blocks.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -364,12 +404,46 @@ impl BlockScheduleCache {
 
     /// Distinct iteration segments currently memoized (tier 2).
     pub fn iter_memo_len(&self) -> usize {
-        self.iter_memo.lock().expect("iter memo poisoned").len()
+        self.iter_memo.len()
     }
 
     /// Distinct analytic-substrate block runs currently cached.
     pub fn analytic_len(&self) -> usize {
-        self.analytic.lock().expect("analytic cache poisoned").len()
+        self.analytic.len()
+    }
+
+    /// The full per-tier accounting snapshot — what `--cache-stats`
+    /// prints and [`crate::fleet`] reports embed.
+    pub fn cache_stats(&self) -> CacheStats {
+        let (block_hits, block_misses) = self.blocks.stats();
+        let (iter_hits, iter_misses) = self.iter_memo.stats();
+        let (prefix_probe_hits, prefix_probe_misses) = self.prefix.stats();
+        let (analytic_hits, analytic_misses) = self.analytic.stats();
+        CacheStats {
+            block_hits,
+            block_misses,
+            block_entries: self.blocks.len(),
+            iter_hits,
+            iter_misses,
+            iter_entries: self.iter_memo.len(),
+            prefix_probe_hits,
+            prefix_probe_misses,
+            prefix_entries: self.prefix.len(),
+            analytic_hits,
+            analytic_misses,
+            analytic_entries: self.analytic.len(),
+            uncacheable_runs: self.uncacheable.load(Ordering::Relaxed),
+            raw_block_sims: self.sims_run(),
+            raw_iterations: self.iters_simulated.load(Ordering::Relaxed),
+            memo_fallbacks: self.memo_fallbacks.load(Ordering::Relaxed),
+            prefix_resumes: self.prefix_resumes.load(Ordering::Relaxed),
+            shard_max_depth: self
+                .blocks
+                .max_depth()
+                .max(self.iter_memo.max_depth())
+                .max(self.prefix.max_depth())
+                .max(self.analytic.max_depth()),
+        }
     }
 
     /// Run (or recall) one block schedule. Equal (config, run) always
@@ -399,15 +473,13 @@ impl BlockScheduleCache {
             iters: if run.kind == BlockKind::Mha { 0 } else { run.iters },
             mode: run.mode,
         };
-        if let Some(hit) =
-            self.blocks.lock().expect("block cache poisoned").get(&key)
-        {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return hit.clone();
+        if let Some(hit) = self.blocks.get(&key) {
+            return hit;
         }
-        // Simulate OUTSIDE the lock (same benign-race policy as the
+        // Simulate OUTSIDE any lock (same benign-race policy as the
         // scenario cache: concurrent misses on one key compute the same
-        // pure result; last insert wins).
+        // pure result; last insert wins). The miss was counted by the
+        // shard at lookup time.
         let r = if !self.iter_memo_enabled {
             // Tier 1 only (the PR 2 baseline the regression tests pin
             // against): monolithic, no sub-block reuse of any kind.
@@ -425,11 +497,7 @@ impl BlockScheduleCache {
             // drives only the suffix.
             self.run_resumable(cfg, &knobs, &run)
         };
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        self.blocks
-            .lock()
-            .expect("block cache poisoned")
-            .insert(key, r.clone());
+        self.blocks.insert(key, r.clone());
         r
     }
 
@@ -459,27 +527,15 @@ impl BlockScheduleCache {
                 mode: run.mode,
                 sig: iteration_signature(cfg, it),
             };
-            let hit = self
-                .iter_memo
-                .lock()
-                .expect("iter memo poisoned")
-                .get(&key)
-                .cloned();
-            let outcome = match hit {
-                Some(o) => {
-                    self.iter_hits.fetch_add(1, Ordering::Relaxed);
-                    o
-                }
+            let outcome = match self.iter_memo.get(&key) {
+                Some(o) => o,
                 None => {
                     // Simulate outside the lock; concurrent misses on one
-                    // segment race benignly (identical pure results).
+                    // segment race benignly (identical pure results). The
+                    // shard counted the miss at lookup time.
                     let o = simulate_iteration(cfg, it, run.mode);
-                    self.iter_misses.fetch_add(1, Ordering::Relaxed);
                     self.iters_simulated.fetch_add(1, Ordering::Relaxed);
-                    self.iter_memo
-                        .lock()
-                        .expect("iter memo poisoned")
-                        .insert(key, o.clone());
+                    self.iter_memo.insert(key, o.clone());
                     o
                 }
             };
@@ -521,14 +577,16 @@ impl BlockScheduleCache {
         };
         let mut driver = ResumableBlockSim::new(cfg);
         let mut start = 0usize;
-        {
-            let prefixes = self.prefix.lock().expect("prefix cache poisoned");
-            for n in (1..=sigs.len()).rev() {
-                if let Some(p) = prefixes.get(&key_for(n)) {
-                    driver.restore(p);
-                    start = n;
-                    break;
-                }
+        // Probe boundaries longest-first; each probe is one striped get
+        // (counted per shard as a prefix probe hit/miss). Between probes
+        // another thread may be extending the same prefix — harmless: a
+        // probe either finds a saved state (exact by the snapshot
+        // contract) or this run drives the iteration itself.
+        for n in (1..=sigs.len()).rev() {
+            if let Some(p) = self.prefix.get(&key_for(n)) {
+                driver.restore(&p);
+                start = n;
+                break;
             }
         }
         if start > 0 {
@@ -540,10 +598,7 @@ impl BlockScheduleCache {
             // wins).
             driver.drive(it, run.mode);
             self.iters_simulated.fetch_add(1, Ordering::Relaxed);
-            self.prefix
-                .lock()
-                .expect("prefix cache poisoned")
-                .insert(key_for(i + 1), driver.save());
+            self.prefix.insert(key_for(i + 1), driver.save());
         }
         driver.finalize(run.mode)
     }
@@ -580,22 +635,14 @@ impl BlockScheduleCache {
             iters: if run.kind == BlockKind::Mha { 0 } else { run.iters },
             mode: run.mode,
         };
-        if let Some(hit) = self
-            .analytic
-            .lock()
-            .expect("analytic cache poisoned")
-            .get(&key)
-        {
-            return *hit;
+        if let Some(hit) = self.analytic.get(&key) {
+            return hit;
         }
         // Build + price outside the lock (benign race: pure result).
         let block = run.build(&cfg);
         let r = analytic_block(spec, &block, &em)
             .expect("non-TensorPool substrate has an analytic model");
-        self.analytic
-            .lock()
-            .expect("analytic cache poisoned")
-            .insert(key, r);
+        self.analytic.insert(key, r);
         r
     }
 }
@@ -865,5 +912,86 @@ mod tests {
             ScheduleMode::Concurrent,
         );
         assert_eq!(a.cycles, default_run.cycles, "wheel size is timing-neutral");
+    }
+
+    #[test]
+    fn concurrent_hammer_matches_serial_fill() {
+        // The striping pin: many threads × overlapping keys against one
+        // shared cache return EXACTLY what a serial fill of a fresh cache
+        // computed — every tier (block recall, iteration memo, and the
+        // tier-3 prefix snapshots via the no-burst configs) exercised
+        // under contention.
+        let burst = ArchConfig::tensorpool();
+        let no_burst = ArchConfig::tensorpool().without_burst();
+        let mut work = Vec::new();
+        for kind in [BlockKind::FcSoftmax, BlockKind::DwsepConv] {
+            for mode in [ScheduleMode::Sequential, ScheduleMode::Concurrent] {
+                for iters in [1usize, 2, 3] {
+                    work.push((&burst, BlockRun::new(kind, iters, mode)));
+                }
+            }
+        }
+        for iters in [1usize, 2, 3] {
+            work.push((
+                &no_burst,
+                BlockRun::new(BlockKind::FcSoftmax, iters, ScheduleMode::Concurrent),
+            ));
+        }
+        let serial = BlockScheduleCache::new();
+        let expected: Vec<ScheduleResult> =
+            work.iter().map(|(cfg, run)| serial.run(cfg, *run)).collect();
+        let shared = BlockScheduleCache::new();
+        std::thread::scope(|s| {
+            for t in 0..8usize {
+                let shared = &shared;
+                let work = &work;
+                let expected = &expected;
+                s.spawn(move || {
+                    // Each thread walks the whole work list from a
+                    // different rotation, so every key is raced by all 8.
+                    for i in 0..work.len() {
+                        let j = (i + t * 5) % work.len();
+                        let (cfg, run) = &work[j];
+                        assert_eq!(
+                            shared.run(cfg, *run),
+                            expected[j],
+                            "hammered result diverged from the serial fill"
+                        );
+                    }
+                });
+            }
+        });
+        // Content converged to the serial fill's: same distinct keys, and
+        // 8 threads × the work list saw (len) misses at most per key —
+        // every lookup after the first insert of a key is a hit.
+        assert_eq!(shared.len(), serial.len());
+        let (hits, misses) = shared.stats();
+        assert_eq!(hits + misses, 8 * work.len() as u64);
+        assert!(
+            misses >= serial.len() as u64,
+            "at least one miss per distinct key"
+        );
+    }
+
+    #[test]
+    fn cache_stats_snapshot_is_consistent() {
+        let cfg = ArchConfig::tensorpool();
+        let cache = BlockScheduleCache::new();
+        let run = BlockRun::new(BlockKind::FcSoftmax, 2, ScheduleMode::Concurrent);
+        cache.run(&cfg, run);
+        cache.run(&cfg, run);
+        let s = cache.cache_stats();
+        assert_eq!((s.block_hits, s.block_misses), cache.stats());
+        assert_eq!((s.iter_hits, s.iter_misses), cache.iter_stats());
+        assert_eq!(s.block_entries, cache.len());
+        assert_eq!(s.iter_entries, cache.iter_memo_len());
+        assert_eq!(s.raw_block_sims, cache.sims_run());
+        assert_eq!(s.raw_iterations, cache.iterations_simulated());
+        assert_eq!(s.uncacheable_runs, 0);
+        assert!(s.shard_max_depth >= 1, "something is cached somewhere");
+        // Serializes for report embedding.
+        let json = serde_json::to_string(&s).expect("stats serialize");
+        let back: CacheStats = serde_json::from_str(&json).expect("roundtrip");
+        assert_eq!(back, s);
     }
 }

@@ -16,15 +16,18 @@
 //! dependency graph is strictly one-way,
 //!
 //! ```text
-//! sim → workload → exec → coordinator → sweep → figures / CLI
+//! sim → workload → exec → coordinator → fleet → sweep → figures / CLI
 //! ```
 //!
 //! `exec` depends only on [`crate::sim`] and [`crate::workload`]; it must
-//! never import `crate::coordinator` or `crate::sweep`. The serving loop
-//! (`coordinator::server`) and the sweep engine both consume block
-//! execution through this module, which is what lets a `Server` and a
-//! `SweepRunner` share one [`BlockScheduleCache`] without a dependency
-//! cycle (PR 2 had `coordinator ↔ sweep` pointing both ways).
+//! never import `crate::coordinator`, `crate::fleet`, or `crate::sweep`.
+//! The serving loop (`coordinator::server`), the fleet layer, and the
+//! sweep engine all consume block execution through this module, which is
+//! what lets a `Server`, a whole `Fleet` of them, and a `SweepRunner`
+//! share one [`BlockScheduleCache`] without a dependency cycle (PR 2 had
+//! `coordinator ↔ sweep` pointing both ways). Every cache tier sits on
+//! the lock-striped [`StripedMap`], so that sharing scales to hundreds of
+//! concurrent cells without a global-lock convoy.
 //!
 //! Determinism contract: every entry point here is a pure function of its
 //! arguments — equal (config × block × iters × mode) produce byte-identical
@@ -36,14 +39,16 @@ pub mod gemm;
 pub mod knobs;
 pub mod resume;
 pub mod schedule;
+pub mod stripe;
 pub mod substrate;
 
 pub use block::{simulate_block, BlockKind, BlockRun};
-pub use cache::BlockScheduleCache;
+pub use cache::{BlockScheduleCache, CacheStats};
 pub use gemm::GemmRun;
 pub use knobs::ArchKnobs;
 pub use resume::{ResumableBlockSim, ResumePoint};
 pub use schedule::{
     compare, run_concurrent, run_sequential, ScheduleMode, ScheduleResult,
 };
+pub use stripe::{StripedMap, STRIPE_SHARDS};
 pub use substrate::{ArchRun, ArchSpec, Substrate};

@@ -1,0 +1,251 @@
+//! Lock-striped concurrent map — the contention fix under every cache
+//! tier.
+//!
+//! The block-schedule cache used to hold each tier behind ONE global
+//! `Mutex<HashMap>`. That is correct but serializes hundreds of fleet
+//! cells sharing one `Arc<BlockScheduleCache>` precisely on the hot
+//! recall path. [`StripedMap`] splits the key space across a fixed array
+//! of [`STRIPE_SHARDS`] independently-locked shards, so concurrent
+//! lookups of different keys almost never contend, while the map's
+//! observable content is unchanged.
+//!
+//! **Striping invariants** (the reason striping cannot change a number):
+//!
+//! * **Shard choice depends only on the key's hash** — never on insertion
+//!   order, map population, or thread identity. The hasher is
+//!   [`DefaultHasher::new()`], which is *deterministic* (SipHash with
+//!   fixed zero keys — unlike a per-map `RandomState`), so one key maps
+//!   to one shard for the life of the process. A future std hash-algorithm
+//!   change would only re-distribute keys across shards; it can never
+//!   affect lookups, because every probe of a key goes to that key's
+//!   shard by the same function.
+//! * **Content addressing is untouched**: a shard is just a smaller
+//!   `HashMap` over the same keys, so `get`/`insert` semantics (and
+//!   therefore the byte-identity of every cache recall) are those of the
+//!   single-map original by construction.
+//! * **Counters are per-shard** ([`StripedMap::stats`] folds them), so
+//!   hit/miss accounting never reintroduces a shared cache line for all
+//!   threads to bounce.
+//!
+//! Shard selection uses the hash's HIGH bits (`>> (64 - SHARD_BITS)`):
+//! `HashMap` derives its bucket index from the low bits, so the two
+//! indices stay independent and a pathological key set cannot alias both.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+const SHARD_BITS: u32 = 6;
+
+/// Fixed shard arity of every [`StripedMap`]. A power of two so shard
+/// selection is a shift of the hash's high bits.
+pub const STRIPE_SHARDS: usize = 1 << SHARD_BITS;
+
+struct Shard<K, V> {
+    map: Mutex<HashMap<K, V>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl<K, V> Shard<K, V> {
+    fn new() -> Self {
+        Shard {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+}
+
+/// A concurrent `HashMap<K, V>` behind [`STRIPE_SHARDS`] independent
+/// locks, with contention-free per-shard hit/miss counters.
+///
+/// The intended use is the benign-race memo pattern every cache tier in
+/// this crate follows: `get` (counts a hit or a miss), on miss compute
+/// the pure result OUTSIDE any lock, then `insert` (concurrent misses on
+/// one key compute identical results; last insert wins).
+pub struct StripedMap<K, V> {
+    shards: Vec<Shard<K, V>>,
+}
+
+impl<K, V> Default for StripedMap<K, V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<K, V> StripedMap<K, V> {
+    pub fn new() -> Self {
+        StripedMap {
+            shards: (0..STRIPE_SHARDS).map(|_| Shard::new()).collect(),
+        }
+    }
+
+    /// Total entries across all shards.
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.map.lock().expect("stripe poisoned").len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// (hits, misses) folded across the per-shard counters. A `get` that
+    /// found the key counts one hit; one that did not counts one miss.
+    pub fn stats(&self) -> (u64, u64) {
+        self.shards.iter().fold((0, 0), |(h, m), s| {
+            (
+                h + s.hits.load(Ordering::Relaxed),
+                m + s.misses.load(Ordering::Relaxed),
+            )
+        })
+    }
+
+    /// Entry count of the deepest shard — the load-balance diagnostic
+    /// (a well-hashed key set keeps this near `len / STRIPE_SHARDS`).
+    pub fn max_depth(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.map.lock().expect("stripe poisoned").len())
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+impl<K: Hash + Eq, V> StripedMap<K, V> {
+    /// The shard index of `key`: the high [`SHARD_BITS`] bits of a
+    /// deterministic hash. A pure function of the key alone — see the
+    /// module invariants.
+    fn shard_of(key: &K) -> usize {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() >> (64 - SHARD_BITS)) as usize
+    }
+
+    /// Clone-out lookup, counting a per-shard hit or miss.
+    pub fn get(&self, key: &K) -> Option<V>
+    where
+        V: Clone,
+    {
+        let shard = &self.shards[Self::shard_of(key)];
+        let hit = shard.map.lock().expect("stripe poisoned").get(key).cloned();
+        match hit {
+            Some(v) => {
+                shard.hits.fetch_add(1, Ordering::Relaxed);
+                Some(v)
+            }
+            None => {
+                shard.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or overwrite — last writer wins, per the benign-race
+    /// policy). Does not touch the hit/miss counters.
+    pub fn insert(&self, key: K, value: V) {
+        let shard = &self.shards[Self::shard_of(&key)];
+        shard.map.lock().expect("stripe poisoned").insert(key, value);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_choice_is_a_pure_function_of_the_key() {
+        // The striping invariant: equal keys land on equal shards, on any
+        // map instance — shard choice can depend on nothing else.
+        for key in 0u64..512 {
+            let a = StripedMap::<u64, u64>::shard_of(&key);
+            let b = StripedMap::<u64, u64>::shard_of(&key);
+            assert_eq!(a, b);
+            assert!(a < STRIPE_SHARDS);
+        }
+    }
+
+    #[test]
+    fn striped_content_matches_a_plain_hashmap() {
+        let striped = StripedMap::new();
+        let mut plain = HashMap::new();
+        for i in 0u64..1000 {
+            striped.insert(i, i * 3);
+            plain.insert(i, i * 3);
+        }
+        assert_eq!(striped.len(), plain.len());
+        for (k, v) in &plain {
+            assert_eq!(striped.get(k), Some(*v));
+        }
+        assert_eq!(striped.get(&1000), None);
+    }
+
+    #[test]
+    fn keys_spread_across_many_shards() {
+        let striped = StripedMap::new();
+        for i in 0u64..1000 {
+            striped.insert(i, ());
+        }
+        // 1000 well-hashed keys across 64 shards: the deepest shard must
+        // hold far less than everything, or striping buys no concurrency.
+        assert!(
+            striped.max_depth() < 100,
+            "deepest shard holds {} of 1000 entries",
+            striped.max_depth()
+        );
+        let used = (0..STRIPE_SHARDS)
+            .filter(|&i| {
+                !striped.shards[i].map.lock().unwrap().is_empty()
+            })
+            .count();
+        assert!(used > STRIPE_SHARDS / 2, "only {used} shards used");
+    }
+
+    #[test]
+    fn stats_fold_hits_and_misses_across_shards() {
+        let striped = StripedMap::new();
+        for i in 0u64..100 {
+            striped.insert(i, i);
+        }
+        for i in 0u64..100 {
+            assert_eq!(striped.get(&i), Some(i)); // 100 hits
+        }
+        for i in 100u64..150 {
+            assert_eq!(striped.get(&i), None); // 50 misses
+        }
+        assert_eq!(striped.stats(), (100, 50));
+    }
+
+    #[test]
+    fn concurrent_fill_matches_serial_fill() {
+        // 8 threads × overlapping keys: the final content must equal a
+        // serial fill (inserts of one key write identical values — the
+        // benign-race pattern the cache tiers rely on).
+        let striped = StripedMap::new();
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let striped = &striped;
+                s.spawn(move || {
+                    for i in 0..500u64 {
+                        let k = (i + t * 97) % 500;
+                        striped.insert(k, k * 7);
+                        assert_eq!(striped.get(&k), Some(k * 7));
+                    }
+                });
+            }
+        });
+        assert_eq!(striped.len(), 500);
+        for k in 0..500u64 {
+            assert_eq!(striped.get(&k), Some(k * 7));
+        }
+        let (hits, misses) = striped.stats();
+        // every threaded get hit (insert-before-get), plus the 500 above
+        assert_eq!(hits, 8 * 500 + 500);
+        assert_eq!(misses, 0);
+    }
+}

@@ -1,0 +1,104 @@
+//! Fleet-serving harness (`figures fleet`): cell-count scaling under the
+//! paper's 100 W site compute budget (Sec I densification argument).
+//!
+//! Every fleet in the study runs over ONE shared block-schedule cache —
+//! the point of the lock-striped tiers is that 2-cell and 32-cell sites
+//! recall the same block simulations instead of redoing them — so the
+//! trailing dedup line is the figure's punchline: distinct simulations
+//! stay flat while the served-cell count scales.
+
+use std::sync::Arc;
+
+use crate::exec::BlockScheduleCache;
+use crate::fleet::{run_fleet, FleetReport, FleetScenario};
+use crate::report::{f2, int, pct, Table};
+
+/// One row per fleet run: throughput, deadline tails, balancer and power
+/// accounting, site energy/power.
+pub fn fleet_table(reports: &[FleetReport]) -> String {
+    let mut t = Table::new(&[
+        "fleet",
+        "cells",
+        "TTIs",
+        "served",
+        "users/s",
+        "miss rate",
+        "p99 cell",
+        "p99.9 cell",
+        "max age",
+        "handover",
+        "pwr defer",
+        "backlog",
+        "site J",
+        "mean W",
+        "peak W",
+    ]);
+    for r in reports {
+        t.row(&[
+            r.name.clone(),
+            int(r.cells as u64),
+            int(r.num_ttis as u64),
+            format!("{}/{}", r.served_total, r.submitted_total),
+            f2(r.served_users_per_s),
+            pct(r.deadline_miss_rate),
+            pct(r.p99_cell_miss_rate),
+            pct(r.p999_cell_miss_rate),
+            int(r.max_backlog_age_ttis),
+            int(r.handovers),
+            int(r.deferred_for_power_total),
+            int(r.final_backlog as u64),
+            f2(r.site_energy_j),
+            f2(r.mean_site_power_w),
+            f2(r.peak_site_power_w),
+        ]);
+    }
+    t.to_string()
+}
+
+/// The `figures fleet` report: 2/8/32-cell sites, same offered load per
+/// cell, same 100 W site budget, one shared block cache across all three
+/// fleets.
+pub fn fleet_report() -> String {
+    let blocks = Arc::new(BlockScheduleCache::new());
+    let reports: Vec<FleetReport> = [2usize, 8, 32]
+        .iter()
+        .map(|&cells| {
+            let s =
+                FleetScenario::new(format!("site_{cells}c"), cells, 4, 4);
+            run_fleet(&s, &blocks, true)
+        })
+        .collect();
+    let (hits, _) = blocks.stats();
+    format!(
+        "Fleet — cell-count scaling under the 100 W site budget\n{}\n\
+         {} distinct block simulations served {} cached recalls across \
+         all three fleets\n",
+        fleet_table(&reports),
+        blocks.len(),
+        hits,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_table_renders_one_line_per_report() {
+        let blocks = Arc::new(BlockScheduleCache::new());
+        let r = run_fleet(&FleetScenario::smoke(), &blocks, false);
+        let table = fleet_table(std::slice::from_ref(&r));
+        // header + rule + one data row
+        assert_eq!(table.lines().count(), 3);
+        assert!(table.contains("fleet_smoke"));
+    }
+
+    #[test]
+    fn fleet_report_shares_one_cache_across_cell_counts() {
+        let report = fleet_report();
+        for label in ["site_2c", "site_8c", "site_32c"] {
+            assert!(report.contains(label), "missing row {label}");
+        }
+        assert!(report.contains("distinct block simulations"));
+    }
+}

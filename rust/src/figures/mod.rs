@@ -4,6 +4,7 @@
 pub mod block_figs;
 pub mod capacity_figs;
 pub mod energy_figs;
+pub mod fleet_figs;
 pub mod frontier_figs;
 pub mod gemm_figs;
 pub mod pe_figs;

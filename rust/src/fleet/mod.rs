@@ -1,0 +1,717 @@
+//! Fleet-scale multi-cell serving: N cells, one site budget, one shared
+//! block cache.
+//!
+//! The paper motivates TensorPool with 6G cell-site densification under a
+//! site-level ≤100 W compute budget (Sec I) — a constraint that only
+//! materializes when many cells serve traffic *concurrently*. This layer
+//! sits between [`crate::coordinator`] and [`crate::sweep`] in the one-way
+//! crate graph (`… → exec → coordinator → fleet → sweep/figures`, enforced
+//! by `tests/layering.rs`) and drives a [`Fleet`] of per-cell [`Server`]s
+//! in lockstep TTIs:
+//!
+//! 1. **Arrivals** (serial, cell order): each cell draws its own user
+//!    count and pipeline mix from a per-cell seeded xorshift stream
+//!    (seeds split from the scenario seed by splitmix64), so offered load
+//!    is deterministic and replayable at any cell count.
+//! 2. **Serve** (the only parallel phase): every cell schedules its TTI
+//!    across the rayon pool. Cells share one `Arc<BlockScheduleCache>` —
+//!    the lock-striped tiers ([`crate::exec::stripe`]) are what keep
+//!    hundreds of cells from convoying on a global lock — and block runs
+//!    are pure, so parallel == serial byte-for-byte.
+//! 3. **Reduce** (serial, cell order): per-TTI outcomes fold into fleet
+//!    aggregates in a fixed order, so every f64 sum is order-identical
+//!    between the parallel and serial drives.
+//! 4. **Balance** (serial, deterministic): any cell whose backlog exceeds
+//!    the handover threshold sheds its NEWEST queued users to the
+//!    least-loaded other cell (ties break on the lower cell index), one
+//!    request at a time, only while the move strictly improves imbalance.
+//!    Handed-over users keep their global id — they are re-served
+//!    elsewhere, never dropped or double-counted (the conservation
+//!    invariant the fleet tests pin).
+//!
+//! **Site-budget rollup**: `site_budget_mw` (default 100 W — the paper's
+//! densification cap) divides evenly into per-cell power-cap slices,
+//! min-ed with any explicit per-cell cap; each cell's admission then
+//! defers work exactly like the single-cell power-capped mode
+//! ([`crate::coordinator::BudgetPolicy`]), and the deferrals the balancer
+//! cannot re-place elsewhere surface in the report.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use rayon::prelude::*;
+use serde::{Deserialize, Serialize};
+
+use crate::coordinator::{
+    BatchPolicy, Pipeline, Server, TtiReport, TtiRequest,
+};
+use crate::exec::{ArchSpec, BlockScheduleCache, CacheStats};
+
+/// Per-TTI user-mix weights, one per serving [`Pipeline`]. Integers (any
+/// scale) so scenarios stay hashable; a user's pipeline is drawn
+/// proportionally to the weights. (Moved up from `sweep::scenario` when
+/// the fleet layer landed — the sweep re-exports it unchanged.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
+pub struct UserMix {
+    pub neural_receiver: u32,
+    pub neural_che: u32,
+    pub classical: u32,
+}
+
+impl UserMix {
+    /// A mix that routes every user to `p`.
+    pub fn pure(p: Pipeline) -> Self {
+        match p {
+            Pipeline::NeuralReceiver => {
+                UserMix { neural_receiver: 1, neural_che: 0, classical: 0 }
+            }
+            Pipeline::NeuralChe => {
+                UserMix { neural_receiver: 0, neural_che: 1, classical: 0 }
+            }
+            Pipeline::Classical => {
+                UserMix { neural_receiver: 0, neural_che: 0, classical: 1 }
+            }
+        }
+    }
+
+    pub fn total(&self) -> u32 {
+        self.neural_receiver + self.neural_che + self.classical
+    }
+
+    /// Pipeline of weighted slot `draw` (`draw < total()`). An all-zero
+    /// mix degrades to Classical.
+    pub fn pipeline_of(&self, draw: u32) -> Pipeline {
+        if draw < self.neural_receiver {
+            Pipeline::NeuralReceiver
+        } else if draw < self.neural_receiver + self.neural_che {
+            Pipeline::NeuralChe
+        } else {
+            Pipeline::Classical
+        }
+    }
+}
+
+/// How the offered load arrives over the TTIs of a scenario. (Moved up
+/// from `sweep::scenario`; the sweep re-exports it unchanged.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
+pub enum ArrivalPattern {
+    /// `users_per_tti` new users submitted before every TTI.
+    Uniform,
+    /// The same average load, bunched: `period × users_per_tti` users
+    /// arrive together every `period` TTIs (the backlog-drain stressor).
+    Bursty { period: u32 },
+}
+
+impl ArrivalPattern {
+    /// New users arriving before TTI `tti`.
+    pub fn arrivals(&self, tti: usize, users_per_tti: usize) -> usize {
+        match self {
+            ArrivalPattern::Uniform => users_per_tti,
+            ArrivalPattern::Bursty { period } => {
+                let p = (*period).max(1) as usize;
+                if tti % p == 0 {
+                    users_per_tti * p
+                } else {
+                    0
+                }
+            }
+        }
+    }
+}
+
+/// The deterministic PRNG every seeded draw in the serving stack uses
+/// (capacity scenarios and per-cell fleet arrivals alike).
+pub(crate) fn xorshift64(state: &mut u64) -> u64 {
+    let mut x = *state;
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    *state = x;
+    x
+}
+
+/// Split the scenario seed into one independent nonzero stream seed per
+/// cell (splitmix64 finalizer — avalanches even consecutive cell
+/// indices into uncorrelated xorshift states).
+fn cell_seed(seed: u64, cell: usize) -> u64 {
+    let mut z =
+        seed ^ (cell as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    (z ^ (z >> 31)).max(1)
+}
+
+/// One fleet study: N identical-substrate cells under a site power
+/// budget. Pure data, hashable; running it ([`run_fleet`]) is a
+/// deterministic pure function of this content, parallel or serial.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
+pub struct FleetScenario {
+    /// Display label only.
+    pub name: String,
+    /// Cell count (hundreds are cheap: cells share one block cache).
+    pub cells: usize,
+    /// Architecture every cell runs (substrate × knobs).
+    pub arch: ArchSpec,
+    pub mix: UserMix,
+    /// Mean offered load per cell per TTI; each cell draws uniformly in
+    /// `0..=2×mean` from its seeded stream, so the fleet total is noisy
+    /// per TTI but exactly replayable.
+    pub mean_users_per_cell: usize,
+    pub num_ttis: usize,
+    /// Resource elements each user occupies (paper reference TTI: 8192).
+    pub res_per_user: usize,
+    /// Per-TTI cycle budget; `None` = 1 ms at the configured clock.
+    pub budget_cycles: Option<u64>,
+    #[serde(default)]
+    pub policy: BatchPolicy,
+    /// Optional explicit per-cell power cap (mW); min-ed with the site
+    /// slice below.
+    #[serde(default)]
+    pub cell_power_budget_mw: Option<u32>,
+    /// Site-level power budget (mW) rolled up across all cells: each cell
+    /// admits under an even `site/cells` slice. `None` disables the
+    /// rollup. Default (via [`FleetScenario::new`]) is 100 W — the
+    /// paper's densification constraint.
+    #[serde(default)]
+    pub site_budget_mw: Option<u32>,
+    /// Backlog depth above which a cell sheds its newest users to the
+    /// least-loaded neighbor after each TTI.
+    pub handover_backlog: usize,
+    pub seed: u64,
+}
+
+impl FleetScenario {
+    /// A fleet on the default TensorPool substrate with the paper's
+    /// defaults: NR-heavy mix, reference-TTI users, 100 W site budget,
+    /// handover threshold at twice the mean offered load.
+    pub fn new(
+        name: impl Into<String>,
+        cells: usize,
+        mean_users_per_cell: usize,
+        num_ttis: usize,
+    ) -> Self {
+        FleetScenario {
+            name: name.into(),
+            cells,
+            arch: ArchSpec::default(),
+            mix: UserMix { neural_receiver: 2, neural_che: 1, classical: 1 },
+            mean_users_per_cell,
+            num_ttis,
+            res_per_user: 8192,
+            budget_cycles: None,
+            policy: BatchPolicy::default(),
+            cell_power_budget_mw: None,
+            site_budget_mw: Some(100_000),
+            handover_backlog: (2 * mean_users_per_cell).max(2),
+            seed: 1,
+        }
+    }
+
+    /// The CI smoke fleet: small enough for seconds, loaded enough that
+    /// power deferrals and handovers actually occur under a tight site
+    /// budget.
+    pub fn smoke() -> Self {
+        FleetScenario::new("fleet_smoke", 8, 4, 3)
+    }
+
+    /// The per-cell power-cap slice (mW): the even share of the site
+    /// budget, min-ed with any explicit per-cell cap. `None` = no cap.
+    pub fn effective_cell_cap_mw(&self) -> Option<u32> {
+        let slice = self
+            .site_budget_mw
+            .map(|site| (site / self.cells.max(1) as u32).max(1));
+        match (slice, self.cell_power_budget_mw) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (Some(a), None) => Some(a),
+            (None, b) => b,
+        }
+    }
+}
+
+/// One cell: a [`Server`] plus its arrival stream and accumulators.
+struct Cell {
+    server: Server,
+    rng: u64,
+    submitted: u64,
+    served: u64,
+    missed: usize,
+    handovers_in: u64,
+    handovers_out: u64,
+    energy_j: f64,
+    deferred_for_power: u64,
+}
+
+/// Per-cell slice of a [`FleetReport`].
+#[derive(Clone, Debug, PartialEq, Serialize, Deserialize)]
+pub struct CellReport {
+    pub cell: usize,
+    /// Users whose arrival draw landed here.
+    pub submitted: u64,
+    /// Users this cell actually served (its own arrivals plus handed-over
+    /// ones).
+    pub served: u64,
+    pub handovers_in: u64,
+    pub handovers_out: u64,
+    pub deadline_miss_rate: f64,
+    pub final_backlog: usize,
+    pub energy_j: f64,
+    pub deferred_for_power: u64,
+}
+
+/// Aggregate outcome of one fleet run. A pure function of the scenario
+/// content — it carries NO cache counters, so shared-cache, fresh-cache,
+/// serial, and parallel drives all produce byte-identical reports.
+#[derive(Clone, Debug, PartialEq, Serialize, Deserialize)]
+pub struct FleetReport {
+    pub name: String,
+    pub substrate: String,
+    pub cells: usize,
+    pub num_ttis: usize,
+    pub submitted_total: u64,
+    pub served_total: u64,
+    /// Served throughput over the run's wall of TTI slots.
+    pub served_users_per_s: f64,
+    /// Fraction of (cell × TTI) slots whose measured cycles exceeded the
+    /// budget.
+    pub deadline_miss_rate: f64,
+    /// Tail of the per-cell deadline-miss-rate distribution
+    /// (nearest-rank percentile over cells).
+    pub p99_cell_miss_rate: f64,
+    pub p999_cell_miss_rate: f64,
+    /// Oldest wait (in TTIs) any user saw between arrival and service —
+    /// unserved users count their wait up to the end of the run.
+    pub max_backlog_age_ttis: u64,
+    /// Users moved between cells by the balancer.
+    pub handovers: u64,
+    /// Power-cap deferral events summed over cells and TTIs.
+    pub deferred_for_power_total: u64,
+    /// Users still queued (somewhere) when the run ended.
+    pub final_backlog: usize,
+    /// Total simulated cycles across every cell TTI — the deterministic
+    /// metric `benches/fleet.rs` gates in bench-diff.
+    pub total_cycles: u64,
+    pub site_energy_j: f64,
+    /// Mean summed cross-cell draw per TTI slot.
+    pub mean_site_power_w: f64,
+    /// Highest summed cross-cell draw of any single TTI.
+    pub peak_site_power_w: f64,
+    pub per_cell: Vec<CellReport>,
+}
+
+/// N cells in lockstep TTIs over one shared block cache. Construct with
+/// [`Fleet::new`], drive with [`Fleet::step`], summarize with
+/// [`Fleet::report`] — or use [`run_fleet`] for the whole arc.
+pub struct Fleet {
+    scenario: FleetScenario,
+    cells: Vec<Cell>,
+    /// Arrival TTI of every user ever submitted, indexed by global id
+    /// (its length is the id allocator).
+    submit_tti: Vec<u32>,
+    /// Service flag per user — the double-count guard.
+    served: Vec<bool>,
+    tti: usize,
+    handovers: u64,
+    total_cycles: u64,
+    site_energy_j: f64,
+    site_power_acc: f64,
+    peak_site_power_w: f64,
+    max_backlog_age: u64,
+    weight_total: u64,
+}
+
+impl Fleet {
+    pub fn new(s: &FleetScenario, blocks: &Arc<BlockScheduleCache>) -> Self {
+        assert!(s.cells > 0, "a fleet needs at least one cell");
+        let cap_w =
+            s.effective_cell_cap_mw().map(|mw| f64::from(mw) / 1e3);
+        let cells = (0..s.cells)
+            .map(|i| {
+                let mut server =
+                    Server::for_spec(&s.arch, Arc::clone(blocks));
+                if let Some(b) = s.budget_cycles {
+                    server.set_budget_cycles(b);
+                }
+                server.set_batch_policy(s.policy);
+                server.set_power_budget_w(cap_w);
+                Cell {
+                    server,
+                    rng: cell_seed(s.seed, i),
+                    submitted: 0,
+                    served: 0,
+                    missed: 0,
+                    handovers_in: 0,
+                    handovers_out: 0,
+                    energy_j: 0.0,
+                    deferred_for_power: 0,
+                }
+            })
+            .collect();
+        Fleet {
+            scenario: s.clone(),
+            cells,
+            submit_tti: Vec::new(),
+            served: Vec::new(),
+            tti: 0,
+            handovers: 0,
+            total_cycles: 0,
+            site_energy_j: 0.0,
+            site_power_acc: 0.0,
+            peak_site_power_w: 0.0,
+            max_backlog_age: 0,
+            weight_total: u64::from(s.mix.total().max(1)),
+        }
+    }
+
+    /// Drive one lockstep TTI across every cell. `parallel` selects the
+    /// rayon drive for the serve phase; the result is byte-identical
+    /// either way (arrivals, reduction, and balancing are always serial
+    /// in cell order, and block runs are pure).
+    pub fn step(&mut self, parallel: bool) {
+        let s = &self.scenario;
+        let mean = s.mean_users_per_cell as u64;
+        // 1. arrivals — serial, cell order, per-cell streams
+        for cell in self.cells.iter_mut() {
+            let n = xorshift64(&mut cell.rng) % (2 * mean + 1);
+            for _ in 0..n {
+                let draw =
+                    (xorshift64(&mut cell.rng) % self.weight_total) as u32;
+                let uid = self.submit_tti.len() as u32;
+                self.submit_tti.push(self.tti as u32);
+                self.served.push(false);
+                cell.server.submit(TtiRequest {
+                    user_id: uid,
+                    pipeline: s.mix.pipeline_of(draw),
+                    res: s.res_per_user,
+                });
+                cell.submitted += 1;
+            }
+        }
+        // 2. serve — the one parallel phase; order-preserving collect
+        let reports: Vec<TtiReport> = if parallel {
+            self.cells
+                .par_iter_mut()
+                .map(|c| c.server.schedule_tti())
+                .collect()
+        } else {
+            self.cells.iter_mut().map(|c| c.server.schedule_tti()).collect()
+        };
+        // 3. reduce — serial, cell order (f64 sums stay order-identical)
+        let mut tti_power = 0.0f64;
+        for (cell, rep) in self.cells.iter_mut().zip(&reports) {
+            for &uid in &rep.served {
+                let uid = uid as usize;
+                assert!(
+                    !self.served[uid],
+                    "user {uid} served twice — handover double-count"
+                );
+                self.served[uid] = true;
+                let age = self.tti as u64 - u64::from(self.submit_tti[uid]);
+                self.max_backlog_age = self.max_backlog_age.max(age);
+                cell.served += 1;
+            }
+            if !rep.deadline_met {
+                cell.missed += 1;
+            }
+            cell.energy_j += rep.energy_j;
+            cell.deferred_for_power += rep.deferred_for_power as u64;
+            self.total_cycles += rep.cycles;
+            self.site_energy_j += rep.energy_j;
+            tti_power += rep.avg_power_w;
+        }
+        self.site_power_acc += tti_power;
+        self.peak_site_power_w = self.peak_site_power_w.max(tti_power);
+        // 4. balance — serial, deterministic
+        self.rebalance();
+        self.tti += 1;
+    }
+
+    /// Shed overloaded cells' newest users to the least-loaded other
+    /// cell, one request at a time, while the move strictly improves
+    /// imbalance. Fully deterministic: source cells are visited in index
+    /// order and destination ties break on the lower index.
+    fn rebalance(&mut self) {
+        let threshold = self.scenario.handover_backlog;
+        if self.cells.len() < 2 {
+            return;
+        }
+        for src in 0..self.cells.len() {
+            while self.cells[src].server.pending() > threshold {
+                let src_pending = self.cells[src].server.pending();
+                let (dst, dst_pending) = (0..self.cells.len())
+                    .filter(|&j| j != src)
+                    .map(|j| (j, self.cells[j].server.pending()))
+                    .min_by_key(|&(j, load)| (load, j))
+                    .expect("≥2 cells");
+                // moving must strictly reduce the gap, or cells at equal
+                // load would ping-pong users forever
+                if dst_pending + 1 >= src_pending {
+                    break;
+                }
+                let req = self.cells[src]
+                    .server
+                    .take_newest()
+                    .expect("pending > 0");
+                self.cells[dst].server.submit(req);
+                self.cells[src].handovers_out += 1;
+                self.cells[dst].handovers_in += 1;
+                self.handovers += 1;
+            }
+        }
+    }
+
+    /// Summarize the run so far. Asserts global user conservation: every
+    /// submitted user was served exactly once or is still queued.
+    pub fn report(&self) -> FleetReport {
+        let s = &self.scenario;
+        let n_ttis = self.tti.max(1) as f64;
+        let per_cell: Vec<CellReport> = self
+            .cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                // per-cell conservation: arrivals + received handovers all
+                // end up served here, handed away, or still queued
+                assert_eq!(
+                    c.submitted + c.handovers_in,
+                    c.served
+                        + c.handovers_out
+                        + c.server.pending() as u64,
+                    "cell {i} lost or duplicated users"
+                );
+                CellReport {
+                    cell: i,
+                    submitted: c.submitted,
+                    served: c.served,
+                    handovers_in: c.handovers_in,
+                    handovers_out: c.handovers_out,
+                    deadline_miss_rate: c.missed as f64 / n_ttis,
+                    final_backlog: c.server.pending(),
+                    energy_j: c.energy_j,
+                    deferred_for_power: c.deferred_for_power,
+                }
+            })
+            .collect();
+        let submitted_total = self.submit_tti.len() as u64;
+        let served_total: u64 = per_cell.iter().map(|c| c.served).sum();
+        let final_backlog: usize =
+            per_cell.iter().map(|c| c.final_backlog).sum();
+        assert_eq!(
+            submitted_total,
+            served_total + final_backlog as u64,
+            "fleet lost or duplicated users"
+        );
+        // unserved users have waited from arrival to the end of the run
+        let mut max_age = self.max_backlog_age;
+        for (uid, &done) in self.served.iter().enumerate() {
+            if !done {
+                max_age = max_age
+                    .max(self.tti as u64 - u64::from(self.submit_tti[uid]));
+            }
+        }
+        let missed_slots: usize = self.cells.iter().map(|c| c.missed).sum();
+        let mut rates: Vec<f64> =
+            per_cell.iter().map(|c| c.deadline_miss_rate).collect();
+        rates.sort_by(|a, b| a.partial_cmp(b).expect("rates are finite"));
+        let cfg = s.arch.apply();
+        let budget = s
+            .budget_cycles
+            .unwrap_or((1e-3 * cfg.freq_ghz * 1e9) as u64);
+        let slot_s = budget.max(1) as f64 / (cfg.freq_ghz * 1e9);
+        FleetReport {
+            name: s.name.clone(),
+            substrate: s.arch.substrate.label().to_string(),
+            cells: s.cells,
+            num_ttis: self.tti,
+            submitted_total,
+            served_total,
+            served_users_per_s: served_total as f64 / (n_ttis * slot_s),
+            deadline_miss_rate: missed_slots as f64
+                / (n_ttis * s.cells as f64),
+            p99_cell_miss_rate: percentile(&rates, 0.99),
+            p999_cell_miss_rate: percentile(&rates, 0.999),
+            max_backlog_age_ttis: max_age,
+            handovers: self.handovers,
+            deferred_for_power_total: per_cell
+                .iter()
+                .map(|c| c.deferred_for_power)
+                .sum(),
+            final_backlog,
+            total_cycles: self.total_cycles,
+            site_energy_j: self.site_energy_j,
+            mean_site_power_w: self.site_power_acc / n_ttis,
+            peak_site_power_w: self.peak_site_power_w,
+            per_cell,
+        }
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p * sorted.len() as f64).ceil() as usize)
+        .clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// Run one fleet scenario end to end. Pure: equal scenarios produce
+/// byte-identical reports, parallel or serial, shared cache or fresh.
+pub fn run_fleet(
+    s: &FleetScenario,
+    blocks: &Arc<BlockScheduleCache>,
+    parallel: bool,
+) -> FleetReport {
+    let mut fleet = Fleet::new(s, blocks);
+    for _ in 0..s.num_ttis {
+        fleet.step(parallel);
+    }
+    fleet.report()
+}
+
+/// [`FleetReport`] plus the study-level wrapper the CLI prints: wall
+/// clocks, the parallel == serial verification, and the shared cache's
+/// dedup accounting. The cache numbers live HERE, not in the report —
+/// the report must stay a pure function of the scenario.
+#[derive(Clone, Debug, Serialize, Deserialize)]
+pub struct FleetStudyReport {
+    pub report: FleetReport,
+    pub threads: usize,
+    pub serial_wall_s: Option<f64>,
+    pub parallel_wall_s: f64,
+    pub speedup: Option<f64>,
+    /// `Some(true)` iff a serial verification run produced a
+    /// byte-identical report.
+    pub verified_identical: Option<bool>,
+    /// Distinct block simulations the parallel run's shared cache holds.
+    pub distinct_block_sims: usize,
+    pub block_cache_hits: u64,
+    pub block_cache_stats: CacheStats,
+}
+
+/// Run the scenario on the rayon pool (each drive on a fresh shared
+/// cache), optionally verifying against a full serial drive.
+pub fn fleet_with_report(
+    s: &FleetScenario,
+    verify: bool,
+) -> FleetStudyReport {
+    let serial = verify.then(|| {
+        let blocks = Arc::new(BlockScheduleCache::new());
+        let t = Instant::now();
+        let r = run_fleet(s, &blocks, false);
+        (r, t.elapsed().as_secs_f64())
+    });
+    let blocks = Arc::new(BlockScheduleCache::new());
+    let t = Instant::now();
+    let report = run_fleet(s, &blocks, true);
+    let parallel_wall_s = t.elapsed().as_secs_f64();
+    let (serial_wall_s, verified_identical) = match &serial {
+        Some((r, wall)) => (Some(*wall), Some(*r == report)),
+        None => (None, None),
+    };
+    let (block_cache_hits, _) = blocks.stats();
+    FleetStudyReport {
+        threads: rayon::current_num_threads(),
+        speedup: serial_wall_s
+            .map(|s| if parallel_wall_s > 0.0 { s / parallel_wall_s } else { 0.0 }),
+        serial_wall_s,
+        parallel_wall_s,
+        verified_identical,
+        distinct_block_sims: blocks.len(),
+        block_cache_hits,
+        block_cache_stats: blocks.cache_stats(),
+        report,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_draw_covers_all_pipelines() {
+        let mix = UserMix { neural_receiver: 1, neural_che: 1, classical: 2 };
+        assert_eq!(mix.total(), 4);
+        assert_eq!(mix.pipeline_of(0), Pipeline::NeuralReceiver);
+        assert_eq!(mix.pipeline_of(1), Pipeline::NeuralChe);
+        assert_eq!(mix.pipeline_of(2), Pipeline::Classical);
+        assert_eq!(mix.pipeline_of(3), Pipeline::Classical);
+        for p in [
+            Pipeline::NeuralReceiver,
+            Pipeline::NeuralChe,
+            Pipeline::Classical,
+        ] {
+            let pure = UserMix::pure(p);
+            assert_eq!(pure.total(), 1);
+            assert_eq!(pure.pipeline_of(0), p);
+        }
+    }
+
+    #[test]
+    fn arrival_patterns_offer_the_same_load() {
+        let uniform = ArrivalPattern::Uniform;
+        let bursty = ArrivalPattern::Bursty { period: 4 };
+        let sum = |a: &ArrivalPattern| -> usize {
+            (0..8).map(|t| a.arrivals(t, 3)).sum()
+        };
+        assert_eq!(sum(&uniform), 24);
+        assert_eq!(sum(&bursty), 24, "bursty bunches, never drops, load");
+        assert_eq!(bursty.arrivals(0, 3), 12);
+        assert_eq!(bursty.arrivals(1, 3), 0);
+    }
+
+    #[test]
+    fn cell_seeds_are_distinct_and_nonzero() {
+        let mut seen = std::collections::HashSet::new();
+        for cell in 0..512 {
+            let s = cell_seed(42, cell);
+            assert_ne!(s, 0);
+            assert!(seen.insert(s), "cell {cell} repeated a stream seed");
+        }
+        // and the same (seed, cell) always yields the same stream
+        assert_eq!(cell_seed(42, 7), cell_seed(42, 7));
+        assert_ne!(cell_seed(42, 7), cell_seed(43, 7));
+    }
+
+    #[test]
+    fn site_budget_rolls_up_to_per_cell_slices() {
+        let mut s = FleetScenario::new("caps", 8, 2, 1);
+        assert_eq!(s.site_budget_mw, Some(100_000), "paper default: 100 W");
+        assert_eq!(s.effective_cell_cap_mw(), Some(12_500));
+        s.cell_power_budget_mw = Some(5_000);
+        assert_eq!(s.effective_cell_cap_mw(), Some(5_000), "min with cell cap");
+        s.site_budget_mw = None;
+        assert_eq!(s.effective_cell_cap_mw(), Some(5_000));
+        s.cell_power_budget_mw = None;
+        assert_eq!(s.effective_cell_cap_mw(), None);
+    }
+
+    #[test]
+    fn smoke_fleet_serves_and_conserves() {
+        let s = FleetScenario::smoke();
+        let blocks = Arc::new(BlockScheduleCache::new());
+        let r = run_fleet(&s, &blocks, false);
+        assert!(r.served_total > 0, "a smoke fleet must serve someone");
+        assert_eq!(
+            r.submitted_total,
+            r.served_total + r.final_backlog as u64
+        );
+        assert_eq!(r.per_cell.len(), 8);
+        assert!(r.site_energy_j > 0.0);
+        assert!(r.peak_site_power_w >= r.mean_site_power_w);
+        // purity: same scenario, fresh cache, same bytes
+        let again =
+            run_fleet(&s, &Arc::new(BlockScheduleCache::new()), false);
+        assert_eq!(r, again, "fleet runs must be pure");
+    }
+
+    #[test]
+    fn percentiles_use_nearest_rank() {
+        let rates: Vec<f64> = (1..=100).map(|i| i as f64 / 100.0).collect();
+        assert_eq!(percentile(&rates, 0.99), 0.99);
+        assert_eq!(percentile(&rates, 0.999), 1.0, "rounds up to the max");
+        assert_eq!(percentile(&rates, 0.5), 0.5);
+        assert_eq!(percentile(&[], 0.99), 0.0);
+        assert_eq!(percentile(&[0.25], 0.99), 0.25);
+    }
+}

@@ -18,6 +18,10 @@
 //!   iteration-level memoization).
 //! * [`coordinator`] — the TTI serving loop (per-user pipeline routing,
 //!   admission, deadline accounting) on top of `exec`.
+//! * [`fleet`] — fleet-scale multi-cell serving on top of `coordinator`:
+//!   N cells in lockstep TTIs over one lock-striped block cache, seeded
+//!   arrivals, deterministic load balancing, and the site-level power
+//!   budget rollup (`tensorpool fleet` on the CLI).
 //! * [`ppa`] — analytical power/performance/area models: Kung memory
 //!   balances (Eqs 1–6), area/power breakdowns (Figs 12/13), and the 2D vs
 //!   3D routing-channel model (Eqs 7–8, Fig 15).
@@ -32,6 +36,7 @@
 pub mod coordinator;
 pub mod exec;
 pub mod figures;
+pub mod fleet;
 pub mod models;
 pub mod ppa;
 pub mod report;

@@ -6,8 +6,8 @@
 //! Argument parsing is hand-rolled (no clap in the dependency set).
 
 use tensorpool::figures::{
-    block_figs, energy_figs, frontier_figs, gemm_figs, pe_figs, ppa_figs,
-    tables,
+    block_figs, energy_figs, fleet_figs, frontier_figs, gemm_figs, pe_figs,
+    ppa_figs, tables,
 };
 use tensorpool::report::Table;
 use tensorpool::runtime::{default_artifacts_dir, Runtime};
@@ -19,7 +19,8 @@ tensorpool — reproduction of the TensorPool AI-RAN processor (CS.AR 2026)
 USAGE: tensorpool <COMMAND> [ARGS]
 
 COMMANDS:
-  figures [fig1|fig5|fig7|fig8|fig10|fig12|fig13|fig15|energy|frontier|all]
+  figures [fig1|fig5|fig7|fig8|fig10|fig12|fig13|fig15|energy|frontier|
+           fleet|all]
             regenerate the paper's figures (default: all). `energy` is the
             power-budgeted serving study: TE-vs-PE energy-efficiency ratio
             (Table II direction) + the power-capped capacity frontier
@@ -27,7 +28,9 @@ COMMANDS:
             cross-architecture frontier: every exec::Substrate
             (tensorpool / core-only / npu) on one table — MACs/cycle,
             GOPS/W, area-normalized GOPS/W/mm², and users served per TTI
-            under each power cap — plus the paper's 6x/9.1x ratio lines
+            under each power cap — plus the paper's 6x/9.1x ratio lines.
+            `fleet` is the cell-count scaling study: fleets of 2/8/32
+            cells on ONE shared block cache under the 100 W site budget
   tables  [table1|table2|table3|all]
             regenerate the paper's tables (default: all)
   balance   Sec IV memory-balance analysis (Eqs 1-6)
@@ -51,7 +54,7 @@ COMMANDS:
             (tensorpool|core-only|npu; default tensorpool only)
   capacity [--users U1,U2,..] [--ttis N] [--budget-us B] [--no-mixed]
            [--per-user] [--power-budget-w W] [--what-if] [--arch SUBSTRATE]
-           [--out <path>] [--no-verify] [--smoke]
+           [--cache-stats] [--out <path>] [--no-verify] [--smoke]
             run the TTI serving loop over a users-per-TTI x pipeline-mix
             grid on the sweep engine (shared cross-run block-schedule
             cache) and emit a machine-readable capacity report: deadline
@@ -68,7 +71,25 @@ COMMANDS:
             can answer) instead of the analytic anchors.
             --arch runs the grid on a different substrate
             (tensorpool|core-only|npu; the report labels it). --smoke runs
-            a 2-point grid for CI.
+            a 2-point grid for CI. --cache-stats prints the per-tier
+            striped block-cache counters to stderr.
+  fleet   [--cells N] [--users MEAN] [--ttis N] [--seed S]
+          [--site-budget-w W|none] [--cell-power-w W|none] [--per-user]
+          [--arch SUBSTRATE] [--handover-backlog N] [--cache-stats]
+          [--out <path>] [--no-verify] [--smoke]
+            drive a multi-cell fleet in lockstep TTIs on the fleet layer:
+            every cell is a full TTI serving loop with its own seeded
+            arrival stream and its own power-cap slice of the site budget
+            (--site-budget-w, default 100 W — the paper's densification
+            cap; `none` disables), all cells sharing ONE lock-striped
+            block-schedule cache; after each TTI a deterministic balancer
+            hands overflowing backlogs (> --handover-backlog) to the
+            least-loaded cell. Reports fleet throughput, the p99/p99.9
+            per-cell deadline-miss tails, max backlog age, handovers,
+            power deferrals, and site energy/power; verifies
+            parallel == serial byte-identity by default. Non-smoke
+            defaults: 128 cells, mean 8 users/cell/TTI, 20 TTIs. --smoke
+            runs the 8-cell CI fleet.
   bench-diff --baseline <file> --current <file> [--threshold PCT]
             compare two perf-trajectory JSONs (BENCH_*.json) and exit
             nonzero if any deterministic metric (simulated cycle counts,
@@ -100,6 +121,7 @@ fn main() {
         "simulate" => simulate(rest),
         "sweep" => sweep(rest),
         "capacity" => capacity(rest),
+        "fleet" => fleet(rest),
         "bench-diff" => bench_diff(rest),
         "artifacts" => artifacts(rest),
         "run" => run_artifact(rest),
@@ -172,6 +194,9 @@ fn figures(rest: &[String]) -> i32 {
     }
     if all || which == "frontier" {
         println!("{}", frontier_figs::frontier_report());
+    }
+    if all || which == "fleet" {
+        println!("{}", fleet_figs::fleet_report());
     }
     0
 }
@@ -531,6 +556,9 @@ fn capacity(rest: &[String]) -> i32 {
          across the grid",
         report.distinct_block_sims, report.block_cache_hits,
     );
+    if has(rest, "--cache-stats") {
+        print_cache_stats("capacity", &report.block_cache_stats);
+    }
     if power_budget_mw.is_some() {
         let power_deferred: u64 = report
             .reports
@@ -566,6 +594,221 @@ fn capacity(rest: &[String]) -> i32 {
     match report.verified_identical {
         Some(false) => {
             eprintln!("capacity: FAIL — parallel reports diverge from serial");
+            1
+        }
+        _ => 0,
+    }
+}
+
+/// Print the per-tier striped block-cache counters (`--cache-stats`) to
+/// stderr: hit/miss/entry counts for all four memoization tiers plus the
+/// raw-work and shard-depth diagnostics.
+fn print_cache_stats(cmd: &str, s: &tensorpool::exec::CacheStats) {
+    let mut t = Table::new(&["cache tier", "hits", "misses", "entries"]);
+    t.row(&[
+        "block".into(),
+        s.block_hits.to_string(),
+        s.block_misses.to_string(),
+        s.block_entries.to_string(),
+    ]);
+    t.row(&[
+        "iter memo".into(),
+        s.iter_hits.to_string(),
+        s.iter_misses.to_string(),
+        s.iter_entries.to_string(),
+    ]);
+    t.row(&[
+        "prefix (probes)".into(),
+        s.prefix_probe_hits.to_string(),
+        s.prefix_probe_misses.to_string(),
+        s.prefix_entries.to_string(),
+    ]);
+    t.row(&[
+        "analytic".into(),
+        s.analytic_hits.to_string(),
+        s.analytic_misses.to_string(),
+        s.analytic_entries.to_string(),
+    ]);
+    eprintln!("{cmd}: striped block-cache stats");
+    eprintln!("{}", t.to_string());
+    eprintln!(
+        "{cmd}: raw block sims {} (+{} uncacheable), raw iterations {}, \
+         memo fallbacks {}, prefix resumes {}, deepest shard {} entries \
+         of {} shards/tier",
+        s.raw_block_sims,
+        s.uncacheable_runs,
+        s.raw_iterations,
+        s.memo_fallbacks,
+        s.prefix_resumes,
+        s.shard_max_depth,
+        tensorpool::exec::STRIPE_SHARDS,
+    );
+}
+
+/// Drive a multi-cell fleet in lockstep TTIs on the fleet layer and emit
+/// a machine-readable `FleetStudyReport` (stdout JSON; summary tables on
+/// stderr).
+fn fleet(rest: &[String]) -> i32 {
+    use tensorpool::fleet::{fleet_with_report, FleetScenario};
+    let smoke = has(rest, "--smoke");
+    let mut s = if smoke {
+        FleetScenario::smoke()
+    } else {
+        FleetScenario::new("fleet", 128, 8, 20)
+    };
+    if let Some(v) = flag(rest, "--cells") {
+        match v.parse::<usize>() {
+            Ok(n) if n > 0 => s.cells = n,
+            _ => {
+                eprintln!("error: bad --cells value '{v}'");
+                return 2;
+            }
+        }
+    }
+    if let Some(v) = flag(rest, "--users") {
+        match v.parse::<usize>() {
+            Ok(n) if n > 0 => {
+                s.mean_users_per_cell = n;
+                // keep the default threshold tracking the offered load
+                // (an explicit --handover-backlog below still wins)
+                s.handover_backlog = (2 * n).max(2);
+            }
+            _ => {
+                eprintln!("error: bad --users value '{v}'");
+                return 2;
+            }
+        }
+    }
+    if let Some(v) = flag(rest, "--ttis") {
+        match v.parse::<usize>() {
+            Ok(n) if n > 0 => s.num_ttis = n,
+            _ => {
+                eprintln!("error: bad --ttis value '{v}'");
+                return 2;
+            }
+        }
+    }
+    if let Some(v) = flag(rest, "--seed") {
+        match v.parse::<u64>() {
+            Ok(n) => s.seed = n,
+            _ => {
+                eprintln!("error: bad --seed value '{v}'");
+                return 2;
+            }
+        }
+    }
+    // Power caps arrive in Watts, stored milliwatt-quantized so the
+    // scenario stays hashable; the literal `none` disables a cap.
+    let parse_cap = |name: &str, v: &str| -> Result<Option<u32>, ()> {
+        if v == "none" {
+            return Ok(None);
+        }
+        match v.parse::<f64>() {
+            Ok(w) if w > 0.0 && w.is_finite() => {
+                Ok(Some(((w * 1e3).round() as u32).max(1)))
+            }
+            _ => {
+                eprintln!("error: bad {name} value '{v}' (Watts or 'none')");
+                Err(())
+            }
+        }
+    };
+    if let Some(v) = flag(rest, "--site-budget-w") {
+        match parse_cap("--site-budget-w", &v) {
+            Ok(mw) => s.site_budget_mw = mw,
+            Err(()) => return 2,
+        }
+    }
+    if let Some(v) = flag(rest, "--cell-power-w") {
+        match parse_cap("--cell-power-w", &v) {
+            Ok(mw) => s.cell_power_budget_mw = mw,
+            Err(()) => return 2,
+        }
+    }
+    if has(rest, "--per-user") {
+        s.policy = tensorpool::coordinator::BatchPolicy::PerUser;
+    }
+    if let Some(a) = flag(rest, "--arch") {
+        match tensorpool::exec::Substrate::parse(&a) {
+            Some(sub) => {
+                s.arch = tensorpool::exec::ArchSpec::with_substrate(sub);
+            }
+            None => {
+                eprintln!(
+                    "error: bad --arch value '{a}' (tensorpool|core-only|npu)"
+                );
+                return 2;
+            }
+        }
+    }
+    if let Some(v) = flag(rest, "--handover-backlog") {
+        match v.parse::<usize>() {
+            Ok(n) if n > 0 => s.handover_backlog = n,
+            _ => {
+                eprintln!("error: bad --handover-backlog value '{v}'");
+                return 2;
+            }
+        }
+    }
+    let verify = !has(rest, "--no-verify");
+    let cap_str = |mw: Option<u32>| match mw {
+        None => "none".to_string(),
+        Some(mw) => format!("{:.3} W", f64::from(mw) / 1e3),
+    };
+    eprintln!(
+        "fleet: {} cells x {} TTIs on {}, mean {} users/cell/TTI, site \
+         budget {} (per-cell slice {}), handover threshold {}, seed {}, \
+         {} threads, verify={}",
+        s.cells,
+        s.num_ttis,
+        s.arch.substrate.label(),
+        s.mean_users_per_cell,
+        cap_str(s.site_budget_mw),
+        cap_str(s.effective_cell_cap_mw()),
+        s.handover_backlog,
+        s.seed,
+        rayon::current_num_threads(),
+        verify,
+    );
+    let study = fleet_with_report(&s, verify);
+    let r = &study.report;
+    eprintln!("{}", fleet_figs::fleet_table(std::slice::from_ref(r)));
+    let json = serde_json::to_string_pretty(&study)
+        .expect("fleet study report serializes");
+    println!("{json}");
+    if let Some(path) = flag(rest, "--out") {
+        if let Err(e) = std::fs::write(&path, &json) {
+            eprintln!("error writing {path}: {e}");
+            return 1;
+        }
+        eprintln!("fleet: report written to {path}");
+    }
+    eprintln!(
+        "fleet: served {}/{} users ({} handed over, {} power deferrals); \
+         {} distinct block simulations served {} cached recalls across \
+         {} cells",
+        r.served_total,
+        r.submitted_total,
+        r.handovers,
+        r.deferred_for_power_total,
+        study.distinct_block_sims,
+        study.block_cache_hits,
+        r.cells,
+    );
+    if has(rest, "--cache-stats") {
+        print_cache_stats("fleet", &study.block_cache_stats);
+    }
+    if let (Some(sw), Some(sp)) = (study.serial_wall_s, study.speedup) {
+        eprintln!(
+            "fleet: serial {sw:.2}s, parallel {:.2}s -> {sp:.2}x speedup; \
+             reports byte-identical: {}",
+            study.parallel_wall_s,
+            study.verified_identical == Some(true),
+        );
+    }
+    match study.verified_identical {
+        Some(false) => {
+            eprintln!("fleet: FAIL — parallel report diverges from serial");
             1
         }
         _ => 0,
@@ -648,8 +891,12 @@ fn bench_diff(rest: &[String]) -> i32 {
     // totals (priced from simulator event counters — byte-deterministic)
     // gate on the threshold, MAC counts gate exactly. Everything else
     // (wall-clock, thread counts, cache hit totals) is informational.
-    const GATED: [&str; 3] =
-        ["sim_cycles", "grid_cycles_total", "total_energy_j"];
+    const GATED: [&str; 4] = [
+        "sim_cycles",
+        "grid_cycles_total",
+        "total_energy_j",
+        "fleet_cycles_total",
+    ];
     const EXACT: [&str; 1] = ["sim_macs"];
 
     let mut failures = 0usize;

@@ -72,4 +72,10 @@ const _: () = {
     assert_send::<crate::exec::BlockScheduleCache>();
     assert_sync::<crate::exec::BlockScheduleCache>();
     assert_sync::<SweepRunner>();
+    // Fleet runs drive hundreds of Servers across rayon workers over one
+    // striped cache; the fleet vocabulary crosses threads the same way.
+    assert_send::<crate::fleet::FleetScenario>();
+    assert_send::<crate::fleet::FleetReport>();
+    assert_send::<crate::fleet::Fleet>();
+    assert_sync::<crate::exec::StripedMap<String, ScenarioResult>>();
 };

@@ -13,15 +13,13 @@
 //!   simulated once per runner; the second is served from the cache (with
 //!   its own display name re-applied).
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 use rayon::prelude::*;
 use serde::{Deserialize, Serialize};
 
-use crate::exec::BlockScheduleCache;
+use crate::exec::{BlockScheduleCache, CacheStats, StripedMap};
 
 use super::scenario::{
     run_capacity, run_scenario_cached, CapacityReport, Scenario,
@@ -31,14 +29,15 @@ use super::scenario::{
 /// A reusable sweep executor holding the result caches: whole-scenario
 /// memos (GEMM/block scenarios and TTI capacity scenarios) plus the
 /// shared cross-run [`BlockScheduleCache`] (from [`crate::exec`]) every
-/// scenario and attached `Server` draws block simulations from.
+/// scenario and attached `Server` draws block simulations from. Both
+/// scenario memos are lock-striped ([`StripedMap`]) like the block-cache
+/// tiers, so wide parallel grids never convoy on a single result-cache
+/// lock either.
 #[derive(Default)]
 pub struct SweepRunner {
-    cache: Mutex<HashMap<String, ScenarioResult>>,
-    tti_cache: Mutex<HashMap<String, CapacityReport>>,
+    cache: StripedMap<String, ScenarioResult>,
+    tti_cache: StripedMap<String, CapacityReport>,
     blocks: Arc<BlockScheduleCache>,
-    hits: AtomicU64,
-    misses: AtomicU64,
 }
 
 impl SweepRunner {
@@ -47,19 +46,22 @@ impl SweepRunner {
     }
 
     /// Cache hits / misses since construction (scenario-level, GEMM/block
-    /// and capacity scenarios combined).
+    /// and capacity scenarios combined — folded across both striped
+    /// memos' per-shard counters).
     pub fn cache_stats(&self) -> (u64, u64) {
-        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+        let (gh, gm) = self.cache.stats();
+        let (th, tm) = self.tti_cache.stats();
+        (gh + th, gm + tm)
     }
 
     /// Number of distinct GEMM/block configurations currently cached.
     pub fn cache_len(&self) -> usize {
-        self.cache.lock().expect("cache poisoned").len()
+        self.cache.len()
     }
 
     /// Number of distinct capacity scenarios currently cached.
     pub fn capacity_cache_len(&self) -> usize {
-        self.tti_cache.lock().expect("cache poisoned").len()
+        self.tti_cache.len()
     }
 
     /// The cross-run block-schedule cache this runner shares with every
@@ -72,22 +74,16 @@ impl SweepRunner {
 
     fn run_one(&self, s: &Scenario) -> ScenarioResult {
         let key = s.cache_key();
-        if let Some(hit) = self.cache.lock().expect("cache poisoned").get(&key)
-        {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            let mut r = hit.clone();
-            r.name = s.name.clone();
-            return r;
+        if let Some(mut hit) = self.cache.get(&key) {
+            hit.name = s.name.clone();
+            return hit;
         }
         // Simulate OUTSIDE the lock: concurrent misses on the same key race
         // benignly (both compute the identical pure result; last insert
-        // wins) and long runs never serialize the other workers.
+        // wins) and long runs never serialize the other workers. The shard
+        // counted the miss at lookup time.
         let r = run_scenario_cached(s, &self.blocks);
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        self.cache
-            .lock()
-            .expect("cache poisoned")
-            .insert(key, r.clone());
+        self.cache.insert(key, r.clone());
         r
     }
 
@@ -104,20 +100,12 @@ impl SweepRunner {
 
     fn run_capacity_one(&self, s: &TtiScenario) -> CapacityReport {
         let key = s.cache_key();
-        if let Some(hit) =
-            self.tti_cache.lock().expect("cache poisoned").get(&key)
-        {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            let mut r = hit.clone();
-            r.name = s.name.clone();
-            return r;
+        if let Some(mut hit) = self.tti_cache.get(&key) {
+            hit.name = s.name.clone();
+            return hit;
         }
         let r = run_capacity(s, &self.blocks);
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        self.tti_cache
-            .lock()
-            .expect("cache poisoned")
-            .insert(key, r.clone());
+        self.tti_cache.insert(key, r.clone());
         r
     }
 
@@ -225,6 +213,10 @@ pub struct CapacitySweepReport {
     pub distinct_block_sims: usize,
     /// Block schedules served from the cache instead of re-simulated.
     pub block_cache_hits: u64,
+    /// Full per-tier accounting of the parallel run's shared block cache
+    /// (what `--cache-stats` prints).
+    #[serde(default)]
+    pub block_cache_stats: CacheStats,
 }
 
 /// Execute a capacity grid in parallel and, when `verify` is set, also
@@ -262,6 +254,7 @@ pub fn capacity_sweep_with_report(
         scenario_cache_hits: scenario_hits,
         distinct_block_sims: runner.block_cache().len(),
         block_cache_hits: block_hits,
+        block_cache_stats: runner.block_cache().cache_stats(),
         reports,
     }
 }

@@ -285,75 +285,11 @@ pub fn fig7_style_scenarios(sizes: &[usize]) -> Vec<Scenario> {
 
 // ---- TTI serving-loop scenarios (capacity study) ---------------------------
 
-/// Per-TTI user-mix weights, one per serving [`Pipeline`]. Integers (any
-/// scale) so scenarios stay hashable; a user's pipeline is drawn
-/// proportionally to the weights.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
-pub struct UserMix {
-    pub neural_receiver: u32,
-    pub neural_che: u32,
-    pub classical: u32,
-}
-
-impl UserMix {
-    /// A mix that routes every user to `p`.
-    pub fn pure(p: Pipeline) -> Self {
-        match p {
-            Pipeline::NeuralReceiver => {
-                UserMix { neural_receiver: 1, neural_che: 0, classical: 0 }
-            }
-            Pipeline::NeuralChe => {
-                UserMix { neural_receiver: 0, neural_che: 1, classical: 0 }
-            }
-            Pipeline::Classical => {
-                UserMix { neural_receiver: 0, neural_che: 0, classical: 1 }
-            }
-        }
-    }
-
-    pub fn total(&self) -> u32 {
-        self.neural_receiver + self.neural_che + self.classical
-    }
-
-    /// Pipeline of weighted slot `draw` (`draw < total()`). An all-zero
-    /// mix degrades to Classical.
-    fn pipeline_of(&self, draw: u32) -> Pipeline {
-        if draw < self.neural_receiver {
-            Pipeline::NeuralReceiver
-        } else if draw < self.neural_receiver + self.neural_che {
-            Pipeline::NeuralChe
-        } else {
-            Pipeline::Classical
-        }
-    }
-}
-
-/// How the offered load arrives over the TTIs of a scenario.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
-pub enum ArrivalPattern {
-    /// `users_per_tti` new users submitted before every TTI.
-    Uniform,
-    /// The same average load, bunched: `period × users_per_tti` users
-    /// arrive together every `period` TTIs (the backlog-drain stressor).
-    Bursty { period: u32 },
-}
-
-impl ArrivalPattern {
-    /// New users arriving before TTI `tti`.
-    pub fn arrivals(&self, tti: usize, users_per_tti: usize) -> usize {
-        match self {
-            ArrivalPattern::Uniform => users_per_tti,
-            ArrivalPattern::Bursty { period } => {
-                let p = (*period).max(1) as usize;
-                if tti % p == 0 {
-                    users_per_tti * p
-                } else {
-                    0
-                }
-            }
-        }
-    }
-}
+// The user-mix and arrival-pattern vocabulary moved up to the fleet layer
+// (it is shared by single-cell capacity runs and multi-cell fleets);
+// re-exported here so every historical `crate::sweep::{UserMix,
+// ArrivalPattern}` import keeps working.
+pub use crate::fleet::{ArrivalPattern, UserMix};
 
 /// One point of a capacity study: a multi-TTI serving run — user-mix
 /// distribution × arrival pattern × offered load × cycle budget × batch
@@ -486,14 +422,7 @@ pub struct CapacityReport {
     pub points: Vec<CapacityPoint>,
 }
 
-fn xorshift64(state: &mut u64) -> u64 {
-    let mut x = *state;
-    x ^= x << 13;
-    x ^= x >> 7;
-    x ^= x << 17;
-    *state = x;
-    x
-}
+use crate::fleet::xorshift64;
 
 /// Run one capacity scenario: drive a [`Server`] for `num_ttis` TTIs with
 /// the scenario's deterministic request stream, recording one
@@ -723,37 +652,8 @@ mod tests {
         }
     }
 
-    #[test]
-    fn mix_draw_covers_all_pipelines() {
-        let mix = UserMix { neural_receiver: 1, neural_che: 1, classical: 2 };
-        assert_eq!(mix.total(), 4);
-        assert_eq!(mix.pipeline_of(0), Pipeline::NeuralReceiver);
-        assert_eq!(mix.pipeline_of(1), Pipeline::NeuralChe);
-        assert_eq!(mix.pipeline_of(2), Pipeline::Classical);
-        assert_eq!(mix.pipeline_of(3), Pipeline::Classical);
-        for p in [
-            Pipeline::NeuralReceiver,
-            Pipeline::NeuralChe,
-            Pipeline::Classical,
-        ] {
-            let pure = UserMix::pure(p);
-            assert_eq!(pure.total(), 1);
-            assert_eq!(pure.pipeline_of(0), p);
-        }
-    }
-
-    #[test]
-    fn arrival_patterns_offer_the_same_load() {
-        let uniform = ArrivalPattern::Uniform;
-        let bursty = ArrivalPattern::Bursty { period: 4 };
-        let sum = |a: &ArrivalPattern| -> usize {
-            (0..8).map(|t| a.arrivals(t, 3)).sum()
-        };
-        assert_eq!(sum(&uniform), 24);
-        assert_eq!(sum(&bursty), 24, "bursty bunches, never drops, load");
-        assert_eq!(bursty.arrivals(0, 3), 12);
-        assert_eq!(bursty.arrivals(1, 3), 0);
-    }
+    // (the UserMix / ArrivalPattern unit tests moved to `crate::fleet`
+    // with the types)
 
     #[test]
     fn tti_cache_key_ignores_name_only() {

@@ -1,0 +1,107 @@
+//! Fleet-layer integration tests: the determinism, conservation, and
+//! cache-dedup contracts of `tensorpool::fleet`.
+//!
+//! * parallel == serial: the rayon serve phase must be byte-invisible in
+//!   the [`FleetReport`], across seeds and across warm/cold caches.
+//! * handover conservation: the balancer moves users, it never drops or
+//!   double-counts one.
+//! * shared-cache dedup: N cells over ONE striped cache must do strictly
+//!   fewer raw block simulations than N independent caches — the point
+//!   of fleet-wide sharing.
+
+use std::sync::Arc;
+
+use rayon::prelude::*;
+use tensorpool::coordinator::Pipeline;
+use tensorpool::exec::BlockScheduleCache;
+use tensorpool::fleet::{run_fleet, FleetScenario, UserMix};
+
+#[test]
+fn parallel_fleet_is_byte_identical_to_serial_across_seeds() {
+    for seed in [1u64, 0xC0FFEE, 0xDEAD_BEEF] {
+        let mut s = FleetScenario::smoke();
+        s.seed = seed;
+        let serial =
+            run_fleet(&s, &Arc::new(BlockScheduleCache::new()), false);
+        let parallel =
+            run_fleet(&s, &Arc::new(BlockScheduleCache::new()), true);
+        assert_eq!(
+            serial, parallel,
+            "seed {seed:#x}: parallel drive diverged from serial"
+        );
+        // cache state must never leak into the report: a second parallel
+        // drive on the now-warm shared cache reports the same bytes
+        let shared = Arc::new(BlockScheduleCache::new());
+        let cold = run_fleet(&s, &shared, true);
+        let warm = run_fleet(&s, &shared, true);
+        assert_eq!(cold, serial, "seed {seed:#x}: shared-cache drive diverged");
+        assert_eq!(warm, serial, "seed {seed:#x}: warm cache changed a number");
+    }
+}
+
+#[test]
+fn handovers_conserve_users_under_a_tight_site_budget() {
+    // 20 W over 8 cells = 2.5 W slices against ~1.9 W NR users: every
+    // cell power-defers most arrivals, backlogs diverge (per-cell arrival
+    // draws differ), and the balancer has real work to do.
+    let mut s = FleetScenario::new("handover_fleet", 8, 6, 6);
+    s.mix = UserMix::pure(Pipeline::NeuralReceiver);
+    s.site_budget_mw = Some(20_000);
+    s.handover_backlog = 2;
+    let r = run_fleet(&s, &Arc::new(BlockScheduleCache::new()), true);
+    assert!(r.served_total > 0, "admission always seats the head request");
+    assert!(r.handovers > 0, "imbalanced backlogs must trigger handovers");
+    assert!(
+        r.deferred_for_power_total > 0,
+        "2.5 W slices must defer ~1.9 W NR users"
+    );
+    // the balancer's books balance: every user leaving a cell arrives at
+    // exactly one other cell
+    let in_total: u64 = r.per_cell.iter().map(|c| c.handovers_in).sum();
+    let out_total: u64 = r.per_cell.iter().map(|c| c.handovers_out).sum();
+    assert_eq!(in_total, out_total, "handover in/out books must balance");
+    assert_eq!(in_total, r.handovers);
+    // per-cell and global conservation: nobody dropped, nobody cloned
+    for c in &r.per_cell {
+        assert_eq!(
+            c.submitted + c.handovers_in,
+            c.served + c.handovers_out + c.final_backlog as u64,
+            "cell {} lost or duplicated users",
+            c.cell
+        );
+    }
+    assert_eq!(r.submitted_total, r.served_total + r.final_backlog as u64);
+}
+
+#[test]
+fn shared_cache_strictly_beats_independent_caches_on_raw_sims() {
+    // Same offered load either way; the only variable is whether the 64
+    // cells share one striped cache or each own a private one.
+    let mut s = FleetScenario::new("dedup_fleet", 64, 1, 2);
+    s.mix = UserMix::pure(Pipeline::NeuralReceiver);
+    s.site_budget_mw = None; // latency-only: pure dedup measurement
+    let shared = Arc::new(BlockScheduleCache::new());
+    let r = run_fleet(&s, &shared, true);
+    assert!(r.served_total > 0);
+    assert!(!shared.is_empty(), "NR serving simulates blocks");
+    let independent: usize = (0..s.cells)
+        .into_par_iter()
+        .map(|c| {
+            let mut one =
+                FleetScenario::new(format!("dedup_1c_{c}"), 1, 1, 2);
+            one.mix = s.mix;
+            one.site_budget_mw = None;
+            one.seed = s.seed.wrapping_add(1 + c as u64).max(1);
+            let own = Arc::new(BlockScheduleCache::new());
+            run_fleet(&one, &own, false);
+            own.len()
+        })
+        .sum();
+    assert!(
+        shared.len() < independent,
+        "sharing must strictly reduce raw block simulations \
+         (shared {} vs {} summed over independent caches)",
+        shared.len(),
+        independent,
+    );
+}

@@ -1,7 +1,7 @@
 //! Architecture guard: the crate's dependency graph must stay strictly
-//! one-way — `sim → workload → exec → coordinator → sweep → figures` —
-//! so the coordinator↔sweep cycle PR 2 introduced (and this layering
-//! untangled) cannot silently return.
+//! one-way — `sim → workload → exec → coordinator → fleet → sweep →
+//! figures` — so the coordinator↔sweep cycle PR 2 introduced (and this
+//! layering untangled) cannot silently return.
 //!
 //! Grep-level enforcement on purpose: an `use crate::sweep` anywhere under
 //! `coordinator/` or `exec/` compiles fine (intra-crate cycles are legal
@@ -67,22 +67,39 @@ fn assert_layer_clean(module: &str, forbidden: &[&str]) {
 fn coordinator_does_not_import_sweep() {
     // The exact cycle PR 2 had: `coordinator::server` importing
     // `sweep::{block_cache, scenario}`.
-    assert_layer_clean("coordinator", &["sweep", "figures"]);
+    assert_layer_clean("coordinator", &["fleet", "sweep", "figures"]);
 }
 
 #[test]
 fn exec_imports_nothing_above_it() {
     // `exec` sits below the coordinator: it may use `sim` and `workload`
     // only.
-    assert_layer_clean("exec", &["sweep", "coordinator", "figures"]);
+    assert_layer_clean(
+        "exec",
+        &["coordinator", "fleet", "sweep", "figures"],
+    );
+}
+
+#[test]
+fn fleet_feeds_only_upward() {
+    // The fleet layer drives coordinator Servers over the exec cache; the
+    // sweep engine and the figure harnesses sit ABOVE it and re-export
+    // its vocabulary, never the other way around.
+    assert_layer_clean("fleet", &["sweep", "figures"]);
 }
 
 #[test]
 fn workload_and_sim_stay_at_the_bottom() {
     // The pre-existing bottom layers must not grow upward edges either —
     // the one-way chain starts at `sim`.
-    assert_layer_clean("sim", &["workload", "exec", "coordinator", "sweep"]);
-    assert_layer_clean("workload", &["exec", "coordinator", "sweep"]);
+    assert_layer_clean(
+        "sim",
+        &["workload", "exec", "coordinator", "fleet", "sweep"],
+    );
+    assert_layer_clean(
+        "workload",
+        &["exec", "coordinator", "fleet", "sweep"],
+    );
 }
 
 #[test]
@@ -90,7 +107,10 @@ fn ppa_sits_beside_workload_below_the_execution_stack() {
     // The energy/area models price simulator outputs; they sit at the
     // workload level (sim + workload only), so `exec` and the coordinator
     // may consume them without creating a cycle.
-    assert_layer_clean("ppa", &["exec", "coordinator", "sweep", "figures"]);
+    assert_layer_clean(
+        "ppa",
+        &["exec", "coordinator", "fleet", "sweep", "figures"],
+    );
 }
 
 #[test]
