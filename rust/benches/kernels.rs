@@ -1,0 +1,143 @@
+//! Bench: measured-kernel throughput — the native backend executing GEMM
+//! for real, scalar reference vs multi-accumulator blocked flavor.
+//!
+//! Two kinds of number feed the perf trajectory:
+//! * `kernel_gflops_*` — wall-clock throughput (best-of-N). Informational
+//!   only in `tensorpool bench-diff`: CI machines are noisy.
+//! * `kernel_checksum` — FNV-1a over the scalar-reference outputs of
+//!   every shape, folded to one word. Bit-deterministic, so `bench-diff`
+//!   gates it EXACTLY: any change means the kernels' numerics changed,
+//!   which must be a deliberate, baseline-refreshing decision.
+//!
+//! Every timed run also re-verifies the blocked-vs-scalar anchored-ULP
+//! contract — a perf number from a wrong kernel is worse than no number.
+//!
+//! Emits the repo's perf-trajectory JSON (`BENCH_kernels.json` schema) on
+//! stdout; set `TENSORPOOL_BENCH_OUT=<path>` to also write the file:
+//! `TENSORPOOL_BENCH_OUT=../BENCH_kernels.json cargo bench --bench kernels`
+
+use std::time::Instant;
+
+use serde::Serialize;
+use tensorpool::kernels::gemm::{gemm_max_ulp, gemm_ulp_bound};
+use tensorpool::kernels::{
+    checksum_combine, checksum_f32, gemm_blocked, gemm_scalar, GemmShape,
+    KernelRng, CHECKSUM_SEED, SIMD_ENABLED,
+};
+
+#[derive(Serialize)]
+struct BenchReport {
+    bench: &'static str,
+    unit: &'static str,
+    status: &'static str,
+    simd: bool,
+    iters: usize,
+    shapes: Vec<ShapeTiming>,
+    /// Blocked-flavor GFLOP/s of the largest shape — the headline
+    /// throughput number (informational in bench-diff).
+    kernel_gflops_gemm: f64,
+    /// Combined FNV-1a word over every scalar-reference output —
+    /// EXACT-gated by bench-diff (numerics identity).
+    kernel_checksum: u32,
+}
+
+#[derive(Serialize)]
+struct ShapeTiming {
+    shape: String,
+    macs: u64,
+    kernel_gflops_scalar: f64,
+    kernel_gflops_blocked: f64,
+    speedup: f64,
+    max_ulp: f64,
+    ulp_bound: f64,
+    kernel_checksum: u32,
+}
+
+fn best_secs<T>(iters: usize, mut f: impl FnMut() -> T) -> (f64, T) {
+    let mut best = f64::INFINITY;
+    let mut out = None;
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        let v = f();
+        best = best.min(t0.elapsed().as_secs_f64());
+        out = Some(v);
+    }
+    (best, out.expect("iters >= 1"))
+}
+
+fn main() {
+    let iters = 3usize;
+    let shapes = [
+        GemmShape::square(64),
+        GemmShape::square(128),
+        GemmShape::square(256),
+        GemmShape::new(64, 512, 128), // rectangular: deep reduction
+    ];
+    let mut combined = CHECKSUM_SEED;
+    let mut rows = Vec::new();
+    let mut kernel_gflops_gemm = 0.0f64;
+    let mut best_macs = 0u64;
+    for (idx, shape) in shapes.iter().enumerate() {
+        let mut rng = KernelRng::new(0xBE_0000 + idx as u64);
+        let x = rng.vec(shape.x_len(), 1.0);
+        let w = rng.vec(shape.w_len(), 1.0);
+        let (scalar_s, z_ref) =
+            best_secs(iters, || gemm_scalar(shape, &x, &w, None));
+        let (blocked_s, z_blk) =
+            best_secs(iters, || gemm_blocked(shape, &x, &w, None));
+        let max_ulp = gemm_max_ulp(shape, &x, &w, None, &z_ref, &z_blk);
+        let ulp_bound = gemm_ulp_bound(shape.k);
+        assert!(
+            max_ulp <= ulp_bound,
+            "{shape:?}: blocked diverged by {max_ulp} anchored ULPs \
+             (bound {ulp_bound}) — refusing to report a perf number for a \
+             wrong kernel"
+        );
+        let counts = shape.counts();
+        let flops = counts.flops as f64;
+        let gf = |secs: f64| if secs > 0.0 { flops / secs / 1e9 } else { 0.0 };
+        let checksum = checksum_f32(&z_ref);
+        combined = checksum_combine(combined, checksum);
+        let blocked_gflops = gf(blocked_s);
+        if counts.macs >= best_macs {
+            best_macs = counts.macs;
+            kernel_gflops_gemm = blocked_gflops;
+        }
+        let label = format!("gemm_{}x{}x{}", shape.m, shape.k, shape.n);
+        println!(
+            "{label}: scalar {:.2} GF/s, blocked {:.2} GF/s ({:.2}x), \
+             max {max_ulp:.1} ULP (bound {ulp_bound:.0}), \
+             checksum {checksum:08x}",
+            gf(scalar_s),
+            blocked_gflops,
+            scalar_s / blocked_s.max(1e-12),
+        );
+        rows.push(ShapeTiming {
+            shape: label,
+            macs: counts.macs,
+            kernel_gflops_scalar: gf(scalar_s),
+            kernel_gflops_blocked: blocked_gflops,
+            speedup: scalar_s / blocked_s.max(1e-12),
+            max_ulp,
+            ulp_bound,
+            kernel_checksum: checksum,
+        });
+    }
+    let report = BenchReport {
+        bench: "kernels",
+        unit: "GFLOP/s (best of N); checksum is exact-gated",
+        status: "measured",
+        simd: SIMD_ENABLED,
+        iters,
+        shapes: rows,
+        kernel_gflops_gemm,
+        kernel_checksum: combined,
+    };
+    let json =
+        serde_json::to_string_pretty(&report).expect("report serializes");
+    println!("{json}");
+    if let Some(path) = std::env::var_os("TENSORPOOL_BENCH_OUT") {
+        std::fs::write(&path, &json).expect("write bench JSON");
+        eprintln!("[bench] wrote {}", path.to_string_lossy());
+    }
+}

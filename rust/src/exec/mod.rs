@@ -41,6 +41,7 @@ pub mod resume;
 pub mod schedule;
 pub mod stripe;
 pub mod substrate;
+pub mod validate;
 
 pub use block::{simulate_block, BlockKind, BlockRun};
 pub use cache::{BlockScheduleCache, CacheStats};
@@ -52,3 +53,6 @@ pub use schedule::{
 };
 pub use stripe::{StripedMap, STRIPE_SHARDS};
 pub use substrate::{ArchRun, ArchSpec, Substrate};
+pub use validate::{
+    kernel_macs_for, validate_gemm_macs, validate_gemm_result, SimVsMeasured,
+};

@@ -1,0 +1,157 @@
+//! Sim-vs-measured validation: the simulator's MAC accounting checked
+//! against what a real kernel executes.
+//!
+//! Every capacity, fleet, and energy figure in this crate is built on one
+//! number: the MAC count the simulator prices for a GEMM shape. Until the
+//! measured-kernel backend existed that number had no external witness —
+//! the simulator both defined the work and graded itself. This module
+//! closes the loop: for a [`GemmSpec`] × [`ScheduleMode`] the simulator
+//! prices, [`validate_gemm_macs`] runs the *actual simulation*, derives
+//! the op count a native kernel executes for the same problem
+//! ([`kernel_macs_for`], a pure closed form shared with
+//! `kernels::GemmShape::counts`), and demands **exact** equality via the
+//! sim-side hook [`RunResult::cross_check_macs`].
+//!
+//! Exactness is the point. Both sides count the same arithmetic
+//! (`m·n·k` multiply-accumulates per GEMM instance), so tolerance would
+//! only hide modeling drift — a TE that double-counts a tile, a mapper
+//! that drops a stripe (the `GemmSpec::square(0)` padding bug PR 1 fixed
+//! is exactly the class of error this net catches).
+
+use crate::kernels::GemmShape;
+use crate::sim::{ArchConfig, MacAccountingMismatch, RunResult};
+use crate::workload::gemm::GemmSpec;
+
+use super::gemm::GemmRun;
+use super::schedule::ScheduleMode;
+
+/// One sim-vs-measured comparison, already verified equal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SimVsMeasured {
+    pub spec: GemmSpec,
+    pub mode: ScheduleMode,
+    /// GEMM instances the mode maps (16 for `Independent` — one private
+    /// GEMM per TE — 1 for every other mode).
+    pub instances: u64,
+    /// MACs on both sides (they matched; that is why this struct exists).
+    pub macs: u64,
+}
+
+/// The MAC count a native kernel executes for `spec` under `mode` on
+/// `cfg`: `instances × m·n·k`. `Independent` maps one *private* copy of
+/// the GEMM per TE (see `workload::gemm::map_independent`), so the
+/// measured work is `num_tes` kernel invocations; every other mode
+/// partitions a single GEMM.
+pub fn kernel_macs_for(
+    spec: &GemmSpec,
+    mode: ScheduleMode,
+    cfg: &ArchConfig,
+) -> u64 {
+    let shape = kernel_shape(spec);
+    let instances = match mode {
+        ScheduleMode::Independent => cfg.num_tes() as u64,
+        _ => 1,
+    };
+    instances * shape.counts().macs
+}
+
+/// The kernel-layer shape for a simulator GEMM spec. The sim always runs
+/// untransposed `Z = [Y +] X·W`; `accumulate` carries over.
+pub fn kernel_shape(spec: &GemmSpec) -> GemmShape {
+    GemmShape {
+        m: spec.m,
+        k: spec.k,
+        n: spec.n,
+        trans_x: false,
+        trans_w: false,
+        accumulate: spec.accumulate,
+    }
+}
+
+/// Simulate `spec` under `mode` and cross-check the run's MAC accounting
+/// against the measured kernel op count — exact, or an error carrying
+/// both sides.
+pub fn validate_gemm_macs(
+    spec: &GemmSpec,
+    mode: ScheduleMode,
+    cfg: &ArchConfig,
+) -> Result<SimVsMeasured, MacAccountingMismatch> {
+    let run = GemmRun::new(*spec, mode).execute(cfg);
+    validate_gemm_result(&run, spec, mode, cfg)
+}
+
+/// The cross-check half of [`validate_gemm_macs`], for callers that
+/// already hold the [`RunResult`] (the CLI prices shapes once and both
+/// reports and validates from the same run).
+pub fn validate_gemm_result(
+    run: &RunResult,
+    spec: &GemmSpec,
+    mode: ScheduleMode,
+    cfg: &ArchConfig,
+) -> Result<SimVsMeasured, MacAccountingMismatch> {
+    let measured = kernel_macs_for(spec, mode, cfg);
+    let macs = run.cross_check_macs(measured)?;
+    let instances = match mode {
+        ScheduleMode::Independent => cfg.num_tes() as u64,
+        _ => 1,
+    };
+    Ok(SimVsMeasured { spec: *spec, mode, instances, macs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_modes_price_one_gemm() {
+        let cfg = ArchConfig::tensorpool();
+        let spec = GemmSpec::square(64);
+        for mode in [
+            ScheduleMode::SingleTe,
+            ScheduleMode::SplitLockstep,
+            ScheduleMode::SplitInterleaved,
+        ] {
+            let v = validate_gemm_macs(&spec, mode, &cfg)
+                .unwrap_or_else(|e| panic!("{mode:?}: {e}"));
+            assert_eq!(v.instances, 1);
+            assert_eq!(v.macs, 64 * 64 * 64);
+        }
+    }
+
+    #[test]
+    fn independent_mode_prices_one_gemm_per_te() {
+        let cfg = ArchConfig::tensorpool();
+        let spec = GemmSpec::square(32);
+        let v = validate_gemm_macs(&spec, ScheduleMode::Independent, &cfg)
+            .expect("independent-mode MAC accounting");
+        assert_eq!(v.instances, cfg.num_tes() as u64);
+        assert_eq!(v.macs, v.instances * 32 * 32 * 32);
+    }
+
+    #[test]
+    fn degenerate_shape_cross_checks_at_zero() {
+        // Mirrors the GemmSpec::square(0) fix from PR 1: the degenerate
+        // run must terminate AND account zero MACs on both sides.
+        let cfg = ArchConfig::tensorpool();
+        let v = validate_gemm_macs(
+            &GemmSpec::square(0),
+            ScheduleMode::SingleTe,
+            &cfg,
+        )
+        .expect("degenerate shape");
+        assert_eq!(v.macs, 0);
+    }
+
+    #[test]
+    fn mismatch_surfaces_both_sides() {
+        let cfg = ArchConfig::tensorpool();
+        let spec = GemmSpec::square(64);
+        let run =
+            GemmRun::new(spec, ScheduleMode::SingleTe).execute(&cfg);
+        // Tamper with the measured side: a wrong count must be rejected
+        // with both numbers visible.
+        let err = run.cross_check_macs(1).unwrap_err();
+        assert_eq!(err.simulated, 64 * 64 * 64);
+        assert_eq!(err.measured, 1);
+    }
+}

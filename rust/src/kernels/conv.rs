@@ -1,0 +1,228 @@
+//! Depthwise 3×3 SAME convolution — the PE half of the paper's
+//! depthwise-separable block (Fig 9 middle; the pointwise 1×1 half *is* a
+//! GEMM and lives in [`super::gemm`]).
+//!
+//! Layout mirrors `python/compile/kernels/conv.py`: input `(H, W, C)`
+//! row-major with C innermost (the channel-parallel split TensorPool
+//! spreads over PEs), kernel `(3, 3, C)`. Zero padding is materialized
+//! into an explicit `(H+2, W+2, C)` buffer before the tap loop — exactly
+//! like the Pallas kernel's caller — so *every* output element executes
+//! exactly 9 MACs and [`ConvShape::counts`] is a closed form, edges
+//! included.
+//!
+//! * [`dw_conv2d_scalar`] — ground truth: taps accumulated in fixed
+//!   `di → dj` order (row 0 left-to-right, then row 1, then row 2), one
+//!   serial accumulator.
+//! * [`dw_conv2d_blocked`] — one independent accumulator per tap *row*
+//!   (3 chains of 3 MACs), combined `(r0 + r1) + r2`. The reduction is
+//!   only 9 terms deep, so the bound is the small constant
+//!   [`CONV_ULP_BOUND`]. Behind the `simd` feature; scalar alias without.
+
+use super::{anchored_ulp, OpCounts};
+
+/// Shape of one depthwise conv: `(H, W, C)` input, `(3, 3, C)` kernel,
+/// `(H, W, C)` output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvShape {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl ConvShape {
+    pub fn new(h: usize, w: usize, c: usize) -> Self {
+        ConvShape { h, w, c }
+    }
+
+    pub fn x_len(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    pub fn k_len(&self) -> usize {
+        9 * self.c
+    }
+
+    /// Exactly 9 MACs per output element (zero padding keeps edge taps).
+    pub fn counts(&self) -> OpCounts {
+        let macs = 9 * self.h as u64 * self.w as u64 * self.c as u64;
+        OpCounts { macs, flops: 2 * macs }
+    }
+
+    /// Materialize the zero-padded `(H+2, W+2, C)` input.
+    fn padded(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.x_len(), "input length vs {self:?}");
+        let (pw, c) = (self.w + 2, self.c);
+        let mut xp = vec![0f32; (self.h + 2) * pw * c];
+        for i in 0..self.h {
+            let src = i * self.w * c;
+            let dst = ((i + 1) * pw + 1) * c;
+            xp[dst..dst + self.w * c]
+                .copy_from_slice(&x[src..src + self.w * c]);
+        }
+        xp
+    }
+}
+
+/// Anchored-ULP tolerance for blocked-vs-scalar conv: the reduction is 9
+/// terms deep, so 2·9 anchored ULPs covers any reassociation; doubled for
+/// headroom.
+pub const CONV_ULP_BOUND: f64 = 36.0;
+
+/// Scalar reference depthwise 3×3 SAME conv — ground truth. Fixed tap
+/// order `di → dj`, serial accumulator. `x: (H,W,C)`, `k: (3,3,C)`.
+pub fn dw_conv2d_scalar(shape: &ConvShape, x: &[f32], k: &[f32]) -> Vec<f32> {
+    assert_eq!(k.len(), shape.k_len(), "kernel length vs {shape:?}");
+    let xp = shape.padded(x);
+    let (w, c, pw) = (shape.w, shape.c, shape.w + 2);
+    let mut out = vec![0f32; shape.x_len()];
+    for i in 0..shape.h {
+        for j in 0..w {
+            for ch in 0..c {
+                let mut acc = 0f32;
+                for di in 0..3 {
+                    for dj in 0..3 {
+                        acc += xp[((i + di) * pw + j + dj) * c + ch]
+                            * k[(di * 3 + dj) * c + ch];
+                    }
+                }
+                out[(i * w + j) * c + ch] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// Blocked depthwise conv: one independent accumulator per tap row,
+/// combined `(r0 + r1) + r2` — matches the scalar reference within
+/// [`CONV_ULP_BOUND`] anchored ULPs.
+#[cfg(feature = "simd")]
+pub fn dw_conv2d_blocked(shape: &ConvShape, x: &[f32], k: &[f32]) -> Vec<f32> {
+    assert_eq!(k.len(), shape.k_len(), "kernel length vs {shape:?}");
+    let xp = shape.padded(x);
+    let (w, c, pw) = (shape.w, shape.c, shape.w + 2);
+    let mut out = vec![0f32; shape.x_len()];
+    for i in 0..shape.h {
+        for j in 0..w {
+            for ch in 0..c {
+                // 3 independent row chains (3 MACs each), fixed combine.
+                let mut rows = [0f32; 3];
+                for (di, r) in rows.iter_mut().enumerate() {
+                    let xrow = ((i + di) * pw + j) * c + ch;
+                    let krow = di * 3 * c + ch;
+                    *r = xp[xrow] * k[krow]
+                        + xp[xrow + c] * k[krow + c]
+                        + xp[xrow + 2 * c] * k[krow + 2 * c];
+                }
+                out[(i * w + j) * c + ch] = (rows[0] + rows[1]) + rows[2];
+            }
+        }
+    }
+    out
+}
+
+/// Scalar fallback without the `simd` feature: bit-identical alias of
+/// [`dw_conv2d_scalar`].
+#[cfg(not(feature = "simd"))]
+pub fn dw_conv2d_blocked(shape: &ConvShape, x: &[f32], k: &[f32]) -> Vec<f32> {
+    dw_conv2d_scalar(shape, x, k)
+}
+
+/// Max anchored-ULP distance between two conv results; per-element anchor
+/// is the exact f64 sum of `|tap|` magnitudes.
+pub fn conv_max_ulp(
+    shape: &ConvShape,
+    x: &[f32],
+    k: &[f32],
+    a: &[f32],
+    b: &[f32],
+) -> f64 {
+    assert_eq!(a.len(), shape.x_len());
+    assert_eq!(b.len(), shape.x_len());
+    let xp = shape.padded(x);
+    let (w, c, pw) = (shape.w, shape.c, shape.w + 2);
+    let mut max = 0f64;
+    for i in 0..shape.h {
+        for j in 0..w {
+            for ch in 0..c {
+                let mut anchor = 0f64;
+                for di in 0..3 {
+                    for dj in 0..3 {
+                        anchor += (xp[((i + di) * pw + j + dj) * c + ch]
+                            as f64
+                            * k[(di * 3 + dj) * c + ch] as f64)
+                            .abs();
+                    }
+                }
+                let idx = (i * w + j) * c + ch;
+                max = max.max(anchored_ulp(a[idx], b[idx], anchor));
+            }
+        }
+    }
+    max
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::KernelRng;
+    use super::*;
+
+    #[test]
+    fn identity_kernel_reproduces_the_input() {
+        // k = 1 at the center tap, 0 elsewhere → out == x everywhere
+        // (SAME padding keeps edges aligned).
+        let shape = ConvShape::new(4, 5, 2);
+        let mut rng = KernelRng::new(11);
+        let x = rng.vec(shape.x_len(), 1.0);
+        let mut k = vec![0f32; shape.k_len()];
+        for ch in 0..shape.c {
+            // center tap: di = 1, dj = 1 → flat tap index 4
+            k[4 * shape.c + ch] = 1.0;
+        }
+        assert_eq!(dw_conv2d_scalar(&shape, &x, &k), x);
+    }
+
+    #[test]
+    fn all_ones_kernel_counts_the_neighborhood() {
+        // x = 1 everywhere, k = 1 everywhere → out = live-neighbor count:
+        // 9 interior, 6 edge, 4 corner.
+        let shape = ConvShape::new(3, 3, 1);
+        let x = vec![1f32; shape.x_len()];
+        let k = vec![1f32; shape.k_len()];
+        let out = dw_conv2d_scalar(&shape, &x, &k);
+        assert_eq!(
+            out,
+            vec![4.0, 6.0, 4.0, 6.0, 9.0, 6.0, 4.0, 6.0, 4.0]
+        );
+    }
+
+    #[test]
+    fn blocked_matches_scalar_within_bound() {
+        for &(h, w, c) in &[(1, 1, 1), (2, 7, 3), (8, 8, 32), (1, 17, 5)] {
+            let shape = ConvShape::new(h, w, c);
+            let mut rng = KernelRng::new((h * 31 + w * 7 + c) as u64);
+            let x = rng.vec(shape.x_len(), 1.0);
+            let k = rng.vec(shape.k_len(), 1.0);
+            let a = dw_conv2d_scalar(&shape, &x, &k);
+            let b = dw_conv2d_blocked(&shape, &x, &k);
+            let ulp = conv_max_ulp(&shape, &x, &k, &a, &b);
+            assert!(
+                ulp <= CONV_ULP_BOUND,
+                "{h}x{w}x{c}: {ulp} > {CONV_ULP_BOUND}"
+            );
+        }
+    }
+
+    #[test]
+    fn degenerate_conv_does_not_panic() {
+        for &(h, w, c) in &[(0, 4, 2), (4, 0, 2), (4, 4, 0), (0, 0, 0)] {
+            let shape = ConvShape::new(h, w, c);
+            let x = vec![0f32; shape.x_len()];
+            let k = vec![0f32; shape.k_len()];
+            let a = dw_conv2d_scalar(&shape, &x, &k);
+            let b = dw_conv2d_blocked(&shape, &x, &k);
+            assert_eq!(a.len(), 0);
+            assert_eq!(b.len(), 0);
+            assert_eq!(shape.counts().macs, 0);
+        }
+    }
+}

@@ -1,0 +1,262 @@
+//! Elementwise kernels and the reductions that ride with them — the
+//! PE-side epilogues of `python/compile/kernels/elementwise.py` (ReLU,
+//! row-wise softmax) plus the streaming add/scale primitives and the
+//! checksum-grade `sum` reduction the bench uses.
+//!
+//! ## Flavors
+//!
+//! Pure streaming ops (`relu`, `add`, `scale`) have **no reduction**, so
+//! their blocked variants (8-wide unrolled loops that LLVM vectorizes)
+//! are required to be **bit-identical** to the scalar references — there
+//! is no reassociation to forgive, and `tests/kernels.rs` pins equality
+//! with `to_bits`. Only [`sum_blocked`] (a real reduction: 8 independent
+//! accumulators, pairwise combine) gets an anchored-ULP allowance
+//! ([`sum_ulp_bound`]).
+//!
+//! ## NaN/inf semantics (documented, fuzz-pinned)
+//!
+//! * [`relu_scalar`] uses Rust's `f32::max(x, 0.0)`: **NaN inputs
+//!   canonicalize to 0.0** (`max` returns the other operand when one is
+//!   NaN). This deliberately diverges from `jnp.maximum`, which
+//!   propagates NaN — the RedMulE epilogue clamps, it does not trap.
+//!   `+inf` stays `+inf`, `-inf` clamps to 0.0.
+//! * [`add_scalar`] / [`scale_scalar`] follow IEEE-754: NaN propagates,
+//!   `inf + (-inf)` and `inf · 0` produce NaN, infinities otherwise
+//!   propagate with their sign. The blocked variants are bit-identical,
+//!   so poison values land in the same lanes.
+
+use super::{anchored_ulp, OpCounts};
+
+/// FLOP count of a streaming op over `n` elements (1 FLOP per element).
+pub fn streaming_counts(n: usize) -> OpCounts {
+    OpCounts { macs: 0, flops: n as u64 }
+}
+
+/// FLOP count of a length-`n` sum (`n-1` adds, saturating at 0).
+pub fn sum_counts(n: usize) -> OpCounts {
+    OpCounts { macs: 0, flops: (n as u64).saturating_sub(1) }
+}
+
+/// Scalar ReLU reference: `out[i] = max(x[i], 0.0)`. NaN → 0.0 (see the
+/// module docs).
+pub fn relu_scalar(x: &[f32]) -> Vec<f32> {
+    x.iter().map(|&v| v.max(0.0)).collect()
+}
+
+/// Unrolled ReLU — **bit-identical** to [`relu_scalar`] (no reduction to
+/// reassociate); the unroll exists so the autovectorizer sees an 8-lane
+/// body. Scalar alias without the `simd` feature.
+#[cfg(feature = "simd")]
+pub fn relu_blocked(x: &[f32]) -> Vec<f32> {
+    let mut out = vec![0f32; x.len()];
+    let (chunks, tail) = (x.len() / 8 * 8, x.len() % 8);
+    let mut i = 0;
+    while i < chunks {
+        // 8 independent lanes, no cross-lane dependency.
+        for l in 0..8 {
+            out[i + l] = x[i + l].max(0.0);
+        }
+        i += 8;
+    }
+    for l in 0..tail {
+        out[i + l] = x[i + l].max(0.0);
+    }
+    out
+}
+
+#[cfg(not(feature = "simd"))]
+pub fn relu_blocked(x: &[f32]) -> Vec<f32> {
+    relu_scalar(x)
+}
+
+/// Scalar elementwise add: `out[i] = a[i] + b[i]`. IEEE NaN/inf rules.
+pub fn add_scalar(a: &[f32], b: &[f32]) -> Vec<f32> {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&p, &q)| p + q).collect()
+}
+
+/// Unrolled add — bit-identical to [`add_scalar`].
+#[cfg(feature = "simd")]
+pub fn add_blocked(a: &[f32], b: &[f32]) -> Vec<f32> {
+    assert_eq!(a.len(), b.len());
+    let mut out = vec![0f32; a.len()];
+    let chunks = a.len() / 8 * 8;
+    let mut i = 0;
+    while i < chunks {
+        for l in 0..8 {
+            out[i + l] = a[i + l] + b[i + l];
+        }
+        i += 8;
+    }
+    while i < a.len() {
+        out[i] = a[i] + b[i];
+        i += 1;
+    }
+    out
+}
+
+#[cfg(not(feature = "simd"))]
+pub fn add_blocked(a: &[f32], b: &[f32]) -> Vec<f32> {
+    add_scalar(a, b)
+}
+
+/// Scalar scale: `out[i] = x[i] · s`. IEEE NaN/inf rules (`inf · 0 =
+/// NaN`).
+pub fn scale_scalar(x: &[f32], s: f32) -> Vec<f32> {
+    x.iter().map(|&v| v * s).collect()
+}
+
+/// Serial left-fold sum — the reduction ground truth (ascending index
+/// order, single accumulator).
+pub fn sum_scalar(x: &[f32]) -> f32 {
+    let mut acc = 0f32;
+    for &v in x {
+        acc += v;
+    }
+    acc
+}
+
+/// Number of independent accumulators in [`sum_blocked`].
+pub const SUM_LANES: usize = 8;
+
+/// Anchored-ULP tolerance for blocked-vs-scalar sum of `n` terms (same
+/// derivation as [`super::gemm::gemm_ulp_bound`]).
+pub fn sum_ulp_bound(n: usize) -> f64 {
+    4.0 * n as f64 + 8.0
+}
+
+/// Blocked sum: [`SUM_LANES`] independent accumulators (lane `l` sums the
+/// `i ≡ l (mod 8)` terms), combined pairwise
+/// `((a0+a1)+(a2+a3)) + ((a4+a5)+(a6+a7))`, then the serial tail. Matches
+/// [`sum_scalar`] within [`sum_ulp_bound`] anchored ULPs. Scalar alias
+/// without the `simd` feature.
+#[cfg(feature = "simd")]
+pub fn sum_blocked(x: &[f32]) -> f32 {
+    let mut acc = [0f32; SUM_LANES];
+    let chunks = x.len() / SUM_LANES * SUM_LANES;
+    let mut i = 0;
+    while i < chunks {
+        for (l, a) in acc.iter_mut().enumerate() {
+            *a += x[i + l];
+        }
+        i += SUM_LANES;
+    }
+    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+        + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    while i < x.len() {
+        s += x[i];
+        i += 1;
+    }
+    s
+}
+
+#[cfg(not(feature = "simd"))]
+pub fn sum_blocked(x: &[f32]) -> f32 {
+    sum_scalar(x)
+}
+
+/// Max anchored-ULP distance between two sums of `x`; the anchor is the
+/// exact f64 sum of `|x[i]|`.
+pub fn sum_max_ulp(x: &[f32], a: f32, b: f32) -> f64 {
+    let anchor: f64 = x.iter().map(|&v| (v as f64).abs()).sum();
+    anchored_ulp(a, b, anchor)
+}
+
+/// Row-wise numerically-stable softmax (the FC epilogue of
+/// `python/compile/kernels/elementwise.py`): subtract the row max,
+/// exponentiate, normalize. Scalar reference only — it is an epilogue,
+/// not a throughput kernel. `x: (rows, cols)` row-major.
+pub fn softmax_rows(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    assert_eq!(x.len(), rows * cols, "softmax input vs {rows}x{cols}");
+    let mut out = vec![0f32; x.len()];
+    for r in 0..rows {
+        let row = &x[r * cols..(r + 1) * cols];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let dst = &mut out[r * cols..(r + 1) * cols];
+        let mut denom = 0f32;
+        for (d, &v) in dst.iter_mut().zip(row) {
+            *d = (v - m).exp();
+            denom += *d;
+        }
+        for d in dst.iter_mut() {
+            *d /= denom;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::KernelRng;
+    use super::*;
+
+    #[test]
+    fn relu_semantics_incl_nan_and_inf() {
+        let x = [1.5, -2.0, 0.0, f32::NAN, f32::INFINITY, f32::NEG_INFINITY];
+        let out = relu_scalar(&x);
+        assert_eq!(out[0], 1.5);
+        assert_eq!(out[1], 0.0);
+        assert_eq!(out[2], 0.0);
+        assert_eq!(out[3], 0.0, "NaN canonicalizes to 0.0 (documented)");
+        assert_eq!(out[4], f32::INFINITY);
+        assert_eq!(out[5], 0.0);
+    }
+
+    #[test]
+    fn streaming_blocked_is_bit_identical() {
+        let mut rng = KernelRng::new(5);
+        let mut a = rng.vec(1003, 4.0);
+        let b = rng.vec(1003, 4.0);
+        // salt with poison values at unaligned positions
+        a[17] = f32::NAN;
+        a[999] = f32::INFINITY;
+        let bits = |v: &[f32]| -> Vec<u32> {
+            v.iter().map(|f| f.to_bits()).collect()
+        };
+        assert_eq!(bits(&relu_scalar(&a)), bits(&relu_blocked(&a)));
+        assert_eq!(bits(&add_scalar(&a, &b)), bits(&add_blocked(&a, &b)));
+    }
+
+    #[test]
+    fn add_and_scale_propagate_ieee_poison() {
+        let s = add_scalar(&[f32::INFINITY], &[f32::NEG_INFINITY]);
+        assert!(s[0].is_nan(), "inf + -inf = NaN");
+        let p = scale_scalar(&[f32::INFINITY], 0.0);
+        assert!(p[0].is_nan(), "inf * 0 = NaN");
+        let q = scale_scalar(&[f32::NAN, 2.0], 3.0);
+        assert!(q[0].is_nan() && q[1] == 6.0, "NaN stays in its lane");
+    }
+
+    #[test]
+    fn sum_blocked_within_bound() {
+        for n in [0usize, 1, 7, 8, 64, 257, 4096] {
+            let mut rng = KernelRng::new(n as u64 + 1);
+            let x = rng.vec(n, 2.0);
+            let a = sum_scalar(&x);
+            let b = sum_blocked(&x);
+            let ulp = sum_max_ulp(&x, a, b);
+            assert!(
+                ulp <= sum_ulp_bound(n),
+                "n={n}: {ulp} > {}",
+                sum_ulp_bound(n)
+            );
+        }
+    }
+
+    #[test]
+    fn softmax_rows_are_distributions() {
+        let mut rng = KernelRng::new(3);
+        let (rows, cols) = (5, 9);
+        let x = rng.vec(rows * cols, 6.0);
+        let s = softmax_rows(&x, rows, cols);
+        for row in s.chunks(cols) {
+            let total: f32 = row.iter().sum();
+            assert!((total - 1.0).abs() < 1e-5, "row sums to {total}");
+            assert!(row.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        }
+        // stability: a huge logit must not overflow to NaN
+        let hot = softmax_rows(&[1e30, 0.0, 0.0], 1, 3);
+        assert!(hot.iter().all(|v| v.is_finite()));
+        assert!((hot[0] - 1.0).abs() < 1e-6);
+    }
+}

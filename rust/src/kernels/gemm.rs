@@ -1,0 +1,354 @@
+//! GEMM kernels: `Z = [Y +] op(X) · op(W)`, f32 operands, f32
+//! accumulation.
+//!
+//! The RedMulE accumulate contract is mirrored structurally: when
+//! `accumulate` is set, Y is *preloaded into the accumulator* before the
+//! K-reduction runs (the TE preloads Y into its FMA register file), not
+//! added to the finished dot product. The `python/compile/kernels`
+//! reference adds Y after the dot instead — a low-order-bit divergence
+//! covered by the same anchored-ULP analysis as everything else here, and
+//! irrelevant to op counting (the comparison that matters for
+//! sim-vs-measured is *exact MAC counts*, not bits).
+//!
+//! Two flavors, one contract:
+//!
+//! * [`gemm_scalar`] — the ground truth. Loop order is **fixed and part
+//!   of the contract**: `i` (rows) → `j` (cols) → `k` (reduction), one
+//!   serial f32 accumulator per output element, terms added in ascending
+//!   `k` order. Changing this order is a semantic change, not a cleanup.
+//! * [`gemm_blocked`] — cache-blocked over `j` ([`J_TILE`]-column panels
+//!   of W stay hot across the `i` loop) with the K-chain split across
+//!   [`K_LANES`] = 4 independent accumulators (`acc[l]` sums the terms
+//!   with `k ≡ l (mod 4)`), combined pairwise
+//!   `(acc0+acc1) + (acc2+acc3)`, then the `k % 4` tail in serial order.
+//!   Must match the scalar reference within [`gemm_ulp_bound`] anchored
+//!   ULPs. Behind the `simd` feature; without it, an alias of
+//!   [`gemm_scalar`].
+
+use super::{anchored_ulp, OpCounts};
+
+/// Shape + layout of one GEMM: `Z(M×N) = [Y(M×N) +] op(X) · op(W)` where
+/// `op` is transpose when the corresponding flag is set. X holds `M×K`
+/// logical values stored as `(M,K)` row-major, or `(K,M)` when `trans_x`
+/// — same storage length either way, so a transposed problem is the same
+/// buffers walked differently (exactly how the fuzz exercises strided
+/// access).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmShape {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// X is stored transposed: element `(i, k)` lives at `x[k*m + i]`.
+    pub trans_x: bool,
+    /// W is stored transposed: element `(k, j)` lives at `w[j*k + k]`.
+    pub trans_w: bool,
+    /// Preload Y into the accumulator (the RedMulE `Z = Y + X·W` form).
+    pub accumulate: bool,
+}
+
+impl GemmShape {
+    pub fn new(m: usize, k: usize, n: usize) -> Self {
+        GemmShape { m, k, n, trans_x: false, trans_w: false, accumulate: false }
+    }
+
+    pub fn square(n: usize) -> Self {
+        Self::new(n, n, n)
+    }
+
+    pub fn x_len(&self) -> usize {
+        self.m * self.k
+    }
+
+    pub fn w_len(&self) -> usize {
+        self.k * self.n
+    }
+
+    pub fn z_len(&self) -> usize {
+        self.m * self.n
+    }
+
+    /// Operations this shape *executes* — every output element performs
+    /// exactly `k` MACs regardless of flavor, blocking, or transposes, so
+    /// `macs = m·n·k`. This identity (kernel loop structure ↔ closed
+    /// form) is what lets `exec::validate` compare against the
+    /// simulator's MAC accounting exactly.
+    pub fn counts(&self) -> OpCounts {
+        // Y preload is a register initialization, not an add: accumulate
+        // contributes 0 extra FLOPs.
+        let macs = self.m as u64 * self.n as u64 * self.k as u64;
+        OpCounts { macs, flops: 2 * macs }
+    }
+
+    #[inline]
+    fn x_at(&self, x: &[f32], i: usize, kk: usize) -> f32 {
+        if self.trans_x {
+            x[kk * self.m + i]
+        } else {
+            x[i * self.k + kk]
+        }
+    }
+
+    #[inline]
+    fn w_at(&self, w: &[f32], kk: usize, j: usize) -> f32 {
+        if self.trans_w {
+            w[j * self.k + kk]
+        } else {
+            w[kk * self.n + j]
+        }
+    }
+
+    fn check_inputs(&self, x: &[f32], w: &[f32], y: Option<&[f32]>) {
+        assert_eq!(x.len(), self.x_len(), "X length vs {self:?}");
+        assert_eq!(w.len(), self.w_len(), "W length vs {self:?}");
+        assert_eq!(
+            self.accumulate,
+            y.is_some(),
+            "Y must be present iff shape.accumulate"
+        );
+        if let Some(y) = y {
+            assert_eq!(y.len(), self.z_len(), "Y length vs {self:?}");
+        }
+    }
+}
+
+/// Columns of W per cache block in [`gemm_blocked`]: 64 columns × 4 rows
+/// of K-unroll = a W panel that stays L1-resident across the `i` loop.
+pub const J_TILE: usize = 64;
+
+/// Independent accumulators in the blocked K-reduction. 4 chains of
+/// latency-4-ish FMA keeps the FPU pipeline full; the combine order is
+/// fixed (pairwise) so results are deterministic.
+pub const K_LANES: usize = 4;
+
+/// Anchored-ULP tolerance for blocked-vs-scalar GEMM at reduction depth
+/// `k` (see the module docs of [`crate::kernels`] for the derivation:
+/// two summation orders differ by ≲ 2k anchored ULPs; 2× headroom + a
+/// small constant for the Y preload and the final combine).
+pub fn gemm_ulp_bound(k: usize) -> f64 {
+    4.0 * k as f64 + 8.0
+}
+
+/// The scalar reference GEMM — ground truth. Fixed loop order
+/// `i → j → k`, single serial accumulator, Y preloaded when accumulating.
+pub fn gemm_scalar(
+    shape: &GemmShape,
+    x: &[f32],
+    w: &[f32],
+    y: Option<&[f32]>,
+) -> Vec<f32> {
+    shape.check_inputs(x, w, y);
+    let mut z = vec![0f32; shape.z_len()];
+    for i in 0..shape.m {
+        for j in 0..shape.n {
+            let mut acc = match y {
+                Some(y) => y[i * shape.n + j],
+                None => 0.0,
+            };
+            for kk in 0..shape.k {
+                acc += shape.x_at(x, i, kk) * shape.w_at(w, kk, j);
+            }
+            z[i * shape.n + j] = acc;
+        }
+    }
+    z
+}
+
+/// The blocked GEMM: J-tiled, K-chain split across [`K_LANES`]
+/// independent accumulators. Matches [`gemm_scalar`] within
+/// [`gemm_ulp_bound`] anchored ULPs (fuzz-pinned in `tests/kernels.rs`).
+#[cfg(feature = "simd")]
+pub fn gemm_blocked(
+    shape: &GemmShape,
+    x: &[f32],
+    w: &[f32],
+    y: Option<&[f32]>,
+) -> Vec<f32> {
+    shape.check_inputs(x, w, y);
+    let mut z = vec![0f32; shape.z_len()];
+    let k_main = shape.k - shape.k % K_LANES;
+    for jb in (0..shape.n).step_by(J_TILE) {
+        let j_end = (jb + J_TILE).min(shape.n);
+        for i in 0..shape.m {
+            for j in jb..j_end {
+                // 4 independent chains break the serial-FMA dependency:
+                // lane l owns the k ≡ l (mod 4) terms.
+                let mut acc = [0f32; K_LANES];
+                let mut kk = 0;
+                while kk < k_main {
+                    acc[0] += shape.x_at(x, i, kk) * shape.w_at(w, kk, j);
+                    acc[1] +=
+                        shape.x_at(x, i, kk + 1) * shape.w_at(w, kk + 1, j);
+                    acc[2] +=
+                        shape.x_at(x, i, kk + 2) * shape.w_at(w, kk + 2, j);
+                    acc[3] +=
+                        shape.x_at(x, i, kk + 3) * shape.w_at(w, kk + 3, j);
+                    kk += K_LANES;
+                }
+                // Fixed combine order: pairwise, then the serial tail,
+                // then the Y preload — deterministic on every platform.
+                let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+                while kk < shape.k {
+                    s += shape.x_at(x, i, kk) * shape.w_at(w, kk, j);
+                    kk += 1;
+                }
+                if let Some(y) = y {
+                    s += y[i * shape.n + j];
+                }
+                z[i * shape.n + j] = s;
+            }
+        }
+    }
+    z
+}
+
+/// Scalar fallback: without the `simd` feature the blocked entry point
+/// *is* the scalar reference — bit-identical by construction, so the
+/// whole stack keeps one behavior surface (CI builds both legs).
+#[cfg(not(feature = "simd"))]
+pub fn gemm_blocked(
+    shape: &GemmShape,
+    x: &[f32],
+    w: &[f32],
+    y: Option<&[f32]>,
+) -> Vec<f32> {
+    gemm_scalar(shape, x, w, y)
+}
+
+/// Max anchored-ULP distance between two GEMM results over the same
+/// inputs. The per-element anchor is the exact f64 sum of `|x·w|` terms
+/// (plus `|y|`) — the natural scale of that element's rounding error.
+pub fn gemm_max_ulp(
+    shape: &GemmShape,
+    x: &[f32],
+    w: &[f32],
+    y: Option<&[f32]>,
+    a: &[f32],
+    b: &[f32],
+) -> f64 {
+    assert_eq!(a.len(), shape.z_len());
+    assert_eq!(b.len(), shape.z_len());
+    let mut max = 0f64;
+    for i in 0..shape.m {
+        for j in 0..shape.n {
+            let mut anchor = match y {
+                Some(y) => y[i * shape.n + j].abs() as f64,
+                None => 0.0,
+            };
+            for kk in 0..shape.k {
+                anchor += (shape.x_at(x, i, kk) as f64
+                    * shape.w_at(w, kk, j) as f64)
+                    .abs();
+            }
+            let idx = i * shape.n + j;
+            max = max.max(anchored_ulp(a[idx], b[idx], anchor));
+        }
+    }
+    max
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng_inputs(
+        shape: &GemmShape,
+        seed: u64,
+    ) -> (Vec<f32>, Vec<f32>, Option<Vec<f32>>) {
+        let mut rng = super::super::KernelRng::new(seed);
+        let x = rng.vec(shape.x_len(), 1.0);
+        let w = rng.vec(shape.w_len(), 1.0);
+        let y = shape.accumulate.then(|| rng.vec(shape.z_len(), 1.0));
+        (x, w, y)
+    }
+
+    #[test]
+    fn scalar_gemm_known_answer() {
+        // 2x2: Z = X·W computed by hand.
+        let shape = GemmShape::new(2, 2, 2);
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let w = [5.0, 6.0, 7.0, 8.0];
+        let z = gemm_scalar(&shape, &x, &w, None);
+        assert_eq!(z, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transposes_relabel_the_same_storage() {
+        // X^T stored (K,M) must reproduce the untransposed answer when
+        // the storage is the explicit transpose of the row-major X.
+        let shape = GemmShape::new(3, 4, 2);
+        let (x, w, _) = rng_inputs(&shape, 3);
+        let base = gemm_scalar(&shape, &x, &w, None);
+        let mut xt = vec![0f32; x.len()];
+        for i in 0..shape.m {
+            for kk in 0..shape.k {
+                xt[kk * shape.m + i] = x[i * shape.k + kk];
+            }
+        }
+        let t = GemmShape { trans_x: true, ..shape };
+        assert_eq!(gemm_scalar(&t, &xt, &w, None), base);
+        let mut wt = vec![0f32; w.len()];
+        for kk in 0..shape.k {
+            for j in 0..shape.n {
+                wt[j * shape.k + kk] = w[kk * shape.n + j];
+            }
+        }
+        let tw = GemmShape { trans_w: true, ..shape };
+        assert_eq!(gemm_scalar(&tw, &x, &wt, None), base);
+    }
+
+    #[test]
+    fn blocked_matches_scalar_within_bound() {
+        for &(m, k, n) in &[(5, 7, 9), (32, 257, 16), (64, 64, 64)] {
+            let shape = GemmShape::new(m, k, n);
+            let (x, w, _) = rng_inputs(&shape, (m * k * n) as u64);
+            let a = gemm_scalar(&shape, &x, &w, None);
+            let b = gemm_blocked(&shape, &x, &w, None);
+            let ulp = gemm_max_ulp(&shape, &x, &w, None, &a, &b);
+            assert!(
+                ulp <= gemm_ulp_bound(k),
+                "{m}x{k}x{n}: {ulp} > bound {}",
+                gemm_ulp_bound(k)
+            );
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes_do_not_panic() {
+        for &(m, k, n) in &[(0, 4, 4), (4, 0, 4), (4, 4, 0), (0, 0, 0)] {
+            let shape = GemmShape::new(m, k, n);
+            let (x, w, _) = rng_inputs(&shape, 1);
+            let a = gemm_scalar(&shape, &x, &w, None);
+            let b = gemm_blocked(&shape, &x, &w, None);
+            assert_eq!(a.len(), m * n);
+            assert_eq!(a, b, "k=0 / empty outputs are exact in any order");
+            assert_eq!(shape.counts().macs, (m * k * n) as u64);
+        }
+    }
+
+    #[test]
+    fn accumulate_preloads_y() {
+        let shape =
+            GemmShape { accumulate: true, ..GemmShape::new(2, 1, 2) };
+        let x = [2.0, 3.0];
+        let w = [10.0, 100.0];
+        let y = [1.0, 2.0, 3.0, 4.0];
+        let z = gemm_scalar(&shape, &x, &w, Some(&y));
+        assert_eq!(z, vec![21.0, 202.0, 33.0, 304.0]);
+        let zb = gemm_blocked(&shape, &x, &w, Some(&y));
+        let ulp = gemm_max_ulp(&shape, &x, &w, Some(&y), &z, &zb);
+        assert!(ulp <= gemm_ulp_bound(1));
+    }
+
+    #[cfg(not(feature = "simd"))]
+    #[test]
+    fn without_simd_blocked_is_the_scalar_reference_bit_for_bit() {
+        let shape = GemmShape::new(17, 33, 9);
+        let (x, w, _) = rng_inputs(&shape, 99);
+        let a = gemm_scalar(&shape, &x, &w, None);
+        let b = gemm_blocked(&shape, &x, &w, None);
+        assert!(
+            a.iter().zip(&b).all(|(p, q)| p.to_bits() == q.to_bits()),
+            "scalar fallback must be bit-identical"
+        );
+    }
+}

@@ -1,0 +1,238 @@
+//! Native measured-kernel backend: the math, executed for real.
+//!
+//! Every number the simulator, the serving loop, and the fleet layer
+//! produce is *bookkeeping* — cycle and MAC accounting over a model of the
+//! hardware. This module is the first **ground truth** behind those
+//! numbers: host-native Rust implementations of the `python/compile/kernels`
+//! reference ops (GEMM, depthwise conv, elementwise), in two flavors per
+//! op:
+//!
+//! * a **scalar reference** — naive loops with a *fixed, documented*
+//!   evaluation order. This is the correctness oracle: it is what "the
+//!   right answer" means everywhere in this crate.
+//! * a **blocked** implementation — cache-tiled, with the inner reduction
+//!   split across 4–8 *independent* f32 accumulators (the
+//!   dependency-chain-breaking idiom from the compute-pattern playbook:
+//!   a single serial `acc += x*w` chain stalls on FMA latency; independent
+//!   chains keep the FPU pipeline full and give LLVM a shape it can
+//!   autovectorize). Blocked results must match the scalar reference
+//!   within the documented [anchored-ULP](anchored_ulp) bounds — pinned by
+//!   the 30-seed shape fuzz in `tests/kernels.rs`.
+//!
+//! The blocked flavor is gated behind the `simd` cargo feature (default
+//! on). With `--no-default-features` every `*_blocked` entry point
+//! *delegates to the scalar reference* — bit-identical, just slower — so
+//! the whole stack keeps one behavior surface and a missing `cfg` cannot
+//! rot silently (CI builds and tests both legs).
+//!
+//! ## Layering
+//!
+//! `kernels` is a **leaf**, beside `sim` at the bottom of the crate graph:
+//! it imports nothing from the rest of the crate, and `sim`/`workload`/
+//! `ppa` never import it (grep-enforced by `tests/layering.rs`). The
+//! layers that consume it:
+//!
+//! * `exec::validate` — the sim-vs-measured cross-check: for every GEMM
+//!   shape the simulator prices, the kernel's executed MAC count must
+//!   equal `Sim`'s MAC accounting *exactly*.
+//! * `runtime::native` — the [`KernelBackend`](crate::runtime) trait's
+//!   first real implementation (the PJRT stub stays the eventual
+//!   accelerator path).
+//! * the CLI (`tensorpool kernels`) and `benches/kernels.rs`.
+//!
+//! ## The anchored-ULP contract
+//!
+//! Reassociating a floating-point reduction (which is all the blocked
+//! flavors do) changes low-order bits. Raw ULP distance between two valid
+//! summation orders is unbounded near zero (catastrophic cancellation can
+//! leave two tiny results many ULPs apart), so tolerances here are
+//! expressed in **anchored ULPs**: `|a − b| / (anchor · ε)`, where the
+//! anchor is the sum of absolute values of the reduction's terms — the
+//! natural scale of its rounding error. Standard error analysis bounds the
+//! forward error of *any* summation order of `k` terms by
+//! `≈ k · ε · Σ|terms|`, so two orders differ by at most `≈ 2k` anchored
+//! ULPs; the documented bounds ([`gemm::gemm_ulp_bound`],
+//! [`conv::CONV_ULP_BOUND`], [`elementwise::sum_ulp_bound`]) carry 2×
+//! headroom on top of that.
+
+pub mod conv;
+pub mod elementwise;
+pub mod gemm;
+
+pub use conv::{dw_conv2d_blocked, dw_conv2d_scalar, ConvShape};
+pub use gemm::{gemm_blocked, gemm_scalar, GemmShape};
+
+/// Exact operation counts of one kernel invocation, as *executed* — not a
+/// model. `macs` is the number the sim-vs-measured validation layer
+/// (`exec::validate`) compares against `Sim`'s MAC accounting.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    /// Multiply-accumulate operations (1 MAC = 1 mul + 1 add).
+    pub macs: u64,
+    /// Total floating-point operations (2 per MAC, 1 per plain add/mul).
+    pub flops: u64,
+}
+
+impl OpCounts {
+    pub fn add(self, other: OpCounts) -> OpCounts {
+        OpCounts {
+            macs: self.macs + other.macs,
+            flops: self.flops + other.flops,
+        }
+    }
+}
+
+/// True when this build carries the explicit multi-accumulator blocked
+/// kernels; false when `--no-default-features` made every `*_blocked`
+/// entry point a scalar-reference alias.
+pub const SIMD_ENABLED: bool = cfg!(feature = "simd");
+
+/// Distance between a reference and a reassociated result, in units of
+/// the rounding granularity at the reduction's natural scale:
+/// `|a − b| / (anchor · ε)`. `anchor` must be the sum of absolute values
+/// of the reduction's terms (see the module docs for why raw ULPs are the
+/// wrong metric near zero). Two NaNs compare at distance 0 (both flavors
+/// propagated the poison); a NaN on one side only is `f64::INFINITY`.
+pub fn anchored_ulp(reference: f32, other: f32, anchor: f64) -> f64 {
+    if reference.to_bits() == other.to_bits() {
+        return 0.0;
+    }
+    if reference.is_nan() || other.is_nan() {
+        return if reference.is_nan() && other.is_nan() {
+            0.0
+        } else {
+            f64::INFINITY
+        };
+    }
+    let unit = anchor.max(f32::MIN_POSITIVE as f64) * f32::EPSILON as f64;
+    (reference as f64 - other as f64).abs() / unit
+}
+
+/// FNV-1a over the little-endian bit patterns of `data`, folded to 32
+/// bits. Bit-exact and platform-independent (IEEE f32 arithmetic is
+/// deterministic), so the bench trajectory gates on it *exactly*
+/// (`kernel_checksum` in `tensorpool bench-diff`). 32 bits on purpose:
+/// the value must survive a JSON round-trip through f64 without rounding.
+pub fn checksum_f32(data: &[f32]) -> u32 {
+    let mut h: u32 = CHECKSUM_SEED;
+    for v in data {
+        for b in v.to_le_bytes() {
+            h ^= b as u32;
+            h = h.wrapping_mul(0x0100_0193);
+        }
+    }
+    h
+}
+
+/// Fold one 32-bit word (e.g. a per-shape [`checksum_f32`]) into a
+/// running FNV-1a state, little-endian byte order. Start from
+/// [`CHECKSUM_SEED`]; the result is the combined `kernel_checksum` the
+/// CLI and `benches/kernels.rs` emit — one exact-gated word per report
+/// covering every shape's scalar-reference output.
+pub fn checksum_combine(acc: u32, word: u32) -> u32 {
+    let mut h = acc;
+    for b in word.to_le_bytes() {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// FNV-1a offset basis: the initial state for [`checksum_combine`] folds
+/// (and the internal seed of [`checksum_f32`]).
+pub const CHECKSUM_SEED: u32 = 0x811c_9dc5;
+
+/// Deterministic xorshift64 input generator for kernel drivers (CLI,
+/// benches, fuzz). Not a statistical RNG — a reproducible pattern source.
+pub struct KernelRng(pub u64);
+
+impl KernelRng {
+    pub fn new(seed: u64) -> Self {
+        // 0 is a fixed point of xorshift; displace it.
+        KernelRng(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+
+    /// Uniform-ish f32 in `[-0.5, 0.5) * scale`.
+    pub fn f32(&mut self, scale: f32) -> f32 {
+        ((self.next_u64() >> 40) as f32 / (1u64 << 24) as f32 - 0.5) * scale
+    }
+
+    pub fn vec(&mut self, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32(scale)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checksum_is_order_sensitive_and_stable() {
+        let a = checksum_f32(&[1.0, 2.0, 3.0]);
+        let b = checksum_f32(&[3.0, 2.0, 1.0]);
+        assert_ne!(a, b, "checksum must be order-sensitive");
+        assert_eq!(a, checksum_f32(&[1.0, 2.0, 3.0]), "must be stable");
+        assert_ne!(
+            checksum_f32(&[0.0]),
+            checksum_f32(&[-0.0]),
+            "bit-level: +0.0 and -0.0 differ"
+        );
+    }
+
+    #[test]
+    fn checksum_combine_matches_bytewise_fnv() {
+        // Folding word-by-word must equal hashing the same bytes in one
+        // pass — the combined kernel_checksum is a plain FNV-1a stream.
+        let words = [0xdead_beefu32, 0x0000_0001];
+        let folded = words
+            .iter()
+            .fold(CHECKSUM_SEED, |acc, &w| checksum_combine(acc, w));
+        let mut h = CHECKSUM_SEED;
+        for w in words {
+            for b in w.to_le_bytes() {
+                h ^= b as u32;
+                h = h.wrapping_mul(0x0100_0193);
+            }
+        }
+        assert_eq!(folded, h);
+        let swapped = checksum_combine(
+            checksum_combine(CHECKSUM_SEED, words[1]),
+            words[0],
+        );
+        assert_ne!(folded, swapped, "combine must be order-sensitive");
+    }
+
+    #[test]
+    fn anchored_ulp_basics() {
+        assert_eq!(anchored_ulp(1.0, 1.0, 1.0), 0.0);
+        // one ε apart at anchor 1.0 → exactly 1 anchored ULP
+        let next = f32::from_bits(1.0f32.to_bits() + 1);
+        let d = anchored_ulp(1.0, next, 1.0);
+        assert!((d - 1.0).abs() < 1e-9, "distance {d}");
+        // NaN vs NaN is agreement; NaN vs number is infinite distance
+        assert_eq!(anchored_ulp(f32::NAN, f32::NAN, 1.0), 0.0);
+        assert_eq!(anchored_ulp(f32::NAN, 1.0, 1.0), f64::INFINITY);
+        // a zero anchor must not divide by zero
+        assert!(anchored_ulp(0.0, 1e-30, 0.0).is_finite());
+    }
+
+    #[test]
+    fn kernel_rng_is_deterministic_and_bounded() {
+        let mut a = KernelRng::new(7);
+        let mut b = KernelRng::new(7);
+        let va = a.vec(100, 2.0);
+        let vb = b.vec(100, 2.0);
+        assert_eq!(va, vb);
+        assert!(va.iter().all(|v| (-1.0..1.0).contains(v)));
+        // seed 0 must not collapse to the xorshift fixed point
+        let mut z = KernelRng::new(0);
+        assert!((0..10).map(|_| z.next_u64()).any(|v| v != 0));
+    }
+}

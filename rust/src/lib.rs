@@ -27,8 +27,15 @@
 //!   3D routing-channel model (Eqs 7–8, Fig 15).
 //! * [`models`] — the AI-Native PHY model survey (Fig 1) and derived
 //!   platform requirements.
-//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
-//!   (`artifacts/*.hlo.txt`); Python never runs on this path.
+//! * [`kernels`] — the measured-kernel native backend: host-native GEMM /
+//!   depthwise-conv / elementwise implementations (scalar reference +
+//!   multi-accumulator blocked flavors) that execute the math for real —
+//!   the numerical ground truth behind the simulator's MAC accounting
+//!   (`tensorpool kernels` on the CLI).
+//! * [`runtime`] — the kernel-backend seam: [`runtime::KernelBackend`]
+//!   with the native implementation as the first real backend, plus the
+//!   feature-gated PJRT path for the AOT-compiled JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`) as the eventual accelerator route.
 //! * [`sweep`] — the parallel, cacheable scenario-sweep engine every figure
 //!   harness and bench runs on (`tensorpool sweep` on the CLI).
 //! * [`report`] — table/series printers matching the paper's figures.
@@ -37,6 +44,7 @@ pub mod coordinator;
 pub mod exec;
 pub mod figures;
 pub mod fleet;
+pub mod kernels;
 pub mod models;
 pub mod ppa;
 pub mod report;

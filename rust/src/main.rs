@@ -90,6 +90,18 @@ COMMANDS:
             parallel == serial byte-identity by default. Non-smoke
             defaults: 128 cells, mean 8 users/cell/TTI, 20 TTIs. --smoke
             runs the 8-cell CI fleet.
+  kernels [--shapes MxKxN,..] [--iters N] [--smoke] [--out <path>]
+            execute the measured kernels natively (scalar reference vs
+            multi-accumulator blocked): per-shape GFLOP/s, scalar-vs-blocked
+            speedup, anchored-ULP differential against the documented
+            bounds, output checksums, a conv + reduction differential, and
+            the sim-vs-measured MAC cross-check (the simulator's MAC
+            accounting must equal the kernel's executed op count EXACTLY
+            for every 32-tileable shape). Nonzero exit on any bound
+            violation or MAC mismatch — this is the CI kernel-differential
+            gate. --smoke runs the small CI grid; --out writes
+            machine-readable JSON (kernel_gflops_*, kernel_checksum,
+            max_ulp_over_bound)
   bench-diff --baseline <file> --current <file> [--threshold PCT]
             compare two perf-trajectory JSONs (BENCH_*.json) and exit
             nonzero if any deterministic metric (simulated cycle counts,
@@ -122,6 +134,7 @@ fn main() {
         "sweep" => sweep(rest),
         "capacity" => capacity(rest),
         "fleet" => fleet(rest),
+        "kernels" => kernels_cmd(rest),
         "bench-diff" => bench_diff(rest),
         "artifacts" => artifacts(rest),
         "run" => run_artifact(rest),
@@ -817,9 +830,11 @@ fn fleet(rest: &[String]) -> i32 {
 
 /// Diff two perf-trajectory JSONs (`BENCH_*.json`) on their DETERMINISTIC
 /// metrics: simulated cycle counts gate at `--threshold` percent increase,
-/// simulated MAC counts must match exactly (workload identity). Wall-clock
-/// fields are deliberately ignored — CI machines are noisy, cycle counts
-/// are not. A `null` baseline value (schema stub awaiting its first
+/// simulated MAC counts and measured-kernel output checksums must match
+/// exactly (workload identity / numerics identity — `kernel_gflops_*`
+/// throughputs are wall-clock and therefore informational only).
+/// Wall-clock fields are deliberately ignored — CI machines are noisy,
+/// cycle counts are not. A `null` baseline value (schema stub awaiting its first
 /// measured run) passes vacuously; a metric present in the baseline but
 /// missing from the current file fails (schema drift).
 fn bench_diff(rest: &[String]) -> i32 {
@@ -897,7 +912,7 @@ fn bench_diff(rest: &[String]) -> i32 {
         "total_energy_j",
         "fleet_cycles_total",
     ];
-    const EXACT: [&str; 1] = ["sim_macs"];
+    const EXACT: [&str; 2] = ["sim_macs", "kernel_checksum"];
 
     let mut failures = 0usize;
     let mut checked = 0usize;
@@ -999,6 +1014,252 @@ fn artifacts(rest: &[String]) -> i32 {
             eprintln!("error: {e:#}");
             1
         }
+    }
+}
+
+/// `tensorpool kernels` — execute the measured-kernel backend for real
+/// and gate on it. Three independent checks per run, any failure → exit 1:
+///
+/// 1. **Differential**: blocked (multi-accumulator) output must match the
+///    scalar reference within the documented anchored-ULP bound, per GEMM
+///    shape, plus one conv and one reduction differential.
+/// 2. **Sim-vs-measured**: for every 32-tileable shape, the simulator's
+///    MAC accounting for the same GEMM must equal the kernel's executed
+///    op count EXACTLY (`exec::validate`).
+/// 3. **Identity**: FNV-1a checksums of the scalar outputs, folded into
+///    one `kernel_checksum` word that `bench-diff` gates exactly.
+fn kernels_cmd(rest: &[String]) -> i32 {
+    use tensorpool::exec::{validate_gemm_macs, ScheduleMode};
+    use tensorpool::kernels::conv::{
+        conv_max_ulp, dw_conv2d_blocked, dw_conv2d_scalar, ConvShape,
+        CONV_ULP_BOUND,
+    };
+    use tensorpool::kernels::elementwise::{
+        sum_blocked, sum_max_ulp, sum_scalar, sum_ulp_bound,
+    };
+    use tensorpool::kernels::gemm::{gemm_max_ulp, gemm_ulp_bound};
+    use tensorpool::kernels::{
+        checksum_combine, checksum_f32, gemm_blocked, gemm_scalar, GemmShape,
+        KernelRng, CHECKSUM_SEED, SIMD_ENABLED,
+    };
+    use tensorpool::workload::gemm::GemmSpec;
+
+    /// Best-of-`iters` wall time for `f`, plus its (deterministic) result.
+    fn best_secs<T>(iters: usize, mut f: impl FnMut() -> T) -> (f64, T) {
+        let mut best = f64::INFINITY;
+        let mut out = None;
+        for _ in 0..iters.max(1) {
+            let t0 = std::time::Instant::now();
+            let v = f();
+            best = best.min(t0.elapsed().as_secs_f64());
+            out = Some(v);
+        }
+        (best, out.expect("iters >= 1"))
+    }
+
+    let smoke = has(rest, "--smoke");
+    let default_shapes = if smoke {
+        "64x64x64,96x96x96"
+    } else {
+        "64x64x64,96x96x96,128x128x128,256x256x256"
+    };
+    let shapes_arg =
+        flag(rest, "--shapes").unwrap_or_else(|| default_shapes.to_string());
+    let iters: usize = flag(rest, "--iters")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if smoke { 2 } else { 5 });
+    let mut shapes = Vec::new();
+    for s in shapes_arg.split(',') {
+        let parts: Vec<&str> = s.trim().split('x').collect();
+        let dims: Option<Vec<usize>> = if parts.len() == 3 {
+            parts.iter().map(|d| d.parse().ok()).collect()
+        } else {
+            None
+        };
+        let Some(d) = dims else {
+            eprintln!("error: bad shape '{s}' (want MxKxN, e.g. 128x128x128)");
+            return 2;
+        };
+        shapes.push(GemmShape::new(d[0], d[1], d[2]));
+    }
+
+    let cfg = ArchConfig::tensorpool();
+    let mut failures = 0usize;
+    let mut combined = CHECKSUM_SEED;
+    let mut worst_ratio = 0.0f64;
+    let mut gflops_gemm = 0.0f64;
+    let mut best_macs = 0u64;
+    let mut rows = Vec::new();
+    let mut table = Table::new(&[
+        "shape", "MACs", "scalar GF/s", "blocked GF/s", "speedup",
+        "max ULP (bound)", "checksum", "sim MACs",
+    ]);
+    for (idx, shape) in shapes.iter().enumerate() {
+        let mut rng = KernelRng::new(0xC0FF_EE00 + idx as u64);
+        let x = rng.vec(shape.x_len(), 1.0);
+        let w = rng.vec(shape.w_len(), 1.0);
+        let (scalar_s, z_ref) =
+            best_secs(iters, || gemm_scalar(shape, &x, &w, None));
+        let (blocked_s, z_blk) =
+            best_secs(iters, || gemm_blocked(shape, &x, &w, None));
+        let max_ulp = gemm_max_ulp(shape, &x, &w, None, &z_ref, &z_blk);
+        let bound = gemm_ulp_bound(shape.k);
+        worst_ratio = worst_ratio.max(max_ulp / bound);
+        if max_ulp > bound {
+            eprintln!(
+                "kernels: FAIL {}x{}x{}: blocked diverges from scalar by \
+                 {max_ulp:.1} anchored ULPs (bound {bound:.1})",
+                shape.m, shape.k, shape.n
+            );
+            failures += 1;
+        }
+        let counts = shape.counts();
+        let flops = counts.flops as f64;
+        let gflops =
+            |secs: f64| if secs > 0.0 { flops / secs / 1e9 } else { 0.0 };
+        let (gf_scalar, gf_blocked) = (gflops(scalar_s), gflops(blocked_s));
+        let speedup =
+            if blocked_s > 0.0 { scalar_s / blocked_s } else { 0.0 };
+        if counts.macs >= best_macs {
+            best_macs = counts.macs;
+            gflops_gemm = gf_blocked;
+        }
+        let checksum = checksum_f32(&z_ref);
+        combined = checksum_combine(combined, checksum);
+        // Sim-vs-measured: the simulator maps 32-element tiles, so the
+        // cross-check covers exactly the shapes it can price.
+        let tileable = shape.m % 32 == 0
+            && shape.k % 32 == 0
+            && shape.n % 32 == 0;
+        let mut sim_macs: Option<u64> = None;
+        let sim_label = if tileable {
+            let spec = GemmSpec {
+                m: shape.m,
+                k: shape.k,
+                n: shape.n,
+                accumulate: shape.accumulate,
+            };
+            match validate_gemm_macs(
+                &spec,
+                ScheduleMode::SplitInterleaved,
+                &cfg,
+            ) {
+                Ok(v) => {
+                    sim_macs = Some(v.macs);
+                    format!("{} OK", v.macs)
+                }
+                Err(e) => {
+                    eprintln!(
+                        "kernels: FAIL {}x{}x{}: {e}",
+                        shape.m, shape.k, shape.n
+                    );
+                    failures += 1;
+                    "MISMATCH".to_string()
+                }
+            }
+        } else {
+            "- (not 32-tileable)".to_string()
+        };
+        table.row(&[
+            format!("{}x{}x{}", shape.m, shape.k, shape.n),
+            counts.macs.to_string(),
+            format!("{gf_scalar:.2}"),
+            format!("{gf_blocked:.2}"),
+            format!("{speedup:.2}x"),
+            format!("{max_ulp:.1} ({bound:.0})"),
+            format!("{checksum:08x}"),
+            sim_label,
+        ]);
+        rows.push(serde_json::json!({
+            "shape": format!("gemm_{}x{}x{}", shape.m, shape.k, shape.n),
+            "macs": counts.macs,
+            "kernel_gflops_scalar": gf_scalar,
+            "kernel_gflops_blocked": gf_blocked,
+            "speedup": speedup,
+            "max_ulp": max_ulp,
+            "ulp_bound": bound,
+            "kernel_checksum": checksum,
+            "sim_macs": sim_macs,
+        }));
+    }
+    println!(
+        "Measured kernels — native backend ({} blocked flavor), \
+         best of {iters}",
+        if SIMD_ENABLED { "multi-accumulator" } else { "scalar-alias" }
+    );
+    table.print();
+
+    // Conv + reduction differentials: odd spatial dims exercise the SAME
+    // edge padding; the reduction length exercises the 8-lane tail.
+    let mut rng = KernelRng::new(0xD1FF);
+    let cshape = ConvShape::new(33, 17, 8);
+    let cx = rng.vec(cshape.x_len(), 1.0);
+    let ck = rng.vec(cshape.k_len(), 1.0);
+    let c_ref = dw_conv2d_scalar(&cshape, &cx, &ck);
+    let c_blk = dw_conv2d_blocked(&cshape, &cx, &ck);
+    let c_ulp = conv_max_ulp(&cshape, &cx, &ck, &c_ref, &c_blk);
+    worst_ratio = worst_ratio.max(c_ulp / CONV_ULP_BOUND);
+    if c_ulp > CONV_ULP_BOUND {
+        eprintln!(
+            "kernels: FAIL conv 33x17x8: {c_ulp:.1} anchored ULPs \
+             (bound {CONV_ULP_BOUND:.1})"
+        );
+        failures += 1;
+    }
+    combined = checksum_combine(combined, checksum_f32(&c_ref));
+    let n_sum = (1usize << 16) + 7;
+    let xs = rng.vec(n_sum, 1.0);
+    let s_ref = sum_scalar(&xs);
+    let s_blk = sum_blocked(&xs);
+    let s_ulp = sum_max_ulp(&xs, s_ref, s_blk);
+    let s_bound = sum_ulp_bound(n_sum);
+    worst_ratio = worst_ratio.max(s_ulp / s_bound);
+    if s_ulp > s_bound {
+        eprintln!(
+            "kernels: FAIL sum n={n_sum}: {s_ulp:.1} anchored ULPs \
+             (bound {s_bound:.1})"
+        );
+        failures += 1;
+    }
+    combined = checksum_combine(combined, s_ref.to_bits());
+    println!(
+        "conv 33x17x8: {c_ulp:.1} ULP (bound {CONV_ULP_BOUND:.0})   \
+         sum n={n_sum}: {s_ulp:.1} ULP (bound {s_bound:.0})   \
+         combined checksum {combined:08x}"
+    );
+
+    if let Some(path) = flag(rest, "--out") {
+        let json = serde_json::json!({
+            "bench": "kernels",
+            "simd": SIMD_ENABLED,
+            "iters": iters,
+            "gemm": rows,
+            "conv": {
+                "shape": "dwconv_33x17x8",
+                "max_ulp": c_ulp,
+                "ulp_bound": CONV_ULP_BOUND,
+            },
+            "sum": {
+                "n": n_sum,
+                "max_ulp": s_ulp,
+                "ulp_bound": s_bound,
+            },
+            "kernel_gflops_gemm": gflops_gemm,
+            "max_ulp_over_bound": worst_ratio,
+            "kernel_checksum": combined,
+        });
+        let text = serde_json::to_string_pretty(&json).expect("serializes");
+        if let Err(e) = std::fs::write(&path, &text) {
+            eprintln!("error writing {path}: {e}");
+            return 1;
+        }
+        eprintln!("kernels: report written to {path}");
+    }
+    if failures > 0 {
+        eprintln!("kernels: {failures} failure(s)");
+        1
+    } else {
+        0
     }
 }
 

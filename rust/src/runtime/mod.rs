@@ -1,15 +1,27 @@
-//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
-//! (`artifacts/*.hlo.txt`) and executes them on the CPU PJRT client.
+//! Runtime layer: kernel execution behind the [`KernelBackend`] seam.
 //!
-//! This is the ONLY numerics path of the system — Python authors and lowers
-//! the models once at build time (`make artifacts`); the rust coordinator
-//! serves every request from the compiled executables. HLO *text* is the
-//! interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit
-//! instruction ids that the crate's xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md).
+//! Two routes implement the op vocabulary of `python/compile/kernels`:
+//!
+//! * **Native** ([`native::NativeBackend`]) — executes GEMM / depthwise
+//!   conv / elementwise directly on the host via `crate::kernels`. Always
+//!   available; this is the measured-kernel path the sim-vs-measured
+//!   validation (`exec::validate`) and `tests/runtime_integration.rs`
+//!   exercise unconditionally.
+//! * **PJRT** ([`Runtime`]) — loads the AOT-compiled JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`) and executes them on the CPU PJRT client.
+//!   Since the native backend landed this path's role has narrowed to the
+//!   *eventual accelerator route*: it stays gated on `pjrt_available()` +
+//!   on-disk artifacts, and is no longer the only numerics path. HLO
+//!   *text* is the interchange format: jax ≥ 0.5 emits HloModuleProto
+//!   with 64-bit instruction ids that the crate's xla_extension 0.5.1
+//!   rejects; the text parser reassigns ids (see
+//!   /opt/xla-example/README.md).
 
 pub mod json;
+pub mod native;
 mod xla;
+
+pub use native::{KernelBackend, NativeBackend};
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

@@ -1,0 +1,156 @@
+//! The kernel-backend seam and its first real implementation.
+//!
+//! [`KernelBackend`] is the op-level execution interface the integration
+//! tests (and any host-speed serving mode) program against: GEMM,
+//! depthwise conv, ReLU, row-softmax — the `python/compile/kernels`
+//! vocabulary, shape-checked, f32 in/out. Two implementations exist:
+//!
+//! * [`NativeBackend`] (here) — executes on the host through
+//!   [`crate::kernels`]. Always available, no artifacts, no PJRT: this is
+//!   what un-gates `tests/runtime_integration.rs` after eight PRs of
+//!   self-skipping.
+//! * the PJRT path (`runtime::Runtime`) — artifact-level, still gated on
+//!   `pjrt_available()` + on-disk artifacts. It remains the *eventual
+//!   accelerator route*; its stub's role narrowed to exactly that once
+//!   this backend landed.
+//!
+//! [`NativeBackend::blocked`] selects the multi-accumulator kernels
+//! (when the `simd` feature is on; otherwise every blocked entry point is
+//! already the scalar reference, so the flag is a no-op by construction).
+
+use crate::kernels::conv::{dw_conv2d_blocked, dw_conv2d_scalar, ConvShape};
+use crate::kernels::elementwise::{relu_blocked, relu_scalar, softmax_rows};
+use crate::kernels::gemm::{gemm_blocked, gemm_scalar, GemmShape};
+use crate::kernels::OpCounts;
+
+/// Op-level kernel execution: the interface serving-level numerics
+/// program against, implemented natively today and by an accelerator
+/// runtime eventually.
+pub trait KernelBackend {
+    /// Backend identity for reports and skip messages.
+    fn name(&self) -> &'static str;
+
+    /// `Z = [Y +] op(X) · op(W)` per the [`GemmShape`] contract.
+    fn gemm(
+        &self,
+        shape: &GemmShape,
+        x: &[f32],
+        w: &[f32],
+        y: Option<&[f32]>,
+    ) -> Vec<f32>;
+
+    /// Depthwise 3×3 SAME conv per the [`ConvShape`] contract.
+    fn dw_conv2d(&self, shape: &ConvShape, x: &[f32], k: &[f32]) -> Vec<f32>;
+
+    /// Elementwise ReLU (NaN → 0.0; see `kernels::elementwise`).
+    fn relu(&self, x: &[f32]) -> Vec<f32>;
+
+    /// Row-wise numerically-stable softmax over `(rows, cols)`.
+    fn softmax_rows(&self, x: &[f32], rows: usize, cols: usize) -> Vec<f32>;
+
+    /// Ops one `gemm` call with this shape executes (backend-independent
+    /// closed form — what sim-vs-measured validation compares against).
+    fn gemm_counts(&self, shape: &GemmShape) -> OpCounts {
+        shape.counts()
+    }
+}
+
+/// The native host backend over [`crate::kernels`].
+#[derive(Clone, Copy, Debug)]
+pub struct NativeBackend {
+    /// Use the blocked (multi-accumulator) kernels instead of the scalar
+    /// references. Either choice satisfies the same anchored-ULP
+    /// contract; `true` is the throughput configuration.
+    pub blocked: bool,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        NativeBackend { blocked: true }
+    }
+}
+
+impl NativeBackend {
+    /// The scalar-reference configuration (ground-truth numerics).
+    pub fn scalar() -> Self {
+        NativeBackend { blocked: false }
+    }
+}
+
+impl KernelBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        if self.blocked {
+            "native-blocked"
+        } else {
+            "native-scalar"
+        }
+    }
+
+    fn gemm(
+        &self,
+        shape: &GemmShape,
+        x: &[f32],
+        w: &[f32],
+        y: Option<&[f32]>,
+    ) -> Vec<f32> {
+        if self.blocked {
+            gemm_blocked(shape, x, w, y)
+        } else {
+            gemm_scalar(shape, x, w, y)
+        }
+    }
+
+    fn dw_conv2d(&self, shape: &ConvShape, x: &[f32], k: &[f32]) -> Vec<f32> {
+        if self.blocked {
+            dw_conv2d_blocked(shape, x, k)
+        } else {
+            dw_conv2d_scalar(shape, x, k)
+        }
+    }
+
+    fn relu(&self, x: &[f32]) -> Vec<f32> {
+        if self.blocked {
+            relu_blocked(x)
+        } else {
+            relu_scalar(x)
+        }
+    }
+
+    fn softmax_rows(&self, x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+        softmax_rows(x, rows, cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::gemm::{gemm_max_ulp, gemm_ulp_bound};
+    use crate::kernels::KernelRng;
+
+    #[test]
+    fn both_configurations_execute_and_agree_within_bound() {
+        let shape = GemmShape::new(16, 33, 8);
+        let mut rng = KernelRng::new(21);
+        let x = rng.vec(shape.x_len(), 1.0);
+        let w = rng.vec(shape.w_len(), 1.0);
+        let fast = NativeBackend::default();
+        let slow = NativeBackend::scalar();
+        assert_ne!(fast.name(), slow.name());
+        let a = slow.gemm(&shape, &x, &w, None);
+        let b = fast.gemm(&shape, &x, &w, None);
+        let ulp = gemm_max_ulp(&shape, &x, &w, None, &a, &b);
+        assert!(ulp <= gemm_ulp_bound(shape.k), "{ulp}");
+        assert_eq!(fast.gemm_counts(&shape).macs, (16 * 33 * 8) as u64);
+    }
+
+    #[test]
+    fn trait_object_dispatch_works() {
+        // The integration tests hold a `&dyn KernelBackend`; make sure
+        // the trait stays object-safe.
+        let backend: &dyn KernelBackend = &NativeBackend::default();
+        let out = backend.relu(&[-1.0, 2.0]);
+        assert_eq!(out, vec![0.0, 2.0]);
+        let s = backend.softmax_rows(&[0.0, 0.0], 1, 2);
+        assert!((s[0] - 0.5).abs() < 1e-6);
+    }
+}

@@ -24,5 +24,5 @@ pub use dma::{Dma, DmaDir, DmaSnapshot, DmaXfer};
 pub use noc::{Delivery, Noc, NocSnapshot};
 pub use pe_traffic::{PeTraffic, PeTrafficSnapshot, PeWorkload};
 pub use pool::{Sim, SimSnapshot};
-pub use stats::{NocStats, RunResult, TeRunStats};
+pub use stats::{MacAccountingMismatch, NocStats, RunResult, TeRunStats};
 pub use te::{TeEngine, TeJob, TeSnapshot};

@@ -124,6 +124,28 @@ impl RunResult {
         }
     }
 
+    /// Sim-vs-measured cross-check hook: assert that this run's MAC
+    /// accounting equals the op count a *real* kernel executed for the
+    /// same problem (`kernels::GemmShape::counts`). This is the first
+    /// external check on the number every capacity/fleet/energy figure is
+    /// built on — the simulator prices work in MACs, and a native kernel
+    /// run is ground truth for how many MACs the problem actually takes.
+    /// Exact equality on purpose: both sides are closed-form integer
+    /// counts of the same arithmetic, so any drift is a modeling bug.
+    pub fn cross_check_macs(
+        &self,
+        measured_macs: u64,
+    ) -> Result<u64, MacAccountingMismatch> {
+        if self.total_macs == measured_macs {
+            Ok(measured_macs)
+        } else {
+            Err(MacAccountingMismatch {
+                simulated: self.total_macs,
+                measured: measured_macs,
+            })
+        }
+    }
+
     /// Runtime in milliseconds at `freq_ghz`.
     pub fn runtime_ms(&self, freq_ghz: f64) -> f64 {
         self.cycles as f64 / (freq_ghz * 1e9) * 1e3
@@ -134,6 +156,30 @@ impl RunResult {
         2.0 * self.macs_per_cycle() * freq_ghz / 1000.0
     }
 }
+
+/// A simulated MAC count that disagrees with the op count a measured
+/// kernel executed for the same problem (see
+/// [`RunResult::cross_check_macs`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MacAccountingMismatch {
+    /// MACs the simulator's TE bookkeeping retired.
+    pub simulated: u64,
+    /// MACs the native kernel actually executed.
+    pub measured: u64,
+}
+
+impl std::fmt::Display for MacAccountingMismatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "MAC accounting mismatch: simulator priced {} MACs, measured \
+             kernel executed {}",
+            self.simulated, self.measured
+        )
+    }
+}
+
+impl std::error::Error for MacAccountingMismatch {}
 
 #[cfg(test)]
 mod tests {
@@ -169,6 +215,16 @@ mod tests {
     fn runtime_at_900mhz() {
         let r = RunResult { cycles: 900_000, ..Default::default() };
         assert!((r.runtime_ms(0.9) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mac_cross_check_is_exact() {
+        let r = RunResult { total_macs: 1000, ..Default::default() };
+        assert_eq!(r.cross_check_macs(1000), Ok(1000));
+        let err = r.cross_check_macs(999).unwrap_err();
+        assert_eq!(err.simulated, 1000);
+        assert_eq!(err.measured, 999);
+        assert!(err.to_string().contains("mismatch"));
     }
 
     #[test]

@@ -1,0 +1,228 @@
+//! The measured-kernel differential suite: 30-seed shape fuzz of
+//! blocked-vs-scalar numerics, elementwise poison propagation, and the
+//! sim-vs-measured MAC cross-check over the figures-table shapes.
+//!
+//! This is the CI "kernel differential" gate's test half (the other half
+//! is `tensorpool kernels --smoke`, which executes the same contracts
+//! from the CLI). Everything here is seeded and deterministic: a failure
+//! reproduces bit-for-bit from the seed in the assertion message.
+
+use tensorpool::exec::{kernel_macs_for, validate_gemm_macs, ScheduleMode};
+use tensorpool::kernels::conv::{
+    conv_max_ulp, dw_conv2d_blocked, dw_conv2d_scalar, ConvShape,
+    CONV_ULP_BOUND,
+};
+use tensorpool::kernels::elementwise::{
+    add_blocked, add_scalar, relu_blocked, relu_scalar, sum_blocked,
+    sum_max_ulp, sum_scalar, sum_ulp_bound,
+};
+use tensorpool::kernels::gemm::{gemm_max_ulp, gemm_ulp_bound, GemmShape};
+use tensorpool::kernels::{
+    checksum_f32, gemm_blocked, gemm_scalar, KernelRng,
+};
+use tensorpool::sim::ArchConfig;
+use tensorpool::workload::gemm::GemmSpec;
+
+/// Seeds per fuzz family. Each seed fully determines a shape AND its
+/// inputs, so the suite is a fixed set of 30 reproducible differentials.
+const FUZZ_SEEDS: u64 = 30;
+
+/// The dimension alphabet: degenerate (0), minimal (1), odd/prime (7,
+/// 257 — exercises every tail path), and tile-aligned (64).
+const DIMS: [usize; 5] = [0, 1, 7, 64, 257];
+
+fn pick(rng: &mut KernelRng, from: &[usize]) -> usize {
+    from[(rng.next_u64() % from.len() as u64) as usize]
+}
+
+#[test]
+fn gemm_blocked_matches_scalar_across_shape_fuzz() {
+    for seed in 0..FUZZ_SEEDS {
+        let mut rng = KernelRng::new(seed);
+        let shape = GemmShape {
+            m: pick(&mut rng, &DIMS),
+            k: pick(&mut rng, &DIMS),
+            n: pick(&mut rng, &DIMS),
+            trans_x: rng.next_u64() % 2 == 0,
+            trans_w: rng.next_u64() % 2 == 0,
+            accumulate: rng.next_u64() % 2 == 0,
+        };
+        let x = rng.vec(shape.x_len(), 2.0);
+        let w = rng.vec(shape.w_len(), 2.0);
+        let y = shape.accumulate.then(|| rng.vec(shape.z_len(), 2.0));
+        let yr = y.as_deref();
+        let a = gemm_scalar(&shape, &x, &w, yr);
+        let b = gemm_blocked(&shape, &x, &w, yr);
+        let ulp = gemm_max_ulp(&shape, &x, &w, yr, &a, &b);
+        let bound = gemm_ulp_bound(shape.k);
+        assert!(
+            ulp <= bound,
+            "seed {seed} {shape:?}: {ulp} anchored ULPs > bound {bound}"
+        );
+        // Determinism double-check: re-running the reference must
+        // reproduce the identical bits (the checksum bench-diff gates on).
+        assert_eq!(
+            checksum_f32(&a),
+            checksum_f32(&gemm_scalar(&shape, &x, &w, yr)),
+            "seed {seed}: scalar reference is not deterministic"
+        );
+    }
+}
+
+#[test]
+fn conv_blocked_matches_scalar_across_shape_fuzz() {
+    // Odd spatial dims put outputs ON the zero-padded SAME border, where
+    // taps fall outside the image — the edge-handling path of both
+    // flavors. h/w of 0 and 1 are the degenerate mirrors.
+    const HW: [usize; 5] = [0, 1, 2, 5, 17];
+    const CH: [usize; 3] = [1, 3, 8];
+    for seed in 0..FUZZ_SEEDS {
+        let mut rng = KernelRng::new(1000 + seed);
+        let shape = ConvShape::new(
+            pick(&mut rng, &HW),
+            pick(&mut rng, &HW),
+            pick(&mut rng, &CH),
+        );
+        let x = rng.vec(shape.x_len(), 2.0);
+        let k = rng.vec(shape.k_len(), 2.0);
+        let a = dw_conv2d_scalar(&shape, &x, &k);
+        let b = dw_conv2d_blocked(&shape, &x, &k);
+        let ulp = conv_max_ulp(&shape, &x, &k, &a, &b);
+        assert!(
+            ulp <= CONV_ULP_BOUND,
+            "seed {seed} {shape:?}: {ulp} anchored ULPs > {CONV_ULP_BOUND}"
+        );
+    }
+}
+
+#[test]
+fn elementwise_poison_propagation_fuzz() {
+    // NaN/inf salting: relu and add have BIT-identical contracts between
+    // flavors (no reassociated reduction), and the sum reduction must
+    // agree on where poison lands (NaN-vs-NaN counts as agreement in the
+    // anchored-ULP metric; NaN on one side only is infinite distance).
+    const POISON: [f32; 3] = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY];
+    for seed in 0..FUZZ_SEEDS {
+        let mut rng = KernelRng::new(2000 + seed);
+        let n = pick(&mut rng, &[1, 7, 8, 64, 257]);
+        let mut x = rng.vec(n, 2.0);
+        let b = rng.vec(n, 2.0);
+        for _ in 0..(rng.next_u64() % 4) {
+            let idx = (rng.next_u64() as usize) % n;
+            x[idx] = POISON[(rng.next_u64() as usize) % POISON.len()];
+        }
+        let bits = |v: &[f32]| v.iter().map(|p| p.to_bits()).collect::<Vec<_>>();
+        assert_eq!(
+            bits(&relu_scalar(&x)),
+            bits(&relu_blocked(&x)),
+            "seed {seed}: relu flavors must be bit-identical"
+        );
+        assert_eq!(
+            bits(&add_scalar(&x, &b)),
+            bits(&add_blocked(&x, &b)),
+            "seed {seed}: add flavors must be bit-identical"
+        );
+        let s1 = sum_scalar(&x);
+        let s2 = sum_blocked(&x);
+        let ulp = sum_max_ulp(&x, s1, s2);
+        assert!(
+            ulp <= sum_ulp_bound(n),
+            "seed {seed} n={n}: sum {s1} vs {s2} = {ulp} anchored ULPs"
+        );
+    }
+}
+
+#[test]
+fn sum_reduction_matches_across_lengths() {
+    // The 8-lane reduction across every tail class: empty, sub-lane,
+    // exactly one lane pass, aligned, prime, and large.
+    for &n in &[0usize, 1, 7, 8, 64, 257, 4096] {
+        for seed in 0..5u64 {
+            let mut rng = KernelRng::new(3000 + seed * 31 + n as u64);
+            let x = rng.vec(n, 2.0);
+            let s1 = sum_scalar(&x);
+            let s2 = sum_blocked(&x);
+            let ulp = sum_max_ulp(&x, s1, s2);
+            assert!(
+                ulp <= sum_ulp_bound(n),
+                "n={n} seed {seed}: {s1} vs {s2} = {ulp} anchored ULPs"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sim-vs-measured: the simulator's MAC accounting against the op counts
+// a real kernel executes. EXACT equality — both sides are closed-form
+// integer counts of the same arithmetic.
+// ---------------------------------------------------------------------
+
+const ALL_MODES: [ScheduleMode; 4] = [
+    ScheduleMode::SingleTe,
+    ScheduleMode::SplitLockstep,
+    ScheduleMode::SplitInterleaved,
+    ScheduleMode::Independent,
+];
+
+#[test]
+fn sim_mac_accounting_equals_measured_counts_for_figures_shapes() {
+    let cfg = ArchConfig::tensorpool();
+    for &n in &[64usize, 96, 128] {
+        let spec = GemmSpec::square(n);
+        for &mode in &ALL_MODES {
+            let v = validate_gemm_macs(&spec, mode, &cfg)
+                .unwrap_or_else(|e| panic!("{n}³ {mode:?}: {e}"));
+            assert_eq!(v.macs, kernel_macs_for(&spec, mode, &cfg));
+            let instances = if mode == ScheduleMode::Independent {
+                cfg.num_tes() as u64
+            } else {
+                1
+            };
+            assert_eq!(
+                v.macs,
+                instances * (n * n * n) as u64,
+                "{n}³ {mode:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sim_mac_accounting_holds_at_the_256_figures_point() {
+    // The largest figures-table shape, in the paper-default interleaved
+    // mapping. Separate test so a failure names the expensive point.
+    let cfg = ArchConfig::tensorpool();
+    let v = validate_gemm_macs(
+        &GemmSpec::square(256),
+        ScheduleMode::SplitInterleaved,
+        &cfg,
+    )
+    .expect("256³ interleaved");
+    assert_eq!(v.macs, 256u64.pow(3));
+}
+
+#[test]
+fn sim_mac_accounting_holds_for_rectangular_shapes() {
+    let cfg = ArchConfig::tensorpool();
+    let spec = GemmSpec { m: 64, k: 128, n: 32, accumulate: false };
+    for &mode in &ALL_MODES {
+        let v = validate_gemm_macs(&spec, mode, &cfg)
+            .unwrap_or_else(|e| panic!("64x128x32 {mode:?}: {e}"));
+        assert_eq!(v.macs, kernel_macs_for(&spec, mode, &cfg));
+    }
+}
+
+#[test]
+fn degenerate_square_zero_cross_checks_at_zero_in_every_mode() {
+    // Mirror of the GemmSpec::square(0) regression from PR 1: the
+    // degenerate shape must simulate, terminate, and account exactly
+    // zero MACs on both the simulated and the measured side, regardless
+    // of mapping.
+    let cfg = ArchConfig::tensorpool();
+    let spec = GemmSpec::square(0);
+    for &mode in &ALL_MODES {
+        let v = validate_gemm_macs(&spec, mode, &cfg)
+            .unwrap_or_else(|e| panic!("square(0) {mode:?}: {e}"));
+        assert_eq!(v.macs, 0, "{mode:?}");
+    }
+}

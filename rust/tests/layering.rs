@@ -114,6 +114,36 @@ fn ppa_sits_beside_workload_below_the_execution_stack() {
 }
 
 #[test]
+fn kernels_is_a_leaf() {
+    // The measured-kernel backend sits at the very bottom of the graph,
+    // beside `sim`: pure compute over slices, importing NOTHING from the
+    // crate. That is what lets `exec::validate` (sim-vs-measured) and
+    // `runtime::native` (the KernelBackend seam) both consume it without
+    // a cycle.
+    assert_layer_clean(
+        "kernels",
+        &[
+            "sim",
+            "workload",
+            "ppa",
+            "exec",
+            "coordinator",
+            "fleet",
+            "sweep",
+            "figures",
+            "runtime",
+        ],
+    );
+    // …and the pre-existing bottom layers gain no edge INTO it: the
+    // simulator must stay priceable without any measured backend (the
+    // cross-check hook in `sim::stats` takes a plain u64, not a kernel
+    // type).
+    assert_layer_clean("sim", &["kernels"]);
+    assert_layer_clean("workload", &["kernels"]);
+    assert_layer_clean("ppa", &["kernels"]);
+}
+
+#[test]
 fn sweep_does_not_reach_into_figures() {
     // `figures` is the top of the chain: the sweep engine must never
     // depend on a harness that runs on it.

@@ -1,14 +1,24 @@
-//! Integration tests over the PJRT runtime + real AOT artifacts.
+//! Integration tests over the runtime layer: the native measured-kernel
+//! backend plus the PJRT runtime + real AOT artifacts.
 //!
-//! These tests validate the full Layer-1/2/3 composition: Pallas kernels
-//! lowered by JAX, parsed and compiled by the rust PJRT client, executed
-//! with rust-generated inputs, checked against rust-side references.
+//! Two halves with different gating:
 //!
-//! They are self-gating: when the on-disk artifacts (`make artifacts`) or
-//! a real PJRT backend are absent — the normal state of an offline CI
-//! checkout — every test SKIPS (passes trivially with a note on stderr)
-//! instead of failing. Each test opens with `let Some(mut rt) = ...` on
-//! one of the gates below.
+//! * The **native half** (`native_backend` module at the bottom) runs
+//!   UNCONDITIONALLY: `runtime::NativeBackend` executes through
+//!   `crate::kernels` with no artifacts and no PJRT, so every CI checkout
+//!   exercises real numerics through the [`KernelBackend`] seam — this
+//!   file no longer self-skips wholesale.
+//! * The **PJRT half** validates the full Layer-1/2/3 composition: Pallas
+//!   kernels lowered by JAX, parsed and compiled by the rust PJRT client,
+//!   executed with rust-generated inputs, checked against rust-side
+//!   references. These stay self-gating: when the on-disk artifacts
+//!   (`make artifacts`) or a real PJRT backend are absent — the normal
+//!   state of an offline CI checkout — each SKIPS (passes trivially with
+//!   a note on stderr) via `let Some(mut rt) = ...` on one of the gates
+//!   below. PJRT's role is the eventual accelerator route; the native
+//!   backend is the always-on measured path.
+//!
+//! [`KernelBackend`]: tensorpool::runtime::KernelBackend
 
 use tensorpool::runtime::{default_artifacts_dir, pjrt_available, Runtime};
 
@@ -272,5 +282,102 @@ fn neural_receiver_end_to_end_shape() {
     for re in out[0].chunks(4) {
         let s: f32 = re.iter().sum();
         assert!((s - 1.0).abs() < 1e-3, "per-RE softmax sum {s}");
+    }
+}
+
+/// The native half: no gates, no skips. Every test here executes real
+/// floating-point work through the `KernelBackend` seam on every CI run.
+mod native_backend {
+    use super::Rng;
+    use tensorpool::kernels::conv::ConvShape;
+    use tensorpool::kernels::gemm::{gemm_max_ulp, gemm_ulp_bound, GemmShape};
+    use tensorpool::runtime::{KernelBackend, NativeBackend};
+
+    /// Independent f64 oracle — NOT `gemm_scalar`, so this guards the
+    /// kernel itself rather than comparing it to itself.
+    fn gemm_f64(shape: &GemmShape, x: &[f32], w: &[f32]) -> Vec<f64> {
+        let (m, k, n) = (shape.m, shape.k, shape.n);
+        let mut z = vec![0f64; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f64;
+                for kk in 0..k {
+                    acc += x[i * k + kk] as f64 * w[kk * n + j] as f64;
+                }
+                z[i * n + j] = acc;
+            }
+        }
+        z
+    }
+
+    #[test]
+    fn native_gemm_matches_f64_reference() {
+        let shape = GemmShape::new(24, 48, 16);
+        let mut rng = Rng(101);
+        let x = rng.vec(shape.x_len(), 0.5);
+        let w = rng.vec(shape.w_len(), 0.5);
+        let oracle = gemm_f64(&shape, &x, &w);
+        for backend in [NativeBackend::scalar(), NativeBackend::default()] {
+            let z = backend.gemm(&shape, &x, &w, None);
+            let max_err = z
+                .iter()
+                .zip(&oracle)
+                .map(|(&a, &b)| (a as f64 - b).abs())
+                .fold(0.0f64, f64::max);
+            assert!(
+                max_err < 1e-3,
+                "{}: error vs f64 oracle {max_err}",
+                backend.name()
+            );
+        }
+    }
+
+    #[test]
+    fn native_scalar_and_blocked_agree_within_bound() {
+        let shape = GemmShape::new(32, 257, 48);
+        let mut rng = Rng(103);
+        let x = rng.vec(shape.x_len(), 1.0);
+        let w = rng.vec(shape.w_len(), 1.0);
+        let a = NativeBackend::scalar().gemm(&shape, &x, &w, None);
+        let b = NativeBackend::default().gemm(&shape, &x, &w, None);
+        let ulp = gemm_max_ulp(&shape, &x, &w, None, &a, &b);
+        assert!(
+            ulp <= gemm_ulp_bound(shape.k),
+            "blocked diverged by {ulp} anchored ULPs"
+        );
+    }
+
+    #[test]
+    fn native_fc_softmax_rows_are_distributions() {
+        // The fc_softmax artifact's semantics, natively: gemm → relu →
+        // row-softmax, same invariant the PJRT test checks when gated.
+        let backend = NativeBackend::default();
+        let (d, cols) = (32usize, 48usize);
+        let shape = GemmShape::new(d, d, cols);
+        let mut rng = Rng(107);
+        let x = rng.vec(shape.x_len(), 0.1);
+        let w = rng.vec(shape.w_len(), 0.1);
+        let z = backend.gemm(&shape, &x, &w, None);
+        let act = backend.relu(&z);
+        let sm = backend.softmax_rows(&act, d, cols);
+        for row in sm.chunks(cols) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-3, "row sum {s}");
+            assert!(row.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        }
+    }
+
+    #[test]
+    fn native_conv_relu_pipeline_is_finite_and_nonnegative() {
+        let backend = NativeBackend::default();
+        let shape = ConvShape::new(9, 7, 4);
+        let mut rng = Rng(109);
+        let x = rng.vec(shape.x_len(), 0.2);
+        let k = rng.vec(shape.k_len(), 0.2);
+        let conv = backend.dw_conv2d(&shape, &x, &k);
+        assert_eq!(conv.len(), shape.x_len());
+        let act = backend.relu(&conv);
+        assert!(act.iter().all(|&v| v.is_finite() && v >= 0.0));
+        assert!(act.iter().any(|&v| v > 0.0), "all-zero ReLU output");
     }
 }
