@@ -52,6 +52,10 @@ struct FleetTiming {
     /// Site energy priced from simulator event counters — deterministic,
     /// also gated by `bench-diff`.
     total_energy_j: f64,
+    /// Live fraction of (cell × TTI) slots — 1.0 for this fault-free
+    /// bench; informational (never gated), tracked so chaos regressions
+    /// that leak into clean runs are visible in the trajectory.
+    fleet_availability: f64,
     /// Distinct raw block simulations when all 64 cells share one
     /// striped cache…
     shared_distinct_block_sims: usize,
@@ -139,6 +143,7 @@ fn main() {
             deferred_for_power_total: report.deferred_for_power_total,
             fleet_cycles_total: report.total_cycles,
             total_energy_j: report.site_energy_j,
+            fleet_availability: report.availability,
             shared_distinct_block_sims: shared.len(),
             independent_distinct_block_sims: independent_sims,
             shared_cache_hits: shared_hits,

@@ -7,5 +7,6 @@
 //! (enforced by `tests/layering.rs`).
 pub mod server;
 pub use server::{
-    BatchPolicy, BudgetPolicy, Pipeline, Server, TtiReport, TtiRequest,
+    BatchPolicy, BudgetPolicy, Pipeline, ServeError, Server, TtiReport,
+    TtiRequest,
 };

@@ -17,11 +17,34 @@ use std::sync::Arc;
 use serde::{Deserialize, Serialize};
 
 use crate::exec::{
-    ArchSpec, BlockKind, BlockRun, BlockScheduleCache, ScheduleMode,
-    Substrate,
+    ArchSpec, BlockKind, BlockRun, BlockScheduleCache, ExecError,
+    ScheduleMode, Substrate,
 };
 use crate::ppa::power::EnergyModel;
 use crate::sim::ArchConfig;
+
+/// A TTI that could not be scheduled because block execution failed
+/// underneath it. The failed call is transactional: the server's queue
+/// (and what-if counters) are exactly as they were before `schedule_tti`
+/// was attempted, so the caller can retry the TTI later — the fleet's
+/// degraded-mode path does exactly that.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
+pub struct ServeError {
+    /// The failed block execution, with its request context.
+    pub source: ExecError,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "TTI scheduling failed: {}", self.source)
+    }
+}
+
+impl std::error::Error for ServeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        Some(&self.source)
+    }
+}
 
 /// Resource elements of the paper's reference TTI (Sec V-B); per-user
 /// costs scale against this footprint.
@@ -255,6 +278,27 @@ impl Server {
         self.budget.cycles = budget;
     }
 
+    /// Re-point this server at a different architecture spec mid-run —
+    /// the fault layer's TE-degradation lever (fewer TEs per SubGroup, a
+    /// lower clock for a TTI window, then back). The queue, batch policy,
+    /// power cap, what-if setting, and the shared block cache all carry
+    /// over untouched; the cycle budget is rescaled to preserve its
+    /// *wall-clock* span across a clock change (1 ms is 1 ms at any
+    /// frequency). Degraded specs execute under distinct cache keys, so
+    /// derated results never alias healthy ones.
+    pub fn set_arch_spec(&mut self, spec: &ArchSpec) {
+        let old_freq = self.cfg.freq_ghz;
+        let cfg = spec.apply();
+        self.budget.cycles = ((self.budget.cycles as f64 * cfg.freq_ghz
+            / old_freq)
+            .round() as u64)
+            .max(1);
+        self.energy = EnergyModel::calibrate(&cfg);
+        self.substrate = spec.substrate;
+        self.arch = Some(spec.clone());
+        self.cfg = cfg;
+    }
+
     pub fn budget_cycles(&self) -> u64 {
         self.budget.cycles
     }
@@ -371,18 +415,18 @@ impl Server {
     /// TensorPool arm is the legacy simulator-plus-`EnergyModel` path,
     /// byte-for-byte; the analytic substrates go through
     /// [`BlockScheduleCache::run_arch`].
-    fn run_block(&self, run: BlockRun) -> (u64, f64, f64, f64) {
+    fn run_block(&self, run: BlockRun) -> Result<(u64, f64, f64, f64), ExecError> {
         if self.substrate == Substrate::TensorPool {
-            let res = self.blocks.run(&self.cfg, run);
-            (
+            let res = self.blocks.try_run(&self.cfg, run)?;
+            Ok((
                 res.cycles,
                 self.energy.pool_energy_j(&self.cfg, &res.raw),
                 self.energy.pool_power(&self.cfg, &res.raw),
                 res.te_utilization,
-            )
+            ))
         } else {
-            let a = self.blocks.run_arch(&self.arch_spec(), run);
-            (a.cycles, a.energy_j, a.avg_power_w, a.compute_utilization)
+            let a = self.blocks.try_run_arch(&self.arch_spec(), run)?;
+            Ok((a.cycles, a.energy_j, a.avg_power_w, a.compute_utilization))
         }
     }
 
@@ -404,6 +448,14 @@ impl Server {
     /// admitted set. AI estimates draw from the shared block cache, so the
     /// simulations are paid once and shared with execution.
     pub fn estimate_power_w(&self, req: &TtiRequest) -> f64 {
+        self.try_estimate_power_w(req).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible twin of [`Server::estimate_power_w`].
+    pub fn try_estimate_power_w(
+        &self,
+        req: &TtiRequest,
+    ) -> Result<f64, ExecError> {
         let (energy, cycles) = match req.pipeline {
             Pipeline::Classical => {
                 let (cycles, e) = self.classical_cost(req.res);
@@ -413,14 +465,14 @@ impl Server {
                 let mut e = 0.0f64;
                 let mut cycles = 0u64;
                 for run in self.block_runs(req.pipeline, req.res) {
-                    let (c, block_e, _, _) = self.run_block(run);
+                    let (c, block_e, _, _) = self.run_block(run)?;
                     e += block_e;
                     cycles += c;
                 }
                 (e, cycles)
             }
         };
-        self.demand_w(energy, cycles)
+        Ok(self.demand_w(energy, cycles))
     }
 
     /// Fused admission estimate: (cycles, power demand in Watts). The
@@ -428,17 +480,19 @@ impl Server {
     /// not change its simulation footprint (AI power estimates draw block
     /// simulations through the cache). Classical users price their kernel
     /// chain ONCE for both views instead of once per view.
-    fn estimate_request(&self, req: &TtiRequest) -> (u64, f64) {
+    fn estimate_request(&self, req: &TtiRequest) -> Result<(u64, f64), ExecError> {
         if self.budget.power_w.is_none() {
-            return (self.estimate_cycles(req), 0.0);
+            return Ok((self.estimate_cycles(req), 0.0));
         }
-        match req.pipeline {
+        Ok(match req.pipeline {
             Pipeline::Classical => {
                 let (cycles, e) = self.classical_cost(req.res);
                 (cycles, self.demand_w(e, cycles))
             }
-            _ => (self.estimate_cycles(req), self.estimate_power_w(req)),
-        }
+            _ => {
+                (self.estimate_cycles(req), self.try_estimate_power_w(req)?)
+            }
+        })
     }
 
     /// The measured *marginal* price of admitting `req` on top of an
@@ -456,20 +510,20 @@ impl Server {
         &self,
         req: &TtiRequest,
         admitted_kinds: &[Pipeline],
-    ) -> (u64, f64) {
+    ) -> Result<(u64, f64), ExecError> {
         let want_power = self.budget.power_w.is_some();
         let runs = match req.pipeline {
             Pipeline::Classical => {
                 let (cycles, e) = self.classical_cost(req.res);
                 let d =
                     if want_power { self.demand_w(e, cycles) } else { 0.0 };
-                return (cycles, d);
+                return Ok((cycles, d));
             }
             kind => match self.policy {
                 BatchPolicy::Batched => {
                     if admitted_kinds.contains(&kind) {
                         // rides the already-admitted batch: marginal zero
-                        return (0, 0.0);
+                        return Ok((0, 0.0));
                     }
                     self.block_runs(kind, REFERENCE_RES)
                 }
@@ -479,12 +533,12 @@ impl Server {
         let mut e = 0.0f64;
         let mut cycles = 0u64;
         for run in runs {
-            let (c, block_e, _, _) = self.run_block(run);
+            let (c, block_e, _, _) = self.run_block(run)?;
             e += block_e;
             cycles += c;
         }
         let d = if want_power { self.demand_w(e, cycles) } else { 0.0 };
-        (cycles, d)
+        Ok((cycles, d))
     }
 
     /// Estimated cycle cost of a request (used for admission; the actual
@@ -518,12 +572,43 @@ impl Server {
     /// the admitted AI blocks on the simulator (concurrent schedule) and
     /// charge classical users via the PE timing/energy models.
     pub fn schedule_tti(&mut self) -> TtiReport {
+        self.try_schedule_tti().unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible twin of [`Server::schedule_tti`]. Transactional: on
+    /// `Err`, every request popped during admission (the candidate under
+    /// pricing and the already-admitted prefix) is returned to the head
+    /// of the queue in its original order, and the what-if counter is
+    /// rolled back — the server is exactly as it was before the call, so
+    /// the TTI can be retried under different conditions (e.g. after a
+    /// fault window ends).
+    pub fn try_schedule_tti(&mut self) -> Result<TtiReport, ServeError> {
+        let evals_at_entry = self.counterfactual_evals;
+        let mut admitted: Vec<TtiRequest> = Vec::new();
+        match self.drive_tti(&mut admitted) {
+            Ok(rep) => Ok(rep),
+            Err(source) => {
+                for req in admitted.drain(..).rev() {
+                    self.queue.push_front(req);
+                }
+                self.counterfactual_evals = evals_at_entry;
+                Err(ServeError { source })
+            }
+        }
+    }
+
+    /// The `schedule_tti` body. `admitted` is owned by the caller so a
+    /// failure mid-execution can restore the queue; on success it is the
+    /// served set in admission order.
+    fn drive_tti(
+        &mut self,
+        admitted: &mut Vec<TtiRequest>,
+    ) -> Result<TtiReport, ExecError> {
         let mut served = Vec::new();
         let mut deferred = Vec::new();
         let mut planned: u64 = 0;
         let mut planned_w: f64 = 0.0;
         let mut power_cut = false;
-        let mut admitted = Vec::new();
         // what-if bookkeeping: which AI kinds the admitted set already
         // batches (marginal cost of the next same-kind user is zero)
         let mut admitted_kinds: Vec<Pipeline> = Vec::new();
@@ -531,11 +616,19 @@ impl Server {
         // always admitted if it alone fills an empty TTI, under either
         // budget)
         while let Some(req) = self.queue.pop_front() {
-            let (est, demand) = if self.budget.what_if {
+            let priced = if self.budget.what_if {
                 self.counterfactual_evals += 1;
                 self.counterfactual_price(&req, &admitted_kinds)
             } else {
                 self.estimate_request(&req)
+            };
+            let (est, demand) = match priced {
+                Ok(v) => v,
+                Err(e) => {
+                    // un-pop the candidate; the caller restores `admitted`
+                    self.queue.push_front(req);
+                    return Err(e);
+                }
             };
             let cycles_ok = planned + est <= self.budget.cycles;
             let power_ok = match self.budget.power_w {
@@ -587,7 +680,7 @@ impl Server {
                 }
             }
             BatchPolicy::PerUser => {
-                for r in &admitted {
+                for r in admitted.iter() {
                     runs.extend(self.block_runs(r.pipeline, r.res));
                 }
             }
@@ -605,7 +698,7 @@ impl Server {
             // either way (pure runs), and so is the energy priced from its
             // composed event counters. Analytic substrates route through
             // the same cache's `run_arch` tier.
-            let (c, e, p, util) = self.run_block(run);
+            let (c, e, p, util) = self.run_block(run)?;
             cycles += c;
             energy_j += e;
             if p > peak_block_power_w {
@@ -638,7 +731,7 @@ impl Server {
             for r in &self.queue {
                 let est = if self.budget.what_if {
                     replay_evals += 1;
-                    self.counterfactual_price(r, &kinds).0
+                    self.counterfactual_price(r, &kinds)?.0
                 } else {
                     self.estimate_cycles(r)
                 };
@@ -655,7 +748,7 @@ impl Server {
             }
             self.counterfactual_evals += replay_evals;
         }
-        TtiReport {
+        Ok(TtiReport {
             served,
             deferred,
             cycles,
@@ -671,7 +764,7 @@ impl Server {
             peak_block_power_w,
             planned_power_w: planned_w,
             deferred_for_power,
-        }
+        })
     }
 }
 
@@ -1118,6 +1211,56 @@ mod tests {
             via_spec.peak_block_power_w.to_bits()
         );
         assert_eq!(legacy.te_utilization, via_spec.te_utilization);
+    }
+
+    #[test]
+    fn derating_and_restoring_the_arch_spec_round_trips() {
+        // The fault layer's TE-degradation lever: derate a server to
+        // 0 TEs/SubGroup at 600 MHz, serve, restore — the budget's
+        // wall-clock span is preserved across both clock changes, the
+        // queue carries over, and the restored server prices a TTI
+        // exactly like one that was never derated (distinct cache keys,
+        // so no aliasing in between).
+        use crate::exec::ArchKnobs;
+        let cache = Arc::new(BlockScheduleCache::new());
+        let healthy_spec = ArchSpec::default();
+        let degraded_spec =
+            ArchSpec::from(ArchKnobs::default().derated(0, 600));
+        let req = |u| TtiRequest {
+            user_id: u,
+            pipeline: Pipeline::NeuralChe,
+            res: 4096,
+        };
+        let mut s = Server::for_spec(&healthy_spec, Arc::clone(&cache));
+        let healthy_budget = s.budget_cycles();
+        s.submit(req(0));
+        let healthy = s.schedule_tti();
+        s.submit(req(1));
+        s.set_arch_spec(&degraded_spec);
+        assert_eq!(
+            s.budget_cycles(),
+            healthy_budget * 600 / 900,
+            "1 ms must stay 1 ms at the derated clock"
+        );
+        assert_eq!(s.pending(), 1, "the queue survives the derate");
+        let degraded = s.schedule_tti();
+        assert_eq!(degraded.served, vec![1]);
+        assert!(
+            degraded.cycles > healthy.cycles,
+            "0 TEs/SubGroup must cost more cycles: {} vs {}",
+            degraded.cycles,
+            healthy.cycles
+        );
+        s.set_arch_spec(&healthy_spec);
+        assert_eq!(s.budget_cycles(), healthy_budget, "budget round-trips");
+        s.submit(req(2));
+        let restored = s.schedule_tti();
+        assert_eq!(restored.cycles, healthy.cycles);
+        assert_eq!(
+            restored.energy_j.to_bits(),
+            healthy.energy_j.to_bits(),
+            "a recovered server must price exactly like a healthy one"
+        );
     }
 
     #[test]

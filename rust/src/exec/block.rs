@@ -8,13 +8,13 @@
 //! [`BlockRun::execute`] directly for an uncached run — the results are
 //! byte-identical either way).
 
-use crate::sim::{ArchConfig, L1Alloc};
+use crate::sim::{ArchConfig, L1Alloc, SimError};
 use crate::workload::blocks::{
     dwsep_conv_block, fc_softmax_block, mha_block, BlockIter, CompBlock,
 };
 
 use super::schedule::{
-    run_concurrent, run_sequential, ScheduleMode, ScheduleResult,
+    try_run_concurrent, try_run_sequential, ScheduleMode, ScheduleResult,
 };
 use serde::{Deserialize, Serialize};
 
@@ -65,7 +65,16 @@ impl BlockRun {
     /// iterations). Pure: equal `(self, cfg)` produce equal results on any
     /// thread.
     pub fn execute(&self, cfg: &ArchConfig) -> ScheduleResult {
-        run_built(cfg, &self.build(cfg), self.mode)
+        self.try_execute(cfg).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible twin of [`BlockRun::execute`]: a deadlocked simulation
+    /// surfaces as `Err(SimError)` instead of aborting the process.
+    pub fn try_execute(
+        &self,
+        cfg: &ArchConfig,
+    ) -> Result<ScheduleResult, SimError> {
+        try_run_built(cfg, &self.build(cfg), self.mode)
     }
 }
 
@@ -75,9 +84,18 @@ pub(crate) fn run_built(
     block: &CompBlock,
     mode: ScheduleMode,
 ) -> ScheduleResult {
+    try_run_built(cfg, block, mode).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Fallible twin of [`run_built`].
+pub(crate) fn try_run_built(
+    cfg: &ArchConfig,
+    block: &CompBlock,
+    mode: ScheduleMode,
+) -> Result<ScheduleResult, SimError> {
     match mode {
-        ScheduleMode::Sequential => run_sequential(cfg, block),
-        ScheduleMode::Concurrent => run_concurrent(cfg, block),
+        ScheduleMode::Sequential => try_run_sequential(cfg, block),
+        ScheduleMode::Concurrent => try_run_concurrent(cfg, block),
         other => panic!("{other:?} is not a block schedule mode"),
     }
 }

@@ -57,17 +57,54 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use serde::{Deserialize, Serialize};
 
 use crate::ppa::power::EnergyModel;
-use crate::sim::{ArchConfig, NocStats, RunResult, Sim, TeRunStats};
+use crate::sim::{ArchConfig, NocStats, RunResult, Sim, SimError, TeRunStats};
 use crate::workload::blocks::BlockIter;
 
-use super::block::{iteration_signature, run_built, BlockKind, BlockRun};
+use super::block::{iteration_signature, try_run_built, BlockKind, BlockRun};
 use super::knobs::ArchKnobs;
 use super::resume::{ResumableBlockSim, ResumePoint};
 use super::schedule::{
-    active_te_slots, drive_iteration, ScheduleMode, ScheduleResult,
+    active_te_slots, try_drive_iteration, ScheduleMode, ScheduleResult,
 };
 use super::stripe::StripedMap;
 use super::substrate::{analytic_block, ArchRun, ArchSpec, Substrate};
+
+/// A block execution that failed inside the simulator, annotated with
+/// which request was running. Failures propagate as `Err` through every
+/// cache tier — **a failed run is never inserted into any tier**, so a
+/// later retry (e.g. under a recovered fault window) re-executes instead
+/// of recalling the failure as a success.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
+pub struct ExecError {
+    /// The request that failed, e.g. `"block FcSoftmax×2 Concurrent"`.
+    pub context: String,
+    /// The underlying simulator error.
+    pub source: SimError,
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.context, self.source)
+    }
+}
+
+impl std::error::Error for ExecError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        Some(&self.source)
+    }
+}
+
+impl ExecError {
+    fn for_run(run: &BlockRun, source: SimError) -> Self {
+        ExecError {
+            context: format!(
+                "block {:?}×{} {:?}",
+                run.kind, run.iters, run.mode
+            ),
+            source,
+        }
+    }
+}
 
 /// Content key of one block-schedule simulation. `iters` is normalized to
 /// 0 for [`BlockKind::Mha`] (its pipeline has a fixed stage count and
@@ -126,10 +163,10 @@ fn simulate_iteration(
     cfg: &ArchConfig,
     it: &BlockIter,
     mode: ScheduleMode,
-) -> IterOutcome {
+) -> Result<IterOutcome, SimError> {
     let mut sim = Sim::new(cfg);
-    let (pe_busy, dma_busy) = drive_iteration(&mut sim, it, mode);
-    IterOutcome { raw: sim.result(), pe_busy, dma_busy }
+    let (pe_busy, dma_busy) = try_drive_iteration(&mut sim, it, mode)?;
+    Ok(IterOutcome { raw: sim.result(), pe_busy, dma_busy })
 }
 
 /// Stitch per-iteration outcomes back into the block-level result
@@ -450,6 +487,18 @@ impl BlockScheduleCache {
     /// yields the identical `ScheduleResult` — cached, memoized, or
     /// simulated fresh.
     pub fn run(&self, cfg: &ArchConfig, run: BlockRun) -> ScheduleResult {
+        self.try_run(cfg, run).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible twin of [`BlockScheduleCache::run`]: a deadlocked
+    /// simulation surfaces as `Err(ExecError)` instead of aborting. The
+    /// `?` operators sit BEFORE every tier insert, so a failed run is
+    /// never cached at any tier — retrying the same key re-executes.
+    pub fn try_run(
+        &self,
+        cfg: &ArchConfig,
+        run: BlockRun,
+    ) -> Result<ScheduleResult, ExecError> {
         let knobs = ArchKnobs::from_config(cfg);
         let mut base = knobs.apply();
         // The event-wheel footprint is a simulator-only, timing-neutral
@@ -464,7 +513,8 @@ impl BlockScheduleCache {
             let block = run.build(cfg);
             self.iters_simulated
                 .fetch_add(block.iters.len() as u64, Ordering::Relaxed);
-            return run_built(cfg, &block, run.mode);
+            return try_run_built(cfg, &block, run.mode)
+                .map_err(|e| ExecError::for_run(&run, e));
         }
         let key = BlockKey {
             arch: ArchSpec::from(knobs.clone()),
@@ -474,7 +524,7 @@ impl BlockScheduleCache {
             mode: run.mode,
         };
         if let Some(hit) = self.blocks.get(&key) {
-            return hit;
+            return Ok(hit);
         }
         // Simulate OUTSIDE any lock (same benign-race policy as the
         // scenario cache: concurrent misses on one key compute the same
@@ -486,9 +536,11 @@ impl BlockScheduleCache {
             let block = run.build(cfg);
             self.iters_simulated
                 .fetch_add(block.iters.len() as u64, Ordering::Relaxed);
-            run_built(cfg, &block, run.mode)
+            try_run_built(cfg, &block, run.mode)
+                .map_err(|e| ExecError::for_run(&run, e))?
         } else if cfg.burst {
             self.run_memoized(cfg, &knobs, &run)
+                .map_err(|e| ExecError::for_run(&run, e))?
         } else {
             // No-burst configs keep a request port booked up to 4 cycles
             // past its final delivery, so iteration boundaries are not
@@ -496,9 +548,10 @@ impl BlockScheduleCache {
             // can: tier 3 restores the longest saved prefix's state and
             // drives only the suffix.
             self.run_resumable(cfg, &knobs, &run)
+                .map_err(|e| ExecError::for_run(&run, e))?
         };
         self.blocks.insert(key, r.clone());
-        r
+        Ok(r)
     }
 
     /// Tier 2: build the block, recall or simulate each iteration
@@ -510,7 +563,7 @@ impl BlockScheduleCache {
         cfg: &ArchConfig,
         knobs: &ArchKnobs,
         run: &BlockRun,
-    ) -> ScheduleResult {
+    ) -> Result<ScheduleResult, SimError> {
         let block = run.build(cfg);
         let te_engines = block
             .iters
@@ -532,8 +585,10 @@ impl BlockScheduleCache {
                 None => {
                     // Simulate outside the lock; concurrent misses on one
                     // segment race benignly (identical pure results). The
-                    // shard counted the miss at lookup time.
-                    let o = simulate_iteration(cfg, it, run.mode);
+                    // shard counted the miss at lookup time. A failed
+                    // segment propagates BEFORE the insert — deadlocks are
+                    // never memoized.
+                    let o = simulate_iteration(cfg, it, run.mode)?;
                     self.iters_simulated.fetch_add(1, Ordering::Relaxed);
                     self.iter_memo.insert(key, o.clone());
                     o
@@ -546,9 +601,9 @@ impl BlockScheduleCache {
             self.memo_fallbacks.fetch_add(1, Ordering::Relaxed);
             self.iters_simulated
                 .fetch_add(block.iters.len() as u64, Ordering::Relaxed);
-            return run_built(cfg, &block, run.mode);
+            return try_run_built(cfg, &block, run.mode);
         }
-        compose(cfg, run.mode, te_engines, &outcomes)
+        Ok(compose(cfg, run.mode, te_engines, &outcomes))
     }
 
     /// Tier 3: one monolithic simulation, resumed from the longest saved
@@ -562,7 +617,7 @@ impl BlockScheduleCache {
         cfg: &ArchConfig,
         knobs: &ArchKnobs,
         run: &BlockRun,
-    ) -> ScheduleResult {
+    ) -> Result<ScheduleResult, SimError> {
         let block = run.build(cfg);
         let sigs: Vec<String> = block
             .iters
@@ -595,12 +650,13 @@ impl BlockScheduleCache {
         for (i, it) in block.iters.iter().enumerate().skip(start) {
             // Drive OUTSIDE the lock (benign race: two threads extending
             // the same prefix save identical pure states; last insert
-            // wins).
-            driver.drive(it, run.mode);
+            // wins). A failed iteration propagates BEFORE the boundary
+            // save — a mid-deadlock state is never stored as a prefix.
+            driver.try_drive(it, run.mode)?;
             self.iters_simulated.fetch_add(1, Ordering::Relaxed);
             self.prefix.insert(key_for(i + 1), driver.save());
         }
-        driver.finalize(run.mode)
+        Ok(driver.finalize(run.mode))
     }
 
     /// Substrate-generic block execution: run `run` on `spec`'s machine
@@ -615,18 +671,30 @@ impl BlockScheduleCache {
     ///   [`analytic_block`], cached per content key — the substrate inside
     ///   the key rules out cross-substrate aliasing.
     pub fn run_arch(&self, spec: &ArchSpec, run: BlockRun) -> ArchRun {
+        self.try_run_arch(spec, run).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible twin of [`BlockScheduleCache::run_arch`]. Only the
+    /// TensorPool substrate simulates (and so can deadlock); the analytic
+    /// substrates are closed-form and infallible, but flow through the
+    /// same `Result` so callers handle one signature.
+    pub fn try_run_arch(
+        &self,
+        spec: &ArchSpec,
+        run: BlockRun,
+    ) -> Result<ArchRun, ExecError> {
         let cfg = spec.apply();
         let em = EnergyModel::calibrate(&cfg);
         if spec.substrate == Substrate::TensorPool {
-            let res = self.run(&cfg, run);
-            return ArchRun {
+            let res = self.try_run(&cfg, run)?;
+            return Ok(ArchRun {
                 substrate: Substrate::TensorPool,
                 cycles: res.cycles,
                 macs: res.te_macs,
                 energy_j: em.pool_energy_j(&cfg, &res.raw),
                 avg_power_w: em.pool_power(&cfg, &res.raw),
                 compute_utilization: res.te_utilization,
-            };
+            });
         }
         let key = BlockKey {
             arch: spec.clone(),
@@ -636,14 +704,14 @@ impl BlockScheduleCache {
             mode: run.mode,
         };
         if let Some(hit) = self.analytic.get(&key) {
-            return hit;
+            return Ok(hit);
         }
         // Build + price outside the lock (benign race: pure result).
         let block = run.build(&cfg);
         let r = analytic_block(spec, &block, &em)
             .expect("non-TensorPool substrate has an analytic model");
         self.analytic.insert(key, r);
-        r
+        Ok(r)
     }
 }
 

@@ -1,0 +1,422 @@
+//! Seeded, replayable fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is a deterministic schedule of degradation events —
+//! cell outages, TE derating, power brownouts, flash-crowd arrival
+//! bursts — expressed against the fleet's lockstep TTI clock. The plan is
+//! plain hashable data: it joins the fleet scenario (and through the
+//! derated [`ArchKnobs`](crate::exec::ArchKnobs) the block-cache keys),
+//! so a faulted run and a clean run can never alias in any cache tier.
+//! An empty plan is the kill-switch: `FaultPlan::none()` must leave every
+//! downstream layer byte-identical to a run that never heard of faults
+//! (pinned by `tests/chaos.rs`).
+//!
+//! All windows are half-open `[from_tti, until_tti)`, matching how the
+//! fleet iterates TTIs: an outage `from 1 until 3` takes the cell down
+//! for TTIs 1 and 2 and has it back for TTI 3.
+
+use serde::{Deserialize, Serialize};
+
+/// One scheduled degradation event. Windows are half-open
+/// `[from_tti, until_tti)`; events whose windows overlap compose (the
+/// fleet takes the min surviving budget, the max crowd multiplier, and
+/// the first listed TE derate per cell).
+#[derive(Clone, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
+pub enum FaultEvent {
+    /// Cell `cell` is hard-down for the window: it serves nothing, its
+    /// queue is evacuated to live cells at the down-transition, and
+    /// arrivals targeting it are redirected through the retry queue.
+    CellOutage {
+        cell: usize,
+        from_tti: u32,
+        until_tti: u32,
+    },
+    /// Cell `cell` runs derated for the window: `tes_per_subgroup` TEs
+    /// per SubGroup (0 fuses every TE off) at `freq_mhz`. The degraded
+    /// window executes under a distinct `ArchKnobs`, i.e. a distinct
+    /// cache key.
+    TeDegrade {
+        cell: usize,
+        from_tti: u32,
+        until_tti: u32,
+        tes_per_subgroup: usize,
+        freq_mhz: u32,
+    },
+    /// The whole site's power budget dips to `site_budget_mw` for the
+    /// window; the fleet re-slices per-cell caps mid-run.
+    Brownout {
+        from_tti: u32,
+        until_tti: u32,
+        site_budget_mw: u32,
+    },
+    /// Arrival rates multiply by `multiplier` fleet-wide for the window
+    /// (the overload driver for chaos runs). The per-cell RNG stream
+    /// structure is unchanged — only the drawn count is scaled — so a
+    /// crowd window perturbs load, not the seed discipline.
+    FlashCrowd {
+        from_tti: u32,
+        until_tti: u32,
+        multiplier: u32,
+    },
+}
+
+impl FaultEvent {
+    fn window(&self) -> (u32, u32) {
+        match *self {
+            FaultEvent::CellOutage { from_tti, until_tti, .. }
+            | FaultEvent::TeDegrade { from_tti, until_tti, .. }
+            | FaultEvent::Brownout { from_tti, until_tti, .. }
+            | FaultEvent::FlashCrowd { from_tti, until_tti, .. } => {
+                (from_tti, until_tti)
+            }
+        }
+    }
+
+    fn active_at(&self, tti: u32) -> bool {
+        let (from, until) = self.window();
+        from <= tti && tti < until
+    }
+}
+
+/// A deterministic schedule of fault events plus the retry policy the
+/// fleet applies to displaced users. Plain `Eq + Hash + serde` data so
+/// it can join scenario and cache keys directly.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
+pub struct FaultPlan {
+    /// The scheduled events, in declaration order.
+    pub events: Vec<FaultEvent>,
+    /// Maximum serve attempts per displaced user before it is dropped
+    /// (counted as `dropped_after_max_retries`).
+    #[serde(default = "default_max_retries")]
+    pub max_retries: u32,
+    /// Base backoff in TTIs; attempt `n` waits `base << min(n, 5)` TTIs
+    /// before re-entering admission.
+    #[serde(default = "default_backoff_base_ttis")]
+    pub backoff_base_ttis: u32,
+}
+
+fn default_max_retries() -> u32 {
+    8
+}
+
+fn default_backoff_base_ttis() -> u32 {
+    1
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan::none()
+    }
+}
+
+impl FaultPlan {
+    /// The kill-switch: no events. A fleet run under `FaultPlan::none()`
+    /// is byte-identical to one that never constructed a plan at all.
+    pub fn none() -> Self {
+        FaultPlan {
+            events: Vec::new(),
+            max_retries: default_max_retries(),
+            backoff_base_ttis: default_backoff_base_ttis(),
+        }
+    }
+
+    /// True when the plan schedules nothing. Retry policy fields are
+    /// ignored: with no events the retry queue is never fed, so the
+    /// policy is unobservable and must not break identity.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Backoff delay in TTIs before attempt `attempt` re-enters
+    /// admission: `base << min(attempt, 5)`, exponential with a cap so
+    /// the delay cannot overflow or grow past 32× base.
+    pub fn backoff_ttis(&self, attempt: u32) -> u64 {
+        u64::from(self.backoff_base_ttis.max(1)) << attempt.min(5)
+    }
+
+    /// Is `cell` hard-down at `tti`?
+    pub fn cell_out(&self, cell: usize, tti: u32) -> bool {
+        self.events.iter().any(|e| {
+            matches!(e, FaultEvent::CellOutage { cell: c, .. } if *c == cell)
+                && e.active_at(tti)
+        })
+    }
+
+    /// The TE derate active for `cell` at `tti`, if any: the first
+    /// matching event wins (deterministic under overlap by declaration
+    /// order). Returns `(tes_per_subgroup, freq_mhz)`.
+    pub fn degrade_at(&self, cell: usize, tti: u32) -> Option<(usize, u32)> {
+        self.events.iter().find_map(|e| match e {
+            FaultEvent::TeDegrade {
+                cell: c,
+                tes_per_subgroup,
+                freq_mhz,
+                ..
+            } if *c == cell && e.active_at(tti) => {
+                Some((*tes_per_subgroup, *freq_mhz))
+            }
+            _ => None,
+        })
+    }
+
+    /// The brownout budget active at `tti`, if any: the minimum across
+    /// overlapping brownouts (the deepest dip wins), in milliwatts.
+    pub fn brownout_at(&self, tti: u32) -> Option<u32> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                FaultEvent::Brownout { site_budget_mw, .. }
+                    if e.active_at(tti) =>
+                {
+                    Some(*site_budget_mw)
+                }
+                _ => None,
+            })
+            .min()
+    }
+
+    /// The arrival multiplier at `tti`: the maximum across overlapping
+    /// flash crowds, or 1 when none is active.
+    pub fn crowd_multiplier(&self, tti: u32) -> u64 {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                FaultEvent::FlashCrowd { multiplier, .. }
+                    if e.active_at(tti) =>
+                {
+                    Some(u64::from(*multiplier))
+                }
+                _ => None,
+            })
+            .max()
+            .unwrap_or(1)
+            .max(1)
+    }
+
+    /// The last TTI at which any event is still active, plus one (i.e.
+    /// the max `until_tti`); 0 for an empty plan. Validation uses it to
+    /// warn about plans entirely past the horizon.
+    pub fn horizon(&self) -> u32 {
+        self.events.iter().map(|e| e.window().1).max().unwrap_or(0)
+    }
+
+    /// Cells named by any event (for bounds validation in the fleet).
+    pub fn named_cells(&self) -> impl Iterator<Item = usize> + '_ {
+        self.events.iter().filter_map(|e| match e {
+            FaultEvent::CellOutage { cell, .. }
+            | FaultEvent::TeDegrade { cell, .. } => Some(*cell),
+            FaultEvent::Brownout { .. } | FaultEvent::FlashCrowd { .. } => {
+                None
+            }
+        })
+    }
+
+    /// Built-in plans, parameterised by the run's shape. `cells` and
+    /// `ttis` are the fleet's dimensions; the preset scales its windows
+    /// to them so `--smoke` and full runs both get meaningful faults.
+    ///
+    /// - `"none"` — the kill-switch plan.
+    /// - `"outage"` — one cell (1 % cells) down from ttis/3 to 2·ttis/3,
+    ///   then recovered.
+    /// - `"outage-burst"` — three cells down from ttis/3 to the end of
+    ///   the run, plus a ×3 flash crowd over the same window: the CI
+    ///   chaos smoke. Cells never recover, so availability < 1 and the
+    ///   evacuation/retry machinery is guaranteed to engage.
+    /// - `"brownout"` — site budget dips to 20 W for the middle third.
+    /// - `"te-degrade"` — cell 0 derated to 0 TEs/SubGroup at 600 MHz
+    ///   for the middle third (falls back to PE-only execution).
+    pub fn preset(name: &str, cells: usize, ttis: u32) -> Option<FaultPlan> {
+        let cells = cells.max(1);
+        let ttis = ttis.max(3);
+        let third = ttis / 3;
+        let mut plan = FaultPlan::none();
+        match name {
+            "none" => {}
+            "outage" => {
+                plan.events.push(FaultEvent::CellOutage {
+                    cell: 1 % cells,
+                    from_tti: third,
+                    until_tti: 2 * third,
+                });
+            }
+            "outage-burst" => {
+                let mut down: Vec<usize> =
+                    [1, 2, 3].iter().map(|c| c % cells).collect();
+                down.sort_unstable();
+                down.dedup();
+                // Never take out every cell: the fleet must keep at
+                // least one live cell to fail over to.
+                down.truncate(cells.saturating_sub(1).max(1).min(3));
+                for cell in down {
+                    plan.events.push(FaultEvent::CellOutage {
+                        cell,
+                        from_tti: third,
+                        until_tti: ttis,
+                    });
+                }
+                plan.events.push(FaultEvent::FlashCrowd {
+                    from_tti: third,
+                    until_tti: ttis,
+                    multiplier: 3,
+                });
+            }
+            "brownout" => {
+                plan.events.push(FaultEvent::Brownout {
+                    from_tti: third,
+                    until_tti: 2 * third,
+                    site_budget_mw: 20_000,
+                });
+            }
+            "te-degrade" => {
+                plan.events.push(FaultEvent::TeDegrade {
+                    cell: 0,
+                    from_tti: third,
+                    until_tti: 2 * third,
+                    tes_per_subgroup: 0,
+                    freq_mhz: 600,
+                });
+            }
+            _ => return None,
+        }
+        Some(plan)
+    }
+
+    /// The preset names `preset` accepts, for CLI help and errors.
+    pub fn preset_names() -> &'static [&'static str] {
+        &["none", "outage", "outage-burst", "brownout", "te-degrade"]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::hash_map::DefaultHasher;
+    use std::hash::{Hash, Hasher};
+
+    fn hash_of(plan: &FaultPlan) -> u64 {
+        let mut h = DefaultHasher::new();
+        plan.hash(&mut h);
+        h.finish()
+    }
+
+    #[test]
+    fn windows_are_half_open() {
+        let plan = FaultPlan {
+            events: vec![FaultEvent::CellOutage {
+                cell: 2,
+                from_tti: 1,
+                until_tti: 3,
+            }],
+            ..FaultPlan::none()
+        };
+        assert!(!plan.cell_out(2, 0));
+        assert!(plan.cell_out(2, 1));
+        assert!(plan.cell_out(2, 2));
+        assert!(!plan.cell_out(2, 3), "until_tti is exclusive");
+        assert!(!plan.cell_out(1, 1), "other cells unaffected");
+        assert_eq!(plan.horizon(), 3);
+    }
+
+    #[test]
+    fn overlapping_events_compose_deterministically() {
+        let plan = FaultPlan {
+            events: vec![
+                FaultEvent::Brownout {
+                    from_tti: 0,
+                    until_tti: 4,
+                    site_budget_mw: 60_000,
+                },
+                FaultEvent::Brownout {
+                    from_tti: 2,
+                    until_tti: 6,
+                    site_budget_mw: 20_000,
+                },
+                FaultEvent::FlashCrowd {
+                    from_tti: 0,
+                    until_tti: 4,
+                    multiplier: 2,
+                },
+                FaultEvent::FlashCrowd {
+                    from_tti: 2,
+                    until_tti: 6,
+                    multiplier: 5,
+                },
+            ],
+            ..FaultPlan::none()
+        };
+        assert_eq!(plan.brownout_at(1), Some(60_000));
+        assert_eq!(plan.brownout_at(3), Some(20_000), "deepest dip wins");
+        assert_eq!(plan.brownout_at(6), None);
+        assert_eq!(plan.crowd_multiplier(1), 2);
+        assert_eq!(plan.crowd_multiplier(3), 5, "largest crowd wins");
+        assert_eq!(plan.crowd_multiplier(6), 1);
+    }
+
+    #[test]
+    fn backoff_is_exponential_and_capped() {
+        let plan = FaultPlan::none();
+        assert_eq!(plan.backoff_ttis(0), 1);
+        assert_eq!(plan.backoff_ttis(1), 2);
+        assert_eq!(plan.backoff_ttis(5), 32);
+        assert_eq!(plan.backoff_ttis(40), 32, "shift capped at 5");
+        let slow = FaultPlan {
+            backoff_base_ttis: 4,
+            ..FaultPlan::none()
+        };
+        assert_eq!(slow.backoff_ttis(2), 16);
+    }
+
+    #[test]
+    fn outage_burst_preset_engages_the_machinery() {
+        let plan = FaultPlan::preset("outage-burst", 8, 24).unwrap();
+        // Three distinct cells down from tti 8 through the end, plus a
+        // flash crowd over the same window.
+        let down: Vec<usize> =
+            (0..8).filter(|&c| plan.cell_out(c, 10)).collect();
+        assert_eq!(down, vec![1, 2, 3]);
+        assert!(plan.cell_out(1, 23), "no recovery before the end");
+        assert!(!plan.cell_out(1, 7));
+        assert_eq!(plan.crowd_multiplier(10), 3);
+        assert_eq!(plan.crowd_multiplier(0), 1);
+
+        // A 2-cell fleet still keeps one live cell.
+        let tiny = FaultPlan::preset("outage-burst", 2, 24).unwrap();
+        let down: Vec<usize> =
+            (0..2).filter(|&c| tiny.cell_out(c, 10)).collect();
+        assert_eq!(down.len(), 1, "never every cell: {down:?}");
+    }
+
+    #[test]
+    fn every_preset_name_resolves_and_none_is_empty() {
+        for name in FaultPlan::preset_names() {
+            let plan = FaultPlan::preset(name, 8, 24)
+                .unwrap_or_else(|| panic!("preset {name} missing"));
+            assert_eq!(plan.is_empty(), *name == "none");
+        }
+        assert!(FaultPlan::preset("bogus", 8, 24).is_none());
+        assert_eq!(FaultPlan::preset("none", 8, 24).unwrap(), FaultPlan::none());
+    }
+
+    #[test]
+    fn plans_round_trip_serde_and_hash_distinctly() {
+        let plan = FaultPlan::preset("outage-burst", 8, 24).unwrap();
+        let json = serde_json::to_string(&plan).unwrap();
+        let back: FaultPlan = serde_json::from_str(&json).unwrap();
+        assert_eq!(back, plan);
+        assert_eq!(hash_of(&back), hash_of(&plan));
+        assert_ne!(hash_of(&plan), hash_of(&FaultPlan::none()));
+
+        // Retry fields are serde-defaulted: a bare plan deserializes.
+        let bare: FaultPlan = serde_json::from_str(r#"{"events":[]}"#).unwrap();
+        assert_eq!(bare, FaultPlan::none());
+    }
+
+    #[test]
+    fn degrade_query_returns_the_derate_for_the_window() {
+        let plan = FaultPlan::preset("te-degrade", 8, 24).unwrap();
+        assert_eq!(plan.degrade_at(0, 10), Some((0, 600)));
+        assert_eq!(plan.degrade_at(0, 3), None, "before the window");
+        assert_eq!(plan.degrade_at(0, 16), None, "after the window");
+        assert_eq!(plan.degrade_at(1, 10), None, "other cells unaffected");
+        assert_eq!(plan.named_cells().collect::<Vec<_>>(), vec![0]);
+    }
+}

@@ -2,10 +2,11 @@
 //!
 //! [`ArchKnobs`] is the content-addressable face of an [`ArchConfig`]: the
 //! handful of parameters the paper ablates (K/J channel widening, burst
-//! grouping, streamer ROB depth, Z-FIFO depth) over the fixed TensorPool
-//! base. Keeping them as a small POD struct is what makes scenario keys and
-//! block-cache keys exactly comparable — everything not listed here
-//! (topology, frequency, bandwidths) stays at the paper's values.
+//! grouping, streamer ROB depth, Z-FIFO depth) plus the degradation axes
+//! the fault layer derates (TEs per SubGroup, clock frequency), over the
+//! fixed TensorPool base. Keeping them as a small POD struct is what makes
+//! scenario keys and block-cache keys exactly comparable — everything not
+//! listed here (topology, bandwidths) stays at the paper's values.
 
 use serde::{Deserialize, Serialize};
 
@@ -13,8 +14,8 @@ use crate::sim::ArchConfig;
 
 /// The architecture knobs a sweep may vary, as plain hashable data.
 /// `apply()` expands them over the paper's TensorPool instance; everything
-/// not listed here (topology, frequency, bandwidths) stays at the paper's
-/// values so scenario keys remain small and exactly comparable.
+/// not listed here (topology, bandwidths) stays at the paper's values so
+/// scenario keys remain small and exactly comparable.
 #[derive(Clone, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
 pub struct ArchKnobs {
     /// Response-grouping factor K (paper nominal: 4).
@@ -27,6 +28,26 @@ pub struct ArchKnobs {
     pub rob_depth: usize,
     /// Z-FIFO depth (outstanding wide writes).
     pub z_fifo_depth: usize,
+    /// Tensor engines per SubGroup (paper: 1; 0 fuses every TE off).
+    /// Serde-defaulted so pre-existing scenario JSON deserializes to the
+    /// paper value. This is the fault layer's TE-degradation axis: a
+    /// degraded window runs under a distinct knob value and therefore a
+    /// distinct cache key — faulted and clean runs never alias.
+    #[serde(default = "default_tes_per_subgroup")]
+    pub tes_per_subgroup: usize,
+    /// Cluster clock in MHz (paper TT corner: 900). Integer so the knobs
+    /// stay `Eq + Hash`; brownout/degradation windows lower it, which
+    /// changes runtimes and power but not cycle counts.
+    #[serde(default = "default_freq_mhz")]
+    pub freq_mhz: u32,
+}
+
+fn default_tes_per_subgroup() -> usize {
+    1
+}
+
+fn default_freq_mhz() -> u32 {
+    900
 }
 
 impl Default for ArchKnobs {
@@ -44,6 +65,8 @@ impl ArchKnobs {
             burst: cfg.burst,
             rob_depth: cfg.rob_depth,
             z_fifo_depth: cfg.z_fifo_depth,
+            tes_per_subgroup: cfg.tes_per_subgroup,
+            freq_mhz: (cfg.freq_ghz * 1000.0).round() as u32,
         }
     }
 
@@ -55,6 +78,8 @@ impl ArchKnobs {
         cfg.burst = self.burst;
         cfg.rob_depth = self.rob_depth;
         cfg.z_fifo_depth = self.z_fifo_depth;
+        cfg.tes_per_subgroup = self.tes_per_subgroup;
+        cfg.freq_ghz = f64::from(self.freq_mhz) / 1000.0;
         cfg
     }
 
@@ -73,6 +98,16 @@ impl ArchKnobs {
         self.rob_depth = 1;
         self
     }
+
+    /// A degraded instance: fewer TEs per SubGroup and/or a lower clock
+    /// (the fault layer's TE-degradation windows). Distinct values mean
+    /// distinct cache keys, so degraded-window results never alias the
+    /// healthy ones.
+    pub fn derated(mut self, tes_per_subgroup: usize, freq_mhz: u32) -> Self {
+        self.tes_per_subgroup = tes_per_subgroup;
+        self.freq_mhz = freq_mhz;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -87,5 +122,30 @@ mod tests {
         assert_eq!(cfg.req_j, 1);
         assert!(!cfg.burst);
         assert_eq!(ArchKnobs::from_config(&cfg), knobs);
+    }
+
+    #[test]
+    fn default_knobs_expand_to_the_paper_config_exactly() {
+        // The degradation axes default to the paper values, and applying
+        // the default knobs reproduces ArchConfig::tensorpool() on those
+        // fields bit-for-bit — the empty-FaultPlan byte-identity contract
+        // rests on this.
+        let knobs = ArchKnobs::default();
+        assert_eq!(knobs.tes_per_subgroup, 1);
+        assert_eq!(knobs.freq_mhz, 900);
+        let cfg = knobs.apply();
+        let base = ArchConfig::tensorpool();
+        assert_eq!(cfg.tes_per_subgroup, base.tes_per_subgroup);
+        assert_eq!(cfg.freq_ghz.to_bits(), base.freq_ghz.to_bits());
+    }
+
+    #[test]
+    fn derated_knobs_round_trip_and_key_distinctly() {
+        let derated = ArchKnobs::default().derated(0, 600);
+        let cfg = derated.apply();
+        assert_eq!(cfg.tes_per_subgroup, 0);
+        assert_eq!(cfg.num_tes(), 0, "0 TEs/SubGroup fuses every TE off");
+        assert_eq!(ArchKnobs::from_config(&cfg), derated);
+        assert_ne!(derated, ArchKnobs::default(), "degraded keys must differ");
     }
 }

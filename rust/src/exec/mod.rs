@@ -35,6 +35,7 @@
 
 pub mod block;
 pub mod cache;
+pub mod fault;
 pub mod gemm;
 pub mod knobs;
 pub mod resume;
@@ -44,12 +45,14 @@ pub mod substrate;
 pub mod validate;
 
 pub use block::{simulate_block, BlockKind, BlockRun};
-pub use cache::{BlockScheduleCache, CacheStats};
+pub use cache::{BlockScheduleCache, CacheStats, ExecError};
+pub use fault::{FaultEvent, FaultPlan};
 pub use gemm::GemmRun;
 pub use knobs::ArchKnobs;
 pub use resume::{ResumableBlockSim, ResumePoint};
 pub use schedule::{
-    compare, run_concurrent, run_sequential, ScheduleMode, ScheduleResult,
+    compare, run_concurrent, run_sequential, try_run_concurrent,
+    try_run_sequential, ScheduleMode, ScheduleResult,
 };
 pub use stripe::{StripedMap, STRIPE_SHARDS};
 pub use substrate::{ArchRun, ArchSpec, Substrate};

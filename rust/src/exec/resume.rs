@@ -16,11 +16,12 @@
 //! snapshots still can — state is captured, not composed, so nothing
 //! needs to be additive, and wheel growth needs no fallback.
 
-use crate::sim::{ArchConfig, Sim, SimSnapshot};
+use crate::sim::{ArchConfig, Sim, SimError, SimSnapshot};
 use crate::workload::blocks::BlockIter;
 
 use super::schedule::{
-    active_te_slots, drive_iteration, finalize, ScheduleMode, ScheduleResult,
+    active_te_slots, finalize, try_drive_iteration, ScheduleMode,
+    ScheduleResult,
 };
 
 /// A saved execution point of a block run: the full simulator state plus
@@ -68,11 +69,23 @@ impl ResumableBlockSim {
     /// Drive ONE iteration on the shared sim (the monolithic semantics —
     /// state carries across iterations).
     pub fn drive(&mut self, it: &BlockIter, mode: ScheduleMode) {
+        self.try_drive(it, mode).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible twin of [`ResumableBlockSim::drive`]. On error the driver
+    /// state is mid-iteration and must not be saved; callers either drop
+    /// the driver or restore a previously captured boundary.
+    pub fn try_drive(
+        &mut self,
+        it: &BlockIter,
+        mode: ScheduleMode,
+    ) -> Result<(), SimError> {
         self.te_engines = self.te_engines.max(active_te_slots(it));
-        let (pe, dma) = drive_iteration(&mut self.sim, it, mode);
+        let (pe, dma) = try_drive_iteration(&mut self.sim, it, mode)?;
         self.pe_busy += pe;
         self.dma_busy += dma;
         self.iters_driven += 1;
+        Ok(())
     }
 
     /// Capture the current iteration boundary.

@@ -16,7 +16,7 @@
 
 use serde::{Deserialize, Serialize};
 
-use crate::sim::{ArchConfig, RunResult, Sim};
+use crate::sim::{ArchConfig, RunResult, Sim, SimError};
 use crate::workload::blocks::{BlockIter, CompBlock};
 
 /// How a workload is mapped onto the engines. The four GEMM modes drive
@@ -109,6 +109,18 @@ pub(crate) fn drive_iteration(
     it: &BlockIter,
     mode: ScheduleMode,
 ) -> (u64, u64) {
+    try_drive_iteration(sim, it, mode).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Fallible twin of [`drive_iteration`]: a phase that exhausts its cycle
+/// budget surfaces as `Err(SimError::BudgetDeadlock)` instead of aborting
+/// the process. The cache tiers call this so a deadlocked iteration is
+/// never memoized as a success.
+pub(crate) fn try_drive_iteration(
+    sim: &mut Sim,
+    it: &BlockIter,
+    mode: ScheduleMode,
+) -> Result<(u64, u64), SimError> {
     let num_pes = sim.cfg.num_pes();
     let mut pe_busy = 0u64;
     let mut dma_busy = 0u64;
@@ -116,7 +128,7 @@ pub(crate) fn drive_iteration(
         ScheduleMode::Sequential => {
             // Phase 1: TEs alone.
             sim.assign_gemm(it.te_jobs.clone());
-            sim.run(PHASE_BUDGET);
+            sim.try_run(PHASE_BUDGET)?;
             // Phase 2: PEs alone.
             if let Some(pe) = &it.pe {
                 let start = sim.noc.now();
@@ -127,7 +139,7 @@ pub(crate) fn drive_iteration(
                     pe.writes.clone(),
                 );
                 sim.add_pe_workload(&wl);
-                sim.run(PHASE_BUDGET);
+                sim.try_run(PHASE_BUDGET)?;
                 pe_busy = sim.noc.now() - start;
             }
             // Phase 3: DMA alone.
@@ -135,7 +147,7 @@ pub(crate) fn drive_iteration(
                 let start = sim.noc.now();
                 let now = sim.noc.now();
                 sim.dma_mut().program(it.dma.clone(), now);
-                sim.run(PHASE_BUDGET);
+                sim.try_run(PHASE_BUDGET)?;
                 dma_busy = sim.noc.now() - start;
             }
         }
@@ -156,7 +168,7 @@ pub(crate) fn drive_iteration(
                 let now = sim.noc.now();
                 sim.dma_mut().program(it.dma.clone(), now);
             }
-            sim.run(PHASE_BUDGET);
+            sim.try_run(PHASE_BUDGET)?;
             // busy spans of the engines inside this iteration
             if it.pe.is_some() {
                 let fin = sim.pe_traffic[pe_idx0..]
@@ -177,37 +189,53 @@ pub(crate) fn drive_iteration(
         }
         other => panic!("{other:?} is not a block schedule mode"),
     }
-    (pe_busy, dma_busy)
+    Ok((pe_busy, dma_busy))
 }
 
-fn run_schedule(
+fn try_run_schedule(
     cfg: &ArchConfig,
     block: &CompBlock,
     mode: ScheduleMode,
     name: &str,
-) -> ScheduleResult {
+) -> Result<ScheduleResult, SimError> {
     let mut sim = Sim::new(cfg);
     let mut pe_busy = 0u64;
     let mut dma_busy = 0u64;
     let mut te_engines = 0usize;
     for it in &block.iters {
         te_engines = te_engines.max(active_te_slots(it));
-        let (pe, dma) = drive_iteration(&mut sim, it, mode);
+        let (pe, dma) = try_drive_iteration(&mut sim, it, mode)?;
         pe_busy += pe;
         dma_busy += dma;
     }
-    finalize(name, &sim, te_engines, pe_busy, dma_busy)
+    Ok(finalize(name, &sim, te_engines, pe_busy, dma_busy))
 }
 
 /// Run `block` with engines strictly one-at-a-time per iteration.
 pub fn run_sequential(cfg: &ArchConfig, block: &CompBlock) -> ScheduleResult {
-    run_schedule(cfg, block, ScheduleMode::Sequential, "sequential")
+    try_run_sequential(cfg, block).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Fallible twin of [`run_sequential`].
+pub fn try_run_sequential(
+    cfg: &ArchConfig,
+    block: &CompBlock,
+) -> Result<ScheduleResult, SimError> {
+    try_run_schedule(cfg, block, ScheduleMode::Sequential, "sequential")
 }
 
 /// Run `block` with TEs ∥ PEs ∥ DMA inside each iteration (barrier at the
 /// iteration boundary — the paper's double-buffered pipeline).
 pub fn run_concurrent(cfg: &ArchConfig, block: &CompBlock) -> ScheduleResult {
-    run_schedule(cfg, block, ScheduleMode::Concurrent, "concurrent")
+    try_run_concurrent(cfg, block).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Fallible twin of [`run_concurrent`].
+pub fn try_run_concurrent(
+    cfg: &ArchConfig,
+    block: &CompBlock,
+) -> Result<ScheduleResult, SimError> {
+    try_run_schedule(cfg, block, ScheduleMode::Concurrent, "concurrent")
 }
 
 /// Convenience: run both schedules and return (sequential, concurrent).

@@ -3,6 +3,7 @@
 
 pub mod block_figs;
 pub mod capacity_figs;
+pub mod chaos_figs;
 pub mod energy_figs;
 pub mod fleet_figs;
 pub mod frontier_figs;

@@ -1,5 +1,5 @@
 //! Fleet-scale multi-cell serving: N cells, one site budget, one shared
-//! block cache.
+//! block cache — with seeded fault injection and graceful degradation.
 //!
 //! The paper motivates TensorPool with 6G cell-site densification under a
 //! site-level ≤100 W compute budget (Sec I) — a constraint that only
@@ -9,33 +9,61 @@
 //! by `tests/layering.rs`) and drives a [`Fleet`] of per-cell [`Server`]s
 //! in lockstep TTIs:
 //!
+//! 0. **Faults** (serial, only when the scenario carries a non-empty
+//!    [`FaultPlan`]): outage down-transitions evacuate the dying cell's
+//!    queue to live cells, recoveries bring it back, TE derates swap the
+//!    cell's [`ArchSpec`] (a distinct cache key — faulted and clean runs
+//!    never alias), brownouts re-slice every cell's power cap, and the
+//!    retry queue re-admits users whose backoff has elapsed. Under an
+//!    empty plan this phase is a no-op and the run is byte-identical to
+//!    one that never heard of faults (pinned by `tests/chaos.rs`).
 //! 1. **Arrivals** (serial, cell order): each cell draws its own user
 //!    count and pipeline mix from a per-cell seeded xorshift stream
 //!    (seeds split from the scenario seed by splitmix64), so offered load
-//!    is deterministic and replayable at any cell count.
-//! 2. **Serve** (the only parallel phase): every cell schedules its TTI
-//!    across the rayon pool. Cells share one `Arc<BlockScheduleCache>` —
-//!    the lock-striped tiers ([`crate::exec::stripe`]) are what keep
-//!    hundreds of cells from convoying on a global lock — and block runs
-//!    are pure, so parallel == serial byte-for-byte.
+//!    is deterministic and replayable at any cell count. The scenario's
+//!    [`ArrivalPattern`] and any active flash-crowd window scale the
+//!    drawn count — never the stream structure. Arrivals targeting a
+//!    downed cell are drawn identically (the stream survives the outage)
+//!    but routed through the retry queue.
+//! 2. **Serve** (the only parallel phase): every live cell schedules its
+//!    TTI across the rayon pool. Cells share one
+//!    `Arc<BlockScheduleCache>` — the lock-striped tiers
+//!    ([`crate::exec::stripe`]) are what keep hundreds of cells from
+//!    convoying on a global lock — and block runs are pure, so parallel
+//!    == serial byte-for-byte. A cell whose TTI fails with a typed
+//!    [`ServeError`] serves nothing that slot (the server's transactional
+//!    rollback already restored its queue) and the error is *counted*,
+//!    never propagated as a panic.
 //! 3. **Reduce** (serial, cell order): per-TTI outcomes fold into fleet
 //!    aggregates in a fixed order, so every f64 sum is order-identical
 //!    between the parallel and serial drives.
 //! 4. **Balance** (serial, deterministic): any cell whose backlog exceeds
 //!    the handover threshold sheds its NEWEST queued users to the
-//!    least-loaded other cell (ties break on the lower cell index), one
-//!    request at a time, only while the move strictly improves imbalance.
-//!    Handed-over users keep their global id — they are re-served
-//!    elsewhere, never dropped or double-counted (the conservation
-//!    invariant the fleet tests pin).
+//!    least-loaded other *live* cell (ties break on the lower cell
+//!    index), one request at a time, only while the move strictly
+//!    improves imbalance. Handed-over users keep their global id — they
+//!    are re-served elsewhere, never dropped or double-counted (the
+//!    conservation invariant the fleet tests pin).
+//!
+//! **Retry-with-backoff**: users displaced by an outage (evacuees with no
+//! live cell to land on, or arrivals drawn for a downed cell) enter a
+//! bounded fleet-level retry queue. Each entry waits
+//! `backoff_base_ttis << attempt` TTIs (capped) before re-admission to
+//! the least-loaded live cell; the queue is scanned in FIFO order every
+//! TTI, so a due entry is never starved behind a later one. A user whose
+//! retry count would exceed `max_retries` is dropped and counted in
+//! `dropped_users` — the conservation ledger extends to
+//! `submitted == served + backlog + retry_backlog + dropped`.
 //!
 //! **Site-budget rollup**: `site_budget_mw` (default 100 W — the paper's
 //! densification cap) divides evenly into per-cell power-cap slices,
 //! min-ed with any explicit per-cell cap; each cell's admission then
 //! defers work exactly like the single-cell power-capped mode
 //! ([`crate::coordinator::BudgetPolicy`]), and the deferrals the balancer
-//! cannot re-place elsewhere surface in the report.
+//! cannot re-place elsewhere surface in the report. A brownout window
+//! substitutes the min of the faulted and configured site budgets.
 
+use std::fmt;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -43,9 +71,9 @@ use rayon::prelude::*;
 use serde::{Deserialize, Serialize};
 
 use crate::coordinator::{
-    BatchPolicy, Pipeline, Server, TtiReport, TtiRequest,
+    BatchPolicy, Pipeline, ServeError, Server, TtiReport, TtiRequest,
 };
-use crate::exec::{ArchSpec, BlockScheduleCache, CacheStats};
+use crate::exec::{ArchSpec, BlockScheduleCache, CacheStats, FaultPlan};
 
 /// Per-TTI user-mix weights, one per serving [`Pipeline`]. Integers (any
 /// scale) so scenarios stay hashable; a user's pipeline is drawn
@@ -100,6 +128,17 @@ pub enum ArrivalPattern {
     /// The same average load, bunched: `period × users_per_tti` users
     /// arrive together every `period` TTIs (the backlog-drain stressor).
     Bursty { period: u32 },
+    /// A seeded flash crowd: baseline load every TTI, spiked to
+    /// `spike × users_per_tti` every `period` TTIs. Unlike
+    /// [`ArrivalPattern::Bursty`] this ADDS load rather than bunching
+    /// it — the overload driver for robustness runs.
+    FlashCrowd { period: u32, spike: u32 },
+}
+
+impl Default for ArrivalPattern {
+    fn default() -> Self {
+        ArrivalPattern::Uniform
+    }
 }
 
 impl ArrivalPattern {
@@ -113,6 +152,14 @@ impl ArrivalPattern {
                     users_per_tti * p
                 } else {
                     0
+                }
+            }
+            ArrivalPattern::FlashCrowd { period, spike } => {
+                let p = (*period).max(1) as usize;
+                if tti % p == 0 {
+                    users_per_tti * (*spike).max(1) as usize
+                } else {
+                    users_per_tti
                 }
             }
         }
@@ -141,9 +188,37 @@ fn cell_seed(seed: u64, cell: usize) -> u64 {
     (z ^ (z >> 31)).max(1)
 }
 
+/// Typed failure of fleet construction or validation. Serving-time
+/// faults are NOT errors — the fleet degrades and counts them — so this
+/// only covers scenarios that cannot produce a well-defined run at all.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FleetError {
+    /// The scenario has zero cells.
+    NoCells,
+    /// The scenario's [`FaultPlan`] is malformed (empty window, cell
+    /// index out of range, …).
+    FaultPlan { detail: String },
+}
+
+impl fmt::Display for FleetError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FleetError::NoCells => {
+                write!(f, "a fleet needs at least one cell")
+            }
+            FleetError::FaultPlan { detail } => {
+                write!(f, "invalid fault plan: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FleetError {}
+
 /// One fleet study: N identical-substrate cells under a site power
-/// budget. Pure data, hashable; running it ([`run_fleet`]) is a
-/// deterministic pure function of this content, parallel or serial.
+/// budget, optionally degraded by a seeded [`FaultPlan`]. Pure data,
+/// hashable; running it ([`run_fleet`]) is a deterministic pure function
+/// of this content, parallel or serial.
 #[derive(Clone, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
 pub struct FleetScenario {
     /// Display label only.
@@ -178,12 +253,22 @@ pub struct FleetScenario {
     /// least-loaded neighbor after each TTI.
     pub handover_backlog: usize,
     pub seed: u64,
+    /// How the per-cell offered load is shaped over the run. Defaults to
+    /// [`ArrivalPattern::Uniform`] — the pre-fault behavior, byte for
+    /// byte.
+    #[serde(default)]
+    pub arrivals: ArrivalPattern,
+    /// The fault schedule. Defaults to [`FaultPlan::none`], under which
+    /// every fault phase is a no-op and the run is byte-identical to a
+    /// plan-free one.
+    #[serde(default)]
+    pub faults: FaultPlan,
 }
 
 impl FleetScenario {
     /// A fleet on the default TensorPool substrate with the paper's
     /// defaults: NR-heavy mix, reference-TTI users, 100 W site budget,
-    /// handover threshold at twice the mean offered load.
+    /// handover threshold at twice the mean offered load, no faults.
     pub fn new(
         name: impl Into<String>,
         cells: usize,
@@ -204,6 +289,8 @@ impl FleetScenario {
             site_budget_mw: Some(100_000),
             handover_backlog: (2 * mean_users_per_cell).max(2),
             seed: 1,
+            arrivals: ArrivalPattern::Uniform,
+            faults: FaultPlan::none(),
         }
     }
 
@@ -217,9 +304,23 @@ impl FleetScenario {
     /// The per-cell power-cap slice (mW): the even share of the site
     /// budget, min-ed with any explicit per-cell cap. `None` = no cap.
     pub fn effective_cell_cap_mw(&self) -> Option<u32> {
-        let slice = self
-            .site_budget_mw
-            .map(|site| (site / self.cells.max(1) as u32).max(1));
+        self.effective_cell_cap_mw_under(None)
+    }
+
+    /// The per-cell slice under a brownout override: the site budget is
+    /// the min of the configured one and `site_override_mw` (a brownout
+    /// never RAISES the budget), then sliced evenly as usual.
+    pub fn effective_cell_cap_mw_under(
+        &self,
+        site_override_mw: Option<u32>,
+    ) -> Option<u32> {
+        let site = match (self.site_budget_mw, site_override_mw) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, None) => a,
+            (None, b) => b,
+        };
+        let slice =
+            site.map(|s| (s / self.cells.max(1) as u32).max(1));
         match (slice, self.cell_power_budget_mw) {
             (Some(a), Some(b)) => Some(a.min(b)),
             (Some(a), None) => Some(a),
@@ -228,10 +329,16 @@ impl FleetScenario {
     }
 }
 
-/// One cell: a [`Server`] plus its arrival stream and accumulators.
+/// One cell: a [`Server`] plus its arrival stream, fault state, and
+/// accumulators.
 struct Cell {
     server: Server,
     rng: u64,
+    /// Current outage state (driven by the plan's half-open windows).
+    out: bool,
+    /// Current TE derate, `(tes_per_subgroup, freq_mhz)`; `None` =
+    /// healthy. Tracked so the arch spec is swapped only on transitions.
+    degraded: Option<(usize, u32)>,
     submitted: u64,
     served: u64,
     missed: usize,
@@ -239,13 +346,27 @@ struct Cell {
     handovers_out: u64,
     energy_j: f64,
     deferred_for_power: u64,
+    outage_ttis: u64,
+    shed_to_retry: u64,
+    serve_errors: u64,
+}
+
+/// One parked user in the fleet's retry queue: re-admitted (FIFO among
+/// due entries) once the lockstep clock reaches `not_before`.
+struct RetryEntry {
+    req: TtiRequest,
+    not_before: u64,
+}
+
+fn default_availability() -> f64 {
+    1.0
 }
 
 /// Per-cell slice of a [`FleetReport`].
 #[derive(Clone, Debug, PartialEq, Serialize, Deserialize)]
 pub struct CellReport {
     pub cell: usize,
-    /// Users whose arrival draw landed here.
+    /// Users whose arrival draw landed here while the cell was live.
     pub submitted: u64,
     /// Users this cell actually served (its own arrivals plus handed-over
     /// ones).
@@ -256,6 +377,20 @@ pub struct CellReport {
     pub final_backlog: usize,
     pub energy_j: f64,
     pub deferred_for_power: u64,
+    /// TTIs this cell spent hard-down.
+    #[serde(default)]
+    pub outage_ttis: u64,
+    /// `1 − outage_ttis / num_ttis`.
+    #[serde(default = "default_availability")]
+    pub availability: f64,
+    /// Queued users this cell pushed into the fleet retry queue at its
+    /// outage down-transition (no live cell could absorb them).
+    #[serde(default)]
+    pub shed_to_retry: u64,
+    /// TTIs this cell failed with a typed serve error (and served
+    /// nothing; its queue survived the transactional rollback).
+    #[serde(default)]
+    pub serve_errors: u64,
 }
 
 /// Aggregate outcome of one fleet run. A pure function of the scenario
@@ -281,11 +416,12 @@ pub struct FleetReport {
     /// Oldest wait (in TTIs) any user saw between arrival and service —
     /// unserved users count their wait up to the end of the run.
     pub max_backlog_age_ttis: u64,
-    /// Users moved between cells by the balancer.
+    /// Users moved between cells: balancer sheds, outage evacuations,
+    /// and retry-queue re-admissions.
     pub handovers: u64,
     /// Power-cap deferral events summed over cells and TTIs.
     pub deferred_for_power_total: u64,
-    /// Users still queued (somewhere) when the run ended.
+    /// Users still queued (in some cell) when the run ended.
     pub final_backlog: usize,
     /// Total simulated cycles across every cell TTI — the deterministic
     /// metric `benches/fleet.rs` gates in bench-diff.
@@ -295,12 +431,51 @@ pub struct FleetReport {
     pub mean_site_power_w: f64,
     /// Highest summed cross-cell draw of any single TTI.
     pub peak_site_power_w: f64,
+    /// `1 − outage_cell_ttis / (cells × num_ttis)`: the fraction of
+    /// (cell × TTI) slots that were live. 1.0 under an empty plan.
+    #[serde(default = "default_availability")]
+    pub availability: f64,
+    /// (cell × TTI) slots lost to outages.
+    #[serde(default)]
+    pub outage_cell_ttis: u64,
+    /// TTIs during which any fault state was active (outage, derate, or
+    /// brownout).
+    #[serde(default)]
+    pub degraded_mode_ttis: u64,
+    /// Displaced users (outage evacuees or redirected arrivals) that
+    /// were nonetheless served before the run ended.
+    #[serde(default)]
+    pub recovered_users: u64,
+    /// Total retry-queue entries across the run.
+    #[serde(default)]
+    pub retries_total: u64,
+    /// The worst single user's retry count (bounded by the plan's
+    /// `max_retries`).
+    #[serde(default)]
+    pub max_user_retries: u32,
+    /// Users dropped after exhausting `max_retries`.
+    #[serde(default)]
+    pub dropped_users: u64,
+    /// Users still parked in the retry queue when the run ended.
+    #[serde(default)]
+    pub retry_backlog: usize,
+    /// (cell × TTI) slots lost to typed serve errors (the cell's queue
+    /// survived; the slot served nothing).
+    #[serde(default)]
+    pub serve_errors: u64,
+    /// Nearest-rank tails of the per-user wait distribution (TTIs from
+    /// arrival to service; unserved users wait to the end of the run).
+    #[serde(default)]
+    pub p99_wait_ttis: u64,
+    #[serde(default)]
+    pub p999_wait_ttis: u64,
     pub per_cell: Vec<CellReport>,
 }
 
 /// N cells in lockstep TTIs over one shared block cache. Construct with
-/// [`Fleet::new`], drive with [`Fleet::step`], summarize with
-/// [`Fleet::report`] — or use [`run_fleet`] for the whole arc.
+/// [`Fleet::new`] (or fallible [`Fleet::try_new`]), drive with
+/// [`Fleet::step`], summarize with [`Fleet::report`] — or use
+/// [`run_fleet`] for the whole arc.
 pub struct Fleet {
     scenario: FleetScenario,
     cells: Vec<Cell>,
@@ -309,6 +484,18 @@ pub struct Fleet {
     submit_tti: Vec<u32>,
     /// Service flag per user — the double-count guard.
     served: Vec<bool>,
+    /// Wait (TTIs, arrival → service) per user; `u32::MAX` = unserved.
+    wait: Vec<u32>,
+    /// Outage-displacement flag per user (evacuated or redirected).
+    displaced: Vec<bool>,
+    /// Retry-queue entries per user (bounded by the plan's max_retries).
+    retry_count: Vec<u32>,
+    /// Dropped-after-max-retries flag per user.
+    dropped: Vec<bool>,
+    retry: Vec<RetryEntry>,
+    /// Current brownout override (mW), tracked so caps re-slice only on
+    /// transitions.
+    brownout: Option<u32>,
     tti: usize,
     handovers: u64,
     total_cycles: u64,
@@ -317,11 +504,41 @@ pub struct Fleet {
     peak_site_power_w: f64,
     max_backlog_age: u64,
     weight_total: u64,
+    outage_slots: u64,
+    degraded_mode_ttis: u64,
+    dropped_users: u64,
+    retries_total: u64,
+    serve_errors: u64,
 }
 
 impl Fleet {
+    /// Infallible constructor; panics on an invalid scenario with the
+    /// typed error's message. Prefer [`Fleet::try_new`] on user-supplied
+    /// input.
     pub fn new(s: &FleetScenario, blocks: &Arc<BlockScheduleCache>) -> Self {
-        assert!(s.cells > 0, "a fleet needs at least one cell");
+        Fleet::try_new(s, blocks).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Validate the scenario (cell count, fault-plan shape) and build
+    /// the fleet.
+    pub fn try_new(
+        s: &FleetScenario,
+        blocks: &Arc<BlockScheduleCache>,
+    ) -> Result<Self, FleetError> {
+        if s.cells == 0 {
+            return Err(FleetError::NoCells);
+        }
+        for cell in s.faults.named_cells() {
+            if cell >= s.cells {
+                return Err(FleetError::FaultPlan {
+                    detail: format!(
+                        "event names cell {cell}, but the fleet has only \
+                         {} cells",
+                        s.cells
+                    ),
+                });
+            }
+        }
         let cap_w =
             s.effective_cell_cap_mw().map(|mw| f64::from(mw) / 1e3);
         let cells = (0..s.cells)
@@ -336,6 +553,8 @@ impl Fleet {
                 Cell {
                     server,
                     rng: cell_seed(s.seed, i),
+                    out: false,
+                    degraded: None,
                     submitted: 0,
                     served: 0,
                     missed: 0,
@@ -343,14 +562,23 @@ impl Fleet {
                     handovers_out: 0,
                     energy_j: 0.0,
                     deferred_for_power: 0,
+                    outage_ttis: 0,
+                    shed_to_retry: 0,
+                    serve_errors: 0,
                 }
             })
             .collect();
-        Fleet {
+        Ok(Fleet {
             scenario: s.clone(),
             cells,
             submit_tti: Vec::new(),
             served: Vec::new(),
+            wait: Vec::new(),
+            displaced: Vec::new(),
+            retry_count: Vec::new(),
+            dropped: Vec::new(),
+            retry: Vec::new(),
+            brownout: None,
             tti: 0,
             handovers: 0,
             total_cycles: 0,
@@ -359,6 +587,127 @@ impl Fleet {
             peak_site_power_w: 0.0,
             max_backlog_age: 0,
             weight_total: u64::from(s.mix.total().max(1)),
+            outage_slots: 0,
+            degraded_mode_ttis: 0,
+            dropped_users: 0,
+            retries_total: 0,
+            serve_errors: 0,
+        })
+    }
+
+    /// The least-loaded cell not currently in outage (ties break on the
+    /// lower index); `None` when every cell is down.
+    fn least_loaded_live_cell(&self) -> Option<usize> {
+        (0..self.cells.len())
+            .filter(|&j| !self.cells[j].out)
+            .map(|j| (j, self.cells[j].server.pending()))
+            .min_by_key(|&(j, load)| (load, j))
+            .map(|(j, _)| j)
+    }
+
+    /// Park `req` in the retry queue with exponential backoff, or drop
+    /// it once its user has exhausted the plan's retry budget.
+    fn push_retry(&mut self, req: TtiRequest, tti: u32, plan: &FaultPlan) {
+        let uid = req.user_id as usize;
+        let attempt = self.retry_count[uid];
+        if attempt >= plan.max_retries {
+            self.dropped[uid] = true;
+            self.dropped_users += 1;
+            return;
+        }
+        self.retry_count[uid] = attempt + 1;
+        self.retries_total += 1;
+        self.retry.push(RetryEntry {
+            req,
+            not_before: u64::from(tti) + plan.backoff_ttis(attempt),
+        });
+    }
+
+    /// Evacuate a cell at its outage down-transition: every queued user
+    /// moves to the least-loaded live cell (a handover), or into the
+    /// retry queue when no cell is live.
+    fn evacuate(&mut self, src: usize, tti: u32, plan: &FaultPlan) {
+        let mut evacuees = Vec::new();
+        while let Some(req) = self.cells[src].server.take_newest() {
+            evacuees.push(req);
+        }
+        // take_newest pops newest-first; re-place oldest-first so the
+        // destination keeps the original arrival order.
+        for req in evacuees.into_iter().rev() {
+            self.displaced[req.user_id as usize] = true;
+            if let Some(dst) = self.least_loaded_live_cell() {
+                self.cells[src].handovers_out += 1;
+                self.cells[dst].handovers_in += 1;
+                self.handovers += 1;
+                self.cells[dst].server.submit(req);
+            } else {
+                self.cells[src].shed_to_retry += 1;
+                self.push_retry(req, tti, plan);
+            }
+        }
+    }
+
+    /// Apply this TTI's fault-state transitions (outage edges, TE
+    /// derates, brownout re-slices). Only *changes* touch the servers,
+    /// so a TTI with stable fault state costs nothing extra.
+    fn apply_fault_transitions(&mut self, tti: u32, plan: &FaultPlan) {
+        for i in 0..self.cells.len() {
+            let now_out = plan.cell_out(i, tti);
+            if now_out && !self.cells[i].out {
+                self.cells[i].out = true;
+                self.evacuate(i, tti, plan);
+            } else if !now_out && self.cells[i].out {
+                self.cells[i].out = false;
+            }
+        }
+        for i in 0..self.cells.len() {
+            let want = plan.degrade_at(i, tti);
+            if want != self.cells[i].degraded {
+                let spec = match want {
+                    Some((tes, mhz)) => ArchSpec::new(
+                        self.scenario.arch.substrate,
+                        self.scenario
+                            .arch
+                            .knobs
+                            .clone()
+                            .derated(tes, mhz),
+                    ),
+                    None => self.scenario.arch.clone(),
+                };
+                self.cells[i].server.set_arch_spec(&spec);
+                self.cells[i].degraded = want;
+            }
+        }
+        let want = plan.brownout_at(tti);
+        if want != self.brownout {
+            let cap_w = self
+                .scenario
+                .effective_cell_cap_mw_under(want)
+                .map(|mw| f64::from(mw) / 1e3);
+            for cell in self.cells.iter_mut() {
+                cell.server.set_power_budget_w(cap_w);
+            }
+            self.brownout = want;
+        }
+    }
+
+    /// Re-admit retry-queue users whose backoff has elapsed, in FIFO
+    /// order (a due entry is never starved behind a later one; not-due
+    /// entries keep their relative order).
+    fn drain_retry(&mut self, tti: u32, plan: &FaultPlan) {
+        let queue = std::mem::take(&mut self.retry);
+        for entry in queue {
+            if entry.not_before > u64::from(tti) {
+                self.retry.push(entry);
+                continue;
+            }
+            if let Some(dst) = self.least_loaded_live_cell() {
+                self.cells[dst].handovers_in += 1;
+                self.handovers += 1;
+                self.cells[dst].server.submit(entry.req);
+            } else {
+                self.push_retry(entry.req, tti, plan);
+            }
         }
     }
 
@@ -367,45 +716,117 @@ impl Fleet {
     /// either way (arrivals, reduction, and balancing are always serial
     /// in cell order, and block runs are pure).
     pub fn step(&mut self, parallel: bool) {
-        let s = &self.scenario;
-        let mean = s.mean_users_per_cell as u64;
-        // 1. arrivals — serial, cell order, per-cell streams
-        for cell in self.cells.iter_mut() {
-            let n = xorshift64(&mut cell.rng) % (2 * mean + 1);
-            for _ in 0..n {
-                let draw =
-                    (xorshift64(&mut cell.rng) % self.weight_total) as u32;
-                let uid = self.submit_tti.len() as u32;
-                self.submit_tti.push(self.tti as u32);
-                self.served.push(false);
-                cell.server.submit(TtiRequest {
-                    user_id: uid,
-                    pipeline: s.mix.pipeline_of(draw),
-                    res: s.res_per_user,
-                });
-                cell.submitted += 1;
+        let tti = self.tti as u32;
+        let plan = self.scenario.faults.clone();
+        let arrivals = self.scenario.arrivals;
+        let mix = self.scenario.mix;
+        let res = self.scenario.res_per_user;
+        let mean = self.scenario.mean_users_per_cell as u64;
+        // 0. faults — serial; a no-op under the empty plan (the
+        // byte-identity kill-switch)
+        if !plan.is_empty() {
+            self.apply_fault_transitions(tti, &plan);
+            self.drain_retry(tti, &plan);
+            if self.brownout.is_some()
+                || self
+                    .cells
+                    .iter()
+                    .any(|c| c.out || c.degraded.is_some())
+            {
+                self.degraded_mode_ttis += 1;
             }
         }
-        // 2. serve — the one parallel phase; order-preserving collect
-        let reports: Vec<TtiReport> = if parallel {
-            self.cells
-                .par_iter_mut()
-                .map(|c| c.server.schedule_tti())
-                .collect()
-        } else {
-            self.cells.iter_mut().map(|c| c.server.schedule_tti()).collect()
-        };
+        let crowd = plan.crowd_multiplier(tti);
+        // 1. arrivals — serial, cell order, per-cell streams. The RNG
+        // stream is drawn identically whether or not the cell is out;
+        // only the routing differs.
+        for i in 0..self.cells.len() {
+            let base = xorshift64(&mut self.cells[i].rng) % (2 * mean + 1);
+            let n = match arrivals {
+                ArrivalPattern::Uniform => base,
+                ArrivalPattern::Bursty { period } => {
+                    let p = u64::from(period.max(1));
+                    if u64::from(tti) % p == 0 {
+                        base * p
+                    } else {
+                        0
+                    }
+                }
+                ArrivalPattern::FlashCrowd { period, spike } => {
+                    let p = u64::from(period.max(1));
+                    if u64::from(tti) % p == 0 {
+                        base * u64::from(spike.max(1))
+                    } else {
+                        base
+                    }
+                }
+            } * crowd;
+            for _ in 0..n {
+                let draw = (xorshift64(&mut self.cells[i].rng)
+                    % self.weight_total) as u32;
+                let uid = self.submit_tti.len() as u32;
+                self.submit_tti.push(tti);
+                self.served.push(false);
+                self.wait.push(u32::MAX);
+                self.displaced.push(false);
+                self.retry_count.push(0);
+                self.dropped.push(false);
+                let req = TtiRequest {
+                    user_id: uid,
+                    pipeline: mix.pipeline_of(draw),
+                    res,
+                };
+                if self.cells[i].out {
+                    self.displaced[uid as usize] = true;
+                    self.push_retry(req, tti, &plan);
+                } else {
+                    self.cells[i].server.submit(req);
+                    self.cells[i].submitted += 1;
+                }
+            }
+        }
+        // 2. serve — the one parallel phase; order-preserving collect.
+        // Out cells serve nothing; a typed serve error costs the cell
+        // this slot (its queue survived the transactional rollback) but
+        // never the run.
+        let reports: Vec<Option<Result<TtiReport, ServeError>>> =
+            if parallel {
+                self.cells
+                    .par_iter_mut()
+                    .map(|c| (!c.out).then(|| c.server.try_schedule_tti()))
+                    .collect()
+            } else {
+                self.cells
+                    .iter_mut()
+                    .map(|c| (!c.out).then(|| c.server.try_schedule_tti()))
+                    .collect()
+            };
         // 3. reduce — serial, cell order (f64 sums stay order-identical)
         let mut tti_power = 0.0f64;
-        for (cell, rep) in self.cells.iter_mut().zip(&reports) {
+        for (i, slot) in reports.into_iter().enumerate() {
+            let rep = match slot {
+                None => {
+                    self.cells[i].outage_ttis += 1;
+                    self.outage_slots += 1;
+                    continue;
+                }
+                Some(Err(_)) => {
+                    self.cells[i].serve_errors += 1;
+                    self.serve_errors += 1;
+                    continue;
+                }
+                Some(Ok(rep)) => rep,
+            };
+            let cell = &mut self.cells[i];
             for &uid in &rep.served {
                 let uid = uid as usize;
-                assert!(
+                debug_assert!(
                     !self.served[uid],
                     "user {uid} served twice — handover double-count"
                 );
                 self.served[uid] = true;
-                let age = self.tti as u64 - u64::from(self.submit_tti[uid]);
+                let age = u64::from(tti) - u64::from(self.submit_tti[uid]);
+                self.wait[uid] = age as u32;
                 self.max_backlog_age = self.max_backlog_age.max(age);
                 cell.served += 1;
             }
@@ -426,9 +847,9 @@ impl Fleet {
     }
 
     /// Shed overloaded cells' newest users to the least-loaded other
-    /// cell, one request at a time, while the move strictly improves
-    /// imbalance. Fully deterministic: source cells are visited in index
-    /// order and destination ties break on the lower index.
+    /// *live* cell, one request at a time, while the move strictly
+    /// improves imbalance. Fully deterministic: source cells are visited
+    /// in index order and destination ties break on the lower index.
     fn rebalance(&mut self) {
         let threshold = self.scenario.handover_backlog;
         if self.cells.len() < 2 {
@@ -437,11 +858,13 @@ impl Fleet {
         for src in 0..self.cells.len() {
             while self.cells[src].server.pending() > threshold {
                 let src_pending = self.cells[src].server.pending();
-                let (dst, dst_pending) = (0..self.cells.len())
-                    .filter(|&j| j != src)
+                let Some((dst, dst_pending)) = (0..self.cells.len())
+                    .filter(|&j| j != src && !self.cells[j].out)
                     .map(|j| (j, self.cells[j].server.pending()))
                     .min_by_key(|&(j, load)| (load, j))
-                    .expect("≥2 cells");
+                else {
+                    return; // no live destination anywhere
+                };
                 // moving must strictly reduce the gap, or cells at equal
                 // load would ping-pong users forever
                 if dst_pending + 1 >= src_pending {
@@ -459,8 +882,10 @@ impl Fleet {
         }
     }
 
-    /// Summarize the run so far. Asserts global user conservation: every
-    /// submitted user was served exactly once or is still queued.
+    /// Summarize the run so far. Debug builds re-check global user
+    /// conservation: every submitted user was served exactly once, is
+    /// still queued (in a cell or the retry queue), or was dropped after
+    /// exhausting its retries.
     pub fn report(&self) -> FleetReport {
         let s = &self.scenario;
         let n_ttis = self.tti.max(1) as f64;
@@ -469,12 +894,14 @@ impl Fleet {
             .iter()
             .enumerate()
             .map(|(i, c)| {
-                // per-cell conservation: arrivals + received handovers all
-                // end up served here, handed away, or still queued
-                assert_eq!(
+                // per-cell conservation: arrivals + received handovers
+                // all end up served here, handed away (to a cell or the
+                // retry queue), or still queued
+                debug_assert_eq!(
                     c.submitted + c.handovers_in,
                     c.served
                         + c.handovers_out
+                        + c.shed_to_retry
                         + c.server.pending() as u64,
                     "cell {i} lost or duplicated users"
                 );
@@ -488,6 +915,10 @@ impl Fleet {
                     final_backlog: c.server.pending(),
                     energy_j: c.energy_j,
                     deferred_for_power: c.deferred_for_power,
+                    outage_ttis: c.outage_ttis,
+                    availability: 1.0 - c.outage_ttis as f64 / n_ttis,
+                    shed_to_retry: c.shed_to_retry,
+                    serve_errors: c.serve_errors,
                 }
             })
             .collect();
@@ -495,9 +926,13 @@ impl Fleet {
         let served_total: u64 = per_cell.iter().map(|c| c.served).sum();
         let final_backlog: usize =
             per_cell.iter().map(|c| c.final_backlog).sum();
-        assert_eq!(
+        let retry_backlog = self.retry.len();
+        debug_assert_eq!(
             submitted_total,
-            served_total + final_backlog as u64,
+            served_total
+                + final_backlog as u64
+                + retry_backlog as u64
+                + self.dropped_users,
             "fleet lost or duplicated users"
         );
         // unserved users have waited from arrival to the end of the run
@@ -508,6 +943,22 @@ impl Fleet {
                     .max(self.tti as u64 - u64::from(self.submit_tti[uid]));
             }
         }
+        // per-user wait distribution for the p99/p99.9 tails
+        let mut waits: Vec<u64> = (0..self.submit_tti.len())
+            .map(|uid| {
+                if self.wait[uid] != u32::MAX {
+                    u64::from(self.wait[uid])
+                } else {
+                    self.tti as u64 - u64::from(self.submit_tti[uid])
+                }
+            })
+            .collect();
+        waits.sort_unstable();
+        let recovered_users = (0..self.submit_tti.len())
+            .filter(|&uid| self.displaced[uid] && self.served[uid])
+            .count() as u64;
+        let max_user_retries =
+            self.retry_count.iter().copied().max().unwrap_or(0);
         let missed_slots: usize = self.cells.iter().map(|c| c.missed).sum();
         let mut rates: Vec<f64> =
             per_cell.iter().map(|c| c.deadline_miss_rate).collect();
@@ -517,6 +968,7 @@ impl Fleet {
             .budget_cycles
             .unwrap_or((1e-3 * cfg.freq_ghz * 1e9) as u64);
         let slot_s = budget.max(1) as f64 / (cfg.freq_ghz * 1e9);
+        let slots = (self.tti.max(1) * s.cells.max(1)) as u64;
         FleetReport {
             name: s.name.clone(),
             substrate: s.arch.substrate.label().to_string(),
@@ -540,6 +992,18 @@ impl Fleet {
             site_energy_j: self.site_energy_j,
             mean_site_power_w: self.site_power_acc / n_ttis,
             peak_site_power_w: self.peak_site_power_w,
+            availability: 1.0
+                - self.outage_slots as f64 / slots as f64,
+            outage_cell_ttis: self.outage_slots,
+            degraded_mode_ttis: self.degraded_mode_ttis,
+            recovered_users,
+            retries_total: self.retries_total,
+            max_user_retries,
+            dropped_users: self.dropped_users,
+            retry_backlog,
+            serve_errors: self.serve_errors,
+            p99_wait_ttis: percentile_u64(&waits, 0.99),
+            p999_wait_ttis: percentile_u64(&waits, 0.999),
             per_cell,
         }
     }
@@ -555,18 +1019,41 @@ fn percentile(sorted: &[f64], p: f64) -> f64 {
     sorted[rank - 1]
 }
 
+/// Nearest-rank percentile of an ascending-sorted integer slice.
+fn percentile_u64(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((p * sorted.len() as f64).ceil() as usize)
+        .clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
 /// Run one fleet scenario end to end. Pure: equal scenarios produce
 /// byte-identical reports, parallel or serial, shared cache or fresh.
+/// Panics on an invalid scenario; prefer [`try_run_fleet`] for
+/// user-supplied input.
 pub fn run_fleet(
     s: &FleetScenario,
     blocks: &Arc<BlockScheduleCache>,
     parallel: bool,
 ) -> FleetReport {
-    let mut fleet = Fleet::new(s, blocks);
+    try_run_fleet(s, blocks, parallel).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Fallible twin of [`run_fleet`]: scenario validation surfaces as a
+/// typed [`FleetError`] instead of a panic. Serving-time faults never
+/// error — the fleet degrades and the report counts the damage.
+pub fn try_run_fleet(
+    s: &FleetScenario,
+    blocks: &Arc<BlockScheduleCache>,
+    parallel: bool,
+) -> Result<FleetReport, FleetError> {
+    let mut fleet = Fleet::try_new(s, blocks)?;
     for _ in 0..s.num_ttis {
         fleet.step(parallel);
     }
-    fleet.report()
+    Ok(fleet.report())
 }
 
 /// [`FleetReport`] plus the study-level wrapper the CLI prints: wall
@@ -590,27 +1077,40 @@ pub struct FleetStudyReport {
 }
 
 /// Run the scenario on the rayon pool (each drive on a fresh shared
-/// cache), optionally verifying against a full serial drive.
+/// cache), optionally verifying against a full serial drive. Panics on
+/// an invalid scenario; prefer [`try_fleet_with_report`] for
+/// user-supplied input.
 pub fn fleet_with_report(
     s: &FleetScenario,
     verify: bool,
 ) -> FleetStudyReport {
-    let serial = verify.then(|| {
-        let blocks = Arc::new(BlockScheduleCache::new());
-        let t = Instant::now();
-        let r = run_fleet(s, &blocks, false);
-        (r, t.elapsed().as_secs_f64())
-    });
+    try_fleet_with_report(s, verify).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Fallible twin of [`fleet_with_report`].
+pub fn try_fleet_with_report(
+    s: &FleetScenario,
+    verify: bool,
+) -> Result<FleetStudyReport, FleetError> {
+    let serial = match verify {
+        true => {
+            let blocks = Arc::new(BlockScheduleCache::new());
+            let t = Instant::now();
+            let r = try_run_fleet(s, &blocks, false)?;
+            Some((r, t.elapsed().as_secs_f64()))
+        }
+        false => None,
+    };
     let blocks = Arc::new(BlockScheduleCache::new());
     let t = Instant::now();
-    let report = run_fleet(s, &blocks, true);
+    let report = try_run_fleet(s, &blocks, true)?;
     let parallel_wall_s = t.elapsed().as_secs_f64();
     let (serial_wall_s, verified_identical) = match &serial {
         Some((r, wall)) => (Some(*wall), Some(*r == report)),
         None => (None, None),
     };
     let (block_cache_hits, _) = blocks.stats();
-    FleetStudyReport {
+    Ok(FleetStudyReport {
         threads: rayon::current_num_threads(),
         speedup: serial_wall_s
             .map(|s| if parallel_wall_s > 0.0 { s / parallel_wall_s } else { 0.0 }),
@@ -621,12 +1121,13 @@ pub fn fleet_with_report(
         block_cache_hits,
         block_cache_stats: blocks.cache_stats(),
         report,
-    }
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::FaultEvent;
 
     #[test]
     fn mix_draw_covers_all_pipelines() {
@@ -661,6 +1162,17 @@ mod tests {
     }
 
     #[test]
+    fn flash_crowd_adds_load_on_spike_ttis() {
+        let crowd = ArrivalPattern::FlashCrowd { period: 4, spike: 3 };
+        assert_eq!(crowd.arrivals(0, 3), 9, "spike TTI");
+        assert_eq!(crowd.arrivals(1, 3), 3, "baseline between spikes");
+        assert_eq!(crowd.arrivals(4, 3), 9);
+        let sum: usize = (0..8).map(|t| crowd.arrivals(t, 3)).sum();
+        assert!(sum > 24, "flash crowd ADDS load, unlike bursty");
+        assert_eq!(ArrivalPattern::default(), ArrivalPattern::Uniform);
+    }
+
+    #[test]
     fn cell_seeds_are_distinct_and_nonzero() {
         let mut seen = std::collections::HashSet::new();
         for cell in 0..512 {
@@ -687,6 +1199,22 @@ mod tests {
     }
 
     #[test]
+    fn brownout_override_never_raises_the_site_budget() {
+        let s = FleetScenario::new("brown", 8, 2, 1);
+        assert_eq!(s.effective_cell_cap_mw_under(None), Some(12_500));
+        assert_eq!(
+            s.effective_cell_cap_mw_under(Some(20_000)),
+            Some(2_500),
+            "brownout re-slices the dipped budget"
+        );
+        assert_eq!(
+            s.effective_cell_cap_mw_under(Some(400_000)),
+            Some(12_500),
+            "a brownout above the configured budget is a no-op"
+        );
+    }
+
+    #[test]
     fn smoke_fleet_serves_and_conserves() {
         let s = FleetScenario::smoke();
         let blocks = Arc::new(BlockScheduleCache::new());
@@ -699,10 +1227,114 @@ mod tests {
         assert_eq!(r.per_cell.len(), 8);
         assert!(r.site_energy_j > 0.0);
         assert!(r.peak_site_power_w >= r.mean_site_power_w);
+        // a fault-free run reports full availability and no fault damage
+        assert_eq!(r.availability, 1.0);
+        assert_eq!(r.outage_cell_ttis, 0);
+        assert_eq!(r.dropped_users + r.retries_total, 0);
         // purity: same scenario, fresh cache, same bytes
         let again =
             run_fleet(&s, &Arc::new(BlockScheduleCache::new()), false);
         assert_eq!(r, again, "fleet runs must be pure");
+    }
+
+    #[test]
+    fn outage_degrades_gracefully_and_conserves_users() {
+        let mut s = FleetScenario::smoke();
+        s.num_ttis = 6;
+        s.faults =
+            FaultPlan::preset("outage-burst", s.cells, s.num_ttis as u32)
+                .unwrap();
+        let blocks = Arc::new(BlockScheduleCache::new());
+        let r = run_fleet(&s, &blocks, false);
+        assert!(r.availability < 1.0, "outages must show up");
+        assert!(r.outage_cell_ttis > 0);
+        assert!(r.degraded_mode_ttis > 0);
+        // the extended conservation ledger balances
+        assert_eq!(
+            r.submitted_total,
+            r.served_total
+                + r.final_backlog as u64
+                + r.retry_backlog as u64
+                + r.dropped_users,
+            "outage run lost or duplicated users"
+        );
+        assert!(
+            r.max_user_retries <= s.faults.max_retries,
+            "retry budget exceeded"
+        );
+        // deterministic replay, fresh cache
+        let again =
+            run_fleet(&s, &Arc::new(BlockScheduleCache::new()), false);
+        assert_eq!(r, again, "faulted runs must replay byte-identically");
+    }
+
+    #[test]
+    fn total_outage_drops_users_at_zero_retries() {
+        // One cell, down for the whole run, no retry budget: every
+        // arrival is drawn, displaced, and dropped. Nothing serves.
+        let mut s = FleetScenario::new("blackout", 1, 6, 6);
+        s.faults = FaultPlan {
+            events: vec![FaultEvent::CellOutage {
+                cell: 0,
+                from_tti: 0,
+                until_tti: 6,
+            }],
+            max_retries: 0,
+            backoff_base_ttis: 1,
+        };
+        let blocks = Arc::new(BlockScheduleCache::new());
+        let r = run_fleet(&s, &blocks, false);
+        assert_eq!(r.served_total, 0);
+        assert_eq!(r.availability, 0.0);
+        assert_eq!(r.submitted_total, r.dropped_users);
+        assert_eq!(r.retry_backlog, 0);
+        assert_eq!(r.recovered_users, 0);
+        assert!(r.submitted_total > 0, "arrivals are still drawn");
+    }
+
+    #[test]
+    fn invalid_scenarios_surface_typed_errors() {
+        let blocks = Arc::new(BlockScheduleCache::new());
+        let mut s = FleetScenario::smoke();
+        s.cells = 0;
+        assert_eq!(
+            Fleet::try_new(&s, &blocks).err(),
+            Some(FleetError::NoCells)
+        );
+        let mut s = FleetScenario::smoke();
+        s.faults = FaultPlan {
+            events: vec![FaultEvent::CellOutage {
+                cell: 99,
+                from_tti: 0,
+                until_tti: 1,
+            }],
+            ..FaultPlan::none()
+        };
+        match Fleet::try_new(&s, &blocks).err() {
+            Some(FleetError::FaultPlan { detail }) => {
+                assert!(detail.contains("99"), "{detail}");
+            }
+            other => panic!("expected a fault-plan error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn scenarios_with_fault_fields_round_trip_serde() {
+        let mut s = FleetScenario::smoke();
+        s.arrivals = ArrivalPattern::FlashCrowd { period: 2, spike: 4 };
+        s.faults =
+            FaultPlan::preset("outage", s.cells, s.num_ttis as u32).unwrap();
+        let json = serde_json::to_string(&s).unwrap();
+        let back: FleetScenario = serde_json::from_str(&json).unwrap();
+        assert_eq!(back, s);
+        // pre-fault scenario JSON (no arrivals/faults keys) still loads
+        let legacy = serde_json::to_string(&FleetScenario::smoke()).unwrap();
+        let stripped = legacy
+            .replace(r#","arrivals":"Uniform""#, "")
+            .replace(r#","faults":{"events":[],"max_retries":8,"backoff_base_ttis":1}"#, "");
+        assert_ne!(legacy, stripped, "fields must have been present");
+        let old: FleetScenario = serde_json::from_str(&stripped).unwrap();
+        assert_eq!(old, FleetScenario::smoke(), "serde defaults fill in");
     }
 
     #[test]
@@ -713,5 +1345,9 @@ mod tests {
         assert_eq!(percentile(&rates, 0.5), 0.5);
         assert_eq!(percentile(&[], 0.99), 0.0);
         assert_eq!(percentile(&[0.25], 0.99), 0.25);
+        let waits: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_u64(&waits, 0.99), 99);
+        assert_eq!(percentile_u64(&waits, 0.999), 100);
+        assert_eq!(percentile_u64(&[], 0.99), 0);
     }
 }

@@ -6,8 +6,8 @@
 //! Argument parsing is hand-rolled (no clap in the dependency set).
 
 use tensorpool::figures::{
-    block_figs, energy_figs, fleet_figs, frontier_figs, gemm_figs, pe_figs,
-    ppa_figs, tables,
+    block_figs, chaos_figs, energy_figs, fleet_figs, frontier_figs,
+    gemm_figs, pe_figs, ppa_figs, tables,
 };
 use tensorpool::report::Table;
 use tensorpool::runtime::{default_artifacts_dir, Runtime};
@@ -20,7 +20,7 @@ USAGE: tensorpool <COMMAND> [ARGS]
 
 COMMANDS:
   figures [fig1|fig5|fig7|fig8|fig10|fig12|fig13|fig15|energy|frontier|
-           fleet|all]
+           fleet|chaos|all]
             regenerate the paper's figures (default: all). `energy` is the
             power-budgeted serving study: TE-vs-PE energy-efficiency ratio
             (Table II direction) + the power-capped capacity frontier
@@ -30,7 +30,10 @@ COMMANDS:
             GOPS/W, area-normalized GOPS/W/mm², and users served per TTI
             under each power cap — plus the paper's 6x/9.1x ratio lines.
             `fleet` is the cell-count scaling study: fleets of 2/8/32
-            cells on ONE shared block cache under the 100 W site budget
+            cells on ONE shared block cache under the 100 W site budget.
+            `chaos` drives one fleet through every built-in fault preset
+            (outage / outage-burst / brownout / te-degrade) next to its
+            clean run: availability, retries, drops, and wait tails
   tables  [table1|table2|table3|all]
             regenerate the paper's tables (default: all)
   balance   Sec IV memory-balance analysis (Eqs 1-6)
@@ -75,8 +78,8 @@ COMMANDS:
             striped block-cache counters to stderr.
   fleet   [--cells N] [--users MEAN] [--ttis N] [--seed S]
           [--site-budget-w W|none] [--cell-power-w W|none] [--per-user]
-          [--arch SUBSTRATE] [--handover-backlog N] [--cache-stats]
-          [--out <path>] [--no-verify] [--smoke]
+          [--arch SUBSTRATE] [--handover-backlog N] [--faults PLAN]
+          [--cache-stats] [--out <path>] [--no-verify] [--smoke]
             drive a multi-cell fleet in lockstep TTIs on the fleet layer:
             every cell is a full TTI serving loop with its own seeded
             arrival stream and its own power-cap slice of the site budget
@@ -87,9 +90,17 @@ COMMANDS:
             least-loaded cell. Reports fleet throughput, the p99/p99.9
             per-cell deadline-miss tails, max backlog age, handovers,
             power deferrals, and site energy/power; verifies
-            parallel == serial byte-identity by default. Non-smoke
-            defaults: 128 cells, mean 8 users/cell/TTI, 20 TTIs. --smoke
-            runs the 8-cell CI fleet.
+            parallel == serial byte-identity by default. --faults loads a
+            seeded fault plan (a JSON file or a preset:
+            none|outage|outage-burst|brownout|te-degrade, scaled to the
+            run's cells x TTIs): cell outages evacuate and fail over,
+            displaced users retry with bounded exponential backoff,
+            brownouts re-slice the per-cell caps, and the report gains
+            availability / recovered / retry / drop accounting plus
+            p99/p99.9 user-wait tails. Omitting --faults (or passing
+            `none`) is the kill-switch: byte-identical to a fault-free
+            run. Non-smoke defaults: 128 cells, mean 8 users/cell/TTI,
+            20 TTIs. --smoke runs the 8-cell CI fleet.
   kernels [--shapes MxKxN,..] [--iters N] [--smoke] [--out <path>]
             execute the measured kernels natively (scalar reference vs
             multi-accumulator blocked): per-shape GFLOP/s, scalar-vs-blocked
@@ -210,6 +221,9 @@ fn figures(rest: &[String]) -> i32 {
     }
     if all || which == "fleet" {
         println!("{}", fleet_figs::fleet_report());
+    }
+    if all || which == "chaos" {
+        println!("{}", chaos_figs::chaos_report());
     }
     0
 }
@@ -662,7 +676,8 @@ fn print_cache_stats(cmd: &str, s: &tensorpool::exec::CacheStats) {
 /// a machine-readable `FleetStudyReport` (stdout JSON; summary tables on
 /// stderr).
 fn fleet(rest: &[String]) -> i32 {
-    use tensorpool::fleet::{fleet_with_report, FleetScenario};
+    use tensorpool::exec::FaultPlan;
+    use tensorpool::fleet::{try_fleet_with_report, FleetScenario};
     let smoke = has(rest, "--smoke");
     let mut s = if smoke {
         FleetScenario::smoke()
@@ -763,6 +778,40 @@ fn fleet(rest: &[String]) -> i32 {
             }
         }
     }
+    // --faults takes a JSON plan file or a built-in preset name; presets
+    // scale to the run's final cells x TTIs, so this parses after every
+    // dimension flag. Omitting the flag (or naming `none`) leaves the
+    // empty plan — byte-identical to a fault-free run.
+    if let Some(v) = flag(rest, "--faults") {
+        if std::path::Path::new(&v).is_file() {
+            let text = match std::fs::read_to_string(&v) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("error reading fault plan {v}: {e}");
+                    return 2;
+                }
+            };
+            match serde_json::from_str::<FaultPlan>(&text) {
+                Ok(p) => s.faults = p,
+                Err(e) => {
+                    eprintln!("error: bad fault plan in {v}: {e}");
+                    return 2;
+                }
+            }
+        } else {
+            match FaultPlan::preset(&v, s.cells, s.num_ttis as u32) {
+                Some(p) => s.faults = p,
+                None => {
+                    eprintln!(
+                        "error: '--faults {v}' is neither a readable \
+                         plan file nor a preset ({})",
+                        FaultPlan::preset_names().join("|")
+                    );
+                    return 2;
+                }
+            }
+        }
+    }
     let verify = !has(rest, "--no-verify");
     let cap_str = |mw: Option<u32>| match mw {
         None => "none".to_string(),
@@ -783,7 +832,22 @@ fn fleet(rest: &[String]) -> i32 {
         rayon::current_num_threads(),
         verify,
     );
-    let study = fleet_with_report(&s, verify);
+    if !s.faults.is_empty() {
+        eprintln!(
+            "fleet: fault plan active — {} events, max {} retries, \
+             backoff base {} TTIs",
+            s.faults.events.len(),
+            s.faults.max_retries,
+            s.faults.backoff_base_ttis,
+        );
+    }
+    let study = match try_fleet_with_report(&s, verify) {
+        Ok(study) => study,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
     let r = &study.report;
     eprintln!("{}", fleet_figs::fleet_table(std::slice::from_ref(r)));
     let json = serde_json::to_string_pretty(&study)
@@ -808,6 +872,22 @@ fn fleet(rest: &[String]) -> i32 {
         study.block_cache_hits,
         r.cells,
     );
+    if !s.faults.is_empty() {
+        eprintln!(
+            "fleet: availability {:.4} ({} outage cell-TTIs, {} degraded \
+             TTIs); {} recovered, {} retries, {} dropped, {} still in \
+             retry; p99/p99.9 wait {}/{} TTIs",
+            r.availability,
+            r.outage_cell_ttis,
+            r.degraded_mode_ttis,
+            r.recovered_users,
+            r.retries_total,
+            r.dropped_users,
+            r.retry_backlog,
+            r.p99_wait_ttis,
+            r.p999_wait_ttis,
+        );
+    }
     if has(rest, "--cache-stats") {
         print_cache_stats("fleet", &study.block_cache_stats);
     }

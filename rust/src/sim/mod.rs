@@ -23,6 +23,6 @@ pub use config::{ArchConfig, TeGeometry};
 pub use dma::{Dma, DmaDir, DmaSnapshot, DmaXfer};
 pub use noc::{Delivery, Noc, NocSnapshot};
 pub use pe_traffic::{PeTraffic, PeTrafficSnapshot, PeWorkload};
-pub use pool::{Sim, SimSnapshot};
+pub use pool::{Sim, SimError, SimSnapshot};
 pub use stats::{MacAccountingMismatch, NocStats, RunResult, TeRunStats};
 pub use te::{TeEngine, TeJob, TeSnapshot};

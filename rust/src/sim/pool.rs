@@ -1,12 +1,49 @@
 //! Top-level Pool simulation: TEs + PE-traffic injectors + DMA sharing the
 //! NoC, stepped cycle by cycle until every engine drains.
 
+use serde::{Deserialize, Serialize};
+
 use super::config::ArchConfig;
 use super::dma::{Dma, DmaSnapshot};
 use super::noc::{Noc, NocSnapshot};
 use super::pe_traffic::{PeTraffic, PeTrafficSnapshot, PeWorkload};
 use super::stats::RunResult;
 use super::te::{TeEngine, TeJob, TeSnapshot};
+
+/// A typed simulation failure. The sim layer's user-reachable failure
+/// mode is the deadlock guard: a run that exceeds its cycle budget
+/// (engine deadlock, or a budget undersized for the workload). Callers
+/// that want the legacy abort-the-process behavior use [`Sim::run`];
+/// callers that degrade gracefully (the serving stack under fault
+/// injection) use [`Sim::try_run`] and propagate this as a `Result`.
+///
+/// Caller-bug invariants (mismatched job-slot counts in
+/// [`Sim::assign_gemm`], restoring a [`SimSnapshot`] onto a differently
+/// configured `Sim`) stay as panics/asserts: they are programming errors,
+/// not runtime conditions a degraded fleet can recover from. The full
+/// taxonomy is documented in `rust/README.md`.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, Serialize, Deserialize)]
+pub enum SimError {
+    /// The run exceeded `max_cycles` without draining — an engine
+    /// deadlock or an undersized budget. Both steppers (dense and
+    /// fast-forward) fail with this on exactly the same
+    /// (workload, budget) pairs.
+    BudgetDeadlock { max_cycles: u64 },
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::BudgetDeadlock { max_cycles } => write!(
+                f,
+                "simulation exceeded {max_cycles} cycles — \
+                 engine deadlock or undersized budget"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
 
 /// True unless `TENSORPOOL_NO_FASTFORWARD` is set (to anything but `0` or
 /// the empty string) — the escape hatch that forces the naive dense
@@ -151,6 +188,9 @@ impl Sim {
     }
 
     /// Run to completion (or panic past `max_cycles` — deadlock guard).
+    /// Panicking wrapper over [`Sim::try_run`], kept for the dozens of
+    /// call sites (figures, benches, tests) where a budget overrun IS a
+    /// programming error.
     ///
     /// Dispatches to the event-horizon fast-forward loop unless
     /// `TENSORPOOL_NO_FASTFORWARD` forced the dense stepper; the two are
@@ -158,23 +198,40 @@ impl Sim {
     /// per-TE stats, NoC counters — and hence energy), differing only in
     /// wall-clock and in the diagnostic `cycles_fast_forwarded` counter.
     pub fn run(&mut self, max_cycles: u64) -> RunResult {
+        self.try_run(max_cycles).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Run to completion, or return [`SimError::BudgetDeadlock`] past
+    /// `max_cycles`. The graceful twin of [`Sim::run`] — the serving
+    /// stack's degraded paths propagate this instead of aborting.
+    pub fn try_run(&mut self, max_cycles: u64) -> Result<RunResult, SimError> {
         if self.fast_forward {
-            self.run_fast_forward(max_cycles)
+            self.try_run_fast_forward(max_cycles)
         } else {
-            self.run_dense(max_cycles)
+            self.try_run_dense(max_cycles)
         }
     }
 
     /// The naive stepper: advance one cycle at a time, touching every
     /// engine every cycle. Kept as the differential-testing baseline for
-    /// [`Sim::run_fast_forward`].
+    /// [`Sim::run_fast_forward`]. Panicking wrapper over
+    /// [`Sim::try_run_dense`].
     pub fn run_dense(&mut self, max_cycles: u64) -> RunResult {
+        self.try_run_dense(max_cycles)
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// [`Sim::run_dense`] with the deadlock guard as a typed error.
+    pub fn try_run_dense(
+        &mut self,
+        max_cycles: u64,
+    ) -> Result<RunResult, SimError> {
         while self.step() {
             if self.noc.now() > max_cycles {
-                budget_exceeded(max_cycles);
+                return Err(SimError::BudgetDeadlock { max_cycles });
             }
         }
-        self.result()
+        Ok(self.result())
     }
 
     /// The fast-forward loop: step densely while any component can make
@@ -184,22 +241,32 @@ impl Sim {
     /// Skipped cycles are provably inert except for per-cycle bookkeeping
     /// (TE stall counters, NoC port-wait ticks, PE credit accrual), which
     /// each component replays exactly, so the result is byte-identical to
-    /// [`Sim::run_dense`].
+    /// [`Sim::run_dense`]. Panicking wrapper over
+    /// [`Sim::try_run_fast_forward`].
     pub fn run_fast_forward(&mut self, max_cycles: u64) -> RunResult {
+        self.try_run_fast_forward(max_cycles)
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// [`Sim::run_fast_forward`] with the deadlock guard as a typed error.
+    pub fn try_run_fast_forward(
+        &mut self,
+        max_cycles: u64,
+    ) -> Result<RunResult, SimError> {
         while self.step() {
             if self.noc.now() > max_cycles {
-                budget_exceeded(max_cycles);
+                return Err(SimError::BudgetDeadlock { max_cycles });
             }
-            self.try_fast_forward(max_cycles);
+            self.maybe_fast_forward(max_cycles)?;
             // A skip may land past the budget; the dense stepper would
-            // have panicked while stepping through that span, so panic
-            // here too — the two steppers must fail on exactly the same
+            // have failed while stepping through that span, so fail here
+            // too — the two steppers must fail on exactly the same
             // (workload, budget) pairs, not just match on success.
             if self.noc.now() > max_cycles {
-                budget_exceeded(max_cycles);
+                return Err(SimError::BudgetDeadlock { max_cycles });
             }
         }
-        self.result()
+        Ok(self.result())
     }
 
     /// If no component can make progress next cycle, jump to one cycle
@@ -207,12 +274,12 @@ impl Sim {
     /// bookkeeping. `wake_at` contracts are conservative: a component may
     /// report an earlier wake than its true one (costing only a re-check),
     /// never a later one.
-    fn try_fast_forward(&mut self, max_cycles: u64) {
+    fn maybe_fast_forward(&mut self, max_cycles: u64) -> Result<(), SimError> {
         // O(1) pre-check: a non-empty bank queue forces a dense step next
         // cycle — skip the engine wake scan entirely during bank-service
         // spans.
         if self.noc.banks_active() {
-            return;
+            return Ok(());
         }
         let now = self.noc.now();
         let near = now + 1;
@@ -220,7 +287,7 @@ impl Sim {
         for te in &self.tes {
             if let Some(t) = te.wake_at(now) {
                 if t <= near {
-                    return; // active next cycle: step densely
+                    return Ok(()); // active next cycle: step densely
                 }
                 horizon = horizon.min(t);
             }
@@ -230,14 +297,14 @@ impl Sim {
         // over (possibly many) injectors.
         if let Some(t) = self.dma.as_ref().and_then(|d| d.wake_at(now)) {
             if t <= near {
-                return;
+                return Ok(());
             }
             horizon = horizon.min(t);
         }
         for p in &self.pe_traffic {
             if let Some(t) = p.wake_at(now) {
                 if t <= near {
-                    return;
+                    return Ok(());
                 }
                 horizon = horizon.min(t);
             }
@@ -245,15 +312,15 @@ impl Sim {
         // The NoC last, capped by the engine horizon: its wheel scan is
         // bounded by the distance it is allowed to matter.
         match self.noc.next_event_at(horizon) {
-            Some(t) if t <= near => return,
+            Some(t) if t <= near => return Ok(()),
             Some(t) => horizon = horizon.min(t),
             None => {}
         }
         if horizon == u64::MAX {
             // No event in flight and no engine can ever self-wake while
             // work remains: a genuine deadlock. The dense stepper would
-            // spin to the budget and panic; fail the same way, now.
-            budget_exceeded(max_cycles);
+            // spin to the budget and fail; fail the same way, now.
+            return Err(SimError::BudgetDeadlock { max_cycles });
         }
         let skipped = horizon - 1 - now;
         // Defensive only: every wake/event time <= now+1 early-returned
@@ -261,7 +328,7 @@ impl Sim {
         // TE min() above is future-proofing — today TeEngine::wake_at
         // only ever reports now+1 or None.)
         if skipped == 0 {
-            return;
+            return Ok(());
         }
         self.noc.fast_forward(horizon - 1);
         for te in &mut self.tes {
@@ -271,6 +338,7 @@ impl Sim {
             p.fast_forward(skipped);
         }
         self.cycles_fast_forwarded += skipped;
+        Ok(())
     }
 
     /// Collect the run result (cycles count from 0 to last drain).
@@ -390,16 +458,6 @@ impl Sim {
     }
 }
 
-/// The dense stepper's deadlock-guard panic, shared verbatim by the
-/// fast-forward loop (including its immediate-deadlock detection) so both
-/// steppers fail identically.
-fn budget_exceeded(max_cycles: u64) -> ! {
-    panic!(
-        "simulation exceeded {max_cycles} cycles — \
-         engine deadlock or undersized budget"
-    );
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -466,6 +524,20 @@ mod tests {
         });
         sim.assign_gemm(jobs);
         sim
+    }
+
+    #[test]
+    fn both_steppers_return_the_same_typed_budget_error() {
+        // The deadlock guard is a typed error now, and the two steppers
+        // must fail identically on the same (workload, budget) pair.
+        let cfg = ArchConfig::tensorpool();
+        let dense = stall_heavy_sim(&cfg).try_run_dense(100);
+        let ff = stall_heavy_sim(&cfg).try_run_fast_forward(100);
+        assert_eq!(dense, Err(SimError::BudgetDeadlock { max_cycles: 100 }));
+        assert_eq!(dense, ff, "steppers must fail identically");
+        // and a sufficient budget succeeds with the identical result
+        let ok = stall_heavy_sim(&cfg).try_run(1_000_000).unwrap();
+        assert_eq!(ok, stall_heavy_sim(&cfg).run(1_000_000));
     }
 
     #[test]

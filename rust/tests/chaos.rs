@@ -1,0 +1,192 @@
+//! Chaos contracts: fault injection must be seeded, replayable, and
+//! byte-invisible when disabled.
+//!
+//! * Empty-plan kill-switch: a scenario carrying `FaultPlan::none()` is
+//!   byte-identical to one that never set the field — serial, parallel,
+//!   fresh cache, warm cache, across seeds.
+//! * No cache aliasing: a clean run on a cache warmed by FAULTED runs
+//!   (derated arch windows, brownouts) reports the same bytes as on a
+//!   fresh cache — degraded windows key their own entries.
+//! * Conservation under outage: the extended ledger balances — every
+//!   submitted user is served, still queued (cell or retry), or dropped
+//!   after exhausting its retries. Nothing vanishes, nothing doubles.
+//! * Retry bounds: no user retries more than `max_retries`, and parked
+//!   users drain (no head-of-line starvation) once cells recover.
+
+use std::sync::Arc;
+
+use tensorpool::exec::{BlockScheduleCache, FaultEvent, FaultPlan};
+use tensorpool::fleet::{run_fleet, FleetReport, FleetScenario};
+
+fn ledger_balances(r: &FleetReport) {
+    assert_eq!(
+        r.submitted_total,
+        r.served_total
+            + r.final_backlog as u64
+            + r.retry_backlog as u64
+            + r.dropped_users,
+        "fleet ledger out of balance: {} submitted vs {} served + {} \
+         backlog + {} retrying + {} dropped",
+        r.submitted_total,
+        r.served_total,
+        r.final_backlog,
+        r.retry_backlog,
+        r.dropped_users,
+    );
+    for c in &r.per_cell {
+        assert_eq!(
+            c.submitted + c.handovers_in,
+            c.served
+                + c.handovers_out
+                + c.shed_to_retry
+                + c.final_backlog as u64,
+            "cell {} books out of balance",
+            c.cell
+        );
+    }
+}
+
+#[test]
+fn empty_plan_is_byte_identical_across_cache_tiers_and_seeds() {
+    for seed in [1u64, 0xC0FFEE, 0xDEAD_BEEF] {
+        // One scenario never mentions faults; the other sets the
+        // explicit kill-switch. Every drive mode must agree.
+        let mut bare = FleetScenario::smoke();
+        bare.seed = seed;
+        let mut none = bare.clone();
+        none.faults = FaultPlan::none();
+        assert_eq!(bare, none, "FaultPlan::none() IS the default");
+
+        let reference =
+            run_fleet(&bare, &Arc::new(BlockScheduleCache::new()), false);
+        let shared = Arc::new(BlockScheduleCache::new());
+        for (label, report) in [
+            ("fresh parallel", run_fleet(&none, &Arc::new(BlockScheduleCache::new()), true)),
+            ("shared cold", run_fleet(&none, &shared, true)),
+            ("shared warm", run_fleet(&none, &shared, true)),
+            ("shared serial", run_fleet(&none, &shared, false)),
+        ] {
+            assert_eq!(
+                report, reference,
+                "seed {seed:#x}: {label} diverged from the fault-free run"
+            );
+        }
+        assert_eq!(reference.availability, 1.0);
+        assert_eq!(
+            reference.retries_total + reference.dropped_users
+                + reference.outage_cell_ttis
+                + reference.degraded_mode_ttis,
+            0,
+            "an empty plan must leave no fault fingerprints"
+        );
+    }
+}
+
+#[test]
+fn faulted_runs_never_alias_clean_cache_entries() {
+    // Warm ONE shared cache with every fault preset (derated arch
+    // windows, brownout re-slices), then run clean on the polluted cache:
+    // the report must match a clean run on a fresh cache, byte for byte.
+    let clean = FleetScenario::smoke();
+    let fresh =
+        run_fleet(&clean, &Arc::new(BlockScheduleCache::new()), false);
+    let shared = Arc::new(BlockScheduleCache::new());
+    for preset in ["te-degrade", "brownout", "outage-burst"] {
+        let mut s = FleetScenario::smoke();
+        s.name = format!("pollute_{preset}");
+        s.faults =
+            FaultPlan::preset(preset, s.cells, s.num_ttis as u32).unwrap();
+        let r = run_fleet(&s, &shared, true);
+        ledger_balances(&r);
+    }
+    let on_polluted = run_fleet(&clean, &shared, true);
+    assert_eq!(
+        on_polluted, fresh,
+        "a fault-warmed cache changed a clean run — cache keys alias"
+    );
+}
+
+#[test]
+fn outage_conserves_every_user_and_degrades_availability() {
+    let mut s = FleetScenario::smoke();
+    s.num_ttis = 6;
+    s.faults =
+        FaultPlan::preset("outage-burst", s.cells, s.num_ttis as u32)
+            .unwrap();
+    let serial =
+        run_fleet(&s, &Arc::new(BlockScheduleCache::new()), false);
+    ledger_balances(&serial);
+    assert!(serial.availability < 1.0, "three cells were down");
+    assert!(serial.outage_cell_ttis > 0);
+    assert!(serial.served_total > 0, "live cells keep serving");
+    assert!(
+        serial.max_user_retries <= s.faults.max_retries,
+        "retry budget exceeded: {} > {}",
+        serial.max_user_retries,
+        s.faults.max_retries,
+    );
+    // handover books may be asymmetric under faults (retry re-admissions
+    // count only an arrival side) but never lose anyone — the ledger
+    // above is the invariant. Replay determinism, parallel and serial:
+    let parallel =
+        run_fleet(&s, &Arc::new(BlockScheduleCache::new()), true);
+    assert_eq!(serial, parallel, "faulted parallel drive diverged");
+    let again =
+        run_fleet(&s, &Arc::new(BlockScheduleCache::new()), true);
+    assert_eq!(parallel, again, "faulted rerun diverged");
+}
+
+#[test]
+fn retries_are_bounded_and_drain_after_recovery() {
+    // A single cell goes down for TTIs 1..4 and recovers with half the
+    // run left: everything parked in the retry queue must re-admit and
+    // serve (no starvation), and nobody may exceed the retry budget.
+    let mut s = FleetScenario::new("retry_drain", 1, 6, 10);
+    s.faults = FaultPlan {
+        events: vec![FaultEvent::CellOutage {
+            cell: 0,
+            from_tti: 1,
+            until_tti: 4,
+        }],
+        ..FaultPlan::none()
+    };
+    let r = run_fleet(&s, &Arc::new(BlockScheduleCache::new()), false);
+    ledger_balances(&r);
+    assert!(r.retries_total > 0, "outage arrivals must park and retry");
+    assert!(
+        r.max_user_retries >= 1
+            && r.max_user_retries <= s.faults.max_retries
+    );
+    assert_eq!(r.dropped_users, 0, "the retry budget was never exhausted");
+    assert_eq!(
+        r.retry_backlog, 0,
+        "recovery left users starving in the retry queue"
+    );
+    assert!(
+        r.recovered_users >= 1,
+        "a displaced user must eventually be served"
+    );
+    assert!(r.availability < 1.0 && r.availability > 0.0);
+    // wait tails exist and respect the run horizon
+    assert!(r.p999_wait_ttis >= r.p99_wait_ttis);
+    assert!(r.p999_wait_ttis <= s.num_ttis as u64);
+}
+
+#[test]
+fn zero_retry_budget_drops_instead_of_wedging() {
+    let mut s = FleetScenario::new("drop_fast", 2, 4, 4);
+    s.faults = FaultPlan {
+        events: vec![
+            FaultEvent::CellOutage { cell: 0, from_tti: 0, until_tti: 4 },
+            FaultEvent::CellOutage { cell: 1, from_tti: 0, until_tti: 4 },
+        ],
+        max_retries: 0,
+        backoff_base_ttis: 1,
+    };
+    let r = run_fleet(&s, &Arc::new(BlockScheduleCache::new()), false);
+    ledger_balances(&r);
+    assert_eq!(r.availability, 0.0);
+    assert_eq!(r.served_total, 0);
+    assert_eq!(r.submitted_total, r.dropped_users, "all arrivals dropped");
+    assert_eq!(r.max_user_retries, 0);
+}

@@ -14,7 +14,9 @@ use std::sync::Arc;
 use rayon::prelude::*;
 use tensorpool::coordinator::Pipeline;
 use tensorpool::exec::BlockScheduleCache;
-use tensorpool::fleet::{run_fleet, FleetScenario, UserMix};
+use tensorpool::fleet::{
+    run_fleet, ArrivalPattern, FleetScenario, UserMix,
+};
 
 #[test]
 fn parallel_fleet_is_byte_identical_to_serial_across_seeds() {
@@ -37,6 +39,40 @@ fn parallel_fleet_is_byte_identical_to_serial_across_seeds() {
         assert_eq!(cold, serial, "seed {seed:#x}: shared-cache drive diverged");
         assert_eq!(warm, serial, "seed {seed:#x}: warm cache changed a number");
     }
+}
+
+#[test]
+fn flash_crowd_arrivals_are_seeded_and_deterministic() {
+    // Same seed, same spike schedule: two runs must report identical
+    // bytes, and the crowd must actually raise the offered load over the
+    // uniform baseline.
+    let mut s = FleetScenario::smoke();
+    s.name = "crowd_fleet".into();
+    s.num_ttis = 6;
+    s.arrivals = ArrivalPattern::FlashCrowd { period: 3, spike: 4 };
+    let first = run_fleet(&s, &Arc::new(BlockScheduleCache::new()), true);
+    let second = run_fleet(&s, &Arc::new(BlockScheduleCache::new()), true);
+    assert_eq!(first, second, "same-seed flash-crowd runs diverged");
+    let serial = run_fleet(&s, &Arc::new(BlockScheduleCache::new()), false);
+    assert_eq!(first, serial, "flash-crowd parallel drive diverged");
+
+    let mut base = s.clone();
+    base.arrivals = ArrivalPattern::Uniform;
+    let uniform =
+        run_fleet(&base, &Arc::new(BlockScheduleCache::new()), false);
+    assert!(
+        first.submitted_total > uniform.submitted_total,
+        "spike TTIs must add load over the uniform baseline \
+         ({} vs {})",
+        first.submitted_total,
+        uniform.submitted_total,
+    );
+    // a different seed reshapes the load deterministically
+    let mut other = s.clone();
+    other.seed = 0xFEED;
+    let reseeded =
+        run_fleet(&other, &Arc::new(BlockScheduleCache::new()), false);
+    assert_ne!(first, reseeded, "reseeding should redraw the arrivals");
 }
 
 #[test]
